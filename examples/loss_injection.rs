@@ -1,0 +1,59 @@
+//! Failure-injection demo: sweep packet-loss rates and show the §5.3
+//! recovery machinery at work — reminders, switch flushes, selective
+//! NACK retransmissions and cached-result replies — together with the
+//! JCT cost of recovery.
+
+use esa::config::{ExperimentConfig, PolicyKind};
+use esa::sim::Simulation;
+use esa::util::stats::render_table;
+
+fn main() -> anyhow::Result<()> {
+    esa::util::logging::init();
+    println!("loss injection sweep: 2 jobs x 4 workers, ESA, 1 MB tensors\n");
+
+    let mut rows = Vec::new();
+    for loss in [0.0, 0.0001, 0.001, 0.01] {
+        let mut cfg = ExperimentConfig::synthetic(PolicyKind::Esa, "microbench", 2, 4);
+        cfg.seed = 31;
+        cfg.iterations = 2;
+        cfg.net.loss_prob = loss;
+        for j in &mut cfg.jobs {
+            j.tensor_bytes = Some(1024 * 1024);
+        }
+        let mut sim = Simulation::new(cfg)?;
+        let m = sim.run();
+        let ps0 = sim.ps(0).stats.clone();
+        let ps1 = sim.ps(1).stats.clone();
+        rows.push(vec![
+            format!("{loss}"),
+            format!("{:.3}", m.avg_jct_ms()),
+            sim.net.stats.dropped.to_string(),
+            (ps0.worker_reminders + ps1.worker_reminders).to_string(),
+            (ps0.reminders_to_switch + ps1.reminders_to_switch).to_string(),
+            (ps0.nacks + ps1.nacks).to_string(),
+            (ps0.retransmits + ps1.retransmits).to_string(),
+            (ps0.cached_results + ps1.cached_results).to_string(),
+            format!("{}", m.truncated),
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(
+            &[
+                "loss rate",
+                "avg JCT (ms)",
+                "drops",
+                "wrk reminders",
+                "sw reminders",
+                "NACKs",
+                "retransmits",
+                "cached replies",
+                "stalled",
+            ],
+            &rows
+        )
+    );
+    println!("\nevery row must show stalled=false: the reminder/NACK machinery");
+    println!("(§5.3 cases 1-5) recovers all losses; JCT degrades smoothly with rate.");
+    Ok(())
+}

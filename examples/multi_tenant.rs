@@ -1,0 +1,66 @@
+//! The §7.1.2 multi-tenant scenario: a computation-bound job (ResNet50
+//! profile) and a communication-bound one (VGG16 profile) share 1 MB of
+//! switch memory. Shows per-job JCT under every system plus the
+//! data-plane counters that explain the outcome — where ESA's gains
+//! concentrate (the VGG16-like job) and why (preemption priority goes to
+//! the communication-bound tenant).
+
+use esa::config::{ExperimentConfig, JobSpec, PolicyKind};
+use esa::sim::Simulation;
+use esa::util::stats::render_table;
+
+fn main() -> anyhow::Result<()> {
+    esa::util::logging::init();
+    println!("multi-tenant: resnet50-like + vgg16-like, 4 workers each, 1 MB INA memory\n");
+
+    let mut rows = Vec::new();
+    for policy in [PolicyKind::Esa, PolicyKind::Atp, PolicyKind::HostPs] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.policy = policy;
+        cfg.seed = 2022;
+        cfg.iterations = 2;
+        cfg.switch.memory_bytes = 1024 * 1024;
+        cfg.jobs = vec![
+            JobSpec {
+                model: "resnet50".into(),
+                n_workers: 4,
+                start_ns: 0,
+                tensor_bytes: Some(24 * 1024 * 1024),
+            },
+            JobSpec {
+                model: "vgg16".into(),
+                n_workers: 4,
+                start_ns: 0,
+                tensor_bytes: Some(96 * 1024 * 1024),
+            },
+        ];
+        let mut sim = Simulation::new(cfg)?;
+        let m = sim.run();
+        for j in &m.jobs {
+            rows.push(vec![
+                policy.name().to_string(),
+                j.model.clone(),
+                format!("{:.3}", j.avg_jct_ns() / 1e6),
+                format!("{:.3}", j.span_ns as f64 / 1e6),
+                format!("{:.2}", j.agg_throughput_bps() * 8.0 / 1e9),
+            ]);
+        }
+        log::info!(
+            "{}: preemptions={} fallbacks={} reminder_evictions={}",
+            policy.name(),
+            sim.switch.stats.preemptions,
+            sim.switch.stats.passthroughs,
+            sim.switch.stats.reminder_evictions
+        );
+    }
+    print!(
+        "{}",
+        render_table(
+            &["system", "job", "avg JCT (ms)", "span (ms)", "thpt (Gbps)"],
+            &rows
+        )
+    );
+    println!("\npaper expectation (Fig. 6b): the VGG16-like job speeds up the most under ESA");
+    println!("(1.15x vs ATP, 1.27x vs BytePS); the ResNet50-like job barely changes (<1.01x).");
+    Ok(())
+}

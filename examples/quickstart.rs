@@ -1,0 +1,55 @@
+//! Quickstart: simulate a small multi-tenant cluster under ESA and the
+//! baselines, and print the paper's headline metric (average JCT).
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use esa::config::{ExperimentConfig, PolicyKind};
+use esa::sim::Simulation;
+use esa::util::stats::render_table;
+
+fn main() -> anyhow::Result<()> {
+    esa::util::logging::init();
+    println!("ESA quickstart: 4 jobs (2x DNN-A + 2x DNN-B), 4 workers each, 1 MB INA memory\n");
+
+    let mut rows = Vec::new();
+    for policy in [
+        PolicyKind::Esa,
+        PolicyKind::Atp,
+        PolicyKind::SwitchMl,
+        PolicyKind::HostPs,
+    ] {
+        let mut cfg = ExperimentConfig::synthetic(policy, "dnn_a", 4, 4);
+        cfg.seed = 7;
+        cfg.iterations = 2;
+        cfg.switch.memory_bytes = 1024 * 1024;
+        for (i, j) in cfg.jobs.iter_mut().enumerate() {
+            if i % 2 == 1 {
+                j.model = "dnn_b".into();
+            }
+            j.tensor_bytes = Some(4 * 1024 * 1024);
+        }
+        let mut sim = Simulation::new(cfg)?;
+        let m = sim.run();
+        rows.push(vec![
+            policy.name().to_string(),
+            format!("{:.3}", m.avg_jct_ms()),
+            format!("{:.2}", m.avg_throughput_gbps()),
+            sim.switch.stats.preemptions.to_string(),
+            sim.switch.stats.passthroughs.to_string(),
+            format!("{:.1}", m.events_per_sec() / 1e6),
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(
+            &["system", "avg JCT (ms)", "agg thpt (Gbps)", "preemptions", "PS fallbacks", "Mev/s"],
+            &rows
+        )
+    );
+    println!("\nNext steps:");
+    println!("  cargo bench                            # regenerate every paper figure");
+    println!("  make artifacts && cargo run --release --example train_e2e");
+    Ok(())
+}

@@ -1,0 +1,117 @@
+"""AOT lowering: jax graphs -> HLO *text* artifacts for the rust runtime.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange format:
+the image's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit
+instruction ids; the text parser on the rust side
+(``HloModuleProto::from_text_file``) reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Each artifact ``<name>.hlo.txt`` gets a sidecar ``<name>.meta`` describing
+its I/O shapes in a line format the rust artifact registry parses without a
+JSON dependency:
+
+    name=train_step
+    input=params_flat f32 164864
+    input=tokens i32 4x65
+    output=loss f32 -
+    output=qgrads i32 164864
+    key=value...          # scalar metadata (scale_bits, param_count, ...)
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts [--preset tiny]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.quantize import SCALE_BITS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dims(shape) -> str:
+    if len(shape) == 0:
+        return "-"
+    return "x".join(str(d) for d in shape)
+
+
+def _dtype_tag(dt) -> str:
+    return {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[jnp.dtype(dt)]
+
+
+def lower_and_write(name: str, fn, example_args, out_dir: str, extra_meta=None):
+    lowered = jax.jit(fn).lower(*example_args) if not hasattr(fn, "lower") else fn.lower(*example_args)
+    text = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+
+    meta_lines = [f"name={name}"]
+    for i, a in enumerate(example_args):
+        meta_lines.append(f"input=arg{i} {_dtype_tag(a.dtype)} {_dims(a.shape)}")
+    out_tree = jax.eval_shape(fn, *example_args)
+    leaves = jax.tree_util.tree_leaves(out_tree)
+    for i, leaf in enumerate(leaves):
+        meta_lines.append(f"output=out{i} {_dtype_tag(leaf.dtype)} {_dims(leaf.shape)}")
+    for k, v in (extra_meta or {}).items():
+        meta_lines.append(f"{k}={v}")
+    with open(os.path.join(out_dir, f"{name}.meta"), "w") as f:
+        f.write("\n".join(meta_lines) + "\n")
+    print(f"  wrote {name}: {len(text)} chars HLO, {len(meta_lines)} meta lines")
+
+
+def build_artifacts(out_dir: str, preset: str, n_workers: int, seed: int = 0):
+    cfg = M.PRESETS[preset]
+    os.makedirs(out_dir, exist_ok=True)
+
+    entries = M.make_entry_points(cfg, n_workers)
+    common_meta = {
+        "preset": preset,
+        "scale_bits": SCALE_BITS,
+        "param_count": M.param_count(cfg),
+        "flat_len": M.flat_len(cfg),
+        "n_workers": n_workers,
+        "vocab": cfg.vocab,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "lr": cfg.lr,
+    }
+    for name, (fn, args) in entries.items():
+        lower_and_write(name, fn, args, out_dir, extra_meta=common_meta)
+
+    # Initial parameters as a raw little-endian f32 blob — the rust trainer
+    # starts every worker from the same deterministic point.
+    init = M.init_params_flat(cfg, jax.random.PRNGKey(seed))
+    init_path = os.path.join(out_dir, "init_params.f32")
+    import numpy as np
+
+    np.asarray(init, dtype="<f4").tofile(init_path)
+    print(f"  wrote init_params.f32: {init.shape[0]} f32 values")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="tiny", choices=sorted(M.PRESETS))
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print(f"AOT-lowering preset={args.preset} workers={args.workers} -> {args.out_dir}")
+    build_artifacts(args.out_dir, args.preset, args.workers, args.seed)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Layer-1 Pallas kernels for the ESA reproduction.
+
+These implement, as TPU-shaped Pallas kernels (run with interpret=True on
+the CPU PJRT backend), the numeric operations the paper places on hardware:
+
+- ``aggregate``  — the switch aggregator ALU: masked integer summation of
+  worker gradient fragments (fixed point, wrap-around i32 add, exactly what
+  a Tofino register ALU performs).
+- ``quantize`` / ``dequantize`` — the end-host float -> fixed-point
+  conversion of SwitchML/ATP/ESA (§5.1 of the paper).
+
+Every kernel has a pure-jnp oracle in :mod:`compile.kernels.ref` and a
+hypothesis test sweep in ``python/tests/test_kernel.py``.
+"""
+
+from compile.kernels.aggregate import aggregate_fragments, AGG_BLOCK
+from compile.kernels.quantize import (
+    quantize_f32_to_i32,
+    dequantize_i32_to_f32,
+    SCALE_BITS,
+)
+
+__all__ = [
+    "aggregate_fragments",
+    "quantize_f32_to_i32",
+    "dequantize_i32_to_f32",
+    "AGG_BLOCK",
+    "SCALE_BITS",
+]

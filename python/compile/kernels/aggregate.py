@@ -1,0 +1,76 @@
+"""The switch-aggregator ALU as a Pallas kernel.
+
+An INA aggregator performs, per gradient fragment, the integer summation
+
+    value[f] = sum_{w in arrived_workers} q_w[f]        (wrap-around i32)
+
+over fan-in ``N`` workers. On a Tofino this is one register ALU add per
+packet; here we express the *batch* form — aggregating a whole fragment
+matrix in one pass — as the compute hot-spot the rust data plane invokes
+through PJRT, and as the oracle for the per-packet adds the simulator
+performs.
+
+The kernel consumes:
+  - ``q``    : i32[N, F]  quantized fragments, one row per worker;
+  - ``mask`` : i32[N, 1]  bitmap row-mask (1 = worker arrived, 0 = absent),
+               mirroring the aggregator's 32-bit arrival bitmap so that
+               *partial* aggregation (the thing ESA's preemption produces)
+               is expressible;
+and produces ``i32[1, F]`` — the aggregator value register contents.
+
+TPU shape discipline: the worker axis N is padded to 8 (sublane), the
+fragment axis F blocked at 512 lanes; accumulation is wrap-around int32,
+matching both the P4 register ALU and rust's ``wrapping_add``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fragment-axis block width (lanes). 512 = 4 VPU registers deep; one block
+# of 8 workers x 512 lanes x 4 B = 16 KiB of VMEM per operand — far under
+# the ~16 MiB VMEM budget, leaving room for double buffering on real TPU.
+AGG_BLOCK = 512
+
+# Sublane padding for the worker axis.
+WORKER_PAD = 8
+
+
+def _aggregate_kernel(q_ref, mask_ref, out_ref):
+    """One (N, AGG_BLOCK) block: masked wrap-around i32 column sum."""
+    q = q_ref[...]                      # i32[N, B]
+    mask = mask_ref[...]                # i32[N, 1]
+    masked = q * mask                   # broadcast over lanes; absent rows -> 0
+    # keepdims so the output keeps a (1, B) shape = the value register row.
+    out_ref[...] = jnp.sum(masked, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def aggregate_fragments(q: jax.Array, mask: jax.Array) -> jax.Array:
+    """Aggregate quantized fragments from up to N workers (Pallas).
+
+    Args:
+      q:    i32[N, F] fragment matrix, N % 8 == 0, F % AGG_BLOCK == 0.
+      mask: i32[N, 1] arrival bitmap as a column of 0/1.
+
+    Returns:
+      i32[1, F] aggregated value register.
+    """
+    n, f = q.shape
+    assert n % WORKER_PAD == 0, f"worker axis must be padded to {WORKER_PAD}, got {n}"
+    assert f % AGG_BLOCK == 0, f"fragment axis must be a multiple of {AGG_BLOCK}, got {f}"
+    assert mask.shape == (n, 1), f"mask must be [N,1], got {mask.shape}"
+    grid = (f // AGG_BLOCK,)
+    return pl.pallas_call(
+        _aggregate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, AGG_BLOCK), lambda j: (0, j)),
+            pl.BlockSpec((n, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, AGG_BLOCK), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, f), jnp.int32),
+        interpret=True,
+    )(q, mask)

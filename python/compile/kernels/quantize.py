@@ -1,0 +1,94 @@
+"""Float <-> fixed-point conversion kernels (paper §5.1).
+
+Programmable switches cannot add floats, so SwitchML/ATP/ESA convert each
+gradient value to a 32-bit fixed-point integer at the end host before the
+fragment is put on the wire, and convert the aggregated integer back to
+float after the pull. We use a power-of-two scale (``2**SCALE_BITS``) so
+the conversion is exact to document and cheap to mirror bit-for-bit in the
+rust coordinator (``rust/src/util/fixed.rs``).
+
+Quantize:    q = clamp(round(x * 2**SCALE_BITS), i32_min, i32_max)
+Dequantize:  x = q / 2**SCALE_BITS
+
+The kernels are written for TPU shape discipline — last dim a multiple of
+128, second-to-last of 8 — and run under ``interpret=True`` so they lower
+to plain HLO the CPU PJRT client can execute (see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 2**SCALE_BITS is the fixed-point scale. ATP uses a per-packet exponent;
+# we follow SwitchML's simpler global scale, which is sufficient because
+# gradients are pre-normalised by the L2 train step. 20 fractional bits
+# leave 11 integer bits of headroom for the fan-in sum (up to 2048 workers
+# at |g| <= 1).
+SCALE_BITS = 20
+SCALE = float(1 << SCALE_BITS)
+
+I32_MIN = -(2**31)
+I32_MAX = 2**31 - 1
+
+# Lane/sublane tile the kernels are blocked on (TPU VPU register shape).
+QUANT_BLOCK = (8, 128)
+
+
+def _quantize_kernel(x_ref, q_ref):
+    """One (8,128) VMEM block: float32 -> saturating fixed-point int32."""
+    x = x_ref[...]
+    scaled = x * SCALE
+    # Saturate before the cast: jnp.int32 cast of out-of-range floats is
+    # implementation-defined; the switch ALU semantics we model saturate.
+    scaled = jnp.clip(jnp.round(scaled), float(I32_MIN), float(I32_MAX))
+    q_ref[...] = scaled.astype(jnp.int32)
+
+
+def _dequantize_kernel(q_ref, x_ref):
+    """One (8,128) VMEM block: fixed-point int32 -> float32."""
+    q = q_ref[...]
+    x_ref[...] = q.astype(jnp.float32) * (1.0 / SCALE)
+
+
+def _grid_for(shape):
+    rows, cols = shape
+    br, bc = QUANT_BLOCK
+    assert rows % br == 0 and cols % bc == 0, (
+        f"quantize kernels require shapes padded to {QUANT_BLOCK}, got {shape}"
+    )
+    return (rows // br, cols // bc)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def quantize_f32_to_i32(x: jax.Array) -> jax.Array:
+    """Quantize a 2-D f32 array to fixed-point i32 (Pallas, interpret mode).
+
+    The array is streamed through VMEM in (8,128) blocks — the HBM->VMEM
+    schedule a TPU build would use; interpret mode preserves the numerics.
+    """
+    grid = _grid_for(x.shape)
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(QUANT_BLOCK, lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec(QUANT_BLOCK, lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.int32),
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def dequantize_i32_to_f32(q: jax.Array) -> jax.Array:
+    """Dequantize a 2-D fixed-point i32 array back to f32."""
+    grid = _grid_for(q.shape)
+    return pl.pallas_call(
+        _dequantize_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(QUANT_BLOCK, lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec(QUANT_BLOCK, lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.float32),
+        interpret=True,
+    )(q)

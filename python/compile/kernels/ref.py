@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+These are the correctness ground truth: the Pallas kernels must match them
+exactly (integer ops) or to float ulp (dequantize). The rust
+``util/fixed.rs`` codec is additionally cross-checked against the AOT HLO
+of these functions in ``rust/tests/integration_runtime.rs``.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.quantize import I32_MAX, I32_MIN, SCALE
+
+
+def quantize_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Reference: saturating round-to-nearest-even fixed-point quantize."""
+    scaled = jnp.clip(jnp.round(x * SCALE), float(I32_MIN), float(I32_MAX))
+    return scaled.astype(jnp.int32)
+
+
+def dequantize_ref(q: jnp.ndarray) -> jnp.ndarray:
+    """Reference: fixed-point to float."""
+    return q.astype(jnp.float32) * (1.0 / SCALE)
+
+
+def aggregate_ref(q: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Reference: masked wrap-around i32 column sum, keepdims."""
+    return jnp.sum(q * mask, axis=0, keepdims=True)

@@ -1,0 +1,252 @@
+"""Layer-2: JAX model + training-step graphs, AOT-lowered for the rust side.
+
+The paper trains ResNet50/VGG16 over BytePS; what its evaluation actually
+depends on is (a) a real DNN producing real gradients and (b) the INA
+fixed-point aggregation path being numerically faithful. We stand in a
+decoder-only transformer LM (the modern canonical distributed-training
+workload) with fully configurable size, and expose four AOT graphs the rust
+coordinator drives through PJRT:
+
+  train_step(params_flat, tokens)       -> (loss, qgrads)       [per worker]
+  aggregate(qgrads_stacked, mask)       -> agg_i32              [switch/PS ALU]
+  apply_update(params_flat, agg, fanin) -> params_flat'         [pull + SGD]
+  fwd_loss(params_flat, tokens)         -> loss                 [eval]
+
+``train_step`` quantizes gradients with the L1 Pallas kernel *inside* the
+jitted graph (workers quantize before fragmenting, §5.1), so the Pallas
+kernel lowers into the same HLO artifact. ``aggregate`` wraps the L1
+aggregation kernel. All parameters travel as one flat f32 vector padded to
+a (8,128) tile multiple, which keeps the rust FFI to plain 1-D/2-D arrays.
+"""
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.aggregate import aggregate_fragments
+from compile.kernels.quantize import (
+    SCALE_BITS,
+    dequantize_i32_to_f32,
+    quantize_f32_to_i32,
+)
+
+FLAT_TILE = 8 * 128  # params_flat is padded to a multiple of one (8,128) tile
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer LM hyper-parameters (a preset per experiment scale)."""
+
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    seq_len: int = 64
+    batch: int = 4
+    d_ff_mult: int = 4
+    lr: float = 0.05
+
+    @property
+    def d_ff(self) -> int:
+        return self.d_model * self.d_ff_mult
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+PRESETS: Dict[str, ModelConfig] = {
+    # artifact default: fast enough for CPU CI and the e2e example
+    "tiny": ModelConfig(vocab=256, d_model=128, n_layers=2, n_heads=4, seq_len=64, batch=4),
+    # heavier preset for the training bench
+    "small": ModelConfig(vocab=512, d_model=256, n_layers=4, n_heads=8, seq_len=128, batch=8),
+    # ~100M-class preset (compile-only on this CPU testbed; documented in EXPERIMENTS.md)
+    "base": ModelConfig(vocab=8192, d_model=768, n_layers=12, n_heads=12, seq_len=256, batch=8),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter pytree <-> flat vector
+# ---------------------------------------------------------------------------
+
+def param_shapes(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the flattening order contract."""
+    shapes: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos", (cfg.seq_len, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        shapes += [
+            (p + "ln1_scale", (cfg.d_model,)),
+            (p + "ln1_bias", (cfg.d_model,)),
+            (p + "wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2_scale", (cfg.d_model,)),
+            (p + "ln2_bias", (cfg.d_model,)),
+            (p + "w1", (cfg.d_model, cfg.d_ff)),
+            (p + "w2", (cfg.d_ff, cfg.d_model)),
+        ]
+    shapes += [
+        ("lnf_scale", (cfg.d_model,)),
+        ("lnf_bias", (cfg.d_model,)),
+    ]
+    return shapes
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_shapes(cfg))
+
+
+def flat_len(cfg: ModelConfig) -> int:
+    """Padded flat-vector length (multiple of one (8,128) tile)."""
+    n = param_count(cfg)
+    return ((n + FLAT_TILE - 1) // FLAT_TILE) * FLAT_TILE
+
+
+def unflatten(cfg: ModelConfig, flat: jax.Array) -> Dict[str, jax.Array]:
+    params = {}
+    off = 0
+    for name, shape in param_shapes(cfg):
+        size = 1
+        for s in shape:
+            size *= s
+        params[name] = flat[off : off + size].reshape(shape)
+        off += size
+    return params
+
+
+def flatten(cfg: ModelConfig, params: Dict[str, jax.Array]) -> jax.Array:
+    parts = [params[name].reshape(-1) for name, _ in param_shapes(cfg)]
+    flat = jnp.concatenate(parts)
+    pad = flat_len(cfg) - flat.shape[0]
+    return jnp.pad(flat, (0, pad))
+
+
+def init_params_flat(cfg: ModelConfig, key: jax.Array) -> jax.Array:
+    """Scaled-normal init, returned in flat padded form."""
+    params = {}
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_scale",)):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_bias",)):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 0.02 if name in ("embed", "pos") else 1.0 / jnp.sqrt(fan_in)
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * std
+    return flatten(cfg, params)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _layernorm(x, scale, bias):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+
+def _attention(cfg: ModelConfig, x, wqkv, wo):
+    b, s, d = x.shape
+    qkv = x @ wqkv  # [b, s, 3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    logits = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(cfg.head_dim))
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    logits = jnp.where(mask, logits, -1e30)
+    attn = jax.nn.softmax(logits, axis=-1)
+    out = (attn @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ wo
+
+
+def forward_loss(cfg: ModelConfig, params_flat: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Next-token cross-entropy of the LM on ``tokens`` (i32[batch, seq+1])."""
+    p = unflatten(cfg, params_flat)
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    x = p["embed"][inputs] + p["pos"][None, : inputs.shape[1], :]
+    for i in range(cfg.n_layers):
+        l = f"layer{i}."
+        h = _layernorm(x, p[l + "ln1_scale"], p[l + "ln1_bias"])
+        x = x + _attention(cfg, h, p[l + "wqkv"], p[l + "wo"])
+        h = _layernorm(x, p[l + "ln2_scale"], p[l + "ln2_bias"])
+        x = x + jax.nn.gelu(h @ p[l + "w1"]) @ p[l + "w2"]
+    x = _layernorm(x, p["lnf_scale"], p["lnf_bias"])
+    logits = x @ p["embed"].T  # weight tying
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+# ---------------------------------------------------------------------------
+# AOT graph entry points
+# ---------------------------------------------------------------------------
+
+def _as_tile2d(flat: jax.Array) -> jax.Array:
+    """View the flat vector as [n/128, 128] for the (8,128)-blocked kernels."""
+    return flat.reshape(-1, 128)
+
+
+def train_step(cfg: ModelConfig, params_flat: jax.Array, tokens: jax.Array):
+    """Per-worker step: loss + gradients, quantized by the L1 Pallas kernel.
+
+    Gradient clipping to unit L2 norm bounds |g| so the fixed-point format
+    cannot saturate during aggregation (headroom analysis in quantize.py).
+    """
+    loss, grads = jax.value_and_grad(
+        lambda pf: forward_loss(cfg, pf, tokens)
+    )(params_flat)
+    gnorm = jnp.sqrt(jnp.sum(grads * grads) + 1e-12)
+    grads = grads * jnp.minimum(1.0, 1.0 / gnorm)
+    qgrads = quantize_f32_to_i32(_as_tile2d(grads))
+    return loss, qgrads.reshape(-1)
+
+
+def aggregate(qgrads: jax.Array, mask: jax.Array) -> jax.Array:
+    """Switch/PS ALU batch form: masked i32 sum over the worker axis.
+
+    qgrads: i32[N, P] stacked worker gradients; mask: i32[N, 1].
+    N is padded to the kernel's sublane multiple with zero-masked rows.
+    """
+    n = qgrads.shape[0]
+    pad = (-n) % 8
+    if pad:
+        qgrads = jnp.pad(qgrads, ((0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    return aggregate_fragments(qgrads, mask).reshape(-1)
+
+
+def apply_update(cfg: ModelConfig, params_flat: jax.Array, agg: jax.Array, fanin: jax.Array):
+    """Pull path: dequantize the aggregated fixed-point sum, average, SGD."""
+    g2d = dequantize_i32_to_f32(_as_tile2d(agg))
+    mean_grad = g2d.reshape(-1) / fanin
+    return params_flat - cfg.lr * mean_grad
+
+
+def make_entry_points(cfg: ModelConfig, n_workers: int):
+    """Jitted entry points with example args, ready for AOT lowering."""
+    p = flat_len(cfg)
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    pf = jax.ShapeDtypeStruct((p,), jnp.float32)
+    qg = jax.ShapeDtypeStruct((n_workers, p), jnp.int32)
+    mk = jax.ShapeDtypeStruct((n_workers, 1), jnp.int32)
+    ag = jax.ShapeDtypeStruct((p,), jnp.int32)
+    fanin = jax.ShapeDtypeStruct((), jnp.float32)
+
+    return {
+        "train_step": (jax.jit(functools.partial(train_step, cfg)), (pf, tok)),
+        "fwd_loss": (jax.jit(functools.partial(forward_loss, cfg)), (pf, tok)),
+        "aggregate": (jax.jit(aggregate), (qg, mk)),
+        "apply_update": (jax.jit(functools.partial(apply_update, cfg)), (pf, ag, fanin)),
+    }

@@ -1,0 +1,142 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+hypothesis sweeps shapes, value ranges and masks; equality is exact for the
+integer kernels (quantize, aggregate) and allclose for dequantize.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    AGG_BLOCK,
+    SCALE_BITS,
+    aggregate_fragments,
+    dequantize_i32_to_f32,
+    quantize_f32_to_i32,
+)
+from compile.kernels.quantize import I32_MAX, I32_MIN, SCALE
+from compile.kernels.ref import aggregate_ref, dequantize_ref, quantize_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# --------------------------------------------------------------------------
+# quantize / dequantize
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.sampled_from([8, 16, 32]),
+    cols=st.sampled_from([128, 256, 512]),
+    scale=st.floats(min_value=1e-3, max_value=10.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_quantize_matches_ref(rows, cols, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((rows, cols)) * scale).astype(np.float32)
+    got = quantize_f32_to_i32(jnp.asarray(x))
+    want = quantize_ref(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.sampled_from([8, 24]),
+    cols=st.sampled_from([128, 384]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_dequantize_matches_ref(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(I32_MIN, I32_MAX, size=(rows, cols), dtype=np.int32)
+    got = dequantize_i32_to_f32(jnp.asarray(q))
+    want = dequantize_ref(jnp.asarray(q))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_quantize_saturates():
+    x = jnp.asarray([[3e6, -3e6] + [0.0] * 126] * 8, jnp.float32)
+    q = np.asarray(quantize_f32_to_i32(x))
+    assert q[0, 0] == I32_MAX
+    assert q[0, 1] == I32_MIN
+
+
+def test_roundtrip_error_bound():
+    """|dequant(quant(x)) - x| <= 0.5/SCALE for in-range x."""
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-100, 100, size=(8, 256)).astype(np.float32)
+    rt = np.asarray(dequantize_i32_to_f32(quantize_f32_to_i32(jnp.asarray(x))))
+    np.testing.assert_allclose(rt, x, atol=0.5 / SCALE + 1e-6 * np.abs(x).max())
+
+
+def test_quantize_is_linear_enough_for_summation():
+    """sum of quantized ~= quantize of sum (the INA correctness premise)."""
+    rng = np.random.default_rng(1)
+    xs = rng.standard_normal((4, 8, 128)).astype(np.float32)
+    q_sum = sum(np.asarray(quantize_f32_to_i32(jnp.asarray(x)), dtype=np.int64) for x in xs)
+    direct = np.asarray(quantize_ref(jnp.asarray(xs.sum(axis=0))), dtype=np.int64)
+    # each term contributes at most 0.5 ulp of rounding error
+    assert np.abs(q_sum - direct).max() <= len(xs)
+
+
+# --------------------------------------------------------------------------
+# aggregate
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([8, 16, 32]),
+    blocks=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_aggregate_matches_ref(n, blocks, seed):
+    rng = np.random.default_rng(seed)
+    f = blocks * AGG_BLOCK
+    q = rng.integers(-(2**24), 2**24, size=(n, f), dtype=np.int32)
+    mask = rng.integers(0, 2, size=(n, 1), dtype=np.int32)
+    got = aggregate_fragments(jnp.asarray(q), jnp.asarray(mask))
+    want = aggregate_ref(jnp.asarray(q), jnp.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_aggregate_empty_mask_is_zero():
+    q = jnp.ones((8, AGG_BLOCK), jnp.int32) * 12345
+    mask = jnp.zeros((8, 1), jnp.int32)
+    out = np.asarray(aggregate_fragments(q, mask))
+    assert (out == 0).all()
+
+
+def test_aggregate_partial_then_rest_equals_full():
+    """Preemption invariant: agg(first half) + agg(second half) == agg(all).
+
+    This is the exact property ESA's partial-result forwarding relies on
+    (the PS adds partials; §5.1 case 1).
+    """
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.integers(-(2**20), 2**20, size=(8, AGG_BLOCK), dtype=np.int32))
+    m_first = jnp.asarray(np.array([[1], [1], [1], [0], [0], [0], [0], [0]], np.int32))
+    m_rest = 1 - m_first
+    m_all = jnp.ones((8, 1), jnp.int32)
+    a = np.asarray(aggregate_fragments(q, m_first))
+    b = np.asarray(aggregate_fragments(q, m_rest))
+    full = np.asarray(aggregate_fragments(q, m_all))
+    np.testing.assert_array_equal(a + b, full)
+
+
+def test_aggregate_wraparound_is_two_complement():
+    """i32 overflow must wrap (switch ALU + rust wrapping_add semantics)."""
+    q = np.zeros((8, AGG_BLOCK), np.int32)
+    q[0, 0] = np.int32(2**31 - 1)
+    q[1, 0] = np.int32(1)
+    mask = np.ones((8, 1), np.int32)
+    out = np.asarray(aggregate_fragments(jnp.asarray(q), jnp.asarray(mask)))
+    assert out[0, 0] == np.int32(-(2**31))
+
+
+def test_aggregate_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        aggregate_fragments(jnp.zeros((7, AGG_BLOCK), jnp.int32), jnp.zeros((7, 1), jnp.int32))
+    with pytest.raises(AssertionError):
+        aggregate_fragments(jnp.zeros((8, 100), jnp.int32), jnp.zeros((8, 1), jnp.int32))

@@ -1,0 +1,109 @@
+"""L2 model tests: shapes, determinism, gradient flow, fixed-point training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels.quantize import SCALE
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.PRESETS["tiny"]
+
+
+def _tokens(key, cfg=CFG):
+    return jax.random.randint(key, (cfg.batch, cfg.seq_len + 1), 0, cfg.vocab)
+
+
+def test_flat_len_is_tile_multiple():
+    assert M.flat_len(CFG) % M.FLAT_TILE == 0
+    assert M.flat_len(CFG) >= M.param_count(CFG)
+
+
+def test_flatten_unflatten_roundtrip():
+    flat = M.init_params_flat(CFG, jax.random.PRNGKey(0))
+    params = M.unflatten(CFG, flat)
+    flat2 = M.flatten(CFG, params)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(flat2))
+
+
+def test_param_shapes_cover_count():
+    n = sum(int(np.prod(s)) for _, s in M.param_shapes(CFG))
+    assert n == M.param_count(CFG)
+
+
+def test_forward_loss_finite_and_near_uniform_at_init():
+    flat = M.init_params_flat(CFG, jax.random.PRNGKey(0))
+    loss = M.forward_loss(CFG, flat, _tokens(jax.random.PRNGKey(1)))
+    assert np.isfinite(float(loss))
+    # at init the LM should be near the uniform-distribution entropy
+    assert abs(float(loss) - np.log(CFG.vocab)) < 1.0
+
+
+def test_train_step_shapes_and_clip():
+    flat = M.init_params_flat(CFG, jax.random.PRNGKey(0))
+    loss, qg = M.train_step(CFG, flat, _tokens(jax.random.PRNGKey(1)))
+    assert qg.shape == (M.flat_len(CFG),)
+    assert qg.dtype == jnp.int32
+    # clipped grads: |g| <= 1 so |q| <= SCALE
+    assert np.abs(np.asarray(qg)).max() <= SCALE
+
+
+def test_train_step_deterministic():
+    flat = M.init_params_flat(CFG, jax.random.PRNGKey(0))
+    t = _tokens(jax.random.PRNGKey(1))
+    l1, q1 = M.train_step(CFG, flat, t)
+    l2, q2 = M.train_step(CFG, flat, t)
+    assert float(l1) == float(l2)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+def test_apply_update_moves_against_gradient():
+    flat = M.init_params_flat(CFG, jax.random.PRNGKey(0))
+    t = _tokens(jax.random.PRNGKey(1))
+    loss0, qg = M.train_step(CFG, flat, t)
+    agg = M.aggregate(jnp.stack([qg]), jnp.ones((1, 1), jnp.int32))
+    flat1 = M.apply_update(CFG, flat, agg, jnp.float32(1.0))
+    loss1 = M.forward_loss(CFG, flat1, t)
+    assert float(loss1) < float(loss0)
+
+
+def test_fixed_point_aggregation_matches_float_mean():
+    """INA path (quantize -> sum -> dequant/mean) ~= float gradient mean."""
+    flat = M.init_params_flat(CFG, jax.random.PRNGKey(0))
+    keys = jax.random.split(jax.random.PRNGKey(2), 4)
+    qgs, fgrads = [], []
+    for k in keys:
+        t = _tokens(k)
+        _, qg = M.train_step(CFG, flat, t)
+        qgs.append(qg)
+        g = jax.grad(lambda pf: M.forward_loss(CFG, pf, t))(flat)
+        gn = jnp.sqrt(jnp.sum(g * g) + 1e-12)
+        fgrads.append(g * jnp.minimum(1.0, 1.0 / gn))
+    agg = M.aggregate(jnp.stack(qgs), jnp.ones((4, 1), jnp.int32))
+    ina_mean = np.asarray(agg, np.float64) / SCALE / 4.0
+    float_mean = np.asarray(sum(fgrads) / 4.0, np.float64)
+    np.testing.assert_allclose(ina_mean, float_mean, atol=1.0 / SCALE)
+
+
+def test_short_training_reduces_loss():
+    """A few INA-aggregated steps on repeated data reduce the loss."""
+    cfg = CFG
+    flat = M.init_params_flat(cfg, jax.random.PRNGKey(0))
+    t = _tokens(jax.random.PRNGKey(3))
+    first = None
+    for _ in range(5):
+        loss, qg = M.train_step(cfg, flat, t)
+        if first is None:
+            first = float(loss)
+        agg = M.aggregate(jnp.stack([qg]), jnp.ones((1, 1), jnp.int32))
+        flat = M.apply_update(cfg, flat, agg, jnp.float32(1.0))
+    assert float(loss) < first
+
+
+def test_presets_well_formed():
+    for name, cfg in M.PRESETS.items():
+        assert cfg.d_model % cfg.n_heads == 0, name
+        assert M.flat_len(cfg) % M.FLAT_TILE == 0, name

@@ -1,0 +1,14 @@
+//! Regenerates Fig. 10: switch memory utilization (8 jobs × 8 workers)
+//! for DNN A and DNN B. Paper: ESA 2.27×/1.9× vs SwitchML and 1.45×/1.28×
+//! vs ATP, with larger gains on the communication-intensive DNN A.
+
+use esa::sim::figures::{fig10_utilization, Scale};
+
+fn main() {
+    esa::util::logging::init();
+    let scale = Scale::from_env();
+    println!("# fig10: tensor x{}, {} iterations, seed {}", scale.tensor, scale.iterations, scale.seed);
+    let t0 = std::time::Instant::now();
+    fig10_utilization(&scale).expect("fig10 harness").print();
+    println!("# wall: {:.1} s", t0.elapsed().as_secs_f64());
+}

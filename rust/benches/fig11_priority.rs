@@ -1,0 +1,16 @@
+//! Regenerates Fig. 11: the priority-scheduling ablation — ESA vs the
+//! always-preempt (Straw1) and coin-flip (Straw2) strawmen vs ATP, on the
+//! all-A and mixed A/B workloads. Paper: ESA 1.35×/1.22× vs ATP; the
+//! strawmen land in between (1.19×/1.05×) — the delta between ESA and the
+//! strawmen is the value of §5.4's priority policy itself.
+
+use esa::sim::figures::{fig11_priority_ablation, Scale};
+
+fn main() {
+    esa::util::logging::init();
+    let scale = Scale::from_env();
+    println!("# fig11: tensor x{}, {} iterations, seed {}", scale.tensor, scale.iterations, scale.seed);
+    let t0 = std::time::Instant::now();
+    fig11_priority_ablation(&scale).expect("fig11 harness").print();
+    println!("# wall: {:.1} s", t0.elapsed().as_secs_f64());
+}

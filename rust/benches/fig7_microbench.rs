@@ -1,0 +1,17 @@
+//! Regenerates Fig. 7: microbenchmark aggregation throughput — (a) vs
+//! tensor size at 4 jobs, (b) vs job count at 4 MB tensors; 1 MB of INA
+//! memory (the §7.1.2 testbed limit). Paper: ESA up to 1.18×/1.39× over
+//! ATP/SwitchML, gains growing with contention.
+
+use esa::sim::figures::{fig7_microbench, Scale};
+
+fn main() {
+    esa::util::logging::init();
+    let scale = Scale::from_env();
+    println!("# fig7: tensor x{}, {} iterations, seed {}", scale.tensor, scale.iterations, scale.seed);
+    let t0 = std::time::Instant::now();
+    let (a, b) = fig7_microbench(&scale).expect("fig7 harness");
+    a.print();
+    b.print();
+    println!("# wall: {:.1} s", t0.elapsed().as_secs_f64());
+}

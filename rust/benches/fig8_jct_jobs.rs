@@ -1,0 +1,18 @@
+//! Regenerates Fig. 8: average JCT vs number of jobs (8 workers each),
+//! for the three workload mixes, ESA vs ATP vs SwitchML.
+//!
+//! Paper expectation: ESA wins, up to 1.35× vs ATP and 1.89× vs SwitchML,
+//! with the gap growing with job count. `ESA_BENCH_QUICK=1` shrinks scale.
+
+use esa::sim::figures::{fig8_jct_vs_jobs, Scale};
+
+fn main() {
+    esa::util::logging::init();
+    let scale = Scale::from_env();
+    println!("# fig8: tensor x{}, {} iterations, seed {}", scale.tensor, scale.iterations, scale.seed);
+    let t0 = std::time::Instant::now();
+    for fig in fig8_jct_vs_jobs(&scale).expect("fig8 harness") {
+        fig.print();
+    }
+    println!("# wall: {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,16 @@
+//! Regenerates Fig. 9: average JCT vs workers per job (8 jobs), three
+//! mixes. Paper expectation: ESA's gain over ATP grows with worker count
+//! (more synchronization cost → more preemption benefit).
+
+use esa::sim::figures::{fig9_jct_vs_workers, Scale};
+
+fn main() {
+    esa::util::logging::init();
+    let scale = Scale::from_env();
+    println!("# fig9: tensor x{}, {} iterations, seed {}", scale.tensor, scale.iterations, scale.seed);
+    let t0 = std::time::Instant::now();
+    for fig in fig9_jct_vs_workers(&scale).expect("fig9 harness") {
+        fig.print();
+    }
+    println!("# wall: {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,155 @@
+//! L3 hot-path micro-benchmarks (hand-rolled harness — criterion is not
+//! available offline): per-component ops/s plus an end-to-end events/s
+//! figure. These are the §Perf numbers tracked in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use esa::config::{ExperimentConfig, NetworkConfig, PolicyKind};
+use esa::net::{Event, EventQueue, Net, Topology};
+use esa::packet::{task_hash, Packet};
+use esa::sim::Simulation;
+use esa::switch::{JobWiring, Switch};
+use esa::util::fixed;
+use esa::util::rng::Rng;
+
+fn bench<F: FnMut() -> u64>(name: &str, mut f: F) {
+    // warmup
+    f();
+    let mut best = f64::MIN;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let ops = f();
+        let rate = ops as f64 / t0.elapsed().as_secs_f64();
+        best = best.max(rate);
+    }
+    println!("{name:<40} {:>12.2} M ops/s", best / 1e6);
+}
+
+fn bench_event_queue() {
+    let mut q = EventQueue::new();
+    bench("event_queue push+pop (64k live)", || {
+        let n = 1_000_000u64;
+        // keep 64k events live to exercise realistic heap depth
+        for i in 0..65_536 {
+            q.schedule(q.now() + 1 + (i % 97), Event::Timer { node: 0, key: i });
+        }
+        for i in 0..n {
+            let (t, _) = q.pop().unwrap();
+            q.schedule(t + 1 + (i % 89), Event::Timer { node: 0, key: i });
+        }
+        while q.pop().is_some() {}
+        n + 65_536
+    });
+}
+
+fn bench_switch_pipeline() {
+    let wiring = vec![JobWiring { ps: 100, workers: (1..=8).collect(), fan_in: 8, packet_bytes: 306 }];
+    let mut sw = Switch::new(0, PolicyKind::Esa, 16384, wiring, Rng::new(1));
+    let mut out = Vec::with_capacity(16);
+    bench("switch pipeline (ESA, 8-worker tasks)", || {
+        let n = 2_000_000u64;
+        let mut t = 0;
+        for i in 0..n {
+            let seq = (i / 8) as u32;
+            let w = (i % 8) as u8;
+            let mut p = Packet::gradient(0, seq, 0, 1 << w, 8, 128, 1, 0, 306);
+            p.agg_index = sw.slot_index(0, seq);
+            t += 10;
+            out.clear();
+            sw.handle(t, p, &mut out);
+        }
+        n
+    });
+}
+
+fn bench_transmit() {
+    let mut net = Net::new(Topology::star(64), NetworkConfig::default(), Rng::new(2));
+    bench("net transmit + deliver", || {
+        let n = 1_000_000u64;
+        for i in 0..n {
+            let src = 1 + (i % 63) as u32;
+            net.transmit(src, Packet::gradient(0, i as u32, 0, 1, 8, 0, src, 0, 306));
+            if net.queue.len() > 10_000 {
+                while net.queue.pop().is_some() {}
+            }
+        }
+        while net.queue.pop().is_some() {}
+        n
+    });
+}
+
+fn bench_fixed_point() {
+    let mut rng = Rng::new(3);
+    let xs: Vec<f32> = (0..4096).map(|_| rng.uniform(-10.0, 10.0) as f32).collect();
+    let mut qs = vec![0i32; 4096];
+    bench("fixed quantize (4k lanes)", || {
+        let reps = 20_000u64;
+        for _ in 0..reps {
+            fixed::quantize_slice(&xs, &mut qs);
+            std::hint::black_box(&qs);
+        }
+        reps * 4096
+    });
+    let add = qs.clone();
+    let mut acc = vec![0i32; 4096];
+    bench("aggregator add (4k lanes)", || {
+        let reps = 100_000u64;
+        for _ in 0..reps {
+            fixed::agg_add_slice(&mut acc, &add);
+            std::hint::black_box(&acc);
+        }
+        reps * 4096
+    });
+}
+
+fn bench_hash_and_rng() {
+    bench("task_hash", || {
+        let n = 20_000_000u64;
+        let mut acc = 0u32;
+        for i in 0..n {
+            acc = acc.wrapping_add(task_hash((i % 7) as u16, i as u32));
+        }
+        std::hint::black_box(acc);
+        n
+    });
+    let mut rng = Rng::new(4);
+    bench("xoshiro256** next_u64", || {
+        let n = 50_000_000u64;
+        let mut acc = 0u64;
+        for _ in 0..n {
+            acc = acc.wrapping_add(rng.next_u64());
+        }
+        std::hint::black_box(acc);
+        n
+    });
+}
+
+fn bench_end_to_end() {
+    println!();
+    for policy in [PolicyKind::Esa, PolicyKind::Atp, PolicyKind::SwitchMl] {
+        let mut cfg = ExperimentConfig::synthetic(policy, "dnn_a", 4, 8);
+        cfg.iterations = 1;
+        cfg.seed = 9;
+        for j in &mut cfg.jobs {
+            j.tensor_bytes = Some(4 * 1024 * 1024);
+        }
+        let m = Simulation::run_experiment(cfg).unwrap();
+        println!(
+            "end-to-end sim ({:<8}) {:>10.2} M events/s  ({} events, {:.2} s wall)",
+            policy.name(),
+            m.events_per_sec() / 1e6,
+            m.events,
+            m.wall_secs
+        );
+    }
+}
+
+fn main() {
+    println!("# hotpath micro-benchmarks (best of 3)");
+    bench_event_queue();
+    bench_switch_pipeline();
+    bench_transmit();
+    bench_fixed_point();
+    bench_hash_and_rng();
+    bench_end_to_end();
+}

@@ -1,0 +1,25 @@
+use esa::config::{ExperimentConfig, PolicyKind};
+use esa::sim::Simulation;
+
+fn main() {
+    let mut cfg = ExperimentConfig::synthetic(PolicyKind::Esa, "microbench", 1, 4);
+    cfg.iterations = 2;
+    cfg.jitter_max_ns = 20 * esa::USEC;
+    cfg.seed = 42;
+    for j in &mut cfg.jobs { j.tensor_bytes = Some(256 * 1024); }
+    cfg.net.loss_prob = 0.01;
+    let mut sim = Simulation::new(cfg).unwrap();
+    let m = sim.run();
+    println!("truncated={} sim_ns={} events={} jobs_done={}", m.truncated, m.sim_ns, m.events, m.jobs.len());
+    for (j, job) in m.jobs.iter().enumerate() {
+        println!("job {}: iters={} jct={:.3}ms", j, job.iterations, job.avg_jct_ns()/1e6);
+    }
+    for w in 0..4 {
+        let wk = sim.worker_mut(0, w);
+        println!("worker {w}: done={} iters={}", wk.done(), wk.iterations_finished());
+    }
+    println!("ps pending entries: {}", sim.ps(0).pending_entries(0));
+    println!("ps stats: {:?}", sim.ps(0).stats);
+    println!("switch stats: {:?}", sim.switch.stats);
+    println!("net stats: dropped={} sent={}", sim.net.stats.dropped, sim.net.stats.sent);
+}

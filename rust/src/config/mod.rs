@@ -1,0 +1,13 @@
+//! Experiment configuration: a TOML-subset parser (`parse`) plus the typed
+//! experiment schema (`schema`) the launcher and figure harnesses consume.
+//!
+//! Built from scratch because `serde`/`toml` are unavailable offline; the
+//! supported subset (tables, key = value with strings / integers / floats /
+//! booleans / homogeneous arrays, comments) covers everything in
+//! `configs/*.toml`.
+
+pub mod parse;
+pub mod schema;
+
+pub use parse::{parse_toml, TomlTable, TomlValue};
+pub use schema::{ExperimentConfig, JobSpec, NetworkConfig, PolicyKind, SwitchConfig};

@@ -1,0 +1,340 @@
+//! A small TOML-subset parser.
+//!
+//! Supported: `[table]` / `[table.sub]` headers, `key = value` pairs with
+//! string / integer / float / boolean / array values, `#` comments, blank
+//! lines. Unsupported TOML (inline tables, arrays of tables, multi-line
+//! strings, datetimes) fails loudly with line numbers.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Floats accept integer literals too (`5` is a valid float value).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A table: dotted-path keys -> values. `[net]` + `bw = 1` stores `net.bw`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlTable {
+    entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlTable {
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        self.get(path)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+    pub fn int_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+    pub fn float_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+    pub fn require(&self, path: &str) -> Result<&TomlValue> {
+        self.get(path)
+            .with_context(|| format!("config key `{path}` missing"))
+    }
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+    /// Keys under a prefix, e.g. `sections_under("job")` -> `job.0`, `job.1`.
+    pub fn section_names(&self, prefix: &str) -> Vec<String> {
+        let pfx = format!("{prefix}.");
+        let mut names: Vec<String> = self
+            .entries
+            .keys()
+            .filter_map(|k| k.strip_prefix(&pfx))
+            .filter_map(|rest| rest.split('.').next())
+            .map(String::from)
+            .collect();
+        names.dedup();
+        names.sort();
+        names.dedup();
+        names
+    }
+    pub fn insert(&mut self, path: String, value: TomlValue) {
+        self.entries.insert(path, value);
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse_toml(text: &str) -> Result<TomlTable> {
+    let mut table = TomlTable::default();
+    let mut prefix = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(header) = line.strip_prefix('[') {
+            let header = header
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: unterminated table header", lineno + 1))?
+                .trim();
+            if header.is_empty() || header.starts_with('[') {
+                bail!("line {}: arrays of tables are not supported", lineno + 1);
+            }
+            validate_key_path(header).with_context(|| format!("line {}", lineno + 1))?;
+            prefix = header.to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected `key = value`", lineno + 1))?;
+        let key = key.trim();
+        validate_key_path(key).with_context(|| format!("line {}", lineno + 1))?;
+        let value = parse_value(value.trim())
+            .with_context(|| format!("line {}: bad value for `{key}`", lineno + 1))?;
+        let path = if prefix.is_empty() {
+            key.to_string()
+        } else {
+            format!("{prefix}.{key}")
+        };
+        if table.get(&path).is_some() {
+            bail!("line {}: duplicate key `{path}`", lineno + 1);
+        }
+        table.insert(path, value);
+    }
+    Ok(table)
+}
+
+fn validate_key_path(key: &str) -> Result<()> {
+    if key.is_empty() {
+        bail!("empty key");
+    }
+    for part in key.split('.') {
+        if part.is_empty()
+            || !part
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+        {
+            bail!("invalid key `{key}` (bare keys only)");
+        }
+    }
+    Ok(())
+}
+
+/// Strip a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .context("unterminated string literal")?;
+        // reject unescaped quotes inside the body (escaped \" is fine)
+        let mut prev_backslash = false;
+        for c in body.chars() {
+            if c == '"' && !prev_backslash {
+                bail!("embedded unescaped quotes are not supported");
+            }
+            prev_backslash = c == '\\' && !prev_backslash;
+        }
+        return Ok(TomlValue::Str(unescape(body)?));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        let body = body.trim();
+        if !body.is_empty() {
+            for item in body.split(',') {
+                let item = item.trim();
+                if item.is_empty() {
+                    continue; // trailing comma
+                }
+                items.push(parse_value(item)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    // numeric: underscores allowed as separators
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        if let Ok(f) = cleaned.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    } else if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    bail!("cannot parse value `{s}`")
+}
+
+fn unescape(s: &str) -> Result<String> {
+    if !s.contains('\\') {
+        return Ok(s.to_string());
+    }
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('\\') => out.push('\\'),
+            Some('"') => out.push('"'),
+            other => bail!("unsupported escape \\{other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_tables() {
+        let t = parse_toml(
+            r#"
+            name = "fig8"     # the experiment
+            seed = 42
+            [net]
+            bandwidth_gbps = 100.0
+            loss = 1e-6
+            enabled = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t.get("name").unwrap().as_str(), Some("fig8"));
+        assert_eq!(t.get("seed").unwrap().as_int(), Some(42));
+        assert_eq!(t.get("net.bandwidth_gbps").unwrap().as_float(), Some(100.0));
+        assert_eq!(t.get("net.loss").unwrap().as_float(), Some(1e-6));
+        assert_eq!(t.get("net.enabled").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let t = parse_toml("x = 5").unwrap();
+        assert_eq!(t.get("x").unwrap().as_float(), Some(5.0));
+    }
+
+    #[test]
+    fn arrays() {
+        let t = parse_toml("jobs = [2, 4, 6, 8]\nnames = [\"a\", \"b\"]").unwrap();
+        let a = t.get("jobs").unwrap().as_array().unwrap();
+        assert_eq!(a.len(), 4);
+        assert_eq!(a[3].as_int(), Some(8));
+        let n = t.get("names").unwrap().as_array().unwrap();
+        assert_eq!(n[1].as_str(), Some("b"));
+    }
+
+    #[test]
+    fn nested_tables_and_sections() {
+        let t = parse_toml("[job.0]\nmodel = \"dnn_a\"\n[job.1]\nmodel = \"dnn_b\"").unwrap();
+        assert_eq!(t.section_names("job"), vec!["0", "1"]);
+        assert_eq!(t.get("job.0.model").unwrap().as_str(), Some("dnn_a"));
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let t = parse_toml("x = \"a # b\"").unwrap();
+        assert_eq!(t.get("x").unwrap().as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse_toml("x = 1\nx = 2").is_err());
+    }
+
+    #[test]
+    fn bad_syntax_rejected_with_line() {
+        let err = parse_toml("x = 1\ny : 2").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(parse_toml("[unterminated").is_err());
+        assert!(parse_toml("x = [1, 2").is_err());
+        assert!(parse_toml("x = \"unterminated").is_err());
+        assert!(parse_toml("[[array_of_tables]]").is_err());
+    }
+
+    #[test]
+    fn underscore_numbers() {
+        let t = parse_toml("mem = 5_000_000").unwrap();
+        assert_eq!(t.get("mem").unwrap().as_int(), Some(5_000_000));
+    }
+
+    #[test]
+    fn helpers_defaults() {
+        let t = parse_toml("a = 1").unwrap();
+        assert_eq!(t.int_or("a", 9), 1);
+        assert_eq!(t.int_or("b", 9), 9);
+        assert_eq!(t.str_or("c", "x"), "x");
+        assert!(t.require("nope").is_err());
+    }
+
+    #[test]
+    fn escapes() {
+        let t = parse_toml(r#"s = "a\nb\t\"q\"""#).unwrap();
+        assert_eq!(t.get("s").unwrap().as_str(), Some("a\nb\t\"q\""));
+    }
+}

@@ -1,0 +1,402 @@
+//! Typed experiment schema over the TOML-subset parser.
+//!
+//! Defaults replicate the paper's simulation setup (§7.2.1): single switch,
+//! 100 Gbps links, 10 µs base RTT, 5 MB switch memory for INA, 306 B
+//! packets, worker jitter U(0, 300 µs), job start U(0, 1 ms).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::parse::{parse_toml, TomlTable};
+use crate::{MSEC, USEC};
+
+/// Which INA system runs on the switch data plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    /// The paper's system: preemptive, priority-scheduled allocation.
+    Esa,
+    /// ATP: dynamic FCFS allocation, collision falls back to the PS.
+    Atp,
+    /// SwitchML: static per-job partitions, no PS fallback.
+    SwitchMl,
+    /// Fig. 11 strawman 1: always preempt on collision.
+    StrawAlways,
+    /// Fig. 11 strawman 2: preempt with probability 1/2 on collision.
+    StrawCoin,
+    /// No INA at all: workers push straight to the PS (the vanilla BytePS
+    /// baseline of §7.1).
+    HostPs,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<PolicyKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "esa" => PolicyKind::Esa,
+            "atp" => PolicyKind::Atp,
+            "switchml" | "switch_ml" => PolicyKind::SwitchMl,
+            "straw1" | "straw_always" => PolicyKind::StrawAlways,
+            "straw2" | "straw_coin" => PolicyKind::StrawCoin,
+            "hostps" | "byteps" | "noina" => PolicyKind::HostPs,
+            other => bail!("unknown policy `{other}` (esa|atp|switchml|straw1|straw2|hostps)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Esa => "ESA",
+            PolicyKind::Atp => "ATP",
+            PolicyKind::SwitchMl => "SwitchML",
+            PolicyKind::StrawAlways => "Straw1",
+            PolicyKind::StrawCoin => "Straw2",
+            PolicyKind::HostPs => "BytePS",
+        }
+    }
+
+    /// Gradient lanes per packet (f32/i32 values). ATP/ESA carry 64 values
+    /// in a 306 B packet; SwitchML carries 32 in a 180 B packet (§7.1.1).
+    pub fn lanes(&self) -> usize {
+        match self {
+            PolicyKind::SwitchMl => 32,
+            _ => 64,
+        }
+    }
+
+    /// Wire size of one gradient fragment packet in bytes.
+    pub fn packet_bytes(&self) -> u64 {
+        match self {
+            PolicyKind::SwitchMl => 180,
+            _ => 306,
+        }
+    }
+
+    /// Whether completed aggregations leave via the PS (ATP) or are
+    /// multicast straight back to workers (ESA/SwitchML/strawmen).
+    pub fn result_via_ps(&self) -> bool {
+        matches!(self, PolicyKind::Atp)
+    }
+}
+
+/// Network substrate parameters.
+#[derive(Debug, Clone)]
+pub struct NetworkConfig {
+    /// Per-port line rate in Gbit/s.
+    pub bandwidth_gbps: f64,
+    /// Base (propagation + pipeline) round-trip time in ns.
+    pub base_rtt_ns: u64,
+    /// i.i.d. packet loss probability per hop.
+    pub loss_prob: f64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        NetworkConfig {
+            bandwidth_gbps: 100.0,
+            base_rtt_ns: 10 * USEC,
+            loss_prob: 0.0,
+        }
+    }
+}
+
+impl NetworkConfig {
+    /// One-way propagation delay (half the base RTT).
+    pub fn one_way_ns(&self) -> u64 {
+        self.base_rtt_ns / 2
+    }
+    /// Serialization time for `bytes` at line rate, in ns.
+    pub fn tx_ns(&self, bytes: u64) -> u64 {
+        ((bytes * 8) as f64 / self.bandwidth_gbps).ceil() as u64
+    }
+}
+
+/// Switch (data-plane) parameters.
+#[derive(Debug, Clone)]
+pub struct SwitchConfig {
+    /// Bytes of SRAM reserved for INA aggregators.
+    pub memory_bytes: u64,
+    /// Metadata overhead per aggregator slot (bitmap, counter, ids, prio).
+    pub slot_meta_bytes: u64,
+}
+
+impl Default for SwitchConfig {
+    fn default() -> Self {
+        SwitchConfig {
+            memory_bytes: 5 * 1024 * 1024,
+            slot_meta_bytes: 24,
+        }
+    }
+}
+
+impl SwitchConfig {
+    /// Number of aggregator slots a policy's packet format yields.
+    /// SwitchML keeps *two* copies per slot (its shadow-pool design for
+    /// in-flight retransmission safety), halving its slot count per byte.
+    pub fn pool_slots(&self, policy: PolicyKind) -> usize {
+        let copies = if policy == PolicyKind::SwitchMl { 2 } else { 1 };
+        let slot = policy.lanes() as u64 * 4 * copies + self.slot_meta_bytes;
+        (self.memory_bytes / slot) as usize
+    }
+}
+
+/// One training job in an experiment.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Model profile name resolved by `job::dnn` (`dnn_a`, `dnn_b`,
+    /// `resnet50`, `vgg16`, `microbench`).
+    pub model: String,
+    pub n_workers: usize,
+    /// Earliest simulated start time (ns); harnesses randomize U(0,1ms).
+    pub start_ns: u64,
+    /// Override of the model's tensor partition size (microbenchmarks).
+    pub tensor_bytes: Option<u64>,
+}
+
+/// A full simulated experiment.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    pub policy: PolicyKind,
+    pub net: NetworkConfig,
+    pub switch: SwitchConfig,
+    pub jobs: Vec<JobSpec>,
+    /// Measured iterations per job.
+    pub iterations: u32,
+    /// Worker compute-speed variance: jitter ~ U(0, max) per iteration (ns).
+    pub jitter_max_ns: u64,
+    /// Randomized job start upper bound (ns); per-job `start_ns` adds on top.
+    pub start_spread_ns: u64,
+    /// Initial send window in bytes (60 KB at 100 Gbps per ATP/§5.1).
+    pub window_bytes: u64,
+    /// Window growth ceiling in bytes. The effective per-job demand on
+    /// switch memory is the bandwidth × (RTT + straggler sync) product
+    /// (§2.2), far above the initial window; slow-start grows toward this.
+    pub max_window_bytes: u64,
+    /// Hard cap on simulated time (safety net against livelock bugs).
+    pub max_sim_ns: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "experiment".into(),
+            seed: 1,
+            policy: PolicyKind::Esa,
+            net: NetworkConfig::default(),
+            switch: SwitchConfig::default(),
+            jobs: Vec::new(),
+            iterations: 3,
+            jitter_max_ns: 300 * USEC,
+            start_spread_ns: MSEC,
+            window_bytes: 60 * 1024,
+            // §2.2: "each job needs 1 MB switch memory under 100 Gbps" —
+            // the effective BDP including synchronization delay. Windows
+            // slow-start toward this; ECN clamps them under congestion.
+            max_window_bytes: 1024 * 1024,
+            max_sim_ns: 60 * crate::SEC,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML-subset file.
+    pub fn from_file(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let table = parse_toml(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_table(&table)
+    }
+
+    /// Build from a parsed table; unknown model names fail at job build time.
+    pub fn from_table(t: &TomlTable) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig {
+            name: t.str_or("name", "experiment"),
+            seed: t.int_or("seed", 1) as u64,
+            policy: PolicyKind::parse(&t.str_or("policy", "esa"))?,
+            ..ExperimentConfig::default()
+        };
+        cfg.net.bandwidth_gbps = t.float_or("net.bandwidth_gbps", cfg.net.bandwidth_gbps);
+        cfg.net.base_rtt_ns = (t.float_or("net.base_rtt_us", 10.0) * USEC as f64) as u64;
+        cfg.net.loss_prob = t.float_or("net.loss_prob", 0.0);
+        cfg.switch.memory_bytes = t.int_or("switch.memory_bytes", cfg.switch.memory_bytes as i64) as u64;
+        cfg.iterations = t.int_or("sim.iterations", cfg.iterations as i64) as u32;
+        cfg.jitter_max_ns = (t.float_or("sim.jitter_max_us", 300.0) * USEC as f64) as u64;
+        cfg.start_spread_ns = (t.float_or("sim.start_spread_us", 1000.0) * USEC as f64) as u64;
+        cfg.window_bytes = t.int_or("sim.window_bytes", cfg.window_bytes as i64) as u64;
+        cfg.max_window_bytes = t.int_or("sim.max_window_bytes", cfg.max_window_bytes as i64) as u64;
+        cfg.max_sim_ns = (t.float_or("sim.max_sim_ms", 60_000.0) * MSEC as f64) as u64;
+
+        for sec in t.section_names("job") {
+            let base = format!("job.{sec}");
+            let model = t.str_or(&format!("{base}.model"), "dnn_a");
+            let n = t.int_or(&format!("{base}.workers"), 8);
+            if n <= 0 || n > 32 {
+                bail!("job.{sec}.workers must be in 1..=32 (bitmap width), got {n}");
+            }
+            let count = t.int_or(&format!("{base}.count"), 1);
+            for _ in 0..count {
+                cfg.jobs.push(JobSpec {
+                    model: model.clone(),
+                    n_workers: n as usize,
+                    start_ns: (t.float_or(&format!("{base}.start_us"), 0.0) * USEC as f64) as u64,
+                    tensor_bytes: t
+                        .get(&format!("{base}.tensor_bytes"))
+                        .and_then(|v| v.as_int())
+                        .map(|v| v as u64),
+                });
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.net.bandwidth_gbps <= 0.0 {
+            bail!("bandwidth must be positive");
+        }
+        if !(0.0..1.0).contains(&self.net.loss_prob) {
+            bail!("loss_prob must be in [0, 1)");
+        }
+        if self.switch.pool_slots(self.policy) == 0 {
+            bail!("switch memory too small for a single aggregator");
+        }
+        if self.iterations == 0 {
+            bail!("iterations must be >= 1");
+        }
+        for (i, j) in self.jobs.iter().enumerate() {
+            if j.n_workers == 0 || j.n_workers > 32 {
+                bail!("job {i}: workers must be in 1..=32");
+            }
+        }
+        Ok(())
+    }
+
+    /// Convenience constructor used by the figure harnesses.
+    pub fn synthetic(policy: PolicyKind, model: &str, n_jobs: usize, n_workers: usize) -> Self {
+        ExperimentConfig {
+            name: format!("{}x{} {} {}", n_jobs, n_workers, model, policy.name()),
+            policy,
+            jobs: (0..n_jobs)
+                .map(|_| JobSpec {
+                    model: model.to_string(),
+                    n_workers,
+                    start_ns: 0,
+                    tensor_bytes: None,
+                })
+                .collect(),
+            ..ExperimentConfig::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.net.bandwidth_gbps, 100.0);
+        assert_eq!(c.net.base_rtt_ns, 10 * USEC);
+        assert_eq!(c.switch.memory_bytes, 5 * 1024 * 1024);
+        assert_eq!(c.jitter_max_ns, 300 * USEC);
+        assert_eq!(c.start_spread_ns, MSEC);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for (s, p) in [
+            ("esa", PolicyKind::Esa),
+            ("ATP", PolicyKind::Atp),
+            ("switchml", PolicyKind::SwitchMl),
+            ("straw1", PolicyKind::StrawAlways),
+            ("straw2", PolicyKind::StrawCoin),
+        ] {
+            assert_eq!(PolicyKind::parse(s).unwrap(), p);
+        }
+        assert!(PolicyKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn packet_formats_match_paper() {
+        assert_eq!(PolicyKind::Esa.packet_bytes(), 306);
+        assert_eq!(PolicyKind::Atp.packet_bytes(), 306);
+        assert_eq!(PolicyKind::SwitchMl.packet_bytes(), 180);
+        assert_eq!(PolicyKind::Esa.lanes(), 64);
+        assert_eq!(PolicyKind::SwitchMl.lanes(), 32);
+    }
+
+    #[test]
+    fn pool_slots_scale_with_memory() {
+        let sw = SwitchConfig::default();
+        let esa = sw.pool_slots(PolicyKind::Esa);
+        // 5 MiB / (256 + 24) = 18724
+        assert_eq!(esa, 5 * 1024 * 1024 / 280);
+        // SwitchML: 32 lanes but two shadow copies -> same slot bytes
+        assert_eq!(sw.pool_slots(PolicyKind::SwitchMl), 5 * 1024 * 1024 / 280);
+    }
+
+    #[test]
+    fn tx_time_at_100gbps() {
+        let net = NetworkConfig::default();
+        // 306 B at 100 Gbps = 24.48 ns -> ceil 25
+        assert_eq!(net.tx_ns(306), 25);
+    }
+
+    #[test]
+    fn from_table_full() {
+        let t = parse_toml(
+            r#"
+            name = "fig8-point"
+            seed = 7
+            policy = "atp"
+            [net]
+            bandwidth_gbps = 100.0
+            base_rtt_us = 10.0
+            loss_prob = 0.0001
+            [switch]
+            memory_bytes = 5_242_880
+            [sim]
+            iterations = 5
+            jitter_max_us = 300.0
+            [job.a]
+            model = "dnn_a"
+            workers = 8
+            count = 4
+            [job.b]
+            model = "dnn_b"
+            workers = 8
+            count = 4
+            "#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.policy, PolicyKind::Atp);
+        assert_eq!(c.jobs.len(), 8);
+        assert_eq!(c.jobs[0].model, "dnn_a");
+        assert_eq!(c.jobs[7].model, "dnn_b");
+        assert_eq!(c.iterations, 5);
+        assert_eq!(c.net.loss_prob, 0.0001);
+    }
+
+    #[test]
+    fn validation_rejects_bad() {
+        let mut c = ExperimentConfig::default();
+        c.net.loss_prob = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.switch.memory_bytes = 10;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.iterations = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn synthetic_builder() {
+        let c = ExperimentConfig::synthetic(PolicyKind::Esa, "dnn_a", 4, 8);
+        assert_eq!(c.jobs.len(), 4);
+        assert!(c.jobs.iter().all(|j| j.n_workers == 8));
+        c.validate().unwrap();
+    }
+}

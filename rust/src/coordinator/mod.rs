@@ -1,0 +1,114 @@
+//! The control plane: job registry with admission control, priority-input
+//! bookkeeping (§5.4's `T_j` and `Comm/Comp` live here between
+//! iterations), PS placement, and a thread-pool experiment launcher used
+//! by the figure harnesses (std threads — tokio is not available offline,
+//! and the event loops themselves are single-threaded and deterministic).
+
+pub mod registry;
+
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::sim::{ExperimentMetrics, Simulation};
+
+pub use registry::{JobInfo, JobState, Registry};
+
+/// Run many independent experiments on a bounded worker pool, preserving
+/// input order in the output. Each simulation is single-threaded and
+/// deterministic; parallelism is across experiments only, so results are
+/// identical to serial execution.
+pub fn run_parallel(cfgs: Vec<ExperimentConfig>) -> Vec<Result<ExperimentMetrics>> {
+    let n = cfgs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(n);
+    let (task_tx, task_rx) = mpsc::channel::<(usize, ExperimentConfig)>();
+    let task_rx = std::sync::Arc::new(std::sync::Mutex::new(task_rx));
+    let (res_tx, res_rx) = mpsc::channel::<(usize, Result<ExperimentMetrics>)>();
+    for (i, cfg) in cfgs.into_iter().enumerate() {
+        task_tx.send((i, cfg)).expect("queueing work");
+    }
+    drop(task_tx);
+
+    let mut handles = Vec::new();
+    for _ in 0..threads {
+        let rx = std::sync::Arc::clone(&task_rx);
+        let tx = res_tx.clone();
+        handles.push(thread::spawn(move || loop {
+            let job = { rx.lock().unwrap().recv() };
+            match job {
+                Ok((i, cfg)) => {
+                    let result = Simulation::run_experiment(cfg);
+                    if tx.send((i, result)).is_err() {
+                        return;
+                    }
+                }
+                Err(_) => return,
+            }
+        }));
+    }
+    drop(res_tx);
+
+    let mut out: Vec<Option<Result<ExperimentMetrics>>> = (0..n).map(|_| None).collect();
+    for (i, r) in res_rx {
+        out[i] = Some(r);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    out.into_iter()
+        .map(|o| o.expect("worker thread dropped a result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyKind;
+
+    fn tiny(seed: u64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::synthetic(PolicyKind::Esa, "microbench", 1, 2);
+        cfg.iterations = 1;
+        cfg.seed = seed;
+        cfg.jobs[0].tensor_bytes = Some(64 * 1024);
+        cfg
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let cfgs: Vec<_> = (0..6).map(|i| tiny(i)).collect();
+        let serial: Vec<_> = cfgs
+            .iter()
+            .cloned()
+            .map(|c| Simulation::run_experiment(c).unwrap())
+            .collect();
+        let parallel = run_parallel(cfgs);
+        for (s, p) in serial.iter().zip(&parallel) {
+            let p = p.as_ref().unwrap();
+            assert_eq!(s.sim_ns, p.sim_ns);
+            assert_eq!(s.events, p.events);
+        }
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        assert!(run_parallel(vec![]).is_empty());
+    }
+
+    #[test]
+    fn errors_are_positional() {
+        let mut bad = tiny(1);
+        bad.jobs[0].model = "bogus".into();
+        let results = run_parallel(vec![tiny(0), bad, tiny(2)]);
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err());
+        assert!(results[2].is_ok());
+    }
+}

@@ -1,0 +1,223 @@
+//! Job registry + admission control.
+//!
+//! Models the cluster-operator view the paper's motivation assumes
+//! (§2.2: thousands of daily jobs contending for ~10 MB of switch SRAM):
+//! jobs are submitted with a model profile and worker count; admission
+//! decides whether they get INA service (and, for SwitchML, whether a
+//! static partition can be carved at all); the registry tracks per-job
+//! priority inputs between iterations.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::{PolicyKind, SwitchConfig};
+use crate::job::dnn::DnnProfile;
+use crate::worker::priority::PriorityInputs;
+use crate::{JobId, SimTime};
+
+/// Lifecycle of a registered job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Admitted to INA service.
+    Running,
+    /// Admitted but downgraded to plain PS aggregation (no switch memory —
+    /// the "fall back to the original communication mode" of §1).
+    HostFallback,
+    Finished,
+}
+
+/// One registered job.
+#[derive(Debug, Clone)]
+pub struct JobInfo {
+    pub id: JobId,
+    pub profile: DnnProfile,
+    pub n_workers: usize,
+    pub submitted_at: SimTime,
+    pub state: JobState,
+    pub inputs: PriorityInputs,
+    /// SwitchML only: (region start, region len) in pool slots.
+    pub region: Option<(u32, u32)>,
+}
+
+/// The coordinator's registry.
+pub struct Registry {
+    policy: PolicyKind,
+    pool_slots: usize,
+    /// SwitchML: minimum useful region (must hold at least one window).
+    min_region_slots: u32,
+    jobs: BTreeMap<JobId, JobInfo>,
+    next_id: JobId,
+    slots_carved: u32,
+}
+
+impl Registry {
+    pub fn new(policy: PolicyKind, switch: &SwitchConfig, min_region_slots: u32) -> Registry {
+        Registry {
+            policy,
+            pool_slots: switch.pool_slots(policy),
+            min_region_slots,
+            jobs: BTreeMap::new(),
+            next_id: 0,
+            slots_carved: 0,
+        }
+    }
+
+    pub fn pool_slots(&self) -> usize {
+        self.pool_slots
+    }
+
+    /// Submit a job; returns its id and whether it got INA service.
+    pub fn submit(
+        &mut self,
+        profile: DnnProfile,
+        n_workers: usize,
+        now: SimTime,
+    ) -> Result<(JobId, JobState)> {
+        if n_workers == 0 || n_workers > 32 {
+            bail!("worker count {n_workers} outside 1..=32");
+        }
+        let id = self.next_id;
+        self.next_id = self.next_id.checked_add(1).expect("job id overflow");
+        let state = match self.policy {
+            // dynamic policies always admit — contention is handled on the
+            // data plane itself
+            PolicyKind::Esa
+            | PolicyKind::Atp
+            | PolicyKind::StrawAlways
+            | PolicyKind::StrawCoin
+            | PolicyKind::HostPs => JobState::Running,
+            // SwitchML must carve a static region up front
+            PolicyKind::SwitchMl => {
+                if self.slots_carved + self.min_region_slots <= self.pool_slots as u32 {
+                    self.slots_carved += self.min_region_slots;
+                    JobState::Running
+                } else {
+                    JobState::HostFallback
+                }
+            }
+        };
+        let region = if state == JobState::Running && self.policy == PolicyKind::SwitchMl {
+            Some((self.slots_carved - self.min_region_slots, self.min_region_slots))
+        } else {
+            None
+        };
+        let inputs = PriorityInputs {
+            remaining_ns: None,
+            attained_ns: 1,
+            comm_comp: profile.comm_comp_ratio,
+            n_layers: profile.n_layers() as u32,
+        };
+        self.jobs.insert(
+            id,
+            JobInfo {
+                id,
+                profile,
+                n_workers,
+                submitted_at: now,
+                state,
+                inputs,
+                region,
+            },
+        );
+        Ok((id, state))
+    }
+
+    /// Per-iteration feedback from the workers: refresh §5.4 inputs.
+    pub fn report_iteration(&mut self, id: JobId, now: SimTime, measured_comm_comp: f64, remaining_ns: Option<SimTime>) {
+        if let Some(j) = self.jobs.get_mut(&id) {
+            j.inputs.attained_ns = now.saturating_sub(j.submitted_at).max(1);
+            j.inputs.comm_comp = measured_comm_comp;
+            j.inputs.remaining_ns = remaining_ns;
+        }
+    }
+
+    pub fn finish(&mut self, id: JobId) {
+        if let Some(j) = self.jobs.get_mut(&id) {
+            j.state = JobState::Finished;
+            if let Some((_, len)) = j.region.take() {
+                self.slots_carved -= len;
+            }
+        }
+    }
+
+    pub fn get(&self, id: JobId) -> Option<&JobInfo> {
+        self.jobs.get(&id)
+    }
+
+    pub fn running(&self) -> impl Iterator<Item = &JobInfo> {
+        self.jobs.values().filter(|j| j.state == JobState::Running)
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::dnn::dnn_a;
+
+    #[test]
+    fn dynamic_policies_always_admit() {
+        let mut r = Registry::new(PolicyKind::Esa, &SwitchConfig::default(), 256);
+        for _ in 0..100 {
+            let (_, s) = r.submit(dnn_a(), 8, 0).unwrap();
+            assert_eq!(s, JobState::Running);
+        }
+        assert_eq!(r.len(), 100);
+    }
+
+    #[test]
+    fn switchml_admission_is_capacity_bounded() {
+        let sw = SwitchConfig { memory_bytes: 280 * 1024, slot_meta_bytes: 24 }; // 1024 slots
+        let mut r = Registry::new(PolicyKind::SwitchMl, &sw, 256);
+        let mut running = 0;
+        let mut fallback = 0;
+        for _ in 0..8 {
+            match r.submit(dnn_a(), 8, 0).unwrap().1 {
+                JobState::Running => running += 1,
+                JobState::HostFallback => fallback += 1,
+                _ => unreachable!(),
+            }
+        }
+        assert_eq!(running, 4, "1024 slots / 256-slot regions = 4 jobs");
+        assert_eq!(fallback, 4);
+    }
+
+    #[test]
+    fn finishing_switchml_job_frees_its_region() {
+        let sw = SwitchConfig { memory_bytes: 280 * 1024, slot_meta_bytes: 24 };
+        let mut r = Registry::new(PolicyKind::SwitchMl, &sw, 512);
+        let (a, _) = r.submit(dnn_a(), 8, 0).unwrap();
+        let (_b, _) = r.submit(dnn_a(), 8, 0).unwrap();
+        let (_, s3) = r.submit(dnn_a(), 8, 0).unwrap();
+        assert_eq!(s3, JobState::HostFallback);
+        r.finish(a);
+        let (_, s4) = r.submit(dnn_a(), 8, 0).unwrap();
+        assert_eq!(s4, JobState::Running);
+    }
+
+    #[test]
+    fn iteration_reports_update_priority_inputs() {
+        let mut r = Registry::new(PolicyKind::Esa, &SwitchConfig::default(), 256);
+        let (id, _) = r.submit(dnn_a(), 8, 100).unwrap();
+        r.report_iteration(id, 5_000, 1.7, Some(42));
+        let j = r.get(id).unwrap();
+        assert_eq!(j.inputs.attained_ns, 4_900);
+        assert_eq!(j.inputs.comm_comp, 1.7);
+        assert_eq!(j.inputs.remaining_ns, Some(42));
+    }
+
+    #[test]
+    fn rejects_bad_worker_counts() {
+        let mut r = Registry::new(PolicyKind::Esa, &SwitchConfig::default(), 256);
+        assert!(r.submit(dnn_a(), 0, 0).is_err());
+        assert!(r.submit(dnn_a(), 33, 0).is_err());
+    }
+}

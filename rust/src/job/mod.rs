@@ -1,0 +1,256 @@
+//! DLT job models: layer/partition structure, the communication–computation
+//! overlap schedule of §7.2.1, and workload profiles (DNN A/B, testbed-like
+//! ResNet50/VGG16, microbenchmark).
+
+pub mod dnn;
+pub mod trace;
+
+use crate::{JobId, SimTime};
+
+pub use dnn::{profile_by_name, DnnProfile, Layer};
+
+/// A contiguous range of fragment sequence numbers belonging to one tensor
+/// partition of one layer in one iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PartitionSeqs {
+    pub layer: u16,
+    pub partition: u16,
+    pub first_seq: u32,
+    pub n_frags: u32,
+}
+
+impl PartitionSeqs {
+    pub fn contains(&self, seq: u32) -> bool {
+        seq >= self.first_seq && seq < self.first_seq + self.n_frags
+    }
+    pub fn last_seq(&self) -> u32 {
+        self.first_seq + self.n_frags - 1
+    }
+}
+
+/// The static send plan for one iteration of a job: partitions in wire
+/// order (§7.2.1 — back layer's first partition, then the earlier layers,
+/// then the back layer's second partition), with per-partition availability
+/// offsets relative to the iteration's communication start.
+#[derive(Debug, Clone)]
+pub struct IterationPlan {
+    /// Partitions in the order their fragments enter the send queue.
+    pub sends: Vec<PartitionSeqs>,
+    /// Availability offset (ns after comm start) when each send-order entry
+    /// becomes transmittable (back-prop of earlier layers still running).
+    pub avail_offset: Vec<SimTime>,
+    /// Fragments per iteration (all partitions).
+    pub frags_per_iter: u32,
+}
+
+/// Runtime job descriptor shared by workers, the PS and the metrics
+/// pipeline.
+#[derive(Debug, Clone)]
+pub struct JobModel {
+    pub id: JobId,
+    pub profile: DnnProfile,
+    pub n_workers: usize,
+    pub plan: IterationPlan,
+    /// Gradient payload bytes per fragment packet (policy lanes × 4).
+    pub payload_bytes: u32,
+    pub iterations: u32,
+}
+
+impl JobModel {
+    pub fn new(
+        id: JobId,
+        profile: DnnProfile,
+        n_workers: usize,
+        payload_bytes: u32,
+        iterations: u32,
+    ) -> JobModel {
+        let plan = build_plan(&profile, payload_bytes);
+        JobModel {
+            id,
+            profile,
+            n_workers,
+            plan,
+            payload_bytes,
+            iterations,
+        }
+    }
+
+    /// Full-worker arrival bitmap for this job.
+    pub fn full_bitmap(&self) -> u32 {
+        if self.n_workers == 32 {
+            u32::MAX
+        } else {
+            (1u32 << self.n_workers) - 1
+        }
+    }
+
+    /// Sequence base for iteration `it` (fragment seqs never collide across
+    /// iterations — the aggregator identity is `(job, seq)`).
+    pub fn seq_base(&self, it: u32) -> u32 {
+        it * self.plan.frags_per_iter
+    }
+
+    /// Map a sequence number back to (iteration, send-order index).
+    pub fn locate(&self, seq: u32) -> (u32, usize) {
+        let it = seq / self.plan.frags_per_iter;
+        let rel = seq % self.plan.frags_per_iter;
+        let idx = self
+            .plan
+            .sends
+            .iter()
+            .position(|p| rel >= p.first_seq && rel < p.first_seq + p.n_frags)
+            .expect("seq out of plan");
+        (it, idx)
+    }
+
+    /// Gradient bytes one worker pushes per iteration.
+    pub fn bytes_per_iter(&self) -> u64 {
+        self.profile.layers.iter().map(|l| l.size_bytes).sum()
+    }
+
+    /// Computation time of one full layer pass (the `c` of the §7.2.1
+    /// timeline), by layer index.
+    pub fn comp_ns(&self, layer: usize) -> SimTime {
+        self.profile.layers[layer].comp_ns
+    }
+}
+
+/// Build the §7.2.1 send plan from a profile.
+///
+/// Wire order: last layer partition 0, then layers L-2..0 (all partitions),
+/// then last layer partition 1. Availability: the last layer's gradients
+/// exist at comm start (its BP just finished); layer `l`'s gradients become
+/// available after the BP of layers L-2..l has additionally run.
+pub fn build_plan(profile: &DnnProfile, payload_bytes: u32) -> IterationPlan {
+    let nl = profile.layers.len();
+    assert!(nl >= 1);
+    let frags_of = |bytes: u64| -> u32 { (bytes.div_ceil(payload_bytes as u64)) as u32 };
+
+    // Sequence numbers are assigned in send order so that "expected seq =
+    // window base" matches the wire order (§5.1 worker pull logic).
+    let mut sends = Vec::new();
+    let mut avail = Vec::new();
+    let mut next_seq = 0u32;
+    let mut push = |layer: usize, part: u16, bytes: u64, offset: SimTime, sends: &mut Vec<PartitionSeqs>, avail: &mut Vec<SimTime>| {
+        let n = frags_of(bytes);
+        sends.push(PartitionSeqs {
+            layer: layer as u16,
+            partition: part,
+            first_seq: next_seq,
+            n_frags: n,
+        });
+        avail.push(offset);
+        next_seq += n;
+    };
+
+    let last = nl - 1;
+    if profile.partitions_per_layer == 2 && nl >= 2 {
+        let half = profile.layers[last].size_bytes / 2;
+        // last layer, first partition: available immediately
+        push(last, 0, half, 0, &mut sends, &mut avail);
+        // earlier layers, in BP order (L-2 down to 0)
+        let mut offset = 0;
+        for l in (0..last).rev() {
+            offset += profile.layers[l].comp_ns;
+            let lhalf = profile.layers[l].size_bytes / 2;
+            push(l, 0, lhalf, offset, &mut sends, &mut avail);
+            push(l, 1, profile.layers[l].size_bytes - lhalf, offset, &mut sends, &mut avail);
+        }
+        // last layer, second partition (sent last per §7.2.1)
+        push(last, 1, profile.layers[last].size_bytes - half, 0, &mut sends, &mut avail);
+    } else {
+        // single-partition profiles (microbench, testbed profiles)
+        let mut offset = 0;
+        for l in (0..nl).rev() {
+            if l != last {
+                offset += profile.layers[l].comp_ns;
+            }
+            push(l, 0, profile.layers[l].size_bytes, offset, &mut sends, &mut avail);
+        }
+    }
+
+    IterationPlan {
+        frags_per_iter: next_seq,
+        sends,
+        avail_offset: avail,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::dnn::profile_by_name;
+
+    fn dnn_a_job() -> JobModel {
+        JobModel::new(0, profile_by_name("dnn_a", None).unwrap(), 8, 256, 3)
+    }
+
+    #[test]
+    fn dnn_a_plan_matches_paper_order() {
+        let j = dnn_a_job();
+        // order: L2P1 (layer idx 1), L1P1, L1P2, L2P2
+        let order: Vec<(u16, u16)> = j.plan.sends.iter().map(|p| (p.layer, p.partition)).collect();
+        assert_eq!(order, vec![(1, 0), (0, 0), (0, 1), (1, 1)]);
+        // availability: L2 partitions at 0; L1 after one layer of BP
+        assert_eq!(j.plan.avail_offset[0], 0);
+        assert_eq!(j.plan.avail_offset[1], j.profile.layers[0].comp_ns);
+        assert_eq!(j.plan.avail_offset[3], 0);
+    }
+
+    #[test]
+    fn dnn_a_fragment_math() {
+        let j = dnn_a_job();
+        // 4 MB partitions, 256 B payload -> 16384 frags each, 4 partitions
+        assert_eq!(j.plan.frags_per_iter, 4 * 16384);
+        assert_eq!(j.bytes_per_iter(), 16 * 1024 * 1024);
+    }
+
+    #[test]
+    fn seqs_are_contiguous_and_disjoint() {
+        let j = dnn_a_job();
+        let mut covered = 0u32;
+        for p in &j.plan.sends {
+            assert_eq!(p.first_seq, covered, "plan seqs must be contiguous in send order");
+            covered += p.n_frags;
+        }
+        assert_eq!(covered, j.plan.frags_per_iter);
+    }
+
+    #[test]
+    fn locate_roundtrip() {
+        let j = dnn_a_job();
+        for (idx, p) in j.plan.sends.iter().enumerate() {
+            for probe in [p.first_seq, p.last_seq()] {
+                let (it, i) = j.locate(j.seq_base(2) + probe);
+                assert_eq!(it, 2);
+                assert_eq!(i, idx);
+            }
+        }
+    }
+
+    #[test]
+    fn full_bitmap_widths() {
+        let mut j = dnn_a_job();
+        assert_eq!(j.full_bitmap(), 0xff);
+        j.n_workers = 32;
+        assert_eq!(j.full_bitmap(), u32::MAX);
+        j.n_workers = 1;
+        assert_eq!(j.full_bitmap(), 1);
+    }
+
+    #[test]
+    fn microbench_plan_is_single_partition() {
+        let p = profile_by_name("microbench", Some(4 * 1024 * 1024)).unwrap();
+        let j = JobModel::new(1, p, 8, 256, 5);
+        assert_eq!(j.plan.sends.len(), 1);
+        assert_eq!(j.plan.avail_offset[0], 0);
+        assert_eq!(j.plan.frags_per_iter, 16384);
+    }
+
+    #[test]
+    fn odd_sizes_round_up() {
+        let p = profile_by_name("microbench", Some(1000)).unwrap();
+        let j = JobModel::new(1, p, 2, 256, 1);
+        assert_eq!(j.plan.frags_per_iter, 4); // ceil(1000/256)
+    }
+}

@@ -1,0 +1,126 @@
+//! Synthetic cluster workload traces.
+//!
+//! The paper motivates ESA with production scale (a Microsoft cluster with
+//! ~96k jobs over two months — about a thousand a day, §2.2). The real
+//! trace is not public, so this module generates Poisson-arrival job mixes
+//! with the paper's model distribution, used by the `trace` example and
+//! the coordinator's admission tests.
+
+use crate::util::rng::Rng;
+use crate::SimTime;
+
+/// One synthetic job arrival.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEntry {
+    pub arrival_ns: SimTime,
+    pub model: String,
+    pub n_workers: usize,
+    pub iterations: u32,
+}
+
+/// Trace generator parameters.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Mean arrival rate (jobs per simulated second).
+    pub rate_per_sec: f64,
+    /// (model, weight) mix; weights need not sum to 1.
+    pub mix: Vec<(String, f64)>,
+    /// Worker-count choices (uniform).
+    pub worker_choices: Vec<usize>,
+    /// Iteration-count range (uniform, inclusive).
+    pub iter_range: (u32, u32),
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            rate_per_sec: 50.0,
+            mix: vec![("dnn_a".into(), 0.5), ("dnn_b".into(), 0.5)],
+            worker_choices: vec![4, 8, 16],
+            iter_range: (2, 10),
+        }
+    }
+}
+
+/// Generate `n` arrivals.
+pub fn generate(cfg: &TraceConfig, n: usize, rng: &mut Rng) -> Vec<TraceEntry> {
+    assert!(!cfg.mix.is_empty() && !cfg.worker_choices.is_empty());
+    let total_w: f64 = cfg.mix.iter().map(|(_, w)| w).sum();
+    let mut t = 0f64;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        t += rng.exponential(cfg.rate_per_sec) * 1e9;
+        let mut pick = rng.next_f64() * total_w;
+        let mut model = cfg.mix.last().unwrap().0.clone();
+        for (m, w) in &cfg.mix {
+            if pick < *w {
+                model = m.clone();
+                break;
+            }
+            pick -= w;
+        }
+        let n_workers = cfg.worker_choices[rng.next_below(cfg.worker_choices.len() as u64) as usize];
+        let iterations = rng.uniform_u64(cfg.iter_range.0 as u64, cfg.iter_range.1 as u64) as u32;
+        out.push(TraceEntry {
+            arrival_ns: t as SimTime,
+            model,
+            n_workers,
+            iterations,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_sorted_and_positive() {
+        let mut rng = Rng::new(3);
+        let trace = generate(&TraceConfig::default(), 200, &mut rng);
+        assert_eq!(trace.len(), 200);
+        assert!(trace.windows(2).all(|w| w[0].arrival_ns <= w[1].arrival_ns));
+    }
+
+    #[test]
+    fn rate_calibrated() {
+        let mut rng = Rng::new(5);
+        let cfg = TraceConfig { rate_per_sec: 100.0, ..Default::default() };
+        let trace = generate(&cfg, 5000, &mut rng);
+        let span_s = trace.last().unwrap().arrival_ns as f64 / 1e9;
+        let rate = 5000.0 / span_s;
+        assert!((rate - 100.0).abs() < 10.0, "rate={rate}");
+    }
+
+    #[test]
+    fn mix_respected() {
+        let mut rng = Rng::new(7);
+        let cfg = TraceConfig {
+            mix: vec![("dnn_a".into(), 3.0), ("dnn_b".into(), 1.0)],
+            ..Default::default()
+        };
+        let trace = generate(&cfg, 4000, &mut rng);
+        let a = trace.iter().filter(|e| e.model == "dnn_a").count() as f64 / 4000.0;
+        assert!((a - 0.75).abs() < 0.05, "a={a}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut r1 = Rng::new(11);
+        let mut r2 = Rng::new(11);
+        assert_eq!(
+            generate(&TraceConfig::default(), 50, &mut r1),
+            generate(&TraceConfig::default(), 50, &mut r2)
+        );
+    }
+
+    #[test]
+    fn iterations_in_range() {
+        let mut rng = Rng::new(13);
+        let cfg = TraceConfig { iter_range: (2, 4), ..Default::default() };
+        for e in generate(&cfg, 500, &mut rng) {
+            assert!((2..=4).contains(&e.iterations));
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! # ESA — Efficient Data-Plane Memory Scheduling for In-Network Aggregation
+//!
+//! Full-system reproduction of the ESA paper (Wang et al., 2022) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the paper's contribution: a packet-level
+//!   data-plane switch model with *preemptive, priority-scheduled aggregator
+//!   allocation*, the fallback parameter server with the reminder mechanism,
+//!   window-based workers, the ATP / SwitchML / strawman baselines, a
+//!   discrete-event network substrate (the NS3 stand-in), the DNN job model
+//!   of §7.2.1, and the figure-regeneration harnesses.
+//! - **Layer 2 (python/compile/model.py)** — a transformer-LM training step
+//!   AOT-lowered to HLO text and executed from rust through PJRT.
+//! - **Layer 1 (python/compile/kernels/)** — Pallas kernels for the switch
+//!   ALU (masked fixed-point aggregation) and the end-host float↔fixed
+//!   conversion; `util::fixed` mirrors them bit-for-bit.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the jax
+//! graphs once, and the `esa` binary is self-contained afterwards.
+//!
+//! ## Crate map
+//!
+//! | module         | role |
+//! |----------------|------|
+//! | [`util`]       | deterministic PRNG, fixed-point codec, stats, CLI, logging |
+//! | [`config`]     | TOML-subset parser + experiment schema |
+//! | [`net`]        | discrete-event engine: links, topologies, loss injection |
+//! | [`packet`]     | ESA/ATP wire formats (§5.1) |
+//! | [`switch`]     | aggregator pool + the Fig. 5 pipeline; one policy per system |
+//! | [`ps`]         | fallback PS: partial dictionary + reminder mechanism |
+//! | [`worker`]     | fragmentation, priority tagging (§5.4), windows, loss recovery (§5.3) |
+//! | [`job`]        | DNN A/B + testbed-profile job models, trace generation |
+//! | [`sim`]        | experiment driver + JCT/throughput/utilization metrics |
+//! | [`runtime`]    | PJRT loader for `artifacts/*.hlo.txt` |
+//! | [`train`]      | end-to-end trainer: real gradients through the simulated switch |
+//! | [`coordinator`]| control plane: job registry, priority inputs, experiment launch |
+
+pub mod config;
+pub mod coordinator;
+pub mod job;
+pub mod net;
+pub mod packet;
+pub mod ps;
+pub mod runtime;
+pub mod sim;
+pub mod switch;
+pub mod train;
+pub mod util;
+pub mod worker;
+
+/// Simulated time in nanoseconds since simulation start.
+pub type SimTime = u64;
+
+/// One microsecond in [`SimTime`] units.
+pub const USEC: SimTime = 1_000;
+/// One millisecond in [`SimTime`] units.
+pub const MSEC: SimTime = 1_000_000;
+/// One second in [`SimTime`] units.
+pub const SEC: SimTime = 1_000_000_000;
+
+/// Job identifier (index into the coordinator's registry).
+pub type JobId = u16;
+/// Worker index within a job (bit position in the aggregation bitmap).
+pub type WorkerId = u8;
+/// Node identifier in the simulated topology.
+pub type NodeId = u32;

@@ -1,0 +1,232 @@
+//! `esa` — the leader binary: run simulated experiments, regenerate the
+//! paper's figures, or drive end-to-end training through the data plane.
+//!
+//! ```text
+//! esa sim      [--config f.toml] [--policy esa] [--model dnn_a] [--jobs 8]
+//!              [--workers 8] [--iterations 3] [--seed 1] [--loss 0.0]
+//!              [--memory-mb 5] [--tensor-mb N]
+//! esa figures  [fig6b fig7 fig8 fig9 fig10 fig11 | all] [--quick]
+//! esa train    [--steps 100] [--workers 4] [--policy esa] [--seed 0]
+//!              [--csv out.csv]
+//! esa trace    [--n 20] [--rate 50]
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use esa::config::{ExperimentConfig, PolicyKind};
+use esa::job::trace::{generate, TraceConfig};
+use esa::runtime::Engine;
+use esa::sim::figures::{self, Scale};
+use esa::sim::Simulation;
+use esa::train::{Trainer, TrainerCfg};
+use esa::util::cli::Args;
+use esa::util::rng::Rng;
+use esa::util::stats::render_table;
+
+fn main() {
+    esa::util::logging::init();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("sim") => cmd_sim(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("train") => cmd_train(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => {
+            print_help();
+            Err(anyhow::anyhow!("unknown subcommand `{other}`"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "esa — Efficient Data-Plane Memory Scheduling for In-Network Aggregation\n\
+         \n\
+         subcommands:\n\
+         \x20 sim      run one simulated experiment and print its metrics\n\
+         \x20 figures  regenerate the paper's evaluation figures (fig6b..fig11 | all)\n\
+         \x20 train    end-to-end training through the simulated data plane (needs `make artifacts`)\n\
+         \x20 trace    emit a synthetic cluster job trace\n\
+         \n\
+         see README.md for the full flag reference"
+    );
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let cfg = if let Some(path) = args.get("config") {
+        ExperimentConfig::from_file(std::path::Path::new(path))?
+    } else {
+        let policy = PolicyKind::parse(args.get_or("policy", "esa"))?;
+        let model = args.get_or("model", "dnn_a").to_string();
+        let n_jobs: usize = args.get_parsed_or("jobs", 4)?;
+        let n_workers: usize = args.get_parsed_or("workers", 8)?;
+        let mut cfg = ExperimentConfig::synthetic(policy, &model, n_jobs, n_workers);
+        cfg.iterations = args.get_parsed_or("iterations", 3)?;
+        cfg.seed = args.get_parsed_or("seed", 1)?;
+        cfg.net.loss_prob = args.get_parsed_or("loss", 0.0)?;
+        cfg.switch.memory_bytes = args.get_parsed_or("memory-mb", 5u64)? * 1024 * 1024;
+        if let Some(mb) = args.get_parsed::<u64>("tensor-mb")? {
+            for j in &mut cfg.jobs {
+                j.tensor_bytes = Some(mb * 1024 * 1024);
+            }
+        }
+        cfg
+    };
+    let name = cfg.name.clone();
+    let policy = cfg.policy;
+    let bw = cfg.net.bandwidth_gbps;
+    let mut sim = Simulation::new(cfg)?;
+    let m = sim.run();
+    println!("experiment: {name} ({})", policy.name());
+    let mut rows = Vec::new();
+    for j in &m.jobs {
+        rows.push(vec![
+            j.job.to_string(),
+            j.model.clone(),
+            j.n_workers.to_string(),
+            format!("{:.3}", j.avg_jct_ns() / 1e6),
+            format!("{:.2}", j.agg_throughput_bps() * 8.0 / 1e9),
+            format!("{:.3}", j.memory_utilization(bw)),
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(
+            &["job", "model", "workers", "avg JCT (ms)", "agg thpt (Gbps)", "mem util"],
+            &rows
+        )
+    );
+    println!(
+        "avg JCT {:.3} ms | events {} | sim {:.3} ms | wall {:.2} s ({:.1} M events/s){}",
+        m.avg_jct_ms(),
+        m.events,
+        m.sim_ns as f64 / 1e6,
+        m.wall_secs,
+        m.events_per_sec() / 1e6,
+        if m.truncated { " | TRUNCATED" } else { "" }
+    );
+    // data-plane counters for the deep-dive view
+    let st = &sim.switch.stats;
+    println!(
+        "switch: {} grads, {} aggs, {} completions, {} preemptions, {} failed-preempt, {} passthrough, {} reminder-evictions",
+        st.grad_pkts, st.aggregations, st.completions, st.preemptions, st.failed_preemptions,
+        st.passthroughs, st.reminder_evictions
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let scale = if args.has_flag("quick") {
+        Scale::quick()
+    } else {
+        Scale::from_env()
+    };
+    let mut which: Vec<String> = args.positional.clone();
+    if which.is_empty() || which.iter().any(|w| w == "all") {
+        which = ["fig6b", "fig7", "fig8", "fig9", "fig10", "fig11"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+    }
+    println!(
+        "# scale: tensor x{}, {} iterations, seed {}",
+        scale.tensor, scale.iterations, scale.seed
+    );
+    for w in &which {
+        match w.as_str() {
+            "fig6b" | "fig6" => figures::fig6b_multi_tenant(&scale)?.print(),
+            "fig7" => {
+                let (a, b) = figures::fig7_microbench(&scale)?;
+                a.print();
+                b.print();
+            }
+            "fig8" => {
+                for f in figures::fig8_jct_vs_jobs(&scale)? {
+                    f.print();
+                }
+            }
+            "fig9" => {
+                for f in figures::fig9_jct_vs_workers(&scale)? {
+                    f.print();
+                }
+            }
+            "fig10" => figures::fig10_utilization(&scale)?.print(),
+            "fig11" => figures::fig11_priority_ablation(&scale)?.print(),
+            other => bail!("unknown figure `{other}`"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = TrainerCfg {
+        n_workers: args.get_parsed_or("workers", 4)?,
+        steps: args.get_parsed_or("steps", 100)?,
+        policy: PolicyKind::parse(args.get_or("policy", "esa"))?,
+        seed: args.get_parsed_or("seed", 0)?,
+        crosscheck_every: args.get_parsed_or("crosscheck-every", 10)?,
+        log_every: args.get_parsed_or("log-every", 10)?,
+    };
+    let engine = Engine::cpu().context("PJRT init")?;
+    println!("platform: {} | policy: {}", engine.platform(), cfg.policy.name());
+    let mut trainer = Trainer::new(&engine, cfg)?;
+    let history = trainer.run()?;
+    let first = history.first().map(|r| r.mean_loss).unwrap_or(f32::NAN);
+    let last = history.last().map(|r| r.mean_loss).unwrap_or(f32::NAN);
+    println!(
+        "trained {} steps: loss {:.4} -> {:.4} ({} params)",
+        history.len(),
+        first,
+        last,
+        trainer.flat_len()
+    );
+    if let Some(path) = args.get("csv") {
+        let mut csv = String::from("step,mean_loss,sim_comm_ns\n");
+        for r in &history {
+            csv.push_str(&format!("{},{},{}\n", r.step, r.mean_loss, r.sim_comm_ns));
+        }
+        std::fs::write(path, csv).with_context(|| format!("writing {path}"))?;
+        println!("loss curve written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let n: usize = args.get_parsed_or("n", 20)?;
+    let cfg = TraceConfig {
+        rate_per_sec: args.get_parsed_or("rate", 50.0)?,
+        ..TraceConfig::default()
+    };
+    let mut rng = Rng::new(args.get_parsed_or("seed", 1)?);
+    let entries = generate(&cfg, n, &mut rng);
+    let rows: Vec<Vec<String>> = entries
+        .iter()
+        .map(|e| {
+            vec![
+                format!("{:.3}", e.arrival_ns as f64 / 1e6),
+                e.model.clone(),
+                e.n_workers.to_string(),
+                e.iterations.to_string(),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        render_table(&["arrival (ms)", "model", "workers", "iterations"], &rows)
+    );
+    Ok(())
+}

@@ -1,0 +1,195 @@
+//! The discrete-event core: a time-ordered queue with deterministic
+//! tie-breaking (insertion sequence), the one invariant every simulation
+//! result in this repo rests on.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::packet::Packet;
+use crate::{NodeId, SimTime};
+
+/// Something that happens at an instant of simulated time.
+#[derive(Debug)]
+pub enum Event {
+    /// `pkt` arrives at node `at` (its next hop — not necessarily its
+    /// final destination; the switch forwards transit packets).
+    Deliver { at: NodeId, pkt: Packet },
+    /// An actor-defined timer fires at `node` with an opaque `key`
+    /// (retransmission timeouts, reminder scans, compute completion...).
+    Timer { node: NodeId, key: u64 },
+}
+
+struct Entry {
+    time: SimTime,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert so earliest (time, seq) pops first.
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic min-heap event queue.
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    next_seq: u64,
+    now: SimTime,
+    processed: u64,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue {
+            heap: BinaryHeap::with_capacity(1 << 16),
+            next_seq: 0,
+            now: 0,
+            processed: 0,
+        }
+    }
+
+    /// Current simulated time (time of the last popped event).
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Total events processed so far (the perf-pass denominator).
+    #[inline]
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `event` at absolute time `at` (must not precede `now`).
+    #[inline]
+    pub fn schedule(&mut self, at: SimTime, event: Event) {
+        debug_assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Entry { time: at.max(self.now), seq, event });
+    }
+
+    /// Pop the earliest event, advancing `now`.
+    #[inline]
+    pub fn pop(&mut self) -> Option<(SimTime, Event)> {
+        let e = self.heap.pop()?;
+        debug_assert!(e.time >= self.now);
+        self.now = e.time;
+        self.processed += 1;
+        Some((e.time, e.event))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packet::{Packet, PacketKind};
+
+    fn pkt(dst: NodeId) -> Packet {
+        Packet {
+            kind: PacketKind::Gradient,
+            job: 0,
+            seq: 0,
+            agg_index: 0,
+            bitmap: 1,
+            fan_in: 1,
+            priority: 0,
+            src: 0,
+            dst,
+            wire_bytes: 306,
+            reliable: false,
+            resend: false,
+            ecn: false,
+            values: None,
+            sent_at: 0,
+        }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(30, Event::Timer { node: 1, key: 3 });
+        q.schedule(10, Event::Timer { node: 1, key: 1 });
+        q.schedule(20, Event::Timer { node: 1, key: 2 });
+        let keys: Vec<u64> = std::iter::from_fn(|| q.pop())
+            .map(|(_, e)| match e {
+                Event::Timer { key, .. } => key,
+                _ => panic!(),
+            })
+            .collect();
+        assert_eq!(keys, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        for k in 0..100 {
+            q.schedule(5, Event::Timer { node: 0, key: k });
+        }
+        let keys: Vec<u64> = std::iter::from_fn(|| q.pop())
+            .map(|(_, e)| match e {
+                Event::Timer { key, .. } => key,
+                _ => panic!(),
+            })
+            .collect();
+        assert_eq!(keys, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn now_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule(10, Event::Deliver { at: 1, pkt: pkt(1) });
+        q.schedule(10, Event::Deliver { at: 2, pkt: pkt(2) });
+        q.schedule(25, Event::Deliver { at: 3, pkt: pkt(3) });
+        let mut last = 0;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last);
+            last = t;
+        }
+        assert_eq!(last, 25);
+        assert_eq!(q.processed(), 3);
+        assert_eq!(q.now(), 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    #[cfg(debug_assertions)]
+    fn scheduling_into_past_panics_in_debug() {
+        let mut q = EventQueue::new();
+        q.schedule(10, Event::Timer { node: 0, key: 0 });
+        q.pop();
+        q.schedule(5, Event::Timer { node: 0, key: 1 });
+    }
+}

@@ -1,0 +1,252 @@
+//! The network substrate (NS3 stand-in): a packet-level discrete-event
+//! fabric with full-duplex links, FIFO serialization, per-hop propagation
+//! delay, and i.i.d. loss injection on unreliable packets.
+//!
+//! Model: every directed hop `a -> b` is a link with `busy_until` state;
+//! a packet departs at `max(now, busy_until) + tx_time(bytes)` (which also
+//! becomes the link's new `busy_until` — FIFO), and arrives `hop_latency`
+//! later. Hop latency is `base_rtt / 4` so a host→switch→host→switch→host
+//! round trip equals the configured base RTT. Buffers are unbounded;
+//! loss is injected probabilistically rather than by tail drop (the
+//! paper's simulation setup does the same — a lossless DC fabric with a
+//! small random-loss knob for the recovery experiments).
+
+pub mod event;
+pub mod topology;
+
+use crate::config::NetworkConfig;
+
+use crate::packet::{Packet, PacketKind};
+use crate::util::rng::Rng;
+use crate::{NodeId, SimTime};
+
+pub use event::{Event, EventQueue};
+pub use topology::{Topology, SWITCH_NODE};
+
+/// Traffic counters, globally and per selected categories. The paper's
+/// traffic-volume discussion (§4 Discussion) is measured from these.
+#[derive(Debug, Clone, Default)]
+pub struct NetStats {
+    pub sent: u64,
+    pub ecn_marked: u64,
+    pub delivered: u64,
+    pub dropped: u64,
+    pub bytes_sent: u64,
+    pub gradient_pkts: u64,
+    pub partial_pkts: u64,
+    pub result_pkts: u64,
+    pub param_pkts: u64,
+    pub reminder_pkts: u64,
+    pub retransmit_pkts: u64,
+}
+
+impl NetStats {
+    fn count(&mut self, pkt: &Packet) {
+        self.sent += 1;
+        self.bytes_sent += pkt.wire_bytes as u64;
+        match pkt.kind {
+            PacketKind::Gradient => self.gradient_pkts += 1,
+            PacketKind::PartialToPs => self.partial_pkts += 1,
+            PacketKind::Result => self.result_pkts += 1,
+            PacketKind::Param => self.param_pkts += 1,
+            PacketKind::ReminderToPs | PacketKind::ReminderToSwitch | PacketKind::Nack => {
+                self.reminder_pkts += 1
+            }
+            PacketKind::Retransmit | PacketKind::CachedResult => self.retransmit_pkts += 1,
+        }
+    }
+}
+
+/// The simulated fabric: event queue + topology + link state.
+pub struct Net {
+    pub queue: EventQueue,
+    pub topo: Topology,
+    cfg: NetworkConfig,
+    /// `busy_until` per directed link (dense table, `topo.link_id`).
+    busy_until: Vec<SimTime>,
+    hop_latency: SimTime,
+    /// ECN marking threshold: queueing delay on a hop beyond this marks
+    /// the packet (DCTCP-style; ATP's congestion signal).
+    ecn_threshold_ns: SimTime,
+    loss_rng: Rng,
+    pub stats: NetStats,
+}
+
+impl Net {
+    pub fn new(topo: Topology, cfg: NetworkConfig, loss_rng: Rng) -> Net {
+        let links = topo.n_links();
+        Net {
+            queue: EventQueue::new(),
+            topo,
+            hop_latency: (cfg.base_rtt_ns / 4).max(1),
+            ecn_threshold_ns: 2 * cfg.base_rtt_ns,
+            cfg,
+            busy_until: vec![0; links],
+            loss_rng,
+            stats: NetStats::default(),
+        }
+    }
+
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.queue.now()
+    }
+
+    pub fn config(&self) -> &NetworkConfig {
+        &self.cfg
+    }
+
+    /// Transmit `pkt` one hop from `from` toward `pkt.dst`; schedules a
+    /// `Deliver` at the next hop (the sim driver routes switch-addressed
+    /// and transit packets to the switch actor).
+    pub fn transmit(&mut self, from: NodeId, mut pkt: Packet) {
+        debug_assert_ne!(from, pkt.dst, "transmit to self");
+        let next = self.topo.next_hop(from, pkt.dst);
+        let link = self.topo.link_id(from, next);
+        let now = self.queue.now();
+        let tx = self.cfg.tx_ns(pkt.wire_bytes as u64);
+        let depart = self.busy_until[link].max(now) + tx;
+        self.busy_until[link] = depart;
+        // DCTCP-style ECN: mark when the hop's queueing delay is high
+        if depart.saturating_sub(now + tx) > self.ecn_threshold_ns {
+            pkt.ecn = true;
+            self.stats.ecn_marked += 1;
+        }
+        self.stats.count(&pkt);
+        // Loss is injected per hop on unreliable packets only: the
+        // reliable channel abstracts TCP (retransmissions happen below
+        // our event granularity).
+        if !pkt.reliable && self.cfg.loss_prob > 0.0 && self.loss_rng.chance(self.cfg.loss_prob) {
+            self.stats.dropped += 1;
+            return;
+        }
+        if pkt.sent_at == 0 {
+            pkt.sent_at = now;
+        }
+        let arrive = depart + self.hop_latency;
+        self.stats.delivered += 1;
+        self.queue.schedule(arrive, Event::Deliver { at: next, pkt });
+    }
+
+    /// Schedule an actor timer.
+    #[inline]
+    pub fn timer(&mut self, at: SimTime, node: NodeId, key: u64) {
+        self.queue.schedule(at, Event::Timer { node, key });
+    }
+
+    /// Earliest time the egress link `from -> next_hop(from, dst)` frees up
+    /// (workers use this to pace window refills without busy timers).
+    pub fn egress_free_at(&self, from: NodeId, dst: NodeId) -> SimTime {
+        let next = self.topo.next_hop(from, dst);
+        self.busy_until[self.topo.link_id(from, next)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkConfig;
+
+    use crate::packet::Packet;
+
+    fn mknet(loss: f64) -> Net {
+        let cfg = NetworkConfig {
+            bandwidth_gbps: 100.0,
+            base_rtt_ns: 10_000,
+            loss_prob: loss,
+        };
+        Net::new(Topology::star(4), cfg, Rng::new(7))
+    }
+
+    fn grad(src: NodeId, dst: NodeId) -> Packet {
+        Packet::gradient(0, 0, 0, 1, 1, 0, src, dst, 306)
+    }
+
+    #[test]
+    fn single_hop_latency_is_tx_plus_prop() {
+        let mut net = mknet(0.0);
+        net.transmit(1, grad(1, 0));
+        let (t, ev) = net.queue.pop().unwrap();
+        // tx(306B @100G) = 25ns, hop = 2500ns
+        assert_eq!(t, 25 + 2500);
+        match ev {
+            Event::Deliver { at, pkt } => {
+                assert_eq!(at, 0);
+                assert_eq!(pkt.dst, 0);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn fifo_serialization_on_shared_link() {
+        let mut net = mknet(0.0);
+        net.transmit(1, grad(1, 0));
+        net.transmit(1, grad(1, 0));
+        let (t1, _) = net.queue.pop().unwrap();
+        let (t2, _) = net.queue.pop().unwrap();
+        assert_eq!(t2 - t1, 25, "second packet serializes behind the first");
+    }
+
+    #[test]
+    fn distinct_links_do_not_interfere() {
+        let mut net = mknet(0.0);
+        net.transmit(1, grad(1, 0));
+        net.transmit(2, grad(2, 0));
+        let (t1, _) = net.queue.pop().unwrap();
+        let (t2, _) = net.queue.pop().unwrap();
+        assert_eq!(t1, t2, "parallel uplinks serialize independently");
+    }
+
+    #[test]
+    fn host_to_host_routes_via_switch() {
+        let mut net = mknet(0.0);
+        net.transmit(1, grad(1, 2));
+        let (_, ev) = net.queue.pop().unwrap();
+        match ev {
+            Event::Deliver { at, pkt } => {
+                assert_eq!(at, 0, "first hop lands on the switch");
+                // the switch actor forwards:
+                net.transmit(0, pkt);
+            }
+            _ => panic!(),
+        }
+        let (_, ev) = net.queue.pop().unwrap();
+        match ev {
+            Event::Deliver { at, .. } => assert_eq!(at, 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn loss_injection_drops_unreliable_only() {
+        let mut net = mknet(1.0); // always lose
+        net.transmit(1, grad(1, 0));
+        assert!(net.queue.is_empty());
+        assert_eq!(net.stats.dropped, 1);
+        let mut rel = grad(1, 0);
+        rel.reliable = true;
+        net.transmit(1, rel);
+        assert_eq!(net.queue.len(), 1, "reliable packets never drop");
+    }
+
+    #[test]
+    fn stats_categorize() {
+        let mut net = mknet(0.0);
+        net.transmit(1, grad(1, 0));
+        net.transmit(1, Packet::reminder(0, 1, 1, 0, true, 306));
+        assert_eq!(net.stats.gradient_pkts, 1);
+        assert_eq!(net.stats.reminder_pkts, 1);
+        assert_eq!(net.stats.bytes_sent, 612);
+    }
+
+    #[test]
+    fn loss_rate_is_calibrated() {
+        let mut net = mknet(0.1);
+        for _ in 0..20_000 {
+            net.transmit(1, grad(1, 0));
+        }
+        let rate = net.stats.dropped as f64 / net.stats.sent as f64;
+        assert!((rate - 0.1).abs() < 0.01, "rate={rate}");
+    }
+}

@@ -1,0 +1,174 @@
+//! Topologies: which nodes exist and which directed links connect them.
+//!
+//! The paper's evaluation uses a single-switch star (64 servers, §7.2.1);
+//! a two-tier variant (first-level switches at the workers' racks, second
+//! edge switch at the PS's rack, as in ATP's hierarchical aggregation) is
+//! provided for the multi-rack extension tests.
+
+use crate::NodeId;
+
+/// The switch node always has id 0 in a star (the "first" switch in
+/// two-tier layouts).
+pub const SWITCH_NODE: NodeId = 0;
+
+/// A directed link id (index into the link table).
+pub type LinkId = usize;
+
+/// Node roles, mostly for diagnostics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeRole {
+    Switch,
+    Host,
+}
+
+/// A topology: nodes 0..n with a routing function returning, for a packet
+/// at `at` heading to `dst`, the (egress link, next node) pair.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    n_nodes: usize,
+    roles: Vec<NodeRole>,
+    /// Two-tier only: `parent[node]` is the switch a host hangs off; hosts
+    /// in a star all hang off SWITCH_NODE.
+    parent: Vec<NodeId>,
+    /// Two-tier only: links between switches.
+    n_switches: usize,
+}
+
+impl Topology {
+    /// Single-switch star with `n_hosts` servers (node ids 1..=n_hosts).
+    pub fn star(n_hosts: usize) -> Topology {
+        let n_nodes = n_hosts + 1;
+        let mut roles = vec![NodeRole::Host; n_nodes];
+        roles[SWITCH_NODE as usize] = NodeRole::Switch;
+        Topology {
+            n_nodes,
+            roles,
+            parent: (0..n_nodes).map(|_| SWITCH_NODE).collect(),
+            n_switches: 1,
+        }
+    }
+
+    /// Two-tier: `racks` first-level switches (ids 0..racks), hosts spread
+    /// round-robin; switch 0 doubles as the second-level edge switch.
+    pub fn two_tier(racks: usize, n_hosts: usize) -> Topology {
+        assert!(racks >= 1);
+        let n_nodes = racks + n_hosts;
+        let mut roles = vec![NodeRole::Host; n_nodes];
+        let mut parent = vec![SWITCH_NODE; n_nodes];
+        for r in 0..racks {
+            roles[r] = NodeRole::Switch;
+            parent[r] = SWITCH_NODE; // rack switches uplink to the edge
+        }
+        for h in 0..n_hosts {
+            parent[racks + h] = (h % racks) as NodeId;
+        }
+        Topology {
+            n_nodes,
+            roles,
+            parent,
+            n_switches: racks,
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    pub fn n_switches(&self) -> usize {
+        self.n_switches
+    }
+
+    pub fn role(&self, node: NodeId) -> NodeRole {
+        self.roles[node as usize]
+    }
+
+    pub fn is_switch(&self, node: NodeId) -> bool {
+        self.role(node) == NodeRole::Switch
+    }
+
+    /// The switch a host is attached to.
+    pub fn parent_of(&self, node: NodeId) -> NodeId {
+        self.parent[node as usize]
+    }
+
+    /// Next hop from `at` toward `dst`.
+    ///
+    /// Star: host → switch → host. Two-tier: host → rack switch → edge
+    /// switch → rack switch → host (shortcutting when ranks coincide).
+    pub fn next_hop(&self, at: NodeId, dst: NodeId) -> NodeId {
+        debug_assert_ne!(at, dst, "next_hop at destination");
+        if !self.is_switch(at) {
+            return self.parent[at as usize];
+        }
+        // at a switch: if dst hangs off us, deliver; else route toward edge
+        if self.parent[dst as usize] == at {
+            return dst;
+        }
+        if at == SWITCH_NODE {
+            // edge switch: go down to dst's rack switch
+            self.parent[dst as usize]
+        } else {
+            // rack switch: go up to the edge
+            SWITCH_NODE
+        }
+    }
+
+    /// Directed link id for the hop `from -> to`. Each ordered pair that can
+    /// be a hop gets a stable id: `from * n_nodes + to`.
+    pub fn link_id(&self, from: NodeId, to: NodeId) -> LinkId {
+        from as usize * self.n_nodes + to as usize
+    }
+
+    pub fn n_links(&self) -> usize {
+        self.n_nodes * self.n_nodes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn star_shape() {
+        let t = Topology::star(4);
+        assert_eq!(t.n_nodes(), 5);
+        assert!(t.is_switch(0));
+        assert!(!t.is_switch(3));
+        for h in 1..=4 {
+            assert_eq!(t.next_hop(h, 0), 0);
+            assert_eq!(t.next_hop(0, h), h);
+        }
+        // host to host routes via the switch
+        assert_eq!(t.next_hop(1, 2), 0);
+    }
+
+    #[test]
+    fn star_link_ids_unique() {
+        let t = Topology::star(3);
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..4u32 {
+            for b in 0..4u32 {
+                if a != b {
+                    assert!(seen.insert(t.link_id(a, b)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn two_tier_routing() {
+        // 2 racks, 4 hosts: hosts 2,4 on rack 0; hosts 3,5 on rack 1
+        let t = Topology::two_tier(2, 4);
+        assert_eq!(t.n_nodes(), 6);
+        assert!(t.is_switch(0) && t.is_switch(1));
+        assert_eq!(t.parent_of(2), 0);
+        assert_eq!(t.parent_of(3), 1);
+        // host 2 -> host 3: 2 -> rack0(=edge 0) -> rack1 -> 3
+        assert_eq!(t.next_hop(2, 3), 0);
+        assert_eq!(t.next_hop(0, 3), 1);
+        assert_eq!(t.next_hop(1, 3), 3);
+        // host 3 -> host 5 (same rack): 3 -> 1 -> 5
+        assert_eq!(t.next_hop(3, 5), 1);
+        assert_eq!(t.next_hop(1, 5), 5);
+    }
+}

@@ -1,0 +1,224 @@
+//! Wire formats (paper §5.1).
+//!
+//! The ESA header extends the ATP header with an 8-bit priority field:
+//! bitmap0/bitmap1 (first/second-level switch arrival bitmaps), job ID,
+//! sequence number, aggregator index, fan-in degrees, level bit, and the
+//! gradient fragment payload (64 × 4 B fixed-point values in a 306 B
+//! packet; SwitchML uses 32 values in 180 B).
+//!
+//! In the timing simulator the payload is usually *virtual* (`values:
+//! None`): contention dynamics only need sizes and headers. The end-to-end
+//! trainer (`train/`) sets `values: Some(..)` and the very same switch
+//! pipeline then aggregates real fixed-point gradients.
+
+use crate::{JobId, NodeId, SimTime};
+
+/// What a packet is, which determines how each actor handles it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PacketKind {
+    /// Worker → switch: one gradient fragment (UDP-like, droppable).
+    Gradient,
+    /// Switch → PS: a partial aggregation result. Carries the evicted /
+    /// failed-preempt / reminder-fetched value and its arrival bitmap.
+    PartialToPs,
+    /// Switch → workers: fully aggregated result, multicast (sub-RTT path).
+    Result,
+    /// PS → workers: final parameters after PS-side merge, multicast.
+    Param,
+    /// Worker → PS: worker-side reminder (loss case 1/3/4, §5.3).
+    ReminderToPs,
+    /// PS → switch: reminder packet; fetches the partial via packet swap
+    /// and deallocates the aggregator (Fig. 4).
+    ReminderToSwitch,
+    /// Worker → PS over the reliable channel: selective retransmission of
+    /// a lost gradient fragment (§5.3 — retransmits bypass the switch).
+    Retransmit,
+    /// PS → worker: selective-retransmission request for a specific
+    /// sequence number (§5.3 "only the workers who lost packets are
+    /// required to resend"; also the §5.3-case-2 query packet).
+    Nack,
+    /// Worker → PS: reply to a Nack when the worker holds the completed
+    /// result in its pull cache (§5.3 case 2 — avoids re-aggregation).
+    CachedResult,
+}
+
+/// A simulated packet. Header fields mirror §5.1/§5.2.
+#[derive(Debug, Clone)]
+pub struct Packet {
+    pub kind: PacketKind,
+    pub job: JobId,
+    pub seq: u32,
+    /// Aggregator index tagged at the end host: `hash(job, seq) % pool`.
+    pub agg_index: u32,
+    /// Arrival bitmap. For a worker's gradient: `1 << worker_id`; for a
+    /// partial: the OR of aggregated workers' bits.
+    pub bitmap: u32,
+    /// Fan-in: number of workers whose gradients complete this task.
+    pub fan_in: u8,
+    /// 8-bit compressed priority (§5.4); 0 for non-gradient packets.
+    pub priority: u8,
+    pub src: NodeId,
+    pub dst: NodeId,
+    /// Bytes on the wire (serialization + queueing cost).
+    pub wire_bytes: u32,
+    /// Reliable (TCP-like) packets are never dropped by loss injection.
+    pub reliable: bool,
+    /// ATP resend flag: a timeout-retransmitted gradient. The switch does
+    /// not aggregate it — it evicts any matching partial to the PS and
+    /// forwards the resend there too, resolving split aggregations.
+    pub resend: bool,
+    /// ECN mark: set by any congested hop (queueing delay beyond the
+    /// threshold); workers react with multiplicative decrease — the
+    /// ECN-based AIMD congestion control ATP uses and §5.1 adopts.
+    pub ecn: bool,
+    /// Fixed-point payload lanes; `None` in timing-only simulations.
+    pub values: Option<Box<[i32]>>,
+    /// Time the packet was first sent (for RTT estimation).
+    pub sent_at: SimTime,
+}
+
+impl Packet {
+    /// A gradient fragment from `worker` (bit position) of `job`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gradient(
+        job: JobId,
+        seq: u32,
+        agg_index: u32,
+        worker_bit: u32,
+        fan_in: u8,
+        priority: u8,
+        src: NodeId,
+        dst: NodeId,
+        wire_bytes: u32,
+    ) -> Packet {
+        Packet {
+            kind: PacketKind::Gradient,
+            job,
+            seq,
+            agg_index,
+            bitmap: worker_bit,
+            fan_in,
+            priority,
+            src,
+            dst,
+            wire_bytes,
+            reliable: false,
+            resend: false,
+            ecn: false,
+            values: None,
+            sent_at: 0,
+        }
+    }
+
+    /// Reminder packet: "all fields, except the job ID and sequence number,
+    /// are 0" (§5.1). Wire size equals a gradient packet (it travels the
+    /// same pipeline and fetches the partial by packet swapping).
+    pub fn reminder(job: JobId, seq: u32, src: NodeId, dst: NodeId, to_switch: bool, wire_bytes: u32) -> Packet {
+        Packet {
+            kind: if to_switch {
+                PacketKind::ReminderToSwitch
+            } else {
+                PacketKind::ReminderToPs
+            },
+            job,
+            seq,
+            agg_index: 0,
+            bitmap: 0,
+            fan_in: 0,
+            priority: 0,
+            src,
+            dst,
+            wire_bytes,
+            reliable: true,
+            resend: false,
+            ecn: false,
+            values: None,
+            sent_at: 0,
+        }
+    }
+
+    /// True if this packet's header matches an aggregation task identity.
+    #[inline]
+    pub fn same_task(&self, job: JobId, seq: u32) -> bool {
+        self.job == job && self.seq == seq
+    }
+}
+
+/// The identity of an aggregation task: packets of the same sequence number
+/// from all workers of a job (paper §2.1 "aggregator task").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId {
+    pub job: JobId,
+    pub seq: u32,
+}
+
+impl TaskId {
+    pub fn new(job: JobId, seq: u32) -> TaskId {
+        TaskId { job, seq }
+    }
+}
+
+/// The identity hash ATP/ESA use to pick an aggregator: `hash(jobID, seq)`.
+/// FNV-1a over the 6 identity bytes — cheap, deterministic and well-mixed,
+/// standing in for the Tofino CRC hash.
+#[inline]
+pub fn task_hash(job: JobId, seq: u32) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for b in job.to_le_bytes() {
+        h = (h ^ b as u32).wrapping_mul(0x0100_0193);
+    }
+    for b in seq.to_le_bytes() {
+        h = (h ^ b as u32).wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradient_constructor_sets_header() {
+        let p = Packet::gradient(3, 17, 99, 1 << 4, 8, 200, 5, 0, 306);
+        assert_eq!(p.kind, PacketKind::Gradient);
+        assert_eq!(p.bitmap, 16);
+        assert_eq!(p.fan_in, 8);
+        assert_eq!(p.priority, 200);
+        assert!(!p.reliable);
+        assert!(p.values.is_none());
+        assert!(p.same_task(3, 17));
+        assert!(!p.same_task(3, 18));
+    }
+
+    #[test]
+    fn reminder_has_zeroed_fields() {
+        let r = Packet::reminder(1, 5, 9, 0, true, 306);
+        assert_eq!(r.kind, PacketKind::ReminderToSwitch);
+        assert_eq!(r.bitmap, 0);
+        assert_eq!(r.priority, 0);
+        assert!(r.reliable);
+    }
+
+    #[test]
+    fn task_hash_deterministic_and_spread() {
+        assert_eq!(task_hash(1, 2), task_hash(1, 2));
+        assert_ne!(task_hash(1, 2), task_hash(2, 1));
+        // collision rate over a small pool should be near uniform
+        let pool = 1024u32;
+        let mut hits = vec![0u32; pool as usize];
+        for job in 0..8u16 {
+            for seq in 0..1000u32 {
+                hits[(task_hash(job, seq) % pool) as usize] += 1;
+            }
+        }
+        let max = *hits.iter().max().unwrap();
+        // 8000 keys into 1024 buckets: expect ~7.8 per bucket, max < 4x mean
+        assert!(max < 32, "max bucket {max}");
+    }
+
+    #[test]
+    fn task_id_ordering() {
+        assert!(TaskId::new(1, 2) < TaskId::new(1, 3));
+        assert!(TaskId::new(1, 9) < TaskId::new(2, 0));
+    }
+}

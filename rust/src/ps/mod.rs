@@ -1,0 +1,725 @@
+//! The fallback parameter server (§5.1 "PS Assisting with Aggregation").
+//!
+//! Per job, the PS keeps a dictionary `seq -> <bitmap, partial value,
+//! timestamp>` and assists in three cases: (1) the fragment was preempted
+//! at the switch (the evicted partial lands here), (2) the fragment lost a
+//! collision / failed to preempt (the loser packet lands here), (3) packet
+//! loss (selective retransmissions land here over the reliable channel).
+//!
+//! The reminder mechanism (§5.1, Fig. 4; settings in §6): when an entry
+//! sees no progress for an adaptive timeout (RTO from the entry-setup →
+//! completion "RTT", floored at `RTO_min` = 1 ms), or when three
+//! aggregated fragments with larger sequence numbers arrive ("dupACK"),
+//! the PS sends a reminder packet to the switch; the reminder fetches the
+//! resident partial via packet swapping. If the entry is *still*
+//! incomplete an RTO after a reminder, the PS NACKs exactly the missing
+//! workers (selective retransmission), who answer with a retransmit — or
+//! with a cached result if they already pulled the parameter (case 2).
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::packet::{Packet, PacketKind};
+use crate::util::fixed::agg_add_slice;
+use crate::{JobId, NodeId, SimTime, MSEC};
+
+/// §6: floor on every reminder/NACK timeout.
+pub const RTO_MIN_NS: SimTime = MSEC;
+/// Cap on the adaptive timeout: entry lifetimes under contention can reach
+/// seconds, and a recovery timeout that large would starve the escalation
+/// machinery (reminder → NACK) that unblocks windows.
+pub const RTO_MAX_NS: SimTime = 16 * MSEC;
+/// Scan cadence for the entry table (half the RTO floor).
+pub const SCAN_INTERVAL_NS: SimTime = MSEC / 2;
+/// §5.1/§6: dupACK threshold.
+pub const DUPACK_THRESHOLD: u32 = 3;
+/// Completed-result cache entries kept per job (serves re-pulls, case 2).
+const COMPLETED_CACHE: usize = 4096;
+
+/// Adaptive timeout estimator (TCP-style, §6 "takes reference from the
+/// TCP timeout"): RTO = srtt + 4·rttvar, floored at RTO_min.
+#[derive(Debug, Clone)]
+pub struct RttEstimator {
+    srtt: f64,
+    rttvar: f64,
+    seeded: bool,
+}
+
+impl Default for RttEstimator {
+    fn default() -> Self {
+        RttEstimator { srtt: 0.0, rttvar: 0.0, seeded: false }
+    }
+}
+
+impl RttEstimator {
+    pub fn sample(&mut self, rtt_ns: SimTime) {
+        let r = rtt_ns as f64;
+        if !self.seeded {
+            self.srtt = r;
+            self.rttvar = r / 2.0;
+            self.seeded = true;
+        } else {
+            self.rttvar = 0.75 * self.rttvar + 0.25 * (self.srtt - r).abs();
+            self.srtt = 0.875 * self.srtt + 0.125 * r;
+        }
+    }
+
+    pub fn rto(&self, floor: SimTime) -> SimTime {
+        if !self.seeded {
+            return floor;
+        }
+        ((self.srtt + 4.0 * self.rttvar) as SimTime).clamp(floor, RTO_MAX_NS.max(floor))
+    }
+}
+
+fn entry_seq_of(e: &Entry) -> u32 {
+    e.seq
+}
+
+/// One dictionary entry: `<bitmap, aggregation result, timestamp>`.
+#[derive(Debug)]
+struct Entry {
+    seq: u32,
+    bitmap: u32,
+    values: Option<Box<[i32]>>,
+    created: SimTime,
+    last_progress: SimTime,
+    /// Last recovery action (reminder/NACK) — paces escalation.
+    last_action: SimTime,
+    reminders_sent: u32,
+    nacks_sent: u32,
+    dupack: u32,
+}
+
+/// Per-job PS state.
+struct JobState {
+    job: JobId,
+    workers: Vec<NodeId>,
+    full_bitmap: u32,
+    packet_bytes: u32,
+    /// ATP: parameter delivery is reliable (the real system retransmits
+    /// params from PS state until ACKed; we abstract that below the event
+    /// granularity). ESA recovers lost params via the worker-reminder +
+    /// completed-cache path instead, so its params stay droppable.
+    reliable_params: bool,
+    entries: BTreeMap<u32, Entry>,
+    /// Bounded cache of completed results: seq -> values (None in timing
+    /// mode). Serves duplicate pulls and the case-2 re-multicast.
+    completed: HashMap<u32, Option<Box<[i32]>>>,
+    completed_order: std::collections::VecDeque<u32>,
+    rtt: RttEstimator,
+    /// Highest completed-or-entered seq (dupACK reference point).
+    max_seen_seq: u32,
+}
+
+/// PS actor counters.
+#[derive(Debug, Clone, Default)]
+pub struct PsStats {
+    pub partials: u64,
+    pub passthrough_grads: u64,
+    pub retransmits: u64,
+    pub duplicates: u64,
+    pub completions: u64,
+    pub reminders_to_switch: u64,
+    pub nacks: u64,
+    pub cached_results: u64,
+    pub worker_reminders: u64,
+    pub scans: u64,
+    pub escalations: u64,
+}
+
+/// The PS actor. One actor per PS *node*; it may serve several jobs
+/// (§7.1.3 co-locates two jobs per PS container).
+pub struct Ps {
+    pub node: NodeId,
+    switch: NodeId,
+    jobs: BTreeMap<JobId, JobState>,
+    pub stats: PsStats,
+    scan_scheduled: bool,
+}
+
+/// Timer keys for the PS actor.
+pub const TIMER_SCAN: u64 = 1;
+
+impl Ps {
+    pub fn new(node: NodeId, switch: NodeId) -> Ps {
+        Ps {
+            node,
+            switch,
+            jobs: BTreeMap::new(),
+            stats: PsStats::default(),
+            scan_scheduled: false,
+        }
+    }
+
+    /// Register a job this PS serves.
+    pub fn add_job(
+        &mut self,
+        job: JobId,
+        workers: Vec<NodeId>,
+        full_bitmap: u32,
+        packet_bytes: u32,
+        reliable_params: bool,
+    ) {
+        self.jobs.insert(
+            job,
+            JobState {
+                job,
+                workers,
+                full_bitmap,
+                packet_bytes,
+                reliable_params,
+                entries: BTreeMap::new(),
+                completed: HashMap::new(),
+                completed_order: std::collections::VecDeque::new(),
+                rtt: RttEstimator::default(),
+                max_seen_seq: 0,
+            },
+        );
+    }
+
+    /// Whether the periodic scan timer needs (re)arming; the driver arms
+    /// it and calls `on_scan` when it fires.
+    pub fn needs_scan_timer(&mut self) -> bool {
+        if self.scan_scheduled || self.jobs.values().all(|j| j.entries.is_empty()) {
+            return false;
+        }
+        self.scan_scheduled = true;
+        true
+    }
+
+    /// Handle a packet delivered to this PS node.
+    pub fn handle(&mut self, now: SimTime, pkt: Packet, out: &mut Vec<Packet>) {
+        match pkt.kind {
+            PacketKind::PartialToPs => {
+                self.stats.partials += 1;
+                self.merge_contribution(now, pkt, out);
+            }
+            PacketKind::Gradient => {
+                // collision loser / failed preempt forwarded by the switch
+                self.stats.passthrough_grads += 1;
+                self.merge_contribution(now, pkt, out);
+            }
+            PacketKind::Retransmit => {
+                self.stats.retransmits += 1;
+                self.merge_contribution(now, pkt, out);
+            }
+            PacketKind::CachedResult => {
+                self.stats.cached_results += 1;
+                self.adopt_cached_result(now, pkt, out);
+            }
+            PacketKind::ReminderToPs => {
+                self.stats.worker_reminders += 1;
+                self.on_worker_reminder(now, pkt, out);
+            }
+            other => debug_assert!(false, "PS got {other:?}"),
+        }
+    }
+
+    /// Fold a contribution (partial, passthrough gradient or retransmit)
+    /// into the dictionary; complete → multicast.
+    fn merge_contribution(&mut self, now: SimTime, pkt: Packet, out: &mut Vec<Packet>) {
+        let switch = self.switch;
+        let Some(js) = self.jobs.get_mut(&pkt.job) else {
+            debug_assert!(false, "PS got packet for unknown job {}", pkt.job);
+            return;
+        };
+        if js.completed.contains_key(&pkt.seq) {
+            // late duplicate of an already-finished task
+            self.stats.duplicates += 1;
+            return;
+        }
+        js.max_seen_seq = js.max_seen_seq.max(pkt.seq);
+        let reliable_flush = pkt.reliable && pkt.kind == PacketKind::PartialToPs;
+        let entry = js.entries.entry(pkt.seq).or_insert_with(|| Entry {
+            seq: pkt.seq,
+            bitmap: 0,
+            values: None,
+            created: now,
+            last_progress: now,
+            last_action: 0,
+            reminders_sent: 0,
+            nacks_sent: 0,
+            dupack: 0,
+        });
+        if entry.bitmap & pkt.bitmap != 0 {
+            // overlapping contribution: a retransmit raced an aggregated
+            // copy — the bitmap makes it detectable, drop it (§5.3).
+            self.stats.duplicates += 1;
+            return;
+        }
+        entry.bitmap |= pkt.bitmap;
+        entry.last_progress = now;
+        match (&mut entry.values, pkt.values.as_deref()) {
+            (Some(buf), Some(v)) => agg_add_slice(buf, v),
+            (slot @ None, Some(v)) => *slot = Some(v.into()),
+            _ => {}
+        }
+        // dupACK bookkeeping for *other* stale entries happens in bulk:
+        // count this arrival against every entry with a smaller seq.
+        let seq = pkt.seq;
+        if entry.bitmap == js.full_bitmap {
+            let node = self.node;
+            Self::complete_entry(&mut self.stats, js, node, now, seq, out);
+        } else if reliable_flush {
+            // A reminder/resend-triggered flush just arrived and the task
+            // is *still* incomplete: the missing bits are known exactly —
+            // NACK them now instead of waiting for the next scan epoch
+            // (collapses loss recovery to ~one RTO).
+            let node = self.node;
+            let mut entry = js.entries.remove(&seq).unwrap();
+            entry.last_action = now;
+            Self::nack_missing(&mut self.stats, js, &mut entry, node, out);
+            js.entries.insert(seq, entry);
+        } else {
+            Self::bump_dupacks(&mut self.stats, js, now, seq, switch, out);
+        }
+    }
+
+    /// A worker replied to a NACK with its cached completed result: adopt
+    /// it verbatim (replacing any partial — the cached copy already
+    /// contains every worker's contribution).
+    fn adopt_cached_result(&mut self, now: SimTime, pkt: Packet, out: &mut Vec<Packet>) {
+        let Some(js) = self.jobs.get_mut(&pkt.job) else {
+            return;
+        };
+        if js.completed.contains_key(&pkt.seq) {
+            self.stats.duplicates += 1;
+            return;
+        }
+        let entry = js.entries.entry(pkt.seq).or_insert_with(|| Entry {
+            seq: pkt.seq,
+            bitmap: 0,
+            values: None,
+            created: now,
+            last_progress: now,
+            last_action: 0,
+            reminders_sent: 0,
+            nacks_sent: 0,
+            dupack: 0,
+        });
+        entry.bitmap = js.full_bitmap;
+        entry.values = pkt.values;
+        let seq = pkt.seq;
+        let node = self.node;
+        Self::complete_entry(&mut self.stats, js, node, now, seq, out);
+    }
+
+    /// §5.3 case 1/3/4: a worker-side reminder. Ensure an entry exists and
+    /// immediately remind the switch so the resident partial (if any) is
+    /// flushed here.
+    fn on_worker_reminder(&mut self, now: SimTime, pkt: Packet, out: &mut Vec<Packet>) {
+        let switch = self.switch;
+        let node = self.node;
+        let Some(js) = self.jobs.get_mut(&pkt.job) else {
+            return;
+        };
+        if js.completed.contains_key(&pkt.seq) {
+            // the task actually finished — re-multicast from the cache so
+            // the reminding worker unblocks (case 2, scenario 1)
+            let values = js.completed.get(&pkt.seq).cloned().flatten();
+            out.push(Packet {
+                kind: PacketKind::Param,
+                job: js.job,
+                seq: pkt.seq,
+                agg_index: 0,
+                bitmap: js.full_bitmap,
+                fan_in: js.full_bitmap.count_ones() as u8,
+                priority: 0,
+                src: node,
+                dst: pkt.src,
+                wire_bytes: js.packet_bytes,
+                reliable: true,
+                resend: false,
+                ecn: false,
+                values,
+                sent_at: 0,
+            });
+            return;
+        }
+        let rto = js.rtt.rto(RTO_MIN_NS);
+        let entry = js.entries.entry(pkt.seq).or_insert_with(|| Entry {
+            seq: pkt.seq,
+            bitmap: 0,
+            values: None,
+            created: now,
+            last_progress: now,
+            last_action: 0,
+            reminders_sent: 0,
+            nacks_sent: 0,
+            dupack: 0,
+        });
+        // Pace recovery: worker reminders may arrive every worker-RTO from
+        // several workers; one switch reminder per PS-RTO is enough.
+        if now.saturating_sub(entry.last_action) >= rto || entry.reminders_sent == 0 {
+            entry.last_action = now;
+            if entry.reminders_sent == 0 {
+                entry.reminders_sent += 1;
+                self.stats.reminders_to_switch += 1;
+                out.push(Packet::reminder(pkt.job, pkt.seq, node, switch, true, js.packet_bytes));
+            } else {
+                // the switch was already flushed once and the task is
+                // still stuck: go straight to selective retransmission
+                let seq = pkt.seq;
+                let mut entry = js.entries.remove(&seq).unwrap();
+                Self::nack_missing(&mut self.stats, js, &mut entry, node, out);
+                js.entries.insert(seq, entry);
+            }
+        }
+    }
+
+    /// Periodic scan (§5.1 timeout + Fig. 4): remind the switch for stale
+    /// entries; NACK missing workers when a reminder already happened.
+    pub fn on_scan(&mut self, now: SimTime, out: &mut Vec<Packet>) -> bool {
+        self.scan_scheduled = false;
+        self.stats.scans += 1;
+        let node = self.node;
+        let switch = self.switch;
+        let mut any = false;
+        for js in self.jobs.values_mut() {
+            let rto = js.rtt.rto(RTO_MIN_NS);
+            let packet_bytes = js.packet_bytes;
+            let job = js.job;
+            let mut nack_later: Vec<u32> = Vec::new();
+            for (&seq, entry) in js.entries.iter_mut() {
+                any = true;
+                let idle_since = entry.last_progress.max(entry.last_action);
+                if now.saturating_sub(idle_since) < rto {
+                    continue;
+                }
+                self.stats.escalations += 1;
+                entry.last_action = now;
+                if entry.reminders_sent == 0 {
+                    // first escalation: fetch whatever the switch holds
+                    entry.reminders_sent += 1;
+                    self.stats.reminders_to_switch += 1;
+                    out.push(Packet::reminder(job, seq, node, switch, true, packet_bytes));
+                } else {
+                    // later escalations: selective retransmission from the
+                    // exact workers whose bits are missing (§5.3)
+                    nack_later.push(seq);
+                }
+            }
+            for seq in nack_later {
+                if let Some(mut entry) = js.entries.remove(&seq) {
+                    Self::nack_missing(&mut self.stats, js, &mut entry, node, out);
+                    js.entries.insert(seq, entry);
+                }
+            }
+        }
+        any
+    }
+
+    /// NACK every worker whose bit is missing from `entry` (selective
+    /// retransmission, §5.3). Returns how many were sent.
+    #[allow(clippy::too_many_arguments)]
+    fn nack_missing(
+        stats: &mut PsStats,
+        js: &JobState,
+        entry: &mut Entry,
+        node: NodeId,
+        out: &mut Vec<Packet>,
+    ) -> u32 {
+        let missing = js.full_bitmap & !entry.bitmap;
+        let mut n = 0;
+        for (w, &wnode) in js.workers.iter().enumerate() {
+            if missing & (1 << w) != 0 {
+                stats.nacks += 1;
+                n += 1;
+                out.push(Packet {
+                    kind: PacketKind::Nack,
+                    job: js.job,
+                    seq: entry_seq_of(entry),
+                    agg_index: 0,
+                    bitmap: 1 << w,
+                    fan_in: js.full_bitmap.count_ones() as u8,
+                    priority: 0,
+                    src: node,
+                    dst: wnode,
+                    wire_bytes: 64,
+                    reliable: true,
+                    resend: false,
+                    ecn: false,
+                    values: None,
+                    sent_at: 0,
+                });
+            }
+        }
+        entry.nacks_sent += 1;
+        n
+    }
+
+    fn complete_entry(
+        stats: &mut PsStats,
+        js: &mut JobState,
+        node: NodeId,
+        now: SimTime,
+        seq: u32,
+        out: &mut Vec<Packet>,
+    ) {
+        let entry = js.entries.remove(&seq).expect("completing absent entry");
+        stats.completions += 1;
+        js.rtt.sample(now.saturating_sub(entry.created).max(1));
+        // One parameter packet toward the switch, which replicates it to
+        // the job's multicast group — the PS uplink carries the result
+        // once, not fan-out times (both ATP and ESA use switch multicast
+        // for the return path).
+        out.push(Packet {
+            kind: PacketKind::Param,
+            job: js.job,
+            seq,
+            agg_index: 0,
+            bitmap: js.full_bitmap,
+            fan_in: js.full_bitmap.count_ones() as u8,
+            priority: 0,
+            src: node,
+            dst: crate::net::SWITCH_NODE,
+            wire_bytes: js.packet_bytes,
+            reliable: js.reliable_params,
+            resend: false,
+            ecn: false,
+            values: entry.values.clone(),
+            sent_at: 0,
+        });
+        // cache bounded completed results
+        js.completed.insert(seq, entry.values);
+        js.completed_order.push_back(seq);
+        if js.completed_order.len() > COMPLETED_CACHE {
+            if let Some(old) = js.completed_order.pop_front() {
+                js.completed.remove(&old);
+            }
+        }
+    }
+
+    /// dupACK rule: an arrival for `seq` counts against every older
+    /// incomplete entry; at the threshold the PS reminds the switch.
+    /// (Tracked via a per-entry counter bumped by newer arrivals; the scan
+    /// table is small so the linear pass is fine at PS packet rates.)
+    fn bump_dupacks(
+        stats: &mut PsStats,
+        js: &mut JobState,
+        _now: SimTime,
+        newer_seq: u32,
+        switch: NodeId,
+        out: &mut Vec<Packet>,
+    ) {
+        // Only examine entries older than the arrival; cap the pass to
+        // keep the hot path bounded.
+        const MAX_PASS: usize = 32;
+        let job = js.job;
+        let packet_bytes = js.packet_bytes;
+        let mut fired: Vec<u32> = Vec::new();
+        for (&seq, entry) in js.entries.iter_mut().take(MAX_PASS) {
+            if seq < newer_seq {
+                entry.dupack += 1;
+                if entry.dupack == DUPACK_THRESHOLD {
+                    fired.push(seq);
+                }
+            }
+        }
+        for seq in fired {
+            stats.reminders_to_switch += 1;
+            if let Some(e) = js.entries.get_mut(&seq) {
+                e.reminders_sent += 1;
+                e.dupack = 0;
+            }
+            out.push(Packet::reminder(job, seq, 0, switch, true, packet_bytes));
+        }
+    }
+
+    /// Entries currently pending for a job (tests/metrics).
+    pub fn pending_entries(&self, job: JobId) -> usize {
+        self.jobs.get(&job).map(|j| j.entries.len()).unwrap_or(0)
+    }
+
+    /// Debug dump of pending entries: (seq, bitmap, reminders, nacks).
+    pub fn debug_entries(&self, job: JobId) -> Vec<(u32, u32, u32, u32)> {
+        self.jobs
+            .get(&job)
+            .map(|j| {
+                let mut v: Vec<_> = j
+                    .entries
+                    .iter()
+                    .map(|(&s, e)| (s, e.bitmap, e.reminders_sent, e.nacks_sent))
+                    .collect();
+                v.sort();
+                v
+            })
+            .unwrap_or_default()
+    }
+
+    /// Whether a seq is in the completed cache (tests).
+    pub fn is_completed(&self, job: JobId, seq: u32) -> bool {
+        self.jobs
+            .get(&job)
+            .map(|j| j.completed.contains_key(&seq))
+            .unwrap_or(false)
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mkps() -> Ps {
+        let mut ps = Ps::new(9, 0);
+        ps.add_job(0, vec![1, 2, 3], 0b111, 306, false);
+        ps
+    }
+
+    fn partial(job: JobId, seq: u32, bitmap: u32, values: Option<Vec<i32>>) -> Packet {
+        Packet {
+            kind: PacketKind::PartialToPs,
+            job,
+            seq,
+            agg_index: 0,
+            bitmap,
+            fan_in: 3,
+            priority: 0,
+            src: 0,
+            dst: 9,
+            wire_bytes: 306,
+            reliable: false,
+            resend: false,
+            ecn: false,
+            values: values.map(|v| v.into_boxed_slice()),
+            sent_at: 0,
+        }
+    }
+
+    #[test]
+    fn partials_merge_to_completion_and_multicast() {
+        let mut ps = mkps();
+        let mut out = Vec::new();
+        ps.handle(10, partial(0, 5, 0b011, Some(vec![1, 2])), &mut out);
+        assert!(out.is_empty());
+        assert_eq!(ps.pending_entries(0), 1);
+        ps.handle(20, partial(0, 5, 0b100, Some(vec![10, 20])), &mut out);
+        assert_eq!(out.len(), 1, "one param packet toward the switch multicast");
+        assert_eq!(out[0].kind, PacketKind::Param);
+        assert_eq!(out[0].dst, 0, "param goes to the switch for replication");
+        assert_eq!(out[0].values.as_deref().unwrap(), &[11, 22]);
+        assert_eq!(ps.pending_entries(0), 0);
+        assert_eq!(ps.stats.completions, 1);
+    }
+
+    #[test]
+    fn overlapping_retransmit_is_deduped() {
+        let mut ps = mkps();
+        let mut out = Vec::new();
+        ps.handle(10, partial(0, 5, 0b011, Some(vec![1, 1])), &mut out);
+        let mut retr = partial(0, 5, 0b001, Some(vec![1, 1]));
+        retr.kind = PacketKind::Retransmit;
+        ps.handle(20, retr, &mut out);
+        assert_eq!(ps.stats.duplicates, 1);
+        // completing contribution still works and isn't double counted
+        ps.handle(30, partial(0, 5, 0b100, Some(vec![1, 1])), &mut out);
+        assert_eq!(out[0].values.as_deref().unwrap(), &[2, 2]);
+    }
+
+    #[test]
+    fn late_packet_after_completion_is_dropped() {
+        let mut ps = mkps();
+        let mut out = Vec::new();
+        ps.handle(10, partial(0, 5, 0b111, None), &mut out);
+        out.clear();
+        ps.handle(20, partial(0, 5, 0b001, None), &mut out);
+        assert!(out.is_empty());
+        assert_eq!(ps.stats.duplicates, 1);
+    }
+
+    #[test]
+    fn worker_reminder_creates_entry_and_reminds_switch() {
+        let mut ps = mkps();
+        let mut out = Vec::new();
+        let rem = Packet::reminder(0, 7, 1, 9, false, 306);
+        ps.handle(10, rem, &mut out);
+        assert_eq!(ps.pending_entries(0), 1);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].kind, PacketKind::ReminderToSwitch);
+        assert_eq!(out[0].dst, 0);
+        assert_eq!(out[0].seq, 7);
+    }
+
+    #[test]
+    fn worker_reminder_for_completed_task_served_from_cache() {
+        let mut ps = mkps();
+        let mut out = Vec::new();
+        ps.handle(10, partial(0, 5, 0b111, Some(vec![9])), &mut out);
+        out.clear();
+        let rem = Packet::reminder(0, 5, 2, 9, false, 306);
+        ps.handle(50, rem, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].kind, PacketKind::Param);
+        assert_eq!(out[0].dst, 2);
+        assert_eq!(out[0].values.as_deref().unwrap(), &[9]);
+    }
+
+    #[test]
+    fn scan_escalates_reminder_then_nack_missing_only() {
+        let mut ps = mkps();
+        let mut out = Vec::new();
+        ps.handle(10, partial(0, 5, 0b001, None), &mut out);
+        // first scan after RTO: reminder to switch
+        ps.on_scan(10 + 2 * RTO_MIN_NS, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].kind, PacketKind::ReminderToSwitch);
+        out.clear();
+        // second scan much later: NACKs to workers 1 and 2 (missing bits)
+        ps.on_scan(10 + 20 * RTO_MIN_NS, &mut out);
+        let nacks: Vec<_> = out.iter().filter(|p| p.kind == PacketKind::Nack).collect();
+        assert_eq!(nacks.len(), 2);
+        assert_eq!(nacks[0].dst, 2);
+        assert_eq!(nacks[1].dst, 3);
+    }
+
+    #[test]
+    fn scan_respects_rto_backoff() {
+        let mut ps = mkps();
+        let mut out = Vec::new();
+        ps.handle(10, partial(0, 5, 0b001, None), &mut out);
+        ps.on_scan(10 + RTO_MIN_NS / 2, &mut out);
+        assert!(out.is_empty(), "no reminder before RTO");
+    }
+
+    #[test]
+    fn dupack_triggers_reminder_for_older_entry() {
+        let mut ps = mkps();
+        let mut out = Vec::new();
+        ps.handle(10, partial(0, 5, 0b001, None), &mut out);
+        for newer in [6, 7, 8] {
+            ps.handle(20, partial(0, newer, 0b001, None), &mut out);
+        }
+        let reminders: Vec<_> = out
+            .iter()
+            .filter(|p| p.kind == PacketKind::ReminderToSwitch && p.seq == 5)
+            .collect();
+        assert_eq!(reminders.len(), 1, "3 newer arrivals fire the dupACK reminder");
+    }
+
+    #[test]
+    fn cached_result_completes_entry_verbatim() {
+        let mut ps = mkps();
+        let mut out = Vec::new();
+        ps.handle(10, partial(0, 5, 0b011, Some(vec![5])), &mut out);
+        let mut cr = partial(0, 5, 0b111, Some(vec![42]));
+        cr.kind = PacketKind::CachedResult;
+        ps.handle(20, cr, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(
+            out[0].values.as_deref().unwrap(),
+            &[42],
+            "cached result replaces, never adds"
+        );
+    }
+
+    #[test]
+    fn rtt_estimator_floors_at_min() {
+        let mut e = RttEstimator::default();
+        assert_eq!(e.rto(RTO_MIN_NS), RTO_MIN_NS);
+        e.sample(100);
+        assert_eq!(e.rto(RTO_MIN_NS), RTO_MIN_NS);
+        e.sample(10 * RTO_MIN_NS);
+        assert!(e.rto(RTO_MIN_NS) > RTO_MIN_NS);
+    }
+}

@@ -1,0 +1,243 @@
+//! Artifact registry: parses the `.meta` sidecars `python/compile/aot.py`
+//! writes next to each HLO text artifact, so the rust side knows every
+//! graph's I/O shapes and the compile-time constants (fixed-point scale,
+//! flat parameter length, ...) without a JSON dependency.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of a tensor boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            other => bail!("unknown dtype `{other}`"),
+        })
+    }
+}
+
+/// One input/output boundary tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    /// Empty for scalars.
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Parsed `.meta` sidecar.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub extra: BTreeMap<String, String>,
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<ArtifactMeta> {
+        let mut name = String::new();
+        let mut inputs = Vec::new();
+        let mut outputs = Vec::new();
+        let mut extra = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("meta line {}: missing `=`", lineno + 1))?;
+            match key {
+                "name" => name = value.to_string(),
+                "input" | "output" => {
+                    let mut parts = value.split_whitespace();
+                    let tname = parts.next().context("tensor name")?.to_string();
+                    let dtype = Dtype::parse(parts.next().context("dtype")?)?;
+                    let dims_s = parts.next().context("dims")?;
+                    let dims = if dims_s == "-" {
+                        Vec::new()
+                    } else {
+                        dims_s
+                            .split('x')
+                            .map(|d| d.parse::<usize>().context("dim"))
+                            .collect::<Result<Vec<_>>>()?
+                    };
+                    let spec = TensorSpec { name: tname, dtype, dims };
+                    if key == "input" {
+                        inputs.push(spec);
+                    } else {
+                        outputs.push(spec);
+                    }
+                }
+                _ => {
+                    extra.insert(key.to_string(), value.to_string());
+                }
+            }
+        }
+        if name.is_empty() {
+            bail!("meta file missing `name=`");
+        }
+        Ok(ArtifactMeta { name, inputs, outputs, extra })
+    }
+
+    pub fn extra_u64(&self, key: &str) -> Result<u64> {
+        self.extra
+            .get(key)
+            .with_context(|| format!("meta missing `{key}`"))?
+            .parse()
+            .with_context(|| format!("meta `{key}` not an integer"))
+    }
+
+    pub fn extra_f64(&self, key: &str) -> Result<f64> {
+        self.extra
+            .get(key)
+            .with_context(|| format!("meta missing `{key}`"))?
+            .parse()
+            .with_context(|| format!("meta `{key}` not a float"))
+    }
+}
+
+/// Locates artifacts on disk: `<dir>/<name>.hlo.txt` + `<dir>/<name>.meta`.
+#[derive(Debug, Clone)]
+pub struct ArtifactDir {
+    pub dir: PathBuf,
+}
+
+impl ArtifactDir {
+    pub fn new<P: Into<PathBuf>>(dir: P) -> ArtifactDir {
+        ArtifactDir { dir: dir.into() }
+    }
+
+    /// The conventional location relative to the repo root, overridable
+    /// via `ESA_ARTIFACTS`.
+    pub fn default_location() -> ArtifactDir {
+        let dir = std::env::var("ESA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        ArtifactDir::new(dir)
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn meta_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.meta"))
+    }
+
+    pub fn exists(&self, name: &str) -> bool {
+        self.hlo_path(name).is_file() && self.meta_path(name).is_file()
+    }
+
+    pub fn load_meta(&self, name: &str) -> Result<ArtifactMeta> {
+        let path = self.meta_path(name);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        ArtifactMeta::parse(&text)
+    }
+
+    /// Raw little-endian f32 blob (initial parameters).
+    pub fn load_f32_blob(&self, filename: &str) -> Result<Vec<f32>> {
+        let path = self.dir.join(filename);
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{}: length {} not a multiple of 4", path.display(), bytes.len());
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Absent-artifact error message with the build hint (shared by tests and
+/// binaries so skipping is consistent).
+pub fn require_artifacts(dir: &ArtifactDir, names: &[&str]) -> Result<()> {
+    for n in names {
+        if !dir.exists(n) {
+            bail!(
+                "artifact `{n}` not found under {} — run `make artifacts` first",
+                dir.dir.display()
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+name=train_step
+input=arg0 f32 164864
+input=arg1 i32 4x65
+output=out0 f32 -
+output=out1 i32 164864
+scale_bits=20
+flat_len=164864
+lr=0.05
+";
+
+    #[test]
+    fn parses_sample_meta() {
+        let m = ArtifactMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "train_step");
+        assert_eq!(m.inputs.len(), 2);
+        assert_eq!(m.inputs[0].dtype, Dtype::F32);
+        assert_eq!(m.inputs[0].dims, vec![164864]);
+        assert_eq!(m.inputs[1].dims, vec![4, 65]);
+        assert_eq!(m.outputs[0].dims, Vec::<usize>::new());
+        assert_eq!(m.extra_u64("scale_bits").unwrap(), 20);
+        assert!((m.extra_f64("lr").unwrap() - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scalar_spec_has_count_one() {
+        let m = ArtifactMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.outputs[0].element_count(), 1);
+        assert_eq!(m.inputs[1].element_count(), 260);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ArtifactMeta::parse("input=x f32").is_err());
+        assert!(ArtifactMeta::parse("input=x q8 4").is_err());
+        assert!(ArtifactMeta::parse("no_equals_line_name").is_err());
+        assert!(ArtifactMeta::parse("x=1").is_err(), "missing name");
+    }
+
+    #[test]
+    fn artifact_dir_paths() {
+        let d = ArtifactDir::new("/tmp/arts");
+        assert_eq!(d.hlo_path("m").to_str().unwrap(), "/tmp/arts/m.hlo.txt");
+        assert_eq!(d.meta_path("m").to_str().unwrap(), "/tmp/arts/m.meta");
+        assert!(!d.exists("m"));
+    }
+
+    #[test]
+    fn f32_blob_roundtrip() {
+        let dir = std::env::temp_dir().join("esa_blob_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("b.f32"), bytes).unwrap();
+        let d = ArtifactDir::new(&dir);
+        assert_eq!(d.load_f32_blob("b.f32").unwrap(), vals);
+    }
+}

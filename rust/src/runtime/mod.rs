@@ -1,0 +1,232 @@
+//! The PJRT runtime: loads the AOT HLO-text artifacts `make artifacts`
+//! produced and executes them on the CPU PJRT client — the only place the
+//! rust side touches XLA. Python never runs here.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): the
+//! image's xla_extension 0.5.1 rejects serialized protos from jax ≥ 0.5
+//! (64-bit instruction ids), while the text parser reassigns ids — see
+//! /opt/xla-example/README.md and DESIGN.md.
+
+pub mod artifacts;
+
+use anyhow::{bail, Context, Result};
+
+pub use artifacts::{ArtifactDir, ArtifactMeta, Dtype, TensorSpec};
+
+/// Typed host-side tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32(_) => Dtype::F32,
+            HostTensor::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected scalar, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+}
+
+/// A compiled AOT graph ready to execute.
+pub struct LoadedGraph {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT engine (CPU client + artifact directory).
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub dir: ArtifactDir,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client over the conventional artifact directory.
+    pub fn cpu() -> Result<Engine> {
+        Engine::with_dir(ArtifactDir::default_location())
+    }
+
+    pub fn with_dir(dir: ArtifactDir) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, dir })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact by name.
+    pub fn load(&self, name: &str) -> Result<LoadedGraph> {
+        artifacts::require_artifacts(&self.dir, &[name])?;
+        let meta = self.dir.load_meta(name)?;
+        let proto = xla::HloModuleProto::from_text_file(self.dir.hlo_path(name))
+            .with_context(|| format!("parsing HLO text for `{name}`"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling `{name}` on PJRT"))?;
+        Ok(LoadedGraph { meta, exe })
+    }
+}
+
+fn to_literal(spec: &TensorSpec, t: &HostTensor) -> Result<xla::Literal> {
+    if t.dtype() != spec.dtype {
+        bail!(
+            "input `{}`: dtype mismatch (artifact wants {:?}, got {:?})",
+            spec.name,
+            spec.dtype,
+            t.dtype()
+        );
+    }
+    if t.len() != spec.element_count() {
+        bail!(
+            "input `{}`: {} elements provided, artifact wants {:?} = {}",
+            spec.name,
+            t.len(),
+            spec.dims,
+            spec.element_count()
+        );
+    }
+    let dims64: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        HostTensor::F32(v) => {
+            if spec.dims.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(v).reshape(&dims64)?
+            }
+        }
+        HostTensor::I32(v) => {
+            if spec.dims.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(v).reshape(&dims64)?
+            }
+        }
+    };
+    Ok(lit)
+}
+
+fn from_literal(spec: &TensorSpec, lit: &xla::Literal) -> Result<HostTensor> {
+    Ok(match spec.dtype {
+        Dtype::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
+        Dtype::I32 => HostTensor::I32(lit.to_vec::<i32>()?),
+    })
+}
+
+impl LoadedGraph {
+    /// Execute with typed host tensors; returns outputs in meta order.
+    ///
+    /// The AOT path lowers with `return_tuple=True`, so the single device
+    /// result is a tuple literal that is decomposed here.
+    pub fn execute(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "`{}` wants {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let literals: Vec<xla::Literal> = self
+            .meta
+            .inputs
+            .iter()
+            .zip(inputs)
+            .map(|(spec, t)| to_literal(spec, t))
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing `{}`", self.meta.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("device->host transfer")?;
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "`{}` returned {} outputs, meta declares {}",
+                self.meta.name,
+                parts.len(),
+                self.meta.outputs.len()
+            );
+        }
+        self.meta
+            .outputs
+            .iter()
+            .zip(parts.iter())
+            .map(|(spec, lit)| from_literal(spec, lit))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-dependent tests live in rust/tests/integration_runtime.rs
+    // (they need `make artifacts`); here we test the pure helpers.
+
+    #[test]
+    fn host_tensor_accessors() {
+        let f = HostTensor::F32(vec![1.0, 2.0]);
+        assert_eq!(f.dtype(), Dtype::F32);
+        assert_eq!(f.len(), 2);
+        assert!(f.as_f32().is_ok());
+        assert!(f.as_i32().is_err());
+        assert!(f.scalar_f32().is_err());
+        let s = HostTensor::F32(vec![7.5]);
+        assert_eq!(s.scalar_f32().unwrap(), 7.5);
+    }
+
+    #[test]
+    fn to_literal_validates_shape_and_dtype() {
+        let spec = TensorSpec { name: "x".into(), dtype: Dtype::F32, dims: vec![2, 2] };
+        assert!(to_literal(&spec, &HostTensor::F32(vec![0.0; 4])).is_ok());
+        assert!(to_literal(&spec, &HostTensor::F32(vec![0.0; 3])).is_err());
+        assert!(to_literal(&spec, &HostTensor::I32(vec![0; 4])).is_err());
+    }
+
+    #[test]
+    fn scalar_literal_roundtrip() {
+        let spec = TensorSpec { name: "s".into(), dtype: Dtype::I32, dims: vec![] };
+        let lit = to_literal(&spec, &HostTensor::I32(vec![42])).unwrap();
+        let back = from_literal(&spec, &lit).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[42]);
+    }
+}

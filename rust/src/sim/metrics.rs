@@ -1,0 +1,213 @@
+//! Experiment metrics, with the paper's definitions:
+//!
+//! - **JCT** (§7.2.1): per iteration, computation completion time minus the
+//!   communication start time of the previous iteration; averaged over
+//!   iterations and jobs.
+//! - **Aggregation throughput** (§7.1.3): the volume of parameters (bytes)
+//!   each worker received per second.
+//! - **Switch memory utilization** (§7.3): aggregation throughput divided
+//!   by its upper bound (the all-gradients volume over the 100 Gbps line),
+//!   averaged per job.
+
+use crate::util::stats::Summary;
+use crate::worker::IterRecord;
+use crate::{JobId, SimTime};
+
+/// Per-job outcome assembled from all its workers' records.
+#[derive(Debug, Clone)]
+pub struct JobMetrics {
+    pub job: JobId,
+    pub model: String,
+    pub n_workers: usize,
+    /// Per-iteration JCT (ns): job completion (max over workers) minus job
+    /// comm start (min over workers).
+    pub iteration_jct_ns: Vec<SimTime>,
+    /// Bytes of parameters received per worker, total.
+    pub bytes_per_worker: f64,
+    /// Wall span from first comm start to last completion (ns).
+    pub span_ns: SimTime,
+    pub iterations: u32,
+}
+
+impl JobMetrics {
+    /// Assemble job metrics from per-worker iteration records. Records are
+    /// index-aligned: iteration k of each worker.
+    pub fn from_workers(
+        job: JobId,
+        model: &str,
+        per_worker: &[Vec<IterRecord>],
+    ) -> Option<JobMetrics> {
+        let iters = per_worker.iter().map(|w| w.len()).min()?;
+        if iters == 0 {
+            return None;
+        }
+        let mut jct = Vec::with_capacity(iters);
+        let mut first_start = SimTime::MAX;
+        let mut last_done = 0;
+        for k in 0..iters {
+            let start = per_worker.iter().map(|w| w[k].comm_start).min().unwrap();
+            let done = per_worker.iter().map(|w| w[k].completion).max().unwrap();
+            jct.push(done.saturating_sub(start));
+            first_start = first_start.min(start);
+            last_done = last_done.max(done);
+        }
+        let bytes: f64 = per_worker
+            .iter()
+            .map(|w| w.iter().take(iters).map(|r| r.bytes_received).sum::<u64>() as f64)
+            .sum::<f64>()
+            / per_worker.len() as f64;
+        Some(JobMetrics {
+            job,
+            model: model.to_string(),
+            n_workers: per_worker.len(),
+            iteration_jct_ns: jct,
+            bytes_per_worker: bytes,
+            span_ns: last_done.saturating_sub(first_start),
+            iterations: iters as u32,
+        })
+    }
+
+    /// Average JCT over iterations, in ns.
+    pub fn avg_jct_ns(&self) -> f64 {
+        if self.iteration_jct_ns.is_empty() {
+            return f64::NAN;
+        }
+        self.iteration_jct_ns.iter().map(|&x| x as f64).sum::<f64>()
+            / self.iteration_jct_ns.len() as f64
+    }
+
+    /// Aggregation throughput: parameter bytes received per worker per
+    /// second of job span (§7.1.3 metric).
+    pub fn agg_throughput_bps(&self) -> f64 {
+        if self.span_ns == 0 {
+            return 0.0;
+        }
+        self.bytes_per_worker / (self.span_ns as f64 / 1e9)
+    }
+
+    /// §7.3 utilization: throughput over the line-rate upper bound.
+    pub fn memory_utilization(&self, bandwidth_gbps: f64) -> f64 {
+        let upper = bandwidth_gbps * 1e9 / 8.0; // bytes/s
+        (self.agg_throughput_bps() / upper).min(1.0)
+    }
+}
+
+/// Whole-experiment outcome.
+#[derive(Debug, Clone)]
+pub struct ExperimentMetrics {
+    pub jobs: Vec<JobMetrics>,
+    /// Simulated ns consumed.
+    pub sim_ns: SimTime,
+    /// Events processed (perf accounting).
+    pub events: u64,
+    /// Wall-clock seconds the simulation took (perf accounting).
+    pub wall_secs: f64,
+    /// True if the run hit `max_sim_ns` before all jobs finished.
+    pub truncated: bool,
+}
+
+impl ExperimentMetrics {
+    /// Paper headline: average JCT across jobs (ms).
+    pub fn avg_jct_ms(&self) -> f64 {
+        let mut s = Summary::new();
+        for j in &self.jobs {
+            let v = j.avg_jct_ns();
+            if v.is_finite() {
+                s.add(v);
+            }
+        }
+        s.mean() / 1e6
+    }
+
+    /// Mean per-job aggregation throughput (Gbit/s of parameter payload).
+    pub fn avg_throughput_gbps(&self) -> f64 {
+        let mut s = Summary::new();
+        for j in &self.jobs {
+            s.add(j.agg_throughput_bps() * 8.0 / 1e9);
+        }
+        s.mean()
+    }
+
+    /// Mean per-job §7.3 utilization.
+    pub fn avg_utilization(&self, bandwidth_gbps: f64) -> f64 {
+        let mut s = Summary::new();
+        for j in &self.jobs {
+            s.add(j.memory_utilization(bandwidth_gbps));
+        }
+        s.mean()
+    }
+
+    /// Events per wall second — the L3 perf-pass headline.
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.events as f64 / self.wall_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(start: SimTime, done: SimTime, bytes: u64) -> IterRecord {
+        IterRecord { comm_start: start, completion: done, bytes_received: bytes }
+    }
+
+    #[test]
+    fn jct_uses_min_start_max_done() {
+        let w0 = vec![rec(100, 500, 1000)];
+        let w1 = vec![rec(150, 700, 1000)];
+        let m = JobMetrics::from_workers(0, "dnn_a", &[w0, w1]).unwrap();
+        assert_eq!(m.iteration_jct_ns, vec![600]);
+        assert_eq!(m.avg_jct_ns(), 600.0);
+    }
+
+    #[test]
+    fn multi_iteration_average() {
+        let w0 = vec![rec(0, 100, 10), rec(100, 300, 10)];
+        let m = JobMetrics::from_workers(0, "x", &[w0]).unwrap();
+        assert_eq!(m.avg_jct_ns(), 150.0);
+        assert_eq!(m.span_ns, 300);
+    }
+
+    #[test]
+    fn uneven_worker_records_truncate_to_common_prefix() {
+        let w0 = vec![rec(0, 100, 10), rec(100, 200, 10)];
+        let w1 = vec![rec(0, 110, 10)];
+        let m = JobMetrics::from_workers(0, "x", &[w0, w1]).unwrap();
+        assert_eq!(m.iterations, 1);
+    }
+
+    #[test]
+    fn empty_records_yield_none() {
+        assert!(JobMetrics::from_workers(0, "x", &[vec![]]).is_none());
+        assert!(JobMetrics::from_workers(0, "x", &[]).is_none());
+    }
+
+    #[test]
+    fn throughput_and_utilization() {
+        // 1 GB received over 1 s span
+        let w0 = vec![rec(0, 1_000_000_000, 1_000_000_000)];
+        let m = JobMetrics::from_workers(0, "x", &[w0]).unwrap();
+        let bps = m.agg_throughput_bps();
+        assert!((bps - 1e9).abs() < 1.0);
+        // upper bound at 100 Gbps = 12.5 GB/s → utilization 0.08
+        assert!((m.memory_utilization(100.0) - 0.08).abs() < 1e-9);
+    }
+
+    #[test]
+    fn experiment_rollups() {
+        let j0 = JobMetrics::from_workers(0, "x", &[vec![rec(0, 2_000_000, 100)]]).unwrap();
+        let j1 = JobMetrics::from_workers(1, "x", &[vec![rec(0, 4_000_000, 100)]]).unwrap();
+        let em = ExperimentMetrics {
+            jobs: vec![j0, j1],
+            sim_ns: 4_000_000,
+            events: 1000,
+            wall_secs: 0.5,
+            truncated: false,
+        };
+        assert!((em.avg_jct_ms() - 3.0).abs() < 1e-9);
+        assert_eq!(em.events_per_sec(), 2000.0);
+    }
+}

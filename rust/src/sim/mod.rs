@@ -1,0 +1,456 @@
+//! The experiment driver: binds workers, the switch and the fallback PSes
+//! over the discrete-event fabric and runs an `ExperimentConfig` to
+//! completion, producing `ExperimentMetrics`.
+//!
+//! Node layout: node 0 is the switch; workers follow, job by job; then one
+//! PS node per job (SwitchML allocates the node but never uses it — its
+//! design has no PS).
+
+pub mod figures;
+pub mod metrics;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{ExperimentConfig, PolicyKind};
+use crate::job::{dnn::profile_by_name, JobModel};
+use crate::net::{Event, Net, Topology, SWITCH_NODE};
+use crate::packet::Packet;
+use crate::ps::{Ps, SCAN_INTERVAL_NS, TIMER_SCAN};
+use crate::switch::{JobWiring, Switch};
+use crate::util::rng::Rng;
+use crate::worker::{Worker, WorkerCfg, TK_START};
+use crate::{JobId, NodeId};
+
+pub use metrics::{ExperimentMetrics, JobMetrics};
+
+#[derive(Debug, Clone, Copy)]
+enum ActorRef {
+    Switch,
+    Worker(u32),
+    Ps(u32),
+}
+
+/// A fully wired simulated experiment.
+pub struct Simulation {
+    pub cfg: ExperimentConfig,
+    pub net: Net,
+    pub switch: Switch,
+    workers: Vec<Worker>,
+    pses: Vec<Ps>,
+    node_actor: Vec<ActorRef>,
+    models: Vec<Arc<JobModel>>,
+    /// worker index ranges per job (into `workers`).
+    job_workers: Vec<(usize, usize)>,
+    out_buf: Vec<Packet>,
+    truncated: bool,
+}
+
+impl Simulation {
+    /// Build a simulation from a validated config.
+    pub fn new(cfg: ExperimentConfig) -> Result<Simulation> {
+        cfg.validate()?;
+        let mut root = Rng::new(cfg.seed);
+        let n_jobs = cfg.jobs.len();
+        let n_worker_nodes: usize = cfg.jobs.iter().map(|j| j.n_workers).sum();
+        let n_nodes = 1 + n_worker_nodes + n_jobs;
+        let topo = Topology::star(n_nodes - 1);
+        let mut net = Net::new(topo, cfg.net.clone(), root.split(1));
+
+        // node assignment
+        let mut node_actor = vec![ActorRef::Switch; n_nodes];
+        let mut next_node: NodeId = 1;
+        let pool_slots = cfg.switch.pool_slots(cfg.policy);
+
+        // models + wiring
+        let mut models = Vec::new();
+        let mut wiring = Vec::new();
+        let mut worker_nodes: Vec<Vec<NodeId>> = Vec::new();
+        for (j, spec) in cfg.jobs.iter().enumerate() {
+            let profile = profile_by_name(&spec.model, spec.tensor_bytes)
+                .with_context(|| format!("job {j}"))?;
+            let payload = cfg.policy.lanes() as u32 * 4;
+            let model = Arc::new(JobModel::new(
+                j as JobId,
+                profile,
+                spec.n_workers,
+                payload,
+                cfg.iterations,
+            ));
+            let nodes: Vec<NodeId> = (0..spec.n_workers)
+                .map(|_| {
+                    let n = next_node;
+                    next_node += 1;
+                    n
+                })
+                .collect();
+            worker_nodes.push(nodes);
+            models.push(model);
+        }
+        // PS nodes after all workers
+        let ps_nodes: Vec<NodeId> = (0..n_jobs)
+            .map(|_| {
+                let n = next_node;
+                next_node += 1;
+                n
+            })
+            .collect();
+        for (j, model) in models.iter().enumerate() {
+            wiring.push(JobWiring {
+                ps: ps_nodes[j],
+                workers: worker_nodes[j].clone(),
+                fan_in: model.n_workers as u8,
+                packet_bytes: cfg.policy.packet_bytes() as u32,
+            });
+        }
+
+        let mut switch = Switch::new(SWITCH_NODE, cfg.policy, pool_slots, wiring, root.split(2));
+        switch.set_age_gate(cfg.net.base_rtt_ns);
+
+        // workers
+        let mut workers = Vec::new();
+        let mut job_workers = Vec::new();
+        for (j, model) in models.iter().enumerate() {
+            let lo = workers.len();
+            let region_cap = switch.policy().region_len(j as JobId);
+            for (w, &node) in worker_nodes[j].iter().enumerate() {
+                node_actor[node as usize] = ActorRef::Worker(workers.len() as u32);
+                let ps = if cfg.policy == PolicyKind::SwitchMl {
+                    None
+                } else {
+                    Some(ps_nodes[j])
+                };
+                workers.push(Worker::new(
+                    WorkerCfg {
+                        node,
+                        switch: SWITCH_NODE,
+                        ps,
+                        widx: w as u8,
+                        policy: cfg.policy,
+                        window_bytes: cfg.window_bytes,
+                        max_window_bytes: cfg.max_window_bytes,
+                        jitter_max_ns: cfg.jitter_max_ns,
+                        region_cap,
+                    },
+                    Arc::clone(model),
+                    root.split(100 + workers.len() as u64),
+                ));
+            }
+            job_workers.push((lo, workers.len()));
+        }
+
+        // PSes
+        let mut pses = Vec::new();
+        for (j, model) in models.iter().enumerate() {
+            node_actor[ps_nodes[j] as usize] = ActorRef::Ps(pses.len() as u32);
+            let mut ps = Ps::new(ps_nodes[j], SWITCH_NODE);
+            ps.add_job(
+                j as JobId,
+                worker_nodes[j].clone(),
+                model.full_bitmap(),
+                cfg.policy.packet_bytes() as u32,
+                cfg.policy.result_via_ps(),
+            );
+            pses.push(ps);
+        }
+
+        // schedule job starts: spec offset + U(0, start_spread)
+        let mut start_rng = root.split(3);
+        for (j, spec) in cfg.jobs.iter().enumerate() {
+            let spread = if cfg.start_spread_ns > 0 {
+                start_rng.next_below(cfg.start_spread_ns)
+            } else {
+                0
+            };
+            let at = spec.start_ns + spread;
+            for &node in &worker_nodes[j] {
+                net.timer(at, node, TK_START);
+            }
+        }
+
+        Ok(Simulation {
+            cfg,
+            net,
+            switch,
+            workers,
+            pses,
+            node_actor,
+            models,
+            job_workers,
+            out_buf: Vec::with_capacity(64),
+            truncated: false,
+        })
+    }
+
+    /// Access a worker (train mode & tests). `widx` is the in-job index.
+    pub fn worker_mut(&mut self, job: JobId, widx: usize) -> &mut Worker {
+        let (lo, hi) = self.job_workers[job as usize];
+        assert!(lo + widx < hi);
+        &mut self.workers[lo + widx]
+    }
+
+    /// The PS actor serving `job`.
+    pub fn ps(&self, job: JobId) -> &Ps {
+        &self.pses[job as usize]
+    }
+
+    pub fn n_jobs(&self) -> usize {
+        self.models.len()
+    }
+
+    fn all_done(&self) -> bool {
+        self.workers.iter().all(|w| w.done())
+    }
+
+    /// Dispatch one event. Returns false when the queue is exhausted.
+    fn step(&mut self) -> bool {
+        let Some((now, ev)) = self.net.queue.pop() else {
+            return false;
+        };
+        match ev {
+            Event::Deliver { at, pkt } => {
+                if at == SWITCH_NODE {
+                    if pkt.dst == SWITCH_NODE {
+                        // INA packet terminating at the switch
+                        self.out_buf.clear();
+                        self.switch.handle(now, pkt, &mut self.out_buf);
+                        for p in std::mem::take(&mut self.out_buf) {
+                            self.net.transmit(SWITCH_NODE, p);
+                        }
+                    } else {
+                        // transit: observe (ATP dealloc), then forward
+                        self.switch.on_transit(now, &pkt);
+                        self.net.transmit(SWITCH_NODE, pkt);
+                    }
+                } else {
+                    match self.node_actor[at as usize] {
+                        ActorRef::Worker(i) => {
+                            self.workers[i as usize].handle(&mut self.net, pkt);
+                        }
+                        ActorRef::Ps(i) => {
+                            let ps = &mut self.pses[i as usize];
+                            self.out_buf.clear();
+                            ps.handle(now, pkt, &mut self.out_buf);
+                            let node = ps.node;
+                            if ps.needs_scan_timer() {
+                                self.net.timer(now + SCAN_INTERVAL_NS, node, TIMER_SCAN);
+                            }
+                            for p in std::mem::take(&mut self.out_buf) {
+                                self.net.transmit(node, p);
+                            }
+                        }
+                        ActorRef::Switch => unreachable!("host packet routed to switch actor"),
+                    }
+                }
+            }
+            Event::Timer { node, key } => match self.node_actor[node as usize] {
+                ActorRef::Worker(i) => {
+                    self.workers[i as usize].on_timer(&mut self.net, key);
+                }
+                ActorRef::Ps(i) => {
+                    debug_assert_eq!(key, TIMER_SCAN);
+                    let ps = &mut self.pses[i as usize];
+                    self.out_buf.clear();
+                    ps.on_scan(now, &mut self.out_buf);
+                    let node = ps.node;
+                    if ps.needs_scan_timer() {
+                        self.net.timer(now + SCAN_INTERVAL_NS, node, TIMER_SCAN);
+                    }
+                    for p in std::mem::take(&mut self.out_buf) {
+                        self.net.transmit(node, p);
+                    }
+                }
+                ActorRef::Switch => {}
+            },
+        }
+        true
+    }
+
+    /// Run to completion (all jobs done, queue exhausted, or time cap).
+    pub fn run(&mut self) -> ExperimentMetrics {
+        let wall = Instant::now();
+        loop {
+            if self.all_done() {
+                break;
+            }
+            if self.net.queue.is_empty() {
+                // no pending events but jobs unfinished: protocol stall
+                self.truncated = !self.all_done();
+                break;
+            }
+            if self.net.now() > self.cfg.max_sim_ns {
+                self.truncated = true;
+                break;
+            }
+            self.step();
+        }
+        self.collect(wall.elapsed().as_secs_f64())
+    }
+
+    fn collect(&self, wall_secs: f64) -> ExperimentMetrics {
+        let mut jobs = Vec::new();
+        for (j, model) in self.models.iter().enumerate() {
+            let (lo, hi) = self.job_workers[j];
+            let records: Vec<_> = self.workers[lo..hi]
+                .iter()
+                .map(|w| w.records.clone())
+                .collect();
+            if let Some(m) = JobMetrics::from_workers(j as JobId, model.profile.name, &records) {
+                jobs.push(m);
+            }
+        }
+        ExperimentMetrics {
+            jobs,
+            sim_ns: self.net.now(),
+            events: self.net.queue.processed(),
+            wall_secs,
+            truncated: self.truncated,
+        }
+    }
+
+    /// Convenience: build + run in one call.
+    pub fn run_experiment(cfg: ExperimentConfig) -> Result<ExperimentMetrics> {
+        let mut sim = Simulation::new(cfg)?;
+        Ok(sim.run())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, JobSpec, PolicyKind};
+
+    fn quick_cfg(policy: PolicyKind, model: &str, n_jobs: usize, n_workers: usize) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::synthetic(policy, model, n_jobs, n_workers);
+        cfg.iterations = 2;
+        cfg.jitter_max_ns = 20 * crate::USEC;
+        cfg.seed = 42;
+        // keep unit tests fast: small tensors
+        for j in &mut cfg.jobs {
+            j.tensor_bytes = Some(256 * 1024);
+        }
+        cfg
+    }
+
+    #[test]
+    fn single_esa_job_completes() {
+        let m = Simulation::run_experiment(quick_cfg(PolicyKind::Esa, "microbench", 1, 4)).unwrap();
+        assert!(!m.truncated, "simulation must finish cleanly");
+        assert_eq!(m.jobs.len(), 1);
+        assert_eq!(m.jobs[0].iterations, 2);
+        assert!(m.jobs[0].avg_jct_ns() > 0.0);
+    }
+
+    #[test]
+    fn all_policies_complete_a_small_mix() {
+        for policy in [
+            PolicyKind::Esa,
+            PolicyKind::Atp,
+            PolicyKind::SwitchMl,
+            PolicyKind::StrawAlways,
+            PolicyKind::StrawCoin,
+        ] {
+            let m = Simulation::run_experiment(quick_cfg(policy, "microbench", 2, 2))
+                .unwrap_or_else(|e| panic!("{policy:?}: {e}"));
+            assert!(!m.truncated, "{policy:?} stalled");
+            assert_eq!(m.jobs.len(), 2, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn dnn_a_jct_close_to_theory_for_single_job() {
+        // one job, no contention: JCT ≈ comm(16 MB at 100 Gbps, window
+        // limited) + FP chain (2 × 0.32 ms). Sanity bound: above the
+        // physical floor and within 3× of floor + compute.
+        let mut cfg = ExperimentConfig::synthetic(PolicyKind::Esa, "dnn_a", 1, 4);
+        cfg.iterations = 2;
+        cfg.seed = 7;
+        cfg.jitter_max_ns = 0;
+        let m = Simulation::run_experiment(cfg).unwrap();
+        assert!(!m.truncated);
+        let jct_ms = m.avg_jct_ms();
+        let floor_ms = 16.0 * 1024.0 * 1024.0 * 8.0 / 100e9 * 1e3; // comm floor
+        assert!(jct_ms > floor_ms, "jct {jct_ms} below physical floor {floor_ms}");
+        assert!(jct_ms < 3.0 * (floor_ms + 0.64), "jct {jct_ms} unreasonably high");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = Simulation::run_experiment(quick_cfg(PolicyKind::Esa, "dnn_a", 2, 4)).unwrap();
+        let b = Simulation::run_experiment(quick_cfg(PolicyKind::Esa, "dnn_a", 2, 4)).unwrap();
+        assert_eq!(a.sim_ns, b.sim_ns);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.avg_jct_ms(), b.avg_jct_ms());
+    }
+
+    #[test]
+    fn loss_recovery_still_completes() {
+        let mut cfg = quick_cfg(PolicyKind::Esa, "microbench", 1, 4);
+        cfg.net.loss_prob = 0.01;
+        let m = Simulation::run_experiment(cfg).unwrap();
+        assert!(!m.truncated, "loss must be recovered by the reminder machinery");
+        assert_eq!(m.jobs[0].iterations, 2);
+    }
+
+    #[test]
+    fn atp_loss_recovery_completes() {
+        let mut cfg = quick_cfg(PolicyKind::Atp, "microbench", 1, 4);
+        cfg.net.loss_prob = 0.01;
+        let m = Simulation::run_experiment(cfg).unwrap();
+        assert!(!m.truncated);
+    }
+
+    #[test]
+    fn contended_esa_beats_or_matches_atp_on_structured_mix() {
+        // Communication-heavy layered jobs on a scarce pool: ESA's
+        // priority-preemption must not lose to ATP's FCFS. (On layerless
+        // equal-priority microbenches preemption has nothing to exploit
+        // and only adds partial-flush traffic — the paper's gains come
+        // from the §5.4 priority structure, which dnn_a has.)
+        let mk = |p: PolicyKind| {
+            let mut cfg = ExperimentConfig::synthetic(p, "dnn_a", 4, 4);
+            cfg.iterations = 2;
+            cfg.seed = 11;
+            cfg.switch.memory_bytes = 256 * 1024; // scarce: ~936 slots
+            for j in &mut cfg.jobs {
+                j.tensor_bytes = Some(2 * 1024 * 1024);
+            }
+            Simulation::run_experiment(cfg).unwrap()
+        };
+        let esa = mk(PolicyKind::Esa);
+        let atp = mk(PolicyKind::Atp);
+        assert!(!esa.truncated && !atp.truncated);
+        assert!(
+            esa.avg_jct_ms() <= atp.avg_jct_ms() * 1.10,
+            "ESA {:.3} ms vs ATP {:.3} ms",
+            esa.avg_jct_ms(),
+            atp.avg_jct_ms()
+        );
+    }
+
+    #[test]
+    fn job_spec_start_offsets_respected() {
+        let mut cfg = quick_cfg(PolicyKind::Esa, "microbench", 2, 2);
+        cfg.start_spread_ns = 0;
+        cfg.jobs[1].start_ns = 5 * crate::MSEC;
+        let mut sim = Simulation::new(cfg).unwrap();
+        let m = sim.run();
+        assert!(m.sim_ns >= 5 * crate::MSEC);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let cfg = ExperimentConfig {
+            jobs: vec![JobSpec {
+                model: "bogus".into(),
+                n_workers: 2,
+                start_ns: 0,
+                tensor_bytes: None,
+            }],
+            ..ExperimentConfig::default()
+        };
+        assert!(Simulation::new(cfg).is_err());
+    }
+}

@@ -1,0 +1,207 @@
+//! Aggregator slot state (§5.2 switch memory layout).
+//!
+//! Each aggregator holds: a 32-bit arrival bitmap, a counter, the owning
+//! task identity (job ID + sequence number), the fan-in degree, the
+//! aggregation-level bit (first/second-level switch), the 8-bit priority
+//! added by ESA, and the value register (one i32 per payload lane).
+//! The value lanes are allocated lazily: the timing-only simulator never
+//! touches them, the end-to-end trainer does.
+
+use crate::{JobId, SimTime};
+
+/// One switch aggregator.
+#[derive(Debug, Clone)]
+pub struct Aggregator {
+    pub occupied: bool,
+    pub job: JobId,
+    pub seq: u32,
+    pub bitmap: u32,
+    pub count: u8,
+    pub fan_in: u8,
+    /// ESA's 8-bit priority field (0 for policies that ignore it).
+    pub priority: u8,
+    /// Aggregation level: false = first-level (workers' rack), true =
+    /// second-level (PS's rack) — used by the two-tier extension.
+    pub level2: bool,
+    /// When the current occupancy began (for the utilization deep dive).
+    pub occupied_since: SimTime,
+    /// Last fold-in (the §1 "cache access": a cold slot is one not
+    /// accessed for a while).
+    pub last_access: SimTime,
+    /// Value register lanes; `None` until a packet with values arrives.
+    pub value: Option<Box<[i32]>>,
+}
+
+impl Aggregator {
+    pub fn empty() -> Aggregator {
+        Aggregator {
+            occupied: false,
+            job: 0,
+            seq: 0,
+            bitmap: 0,
+            count: 0,
+            fan_in: 0,
+            priority: 0,
+            level2: false,
+            occupied_since: 0,
+            last_access: 0,
+            value: None,
+        }
+    }
+
+    /// Allocate to a fresh task from its first packet's header fields.
+    #[allow(clippy::too_many_arguments)]
+    pub fn allocate(
+        &mut self,
+        now: SimTime,
+        job: JobId,
+        seq: u32,
+        bitmap: u32,
+        fan_in: u8,
+        priority: u8,
+        values: Option<&[i32]>,
+    ) {
+        debug_assert!(!self.occupied);
+        self.occupied = true;
+        self.job = job;
+        self.seq = seq;
+        self.bitmap = bitmap;
+        self.count = bitmap.count_ones() as u8;
+        self.fan_in = fan_in;
+        self.priority = priority;
+        self.occupied_since = now;
+        self.last_access = now;
+        match (values, &mut self.value) {
+            (Some(v), slot) => {
+                // reuse the allocation when lane counts match
+                match slot {
+                    Some(buf) if buf.len() == v.len() => buf.copy_from_slice(v),
+                    _ => *slot = Some(v.into()),
+                }
+            }
+            (None, slot) => *slot = None,
+        }
+    }
+
+    /// Fold another worker's packet in (same task, disjoint bitmap).
+    /// Wrap-around i32 adds — the register ALU semantics shared with the
+    /// L1 Pallas kernel.
+    pub fn aggregate_at(&mut self, now: SimTime, bitmap: u32, priority: u8, values: Option<&[i32]>) {
+        self.last_access = now;
+        self.aggregate(bitmap, priority, values);
+    }
+
+    pub fn aggregate(&mut self, bitmap: u32, priority: u8, values: Option<&[i32]>) {
+        debug_assert!(self.occupied);
+        debug_assert_eq!(self.bitmap & bitmap, 0, "duplicate must be filtered by caller");
+        self.bitmap |= bitmap;
+        self.count += bitmap.count_ones() as u8;
+        // Priority renewal (§5.2): a fresh packet of the resident task
+        // restores its computed priority after any collision downgrades.
+        self.priority = self.priority.max(priority);
+        if let (Some(buf), Some(v)) = (&mut self.value, values) {
+            crate::util::fixed::agg_add_slice(buf, v);
+        }
+    }
+
+    /// True when every worker's fragment has arrived.
+    #[inline]
+    pub fn complete(&self) -> bool {
+        self.count == self.fan_in
+    }
+
+    /// Release the slot, returning how long it was occupied.
+    pub fn deallocate(&mut self, now: SimTime) -> SimTime {
+        debug_assert!(self.occupied);
+        self.occupied = false;
+        now.saturating_sub(self.occupied_since)
+    }
+
+    /// Whether a packet's bitmap overlaps what already arrived (duplicate
+    /// detection for retransmissions).
+    #[inline]
+    pub fn is_duplicate(&self, bitmap: u32) -> bool {
+        self.bitmap & bitmap != 0
+    }
+
+    /// ESA priority downgrading: halve on a failed preemption (§5.4).
+    #[inline]
+    pub fn downgrade_priority(&mut self) {
+        self.priority >>= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_then_aggregate_to_completion() {
+        let mut a = Aggregator::empty();
+        a.allocate(100, 3, 7, 0b0001, 3, 9, None);
+        assert!(a.occupied && !a.complete());
+        assert_eq!(a.count, 1);
+        a.aggregate(0b0010, 9, None);
+        a.aggregate(0b0100, 9, None);
+        assert!(a.complete());
+        assert_eq!(a.bitmap, 0b0111);
+        let held = a.deallocate(400);
+        assert_eq!(held, 300);
+        assert!(!a.occupied);
+    }
+
+    #[test]
+    fn value_lanes_accumulate_wrapping() {
+        let mut a = Aggregator::empty();
+        a.allocate(0, 0, 0, 1, 2, 0, Some(&[1, i32::MAX]));
+        a.aggregate(2, 0, Some(&[2, 1]));
+        assert_eq!(a.value.as_deref().unwrap(), &[3, i32::MIN]);
+    }
+
+    #[test]
+    fn reallocate_reuses_lane_buffer() {
+        let mut a = Aggregator::empty();
+        a.allocate(0, 0, 0, 1, 1, 0, Some(&[5, 6]));
+        a.deallocate(10);
+        a.allocate(20, 1, 1, 1, 1, 0, Some(&[7, 8]));
+        assert_eq!(a.value.as_deref().unwrap(), &[7, 8]);
+    }
+
+    #[test]
+    fn duplicate_detection() {
+        let mut a = Aggregator::empty();
+        a.allocate(0, 0, 0, 0b0011, 4, 0, None);
+        assert!(a.is_duplicate(0b0001));
+        assert!(!a.is_duplicate(0b0100));
+    }
+
+    #[test]
+    fn priority_renewal_takes_max() {
+        let mut a = Aggregator::empty();
+        a.allocate(0, 0, 0, 1, 3, 200, None);
+        a.downgrade_priority();
+        assert_eq!(a.priority, 100);
+        a.aggregate(2, 180, None);
+        assert_eq!(a.priority, 180);
+    }
+
+    #[test]
+    fn downgrade_halves_to_zero() {
+        let mut a = Aggregator::empty();
+        a.allocate(0, 0, 0, 1, 2, 3, None);
+        a.downgrade_priority();
+        assert_eq!(a.priority, 1);
+        a.downgrade_priority();
+        assert_eq!(a.priority, 0);
+        a.downgrade_priority();
+        assert_eq!(a.priority, 0);
+    }
+
+    #[test]
+    fn timing_mode_never_allocates_lanes() {
+        let mut a = Aggregator::empty();
+        a.allocate(0, 0, 0, 1, 2, 0, None);
+        a.aggregate(2, 0, None);
+        assert!(a.value.is_none());
+    }
+}

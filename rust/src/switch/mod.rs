@@ -1,0 +1,683 @@
+//! The programmable-switch data plane: aggregator pool + the Fig. 5
+//! per-packet pipeline, shared by every policy.
+//!
+//! Pipeline semantics (one pass per packet, honoring the single
+//! read-modify-write constraint of P4 register ALUs — "packet swapping",
+//! §6):
+//!
+//! 1. slot empty → allocate to the packet's task;
+//! 2. slot holds the same task → duplicate-filter, aggregate, renew
+//!    priority; on fan-in completion: multicast the result to workers
+//!    (ESA/SwitchML/strawmen) or forward it to the PS (ATP), deallocate
+//!    (ESA & co.) or hold until the parameter packet transits (ATP);
+//! 3. slot holds another task → the policy decides: pass the packet
+//!    through to its PS, or preempt — the packet *swaps* payload with the
+//!    aggregator and carries the evicted partial (value + bitmap + task
+//!    identity) to the evicted task's PS;
+//! 4. reminder packets (§5.1) fetch the resident partial the same way and
+//!    deallocate.
+
+pub mod aggregator;
+pub mod policy;
+
+use crate::config::PolicyKind;
+use crate::packet::{Packet, PacketKind};
+use crate::util::rng::Rng;
+use crate::{JobId, NodeId, SimTime};
+
+pub use aggregator::Aggregator;
+pub use policy::{CollisionOutcome, Policy};
+
+/// Per-job wiring the switch needs: where the PS lives and who to
+/// multicast results to.
+#[derive(Debug, Clone)]
+pub struct JobWiring {
+    pub ps: NodeId,
+    pub workers: Vec<NodeId>,
+    pub fan_in: u8,
+    /// Wire bytes of this job's packets (306 for ESA/ATP, 180 SwitchML).
+    pub packet_bytes: u32,
+}
+
+/// Data-plane counters (the deep-dive §7.3 ablations read these).
+#[derive(Debug, Clone, Default)]
+pub struct SwitchStats {
+    pub grad_pkts: u64,
+    /// Fold-in operations performed (each one removes a packet from the
+    /// network — the paper's traffic argument in §4 Discussion).
+    pub aggregations: u64,
+    pub allocations: u64,
+    pub completions: u64,
+    pub preemptions: u64,
+    pub failed_preemptions: u64,
+    pub passthroughs: u64,
+    pub reminder_evictions: u64,
+    pub duplicates: u64,
+    /// Integral of slot-busy time (ns·slots) for occupancy accounting.
+    pub busy_ns: u64,
+}
+
+/// The switch actor.
+pub struct Switch {
+    pub node: NodeId,
+    policy: Policy,
+    pool: Vec<Aggregator>,
+    wiring: Vec<JobWiring>,
+    rng: Rng,
+    /// Priority downgrading is age-gated: an occupant is only aged once it
+    /// has held the slot longer than ~one base RTT, so transient
+    /// collisions between equal-priority tasks do not erase the §5.4
+    /// priority structure (unpaced halving preempt-thrashes under heavy
+    /// contention; see DESIGN.md §5).
+    age_gate_ns: SimTime,
+    pub stats: SwitchStats,
+}
+
+impl Switch {
+    pub fn new(node: NodeId, kind: PolicyKind, pool_slots: usize, wiring: Vec<JobWiring>, rng: Rng) -> Switch {
+        let mut policy = Policy::new(kind);
+        if kind == PolicyKind::SwitchMl {
+            policy.set_static_partitions(wiring.len().max(1), pool_slots);
+        }
+        Switch {
+            node,
+            policy,
+            pool: (0..pool_slots).map(|_| Aggregator::empty()).collect(),
+            wiring,
+            rng,
+            age_gate_ns: 10 * crate::USEC,
+            stats: SwitchStats::default(),
+        }
+    }
+
+    /// Configure the downgrade age gate (defaults to 10 µs ≈ base RTT).
+    pub fn set_age_gate(&mut self, ns: SimTime) {
+        self.age_gate_ns = ns;
+    }
+
+    pub fn pool_slots(&self) -> usize {
+        self.pool.len()
+    }
+
+    pub fn policy(&self) -> &Policy {
+        &self.policy
+    }
+
+    /// Occupied slots right now (tests / occupancy sampling).
+    pub fn occupied_slots(&self) -> usize {
+        self.pool.iter().filter(|a| a.occupied).count()
+    }
+
+    /// Inspect a slot (tests).
+    pub fn slot(&self, idx: usize) -> &Aggregator {
+        &self.pool[idx]
+    }
+
+    /// Slot index for a task under the active policy.
+    pub fn slot_index(&self, job: JobId, seq: u32) -> u32 {
+        self.policy.slot_for(job, seq, self.pool.len())
+    }
+
+    /// Handle a packet delivered *to* the switch (dst == switch):
+    /// gradients and reminders. Emits outgoing packets into `out`.
+    pub fn handle(&mut self, now: SimTime, pkt: Packet, out: &mut Vec<Packet>) {
+        match pkt.kind {
+            PacketKind::Gradient => self.handle_gradient(now, pkt, out),
+            PacketKind::ReminderToSwitch => self.handle_reminder(now, pkt, out),
+            PacketKind::Param => self.handle_param_multicast(now, pkt, out),
+            other => {
+                debug_assert!(false, "switch-addressed packet of kind {other:?}");
+            }
+        }
+    }
+
+    /// A PS parameter packet addressed to the switch: replicate it to the
+    /// job's multicast group (§5.1 pull path). For ATP this is also the
+    /// ACK that deallocates the held-complete aggregator (§2.2).
+    fn handle_param_multicast(&mut self, now: SimTime, pkt: Packet, out: &mut Vec<Packet>) {
+        if self.policy.kind == PolicyKind::Atp {
+            let idx = self.slot_index(pkt.job, pkt.seq) as usize;
+            let slot = &mut self.pool[idx];
+            if slot.occupied && slot.job == pkt.job && slot.seq == pkt.seq {
+                self.stats.busy_ns += slot.deallocate(now);
+            }
+        }
+        let wiring = &self.wiring[pkt.job as usize];
+        for &w in &wiring.workers {
+            let mut p = pkt.clone();
+            p.src = self.node;
+            p.dst = w;
+            out.push(p);
+        }
+    }
+
+    /// Observe a transit packet (dst != switch) before forwarding. ATP
+    /// deallocates the aggregator when the PS's parameter packet passes
+    /// back through (§2.2 — the occupation covers the switch↔PS RTT).
+    pub fn on_transit(&mut self, now: SimTime, pkt: &Packet) {
+        if self.policy.kind == PolicyKind::Atp && pkt.kind == PacketKind::Param {
+            let idx = self.slot_index(pkt.job, pkt.seq) as usize;
+            let slot = &mut self.pool[idx];
+            if slot.occupied && slot.job == pkt.job && slot.seq == pkt.seq {
+                self.stats.busy_ns += slot.deallocate(now);
+            }
+        }
+    }
+
+    fn handle_gradient(&mut self, now: SimTime, mut pkt: Packet, out: &mut Vec<Packet>) {
+        self.stats.grad_pkts += 1;
+        let idx = self.slot_index(pkt.job, pkt.seq) as usize;
+
+        // ATP resend: never aggregate — evict any matching partial to the
+        // PS and forward the resend there too (dedup by bitmap at the PS).
+        // This resolves aggregations split between switch and PS.
+        if pkt.resend {
+            self.handle_resend(now, idx, pkt, out);
+            return;
+        }
+        let slot = &mut self.pool[idx];
+
+        if !slot.occupied {
+            // Fig. 5: empty → allocate and wait for the rest.
+            slot.allocate(
+                now,
+                pkt.job,
+                pkt.seq,
+                pkt.bitmap,
+                pkt.fan_in,
+                pkt.priority,
+                pkt.values.as_deref(),
+            );
+            self.stats.allocations += 1;
+            if slot.complete() {
+                // single-worker job: degenerate immediate completion
+                self.complete_slot(now, idx, out);
+            }
+            return;
+        }
+
+        if slot.job == pkt.job && slot.seq == pkt.seq {
+            // same task: completion-hold check, duplicate filter, fold in
+            if slot.complete() {
+                // ATP hold phase (complete, awaiting param transit). A
+                // retransmission hitting a held-complete slot means the
+                // result toward the PS may have been lost: re-emit it.
+                self.stats.duplicates += 1;
+                if self.policy.kind == PolicyKind::Atp {
+                    let (job, seq, bitmap, fan_in) = (slot.job, slot.seq, slot.bitmap, slot.fan_in);
+                    let values = slot.value.clone();
+                    let wiring = &self.wiring[job as usize];
+                    out.push(Packet {
+                        kind: PacketKind::PartialToPs,
+                        job,
+                        seq,
+                        agg_index: idx as u32,
+                        bitmap,
+                        fan_in,
+                        priority: 0,
+                        src: self.node,
+                        dst: wiring.ps,
+                        wire_bytes: wiring.packet_bytes,
+                        reliable: true,
+                        resend: false,
+                        ecn: false,
+                        values,
+                        sent_at: 0,
+                    });
+                }
+                return;
+            }
+            if slot.is_duplicate(pkt.bitmap) {
+                self.stats.duplicates += 1;
+                return;
+            }
+            slot.aggregate_at(now, pkt.bitmap, pkt.priority, pkt.values.as_deref());
+            self.stats.aggregations += 1;
+            if slot.complete() {
+                self.complete_slot(now, idx, out);
+            }
+            return;
+        }
+
+        // collision: another task owns the slot
+        match self.policy.on_collision(pkt.priority, slot.priority, &mut self.rng) {
+            CollisionOutcome::PassThrough => {
+                self.stats.passthroughs += 1;
+                if self.policy.kind == PolicyKind::Esa && pkt.priority <= slot.priority {
+                    // an actual failed preemption attempt ages the occupant
+                    self.stats.failed_preemptions += 1;
+                }
+                if self.policy.downgrades()
+                    && now.saturating_sub(slot.occupied_since) > self.age_gate_ns
+                {
+                    slot.downgrade_priority();
+                }
+                // the loser continues to its PS carrying its own fragment
+                let ps = self.wiring[pkt.job as usize].ps;
+                pkt.dst = ps;
+                pkt.src = self.node;
+                out.push(pkt);
+            }
+            CollisionOutcome::Preempt => {
+                self.stats.preemptions += 1;
+                // packet swapping: the arriving packet leaves with the
+                // OLD task's partial (value+bitmap+identity) toward the
+                // old task's PS; the slot is re-seeded from the arrival.
+                let evicted_job = slot.job;
+                let evicted_seq = slot.seq;
+                let evicted_bitmap = slot.bitmap;
+                let evicted_fan_in = slot.fan_in;
+                let evicted_values = slot.value.take();
+                self.stats.busy_ns += slot.deallocate(now);
+                slot.allocate(
+                    now,
+                    pkt.job,
+                    pkt.seq,
+                    pkt.bitmap,
+                    pkt.fan_in,
+                    pkt.priority,
+                    pkt.values.as_deref(),
+                );
+                self.stats.allocations += 1;
+                let ps = self.wiring[evicted_job as usize].ps;
+                out.push(Packet {
+                    kind: PacketKind::PartialToPs,
+                    job: evicted_job,
+                    seq: evicted_seq,
+                    agg_index: idx as u32,
+                    bitmap: evicted_bitmap,
+                    fan_in: evicted_fan_in,
+                    priority: 0,
+                    src: self.node,
+                    dst: ps,
+                    wire_bytes: self.wiring[evicted_job as usize].packet_bytes,
+                    reliable: false,
+                    resend: false,
+                    ecn: false,
+                    values: evicted_values,
+                    sent_at: 0,
+                });
+                if self.pool[idx].complete() {
+                    self.complete_slot(now, idx, out);
+                }
+            }
+        }
+    }
+
+    /// ATP resend handling: flush the matching partial (if any) to the PS
+    /// and forward the resend itself to the PS when its bit is still
+    /// missing from the flushed partial.
+    fn handle_resend(&mut self, now: SimTime, idx: usize, mut pkt: Packet, out: &mut Vec<Packet>) {
+        let ps = self.wiring[pkt.job as usize].ps;
+        let slot = &mut self.pool[idx];
+        let mut flushed_bitmap = 0u32;
+        if slot.occupied && slot.job == pkt.job && slot.seq == pkt.seq {
+            if slot.complete() {
+                // held-complete (awaiting param transit): re-emit result
+                let (job, seq, bitmap, fan_in) = (slot.job, slot.seq, slot.bitmap, slot.fan_in);
+                let values = slot.value.clone();
+                let wiring = &self.wiring[job as usize];
+                self.stats.duplicates += 1;
+                out.push(Packet {
+                    kind: PacketKind::PartialToPs,
+                    job,
+                    seq,
+                    agg_index: idx as u32,
+                    bitmap,
+                    fan_in,
+                    priority: 0,
+                    src: self.node,
+                    dst: wiring.ps,
+                    wire_bytes: wiring.packet_bytes,
+                    reliable: true,
+                    resend: false,
+                    ecn: false,
+                    values,
+                    sent_at: 0,
+                });
+                return;
+            }
+            flushed_bitmap = slot.bitmap;
+            let fan_in = slot.fan_in;
+            let values = slot.value.take();
+            self.stats.busy_ns += slot.deallocate(now);
+            self.stats.reminder_evictions += 1;
+            out.push(Packet {
+                kind: PacketKind::PartialToPs,
+                job: pkt.job,
+                seq: pkt.seq,
+                agg_index: idx as u32,
+                bitmap: flushed_bitmap,
+                fan_in,
+                priority: 0,
+                src: self.node,
+                dst: ps,
+                wire_bytes: self.wiring[pkt.job as usize].packet_bytes,
+                reliable: true,
+                resend: false,
+                ecn: false,
+                values,
+                sent_at: 0,
+            });
+        }
+        if pkt.bitmap & flushed_bitmap == 0 {
+            // the resender's own contribution was not in the flushed
+            // partial — pass it through to the PS (reliable)
+            pkt.kind = PacketKind::Retransmit;
+            pkt.reliable = true;
+            pkt.resend = false;
+            pkt.src = self.node;
+            pkt.dst = ps;
+            out.push(pkt);
+        }
+    }
+
+    /// A PS reminder fetches the resident partial (packet swap) and
+    /// deallocates (Fig. 4 steps 5–6).
+    fn handle_reminder(&mut self, now: SimTime, pkt: Packet, out: &mut Vec<Packet>) {
+        let idx = self.slot_index(pkt.job, pkt.seq) as usize;
+        let slot = &mut self.pool[idx];
+        if !slot.occupied || slot.job != pkt.job || slot.seq != pkt.seq {
+            // already evicted/completed — the reminder dies here
+            return;
+        }
+        self.stats.reminder_evictions += 1;
+        let bitmap = slot.bitmap;
+        let fan_in = slot.fan_in;
+        let values = slot.value.take();
+        self.stats.busy_ns += slot.deallocate(now);
+        let ps = self.wiring[pkt.job as usize].ps;
+        out.push(Packet {
+            kind: PacketKind::PartialToPs,
+            job: pkt.job,
+            seq: pkt.seq,
+            agg_index: idx as u32,
+            bitmap,
+            fan_in,
+            priority: 0,
+            src: self.node,
+            dst: ps,
+            wire_bytes: self.wiring[pkt.job as usize].packet_bytes,
+            reliable: true, // rides the reliable reminder channel back
+            resend: false,
+            ecn: false,
+            values,
+            sent_at: 0,
+        });
+    }
+
+    /// Emit completion output for slot `idx` and deallocate (except ATP,
+    /// which holds the slot until the parameter packet transits back).
+    fn complete_slot(&mut self, now: SimTime, idx: usize, out: &mut Vec<Packet>) {
+        self.stats.completions += 1;
+        let (job, seq, bitmap, fan_in) = {
+            let s = &self.pool[idx];
+            (s.job, s.seq, s.bitmap, s.fan_in)
+        };
+        let wiring = &self.wiring[job as usize];
+        if self.policy.kind == PolicyKind::Atp {
+            // result streams to the PS; slot held until param transit
+            let values = self.pool[idx].value.clone();
+            out.push(Packet {
+                kind: PacketKind::PartialToPs,
+                job,
+                seq,
+                agg_index: idx as u32,
+                bitmap,
+                fan_in,
+                priority: 0,
+                src: self.node,
+                dst: wiring.ps,
+                wire_bytes: wiring.packet_bytes,
+                reliable: false,
+                resend: false,
+                ecn: false,
+                values,
+                sent_at: 0,
+            });
+            return;
+        }
+        // ESA/SwitchML/strawmen: sub-RTT multicast straight to workers
+        let values = self.pool[idx].value.take();
+        for &w in &wiring.workers {
+            out.push(Packet {
+                kind: PacketKind::Result,
+                job,
+                seq,
+                agg_index: idx as u32,
+                bitmap,
+                fan_in,
+                priority: 0,
+                src: self.node,
+                dst: w,
+                wire_bytes: wiring.packet_bytes,
+                reliable: false,
+                resend: false,
+                ecn: false,
+                values: values.clone(),
+                sent_at: 0,
+            });
+        }
+        self.stats.busy_ns += self.pool[idx].deallocate(now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wiring2() -> Vec<JobWiring> {
+        vec![
+            JobWiring { ps: 10, workers: vec![1, 2], fan_in: 2, packet_bytes: 306 },
+            JobWiring { ps: 11, workers: vec![3, 4], fan_in: 2, packet_bytes: 306 },
+        ]
+    }
+
+    fn grad(job: JobId, seq: u32, worker: u8, prio: u8, sw: &Switch) -> Packet {
+        let mut p = Packet::gradient(job, seq, 0, 1 << worker, 2, prio, 1, sw.node, 306);
+        p.agg_index = sw.slot_index(job, seq);
+        p
+    }
+
+    fn mkswitch(kind: PolicyKind) -> Switch {
+        Switch::new(0, kind, 64, wiring2(), Rng::new(1))
+    }
+
+    #[test]
+    fn clean_aggregation_multicasts_result() {
+        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut out = Vec::new();
+        sw.handle(10, grad(0, 5, 0, 9, &sw), &mut out);
+        assert!(out.is_empty());
+        assert_eq!(sw.occupied_slots(), 1);
+        sw.handle(20, grad(0, 5, 1, 9, &sw), &mut out);
+        assert_eq!(out.len(), 2, "result multicast to both workers");
+        assert!(out.iter().all(|p| p.kind == PacketKind::Result));
+        assert_eq!(out.iter().map(|p| p.dst).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(sw.occupied_slots(), 0, "ESA deallocates on completion");
+        assert_eq!(sw.stats.completions, 1);
+        assert_eq!(sw.stats.busy_ns, 10);
+    }
+
+    #[test]
+    fn atp_result_goes_to_ps_and_slot_held_until_param_transit() {
+        let mut sw = mkswitch(PolicyKind::Atp);
+        let mut out = Vec::new();
+        sw.handle(10, grad(0, 5, 0, 0, &sw), &mut out);
+        sw.handle(20, grad(0, 5, 1, 0, &sw), &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].kind, PacketKind::PartialToPs);
+        assert_eq!(out[0].dst, 10);
+        assert_eq!(out[0].bitmap, 0b11);
+        assert_eq!(sw.occupied_slots(), 1, "ATP holds the slot");
+        // param passes back through the switch → dealloc
+        let mut param = out[0].clone();
+        param.kind = PacketKind::Param;
+        param.src = 10;
+        param.dst = 1;
+        sw.on_transit(60, &param);
+        assert_eq!(sw.occupied_slots(), 0);
+        assert_eq!(sw.stats.busy_ns, 50);
+    }
+
+    #[test]
+    fn esa_preemption_swaps_partial_out() {
+        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut out = Vec::new();
+        // job 0 low priority occupies
+        sw.handle(10, grad(0, 5, 0, 3, &sw), &mut out);
+        // force a collision: craft a job-1 packet aimed at the same slot
+        let idx = sw.slot_index(0, 5);
+        let mut p = grad(1, 7, 0, 200, &sw);
+        p.agg_index = idx;
+        // override the policy mapping by picking a (job,seq) that collides
+        // — instead we directly test the collision path via the same slot:
+        // find a seq for job 1 that maps to idx
+        let mut seq = 0u32;
+        while sw.slot_index(1, seq) != idx {
+            seq += 1;
+        }
+        let p = {
+            let mut p = grad(1, seq, 0, 200, &sw);
+            p.agg_index = idx;
+            p
+        };
+        sw.handle(20, p, &mut out);
+        assert_eq!(sw.stats.preemptions, 1);
+        assert_eq!(out.len(), 1);
+        let evicted = &out[0];
+        assert_eq!(evicted.kind, PacketKind::PartialToPs);
+        assert_eq!(evicted.job, 0);
+        assert_eq!(evicted.seq, 5);
+        assert_eq!(evicted.bitmap, 0b01);
+        assert_eq!(evicted.dst, 10, "evicted partial goes to job 0's PS");
+        // slot now owned by job 1
+        let slot = sw.slot(idx as usize);
+        assert!(slot.occupied && slot.job == 1 && slot.seq == seq);
+        assert_eq!(slot.priority, 200);
+    }
+
+    #[test]
+    fn esa_failed_preemption_passes_through_and_downgrades() {
+        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut out = Vec::new();
+        sw.handle(10, grad(0, 5, 0, 100, &sw), &mut out);
+        let idx = sw.slot_index(0, 5);
+        let mut seq = 0u32;
+        while sw.slot_index(1, seq) != idx {
+            seq += 1;
+        }
+        let p = {
+            let mut p = grad(1, seq, 1, 50, &sw);
+            p.agg_index = idx;
+            p
+        };
+        // young occupant: no downgrade yet (age gate)
+        sw.handle(20, p.clone(), &mut out);
+        assert_eq!(sw.stats.passthroughs, 1);
+        assert_eq!(sw.stats.failed_preemptions, 1);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].kind, PacketKind::Gradient);
+        assert_eq!(out[0].dst, 11, "loser forwarded to its own PS");
+        assert_eq!(sw.slot(idx as usize).priority, 100, "age gate protects young occupant");
+        // stale occupant: downgrade applies
+        sw.handle(20 + 11_000, p, &mut out);
+        assert_eq!(sw.slot(idx as usize).priority, 50, "occupant downgraded 100->50");
+    }
+
+    #[test]
+    fn equal_priority_does_not_preempt() {
+        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut out = Vec::new();
+        sw.handle(10, grad(0, 5, 0, 70, &sw), &mut out);
+        let idx = sw.slot_index(0, 5);
+        let mut seq = 0u32;
+        while sw.slot_index(1, seq) != idx {
+            seq += 1;
+        }
+        let mut p = grad(1, seq, 0, 70, &sw);
+        p.agg_index = idx;
+        sw.handle(20, p, &mut out);
+        assert_eq!(sw.stats.preemptions, 0);
+        assert_eq!(sw.stats.passthroughs, 1);
+    }
+
+    #[test]
+    fn duplicate_gradient_filtered() {
+        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut out = Vec::new();
+        sw.handle(10, grad(0, 5, 0, 9, &sw), &mut out);
+        sw.handle(20, grad(0, 5, 0, 9, &sw), &mut out);
+        assert_eq!(sw.stats.duplicates, 1);
+        assert!(out.is_empty());
+        assert_eq!(sw.slot(sw.slot_index(0, 5) as usize).count, 1);
+    }
+
+    #[test]
+    fn reminder_evicts_partial_via_swap() {
+        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut out = Vec::new();
+        sw.handle(10, grad(0, 5, 0, 9, &sw), &mut out);
+        let rem = Packet::reminder(0, 5, 10, 0, true, 306);
+        sw.handle(50, rem, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].kind, PacketKind::PartialToPs);
+        assert_eq!(out[0].bitmap, 0b01);
+        assert!(out[0].reliable);
+        assert_eq!(sw.occupied_slots(), 0);
+        assert_eq!(sw.stats.reminder_evictions, 1);
+    }
+
+    #[test]
+    fn reminder_for_absent_task_is_noop() {
+        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut out = Vec::new();
+        sw.handle(50, Packet::reminder(0, 99, 10, 0, true, 306), &mut out);
+        assert!(out.is_empty());
+        assert_eq!(sw.stats.reminder_evictions, 0);
+    }
+
+    #[test]
+    fn values_flow_through_aggregation() {
+        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut out = Vec::new();
+        let mut p1 = grad(0, 5, 0, 9, &sw);
+        p1.values = Some(vec![1, 2, 3].into_boxed_slice());
+        let mut p2 = grad(0, 5, 1, 9, &sw);
+        p2.values = Some(vec![10, 20, 30].into_boxed_slice());
+        sw.handle(10, p1, &mut out);
+        sw.handle(20, p2, &mut out);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].values.as_deref().unwrap(), &[11, 22, 33]);
+        assert_eq!(out[1].values.as_deref().unwrap(), &[11, 22, 33]);
+    }
+
+    #[test]
+    fn straw_always_preempts_regardless_of_priority() {
+        let mut sw = mkswitch(PolicyKind::StrawAlways);
+        let mut out = Vec::new();
+        sw.handle(10, grad(0, 5, 0, 255, &sw), &mut out);
+        let idx = sw.slot_index(0, 5);
+        let mut seq = 0u32;
+        while sw.slot_index(1, seq) != idx {
+            seq += 1;
+        }
+        let mut p = grad(1, seq, 0, 0, &sw);
+        p.agg_index = idx;
+        sw.handle(20, p, &mut out);
+        assert_eq!(sw.stats.preemptions, 1);
+    }
+
+    #[test]
+    fn single_worker_job_completes_immediately() {
+        let wiring = vec![JobWiring { ps: 10, workers: vec![1], fan_in: 1, packet_bytes: 306 }];
+        let mut sw = Switch::new(0, PolicyKind::Esa, 16, wiring, Rng::new(1));
+        let mut out = Vec::new();
+        let mut p = Packet::gradient(0, 0, 0, 1, 1, 5, 1, 0, 306);
+        p.agg_index = sw.slot_index(0, 0);
+        sw.handle(10, p, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].kind, PacketKind::Result);
+        assert_eq!(sw.occupied_slots(), 0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Allocation policies: what a system does when a gradient packet lands on
+//! an occupied aggregator, and how packets map to slots.
+//!
+//! The shared data-plane pipeline (`switch::Switch`) is identical across
+//! systems — mirroring the paper's claim that ESA is a small delta on
+//! ATP's switch program — and only these two decisions differ.
+
+use crate::config::PolicyKind;
+use crate::packet::task_hash;
+use crate::util::rng::Rng;
+use crate::JobId;
+
+/// Outcome of a slot collision (occupant task != incoming task).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollisionOutcome {
+    /// Incoming packet passes through to its job's PS (FCFS loser).
+    PassThrough,
+    /// Incoming packet evicts the occupant (packet swapping) and seizes
+    /// the slot; the occupant's partial travels to its PS.
+    Preempt,
+}
+
+/// Slot mapping + collision decision for one policy.
+#[derive(Debug, Clone)]
+pub struct Policy {
+    pub kind: PolicyKind,
+    /// SwitchML static partitions: per-job `(start, len)` slot regions.
+    regions: Vec<(u32, u32)>,
+}
+
+impl Policy {
+    pub fn new(kind: PolicyKind) -> Policy {
+        Policy { kind, regions: Vec::new() }
+    }
+
+    /// SwitchML statically partitions the pool equally among jobs at
+    /// admission time (§7.1.1: "SwitchML jobs evenly share the memory").
+    pub fn set_static_partitions(&mut self, n_jobs: usize, pool_slots: usize) {
+        debug_assert_eq!(self.kind, PolicyKind::SwitchMl);
+        assert!(n_jobs > 0);
+        let len = (pool_slots / n_jobs).max(1) as u32;
+        self.regions = (0..n_jobs).map(|j| (j as u32 * len, len)).collect();
+    }
+
+    /// Per-job static region length (workers cap their window to it so the
+    /// self-clocked SwitchML slot reuse never collides).
+    pub fn region_len(&self, job: JobId) -> Option<u32> {
+        self.regions.get(job as usize).map(|&(_, len)| len)
+    }
+
+    /// The aggregator index for a task.
+    #[inline]
+    pub fn slot_for(&self, job: JobId, seq: u32, pool_slots: usize) -> u32 {
+        match self.kind {
+            PolicyKind::SwitchMl => {
+                let (start, len) = self.regions[job as usize];
+                start + (seq % len)
+            }
+            // ATP/ESA/strawmen: hash(jobID, seq) over the shared pool
+            _ => task_hash(job, seq) % pool_slots as u32,
+        }
+    }
+
+    /// Decide a collision. `incoming`/`occupant` are 8-bit priorities.
+    #[inline]
+    pub fn on_collision(&self, incoming: u8, occupant: u8, rng: &mut Rng) -> CollisionOutcome {
+        match self.kind {
+            // ATP: non-preemptive FCFS — later arrival falls back to PS.
+            // HostPs never reaches the switch; defensive pass-through.
+            PolicyKind::Atp | PolicyKind::HostPs => CollisionOutcome::PassThrough,
+            // SwitchML never collides across jobs (static partitions) and
+            // the worker window prevents self-collision; if it happens
+            // (defensive), FCFS.
+            PolicyKind::SwitchMl => CollisionOutcome::PassThrough,
+            // ESA: preempt iff strictly higher priority (§5.2: "if the
+            // priority in the aggregator is higher or equal, the
+            // preemption will fail").
+            PolicyKind::Esa => {
+                if incoming > occupant {
+                    CollisionOutcome::Preempt
+                } else {
+                    CollisionOutcome::PassThrough
+                }
+            }
+            // Fig. 11 strawmen.
+            PolicyKind::StrawAlways => CollisionOutcome::Preempt,
+            PolicyKind::StrawCoin => {
+                if rng.chance(0.5) {
+                    CollisionOutcome::Preempt
+                } else {
+                    CollisionOutcome::PassThrough
+                }
+            }
+        }
+    }
+
+    /// Whether a failed preemption downgrades the occupant's priority
+    /// (ESA's anti-starvation aging, §5.4).
+    #[inline]
+    pub fn downgrades(&self) -> bool {
+        self.kind == PolicyKind::Esa
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn esa_preempts_strictly_higher_only() {
+        let p = Policy::new(PolicyKind::Esa);
+        let mut rng = Rng::new(1);
+        assert_eq!(p.on_collision(5, 4, &mut rng), CollisionOutcome::Preempt);
+        assert_eq!(p.on_collision(4, 4, &mut rng), CollisionOutcome::PassThrough);
+        assert_eq!(p.on_collision(3, 4, &mut rng), CollisionOutcome::PassThrough);
+    }
+
+    #[test]
+    fn atp_never_preempts() {
+        let p = Policy::new(PolicyKind::Atp);
+        let mut rng = Rng::new(1);
+        assert_eq!(p.on_collision(255, 0, &mut rng), CollisionOutcome::PassThrough);
+        assert!(!p.downgrades());
+    }
+
+    #[test]
+    fn straw1_always_preempts() {
+        let p = Policy::new(PolicyKind::StrawAlways);
+        let mut rng = Rng::new(1);
+        assert_eq!(p.on_collision(0, 255, &mut rng), CollisionOutcome::Preempt);
+    }
+
+    #[test]
+    fn straw2_is_a_fair_coin() {
+        let p = Policy::new(PolicyKind::StrawCoin);
+        let mut rng = Rng::new(2);
+        let preempts = (0..10_000)
+            .filter(|_| p.on_collision(0, 0, &mut rng) == CollisionOutcome::Preempt)
+            .count();
+        assert!((4500..5500).contains(&preempts), "{preempts}");
+    }
+
+    #[test]
+    fn hash_mapping_spreads_over_pool() {
+        let p = Policy::new(PolicyKind::Esa);
+        let mut seen = std::collections::HashSet::new();
+        for seq in 0..1000 {
+            seen.insert(p.slot_for(1, seq, 4096));
+        }
+        assert!(seen.len() > 800, "poor spread: {}", seen.len());
+        assert!(seen.iter().all(|&s| s < 4096));
+    }
+
+    #[test]
+    fn switchml_regions_are_disjoint_per_job() {
+        let mut p = Policy::new(PolicyKind::SwitchMl);
+        p.set_static_partitions(4, 4096);
+        assert_eq!(p.region_len(0), Some(1024));
+        for seq in 0..5000 {
+            let s0 = p.slot_for(0, seq, 4096);
+            let s3 = p.slot_for(3, seq, 4096);
+            assert!((0..1024).contains(&s0));
+            assert!((3072..4096).contains(&s3));
+        }
+    }
+
+    #[test]
+    fn switchml_self_mapping_is_modular() {
+        let mut p = Policy::new(PolicyKind::SwitchMl);
+        p.set_static_partitions(2, 100);
+        assert_eq!(p.slot_for(1, 0, 100), 50);
+        assert_eq!(p.slot_for(1, 49, 100), 99);
+        assert_eq!(p.slot_for(1, 50, 100), 50);
+    }
+}

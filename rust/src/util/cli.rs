@@ -1,0 +1,143 @@
+//! Minimal argv parser (no `clap` offline): subcommand + `--key value` /
+//! `--flag` options with typed accessors and helpful errors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed command line: `esa <subcommand> [--key value] [--flag]`.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{name}={s}: {e}")),
+        }
+    }
+
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parsed(name)?.unwrap_or(default))
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .with_context(|| format!("missing required option --{name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("sim --jobs 8 --policy esa --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("sim"));
+        assert_eq!(a.get("jobs"), Some("8"));
+        assert_eq!(a.get("policy"), Some("esa"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("sim --jobs=4");
+        assert_eq!(a.get("jobs"), Some("4"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("sim --jobs 8");
+        assert_eq!(a.get_parsed::<u32>("jobs").unwrap(), Some(8));
+        assert_eq!(a.get_parsed_or::<u32>("workers", 4).unwrap(), 4);
+        assert!(a.get_parsed::<u32>("policy").is_ok());
+    }
+
+    #[test]
+    fn typed_accessor_error() {
+        let a = parse("sim --jobs eight");
+        assert!(a.get_parsed::<u32>("jobs").is_err());
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_next_flag() {
+        let a = parse("sim --dry-run --jobs 2");
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.get("jobs"), Some("2"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("figures fig8 fig9");
+        assert_eq!(a.subcommand.as_deref(), Some("figures"));
+        assert_eq!(a.positional, vec!["fig8", "fig9"]);
+    }
+
+    #[test]
+    fn require_missing_errors() {
+        let a = parse("sim");
+        assert!(a.require("config").is_err());
+    }
+}

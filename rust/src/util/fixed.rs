@@ -1,0 +1,170 @@
+//! Fixed-point codec — bit-identical to the L1 Pallas `quantize` kernel.
+//!
+//! Programmable switches add integers, not floats, so every INA system
+//! converts gradients to fixed point at the end host (§5.1). The contract
+//! here mirrors `python/compile/kernels/quantize.py` exactly:
+//!
+//! ```text
+//! quantize:   q = clamp(round_half_even(x * 2^SCALE_BITS), i32::MIN, i32::MAX)
+//! dequantize: x = q * 2^-SCALE_BITS
+//! aggregate:  wrapping i32 addition (the switch register ALU)
+//! ```
+//!
+//! `rust/tests/integration_runtime.rs` cross-validates this module against
+//! the AOT-compiled kernel through PJRT, value for value.
+
+/// Fractional bits of the fixed-point format (must match `quantize.SCALE_BITS`).
+pub const SCALE_BITS: u32 = 20;
+/// The scale factor `2^SCALE_BITS`.
+pub const SCALE: f32 = (1u32 << SCALE_BITS) as f32;
+
+/// Quantize one f32 gradient value to saturating fixed-point i32.
+///
+/// Uses round-half-to-even to match XLA's `round_nearest_even` lowering of
+/// `jnp.round`.
+#[inline]
+pub fn quantize(x: f32) -> i32 {
+    let scaled = (x * SCALE) as f64;
+    let rounded = round_half_even(scaled);
+    if rounded >= i32::MAX as f64 {
+        i32::MAX
+    } else if rounded <= i32::MIN as f64 {
+        i32::MIN
+    } else {
+        rounded as i32
+    }
+}
+
+/// Dequantize a fixed-point i32 back to f32.
+#[inline]
+pub fn dequantize(q: i32) -> f32 {
+    q as f32 * (1.0 / SCALE)
+}
+
+/// Round half to even (banker's rounding), the IEEE default XLA uses.
+#[inline]
+fn round_half_even(x: f64) -> f64 {
+    let floor = x.floor();
+    let diff = x - floor;
+    if diff > 0.5 {
+        floor + 1.0
+    } else if diff < 0.5 {
+        floor
+    } else if (floor as i64) % 2 == 0 {
+        floor
+    } else {
+        floor + 1.0
+    }
+}
+
+/// The switch-aggregator add: wrap-around two's-complement i32.
+#[inline]
+pub fn agg_add(a: i32, b: i32) -> i32 {
+    a.wrapping_add(b)
+}
+
+/// Quantize a slice into a caller-provided buffer.
+pub fn quantize_slice(xs: &[f32], out: &mut [i32]) {
+    assert_eq!(xs.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = quantize(x);
+    }
+}
+
+/// Dequantize a slice into a caller-provided buffer.
+pub fn dequantize_slice(qs: &[i32], out: &mut [f32]) {
+    assert_eq!(qs.len(), out.len());
+    for (o, &q) in out.iter_mut().zip(qs) {
+        *o = dequantize(q);
+    }
+}
+
+/// In-place element-wise aggregation: `acc[i] = acc[i] ⊞ add[i]`.
+pub fn agg_add_slice(acc: &mut [i32], add: &[i32]) {
+    assert_eq!(acc.len(), add.len());
+    for (a, &b) in acc.iter_mut().zip(add) {
+        *a = a.wrapping_add(b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_zero_and_units() {
+        assert_eq!(quantize(0.0), 0);
+        assert_eq!(quantize(1.0), 1 << SCALE_BITS);
+        assert_eq!(quantize(-1.0), -(1 << SCALE_BITS));
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        assert_eq!(quantize(3.0e6), i32::MAX);
+        assert_eq!(quantize(-3.0e6), i32::MIN);
+        assert_eq!(quantize(f32::INFINITY), i32::MAX);
+        assert_eq!(quantize(f32::NEG_INFINITY), i32::MIN);
+    }
+
+    #[test]
+    fn round_half_even_ties() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+    }
+
+    #[test]
+    fn roundtrip_error_bound() {
+        let mut r = crate::util::rng::Rng::new(5);
+        for _ in 0..10_000 {
+            let x = r.uniform(-100.0, 100.0) as f32;
+            let rt = dequantize(quantize(x));
+            assert!(
+                (rt - x).abs() <= 0.5 / SCALE + x.abs() * 1e-6,
+                "x={x} rt={rt}"
+            );
+        }
+    }
+
+    #[test]
+    fn agg_add_wraps() {
+        assert_eq!(agg_add(i32::MAX, 1), i32::MIN);
+        assert_eq!(agg_add(i32::MIN, -1), i32::MAX);
+    }
+
+    #[test]
+    fn partial_sums_compose() {
+        // the preemption invariant: sum of partials == full sum
+        let mut r = crate::util::rng::Rng::new(6);
+        let vals: Vec<i32> = (0..64).map(|_| r.uniform(-1.0e6, 1.0e6) as i32).collect();
+        let full = vals.iter().fold(0i32, |a, &b| a.wrapping_add(b));
+        let first: i32 = vals[..30].iter().fold(0i32, |a, &b| a.wrapping_add(b));
+        let rest: i32 = vals[30..].iter().fold(0i32, |a, &b| a.wrapping_add(b));
+        assert_eq!(first.wrapping_add(rest), full);
+    }
+
+    #[test]
+    fn slice_helpers_match_scalar() {
+        let xs = [0.25f32, -0.75, 1.0e-6, 123.456];
+        let mut qs = [0i32; 4];
+        quantize_slice(&xs, &mut qs);
+        for (q, &x) in qs.iter().zip(&xs) {
+            assert_eq!(*q, quantize(x));
+        }
+        let mut back = [0f32; 4];
+        dequantize_slice(&qs, &mut back);
+        for (b, &q) in back.iter().zip(&qs) {
+            assert_eq!(*b, dequantize(q));
+        }
+    }
+
+    #[test]
+    fn agg_add_slice_matches_scalar() {
+        let mut acc = [1i32, i32::MAX, -5, 0];
+        let add = [2i32, 1, 5, 0];
+        agg_add_slice(&mut acc, &add);
+        assert_eq!(acc, [3, i32::MIN, 0, 0]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Cross-cutting substrates built from scratch (no crates.io equivalents are
+//! available offline): deterministic PRNG, the fixed-point codec mirroring
+//! the L1 Pallas kernel, streaming statistics, a minimal CLI parser, and a
+//! logger implementing the `log` facade.
+
+pub mod cli;
+pub mod fixed;
+pub mod logging;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,1107 @@
+//! The end-host worker (§5.1): gradient fragmentation, priority tagging,
+//! window-based pushing, parameter pulling, and the loss-recovery half of
+//! §5.3.
+//!
+//! Per iteration the worker follows the §7.2.1 timeline: the back layer's
+//! gradients exist at communication start; earlier layers become available
+//! as their backward passes finish; fragments go out in the paper's wire
+//! order under an AIMD window (initial 60 KB). Results (from the switch,
+//! sub-RTT) or parameters (from the PS, fallback path) complete sequence
+//! numbers; the window slides on its lowest incomplete sequence. When all
+//! of a layer's results are in, forward propagation of that layer can
+//! start; when the FP chain finishes, the iteration's JCT is recorded and
+//! the next iteration begins after a fresh compute-speed jitter draw.
+//!
+//! Loss recovery (§5.3): a timeout or three out-of-order completions
+//! ("dupACK") on the window base triggers a reminder to the PS (ESA) or a
+//! direct retransmission to the switch (ATP/SwitchML, which keep bitmaps
+//! at the switch). NACKs from the PS trigger selective retransmission
+//! over the reliable channel — or a cached-result reply when the worker
+//! already pulled that parameter (case 2).
+
+pub mod priority;
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::config::PolicyKind;
+use crate::job::JobModel;
+use crate::net::Net;
+use crate::packet::{Packet, PacketKind};
+use crate::ps::{RttEstimator, RTO_MIN_NS};
+use crate::util::rng::Rng;
+use crate::worker::priority::{priority_for, PriorityInputs};
+use crate::{NodeId, SimTime, WorkerId};
+
+/// Timer-key kinds (high 32 bits of the key).
+pub const TK_AVAIL: u64 = 1 << 32;
+pub const TK_RTO: u64 = 2 << 32;
+pub const TK_FP_DONE: u64 = 3 << 32;
+pub const TK_START: u64 = 4 << 32;
+const TK_MASK: u64 = 0xffff_ffff_0000_0000;
+
+/// One finished iteration (metrics record).
+#[derive(Debug, Clone, Copy)]
+pub struct IterRecord {
+    pub comm_start: SimTime,
+    pub completion: SimTime,
+    pub bytes_received: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Idle,
+    Communicating,
+    Computing,
+    Done,
+}
+
+/// Worker configuration (wiring + protocol knobs).
+#[derive(Debug, Clone)]
+pub struct WorkerCfg {
+    pub node: NodeId,
+    pub switch: NodeId,
+    /// The job's fallback PS; `None` for SwitchML (no PS in that design).
+    pub ps: Option<NodeId>,
+    pub widx: WorkerId,
+    pub policy: PolicyKind,
+    pub window_bytes: u64,
+    pub max_window_bytes: u64,
+    pub jitter_max_ns: SimTime,
+    /// SwitchML: static region length caps the window (self-clocking).
+    pub region_cap: Option<u32>,
+}
+
+/// The worker actor for one (job, worker) pair.
+pub struct Worker {
+    pub cfg: WorkerCfg,
+    pub model: Arc<JobModel>,
+    rng: Rng,
+
+    // --- iteration state ---
+    phase: Phase,
+    iter: u32,
+    comm_start: SimTime,
+    /// Absolute availability time per send-plan entry, this iteration.
+    avail: Vec<SimTime>,
+    /// Wire priority per send-plan entry, this iteration (§5.4).
+    prio: Vec<u8>,
+    next_send: u32,
+    base: u32,
+    sent: Vec<bool>,
+    completed: Vec<bool>,
+    n_completed: u32,
+    layer_remaining: Vec<u32>,
+    layer_done_at: Vec<SimTime>,
+    bytes_received: u64,
+
+    // --- reliability ---
+    rtt: RttEstimator,
+    rtt_probe: Option<(u32, SimTime)>,
+    last_recover_at: SimTime,
+    last_recover_base: u32,
+    dupack: u32,
+    rto_epoch: u64,
+    rto_backoff: u32,
+    base_progress_at: SimTime,
+
+    // --- congestion window (slow start + ECN AIMD per ATP) ---
+    cwnd: u32,
+    max_cwnd: u32,
+    ssthresh: u32,
+    round_mark: u32,
+    last_ecn_cut: SimTime,
+
+    // --- pull cache (case 2) ---
+    cache: VecDeque<(u32, Option<Box<[i32]>>)>,
+    cache_cap: usize,
+
+    // --- train mode ---
+    /// Quantized gradient payload for the current iteration (lanes per
+    /// fragment, laid out seq-major). `None` in timing-only simulations.
+    payload: Option<Arc<Vec<i32>>>,
+    /// Aggregated values assembled from results (train mode).
+    collected: Option<Vec<i32>>,
+    lanes: usize,
+
+    // --- priority inputs (§5.4) ---
+    inputs: PriorityInputs,
+    ema_iter_ns: f64,
+    started_at: SimTime,
+
+    // --- metrics ---
+    pub records: Vec<IterRecord>,
+}
+
+impl Worker {
+    pub fn new(cfg: WorkerCfg, model: Arc<JobModel>, rng: Rng) -> Worker {
+        let frags = model.plan.frags_per_iter as usize;
+        let n_layers = model.profile.n_layers();
+        let pkt_bytes = cfg.policy.packet_bytes();
+        let mut cwnd = (cfg.window_bytes / pkt_bytes).max(4) as u32;
+        // The ceiling covers the straggler-bandwidth-delay product (§2.2):
+        // the in-flight demand that makes switch memory the bottleneck.
+        let mut max_cwnd = (cfg.max_window_bytes / pkt_bytes).max(cwnd as u64) as u32;
+        // SwitchML self-clocks on its static region: the window must not
+        // exceed it or slots would collide within the job. This is exactly
+        // where the static partitioning binds.
+        if let Some(cap) = cfg.region_cap {
+            cwnd = cwnd.min(cap);
+            max_cwnd = max_cwnd.min(cap);
+        }
+        let theoretical_iter = model.bytes_per_iter() as f64 * 8.0 / 100.0
+            + model.profile.total_comp_ns() as f64;
+        let lanes = cfg.policy.lanes();
+        let comm_comp = model.profile.comm_comp_ratio;
+        let n_iter = model.iterations;
+        Worker {
+            cfg,
+            rng,
+            phase: Phase::Idle,
+            iter: 0,
+            comm_start: 0,
+            avail: Vec::new(),
+            prio: Vec::new(),
+            next_send: 0,
+            base: 0,
+            sent: vec![false; frags],
+            completed: vec![false; frags],
+            n_completed: 0,
+            layer_remaining: vec![0; n_layers],
+            layer_done_at: vec![0; n_layers],
+            bytes_received: 0,
+            rtt: RttEstimator::default(),
+            rtt_probe: None,
+            last_recover_at: 0,
+            last_recover_base: u32::MAX,
+            dupack: 0,
+            rto_epoch: 0,
+            rto_backoff: 1,
+            base_progress_at: 0,
+            cwnd,
+            max_cwnd,
+            ssthresh: max_cwnd,
+            round_mark: 0,
+            last_ecn_cut: 0,
+            cache: VecDeque::new(),
+            cache_cap: (max_cwnd as usize * 2).max(512),
+            payload: None,
+            collected: None,
+            lanes,
+            inputs: PriorityInputs {
+                remaining_ns: Some((theoretical_iter * n_iter as f64) as SimTime),
+                attained_ns: 0,
+                comm_comp,
+                n_layers: n_layers as u32,
+            },
+            ema_iter_ns: theoretical_iter,
+            started_at: 0,
+            records: Vec::new(),
+            model,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.phase == Phase::Done
+    }
+
+    pub fn iterations_finished(&self) -> u32 {
+        self.records.len() as u32
+    }
+
+    pub fn cwnd(&self) -> u32 {
+        self.cwnd
+    }
+
+    /// One-line state dump for stall diagnosis.
+    pub fn debug_state(&self) -> String {
+        format!(
+            "phase={:?} iter={} base={} next_send={} n_completed={}/{} cwnd={} sent[base]={} completed[base]={}",
+            self.phase,
+            self.iter,
+            self.base,
+            self.next_send,
+            self.n_completed,
+            self.frags(),
+            self.cwnd,
+            self.sent.get(self.base as usize).copied().unwrap_or(false),
+            self.completed.get(self.base as usize).copied().unwrap_or(false),
+        )
+    }
+
+    /// Install the quantized gradient payload for the coming iteration
+    /// (train mode). Length must be `frags_per_iter * lanes`.
+    pub fn set_payload(&mut self, payload: Arc<Vec<i32>>) {
+        assert_eq!(
+            payload.len(),
+            self.model.plan.frags_per_iter as usize * self.lanes
+        );
+        self.collected = Some(vec![0; payload.len()]);
+        self.payload = Some(payload);
+    }
+
+    /// Take the aggregated values assembled from this iteration's results
+    /// (train mode; call after the iteration completes).
+    pub fn take_collected(&mut self) -> Option<Vec<i32>> {
+        self.collected.take()
+    }
+
+    /// Job start (driver calls at the job's randomized start time).
+    pub fn start(&mut self, net: &mut Net) {
+        debug_assert_eq!(self.phase, Phase::Idle);
+        self.started_at = net.now();
+        self.begin_iteration(net);
+        self.try_send(net);
+    }
+
+    fn begin_iteration(&mut self, net: &mut Net) {
+        let now = net.now();
+        // §7.2.1: per-worker compute-speed variance, drawn per tensor
+        // partition — the straggler effect that keeps aggregators occupied
+        let jitter = if self.cfg.jitter_max_ns > 0 {
+            self.rng.next_below(self.cfg.jitter_max_ns)
+        } else {
+            0
+        };
+        self.comm_start = now + jitter;
+        self.phase = Phase::Communicating;
+        self.next_send = 0;
+        self.base = 0;
+        self.n_completed = 0;
+        self.dupack = 0;
+        self.rto_backoff = 1;
+        self.base_progress_at = self.comm_start;
+        self.round_mark = self.cwnd;
+        self.sent.fill(false);
+        self.completed.fill(false);
+        for (l, r) in self.layer_remaining.iter_mut().enumerate() {
+            *r = self
+                .model
+                .plan
+                .sends
+                .iter()
+                .filter(|p| p.layer as usize == l)
+                .map(|p| p.n_frags)
+                .sum();
+        }
+        self.layer_done_at.fill(0);
+        self.bytes_received = 0;
+
+        // §5.4 inputs refresh. §7.2.1 estimates T_j from the THEORETICAL
+        // remaining communication + computation time — deliberately noise
+        // free, so identical jobs compare equal and never preempt each
+        // other on estimation jitter (measured-EWMA estimates thrash).
+        let left = self.model.iterations.saturating_sub(self.iter).max(1) as f64;
+        let theoretical_iter = self.model.bytes_per_iter() as f64 * 8.0 / 100.0
+            + self.model.profile.total_comp_ns() as f64;
+        self.inputs.remaining_ns = Some((theoretical_iter * left) as SimTime);
+        self.inputs.attained_ns = now.saturating_sub(self.started_at).max(1);
+
+        // availability + priority per send entry
+        self.avail.clear();
+        self.prio.clear();
+        for (k, p) in self.model.plan.sends.iter().enumerate() {
+            let part_jitter = if self.cfg.jitter_max_ns > 0 && k > 0 {
+                self.rng.next_below(self.cfg.jitter_max_ns)
+            } else {
+                0
+            };
+            let at = self.comm_start + self.model.plan.avail_offset[k] + part_jitter;
+            self.avail.push(at);
+            self.prio.push(priority_for(&self.inputs, p.layer as u32 + 1));
+            net.timer(at, self.cfg.node, TK_AVAIL | k as u64);
+        }
+        self.arm_rto(net);
+    }
+
+    // ----------------------------------------------------------------
+    // sending
+    // ----------------------------------------------------------------
+
+    fn entry_of(&self, rel: u32) -> usize {
+        self.model
+            .plan
+            .sends
+            .iter()
+            .position(|p| rel >= p.first_seq && rel < p.first_seq + p.n_frags)
+            .expect("rel seq out of plan")
+    }
+
+    fn frags(&self) -> u32 {
+        self.model.plan.frags_per_iter
+    }
+
+    fn abs_seq(&self, rel: u32) -> u32 {
+        self.model.seq_base(self.iter) + rel
+    }
+
+    fn packet_wire_bytes(&self) -> u32 {
+        self.cfg.policy.packet_bytes() as u32
+    }
+
+    fn payload_slice(&self, rel: u32) -> Option<Box<[i32]>> {
+        self.payload.as_ref().map(|p| {
+            let s = rel as usize * self.lanes;
+            p[s..s + self.lanes].into()
+        })
+    }
+
+    /// Push as many fragments as window + availability allow.
+    fn try_send(&mut self, net: &mut Net) {
+        if self.phase != Phase::Communicating {
+            return;
+        }
+        let now = net.now();
+        while self.next_send < self.frags() {
+            let rel = self.next_send;
+            if self.completed[rel as usize] || self.sent[rel as usize] {
+                self.next_send += 1;
+                continue;
+            }
+            if rel >= self.base + self.cwnd {
+                break; // window closed; completions reopen it
+            }
+            let entry = self.entry_of(rel);
+            if self.avail[entry] > now {
+                break; // earlier-plan fragments gate later ones (wire order)
+            }
+            self.send_gradient(net, rel);
+            self.next_send += 1;
+        }
+    }
+
+    fn send_gradient(&mut self, net: &mut Net, rel: u32) {
+        let entry = self.entry_of(rel);
+        let seq = self.abs_seq(rel);
+        // BytePS baseline: no INA — gradients go straight to the PS.
+        let dst = if self.cfg.policy == PolicyKind::HostPs {
+            self.cfg.ps.expect("HostPs requires a PS")
+        } else {
+            self.cfg.switch
+        };
+        let mut pkt = Packet::gradient(
+            self.model.id,
+            seq,
+            0,
+            1 << self.cfg.widx,
+            self.model.n_workers as u8,
+            self.prio[entry],
+            self.cfg.node,
+            dst,
+            self.packet_wire_bytes(),
+        );
+        // end host tags the aggregator index (§5.1) — the switch recomputes
+        // the same hash; we tag for header fidelity
+        pkt.agg_index = crate::packet::task_hash(self.model.id, seq);
+        pkt.values = self.payload_slice(rel);
+        self.sent[rel as usize] = true;
+        if self.rtt_probe.is_none() {
+            self.rtt_probe = Some((rel, net.now()));
+        }
+        net.transmit(self.cfg.node, pkt);
+    }
+
+    // ----------------------------------------------------------------
+    // receiving
+    // ----------------------------------------------------------------
+
+    /// Handle a packet delivered to this worker's node.
+    pub fn handle(&mut self, net: &mut Net, pkt: Packet) {
+        match pkt.kind {
+            PacketKind::Result | PacketKind::Param => self.on_result(net, pkt),
+            PacketKind::Nack => self.on_nack(net, pkt),
+            other => debug_assert!(false, "worker got {other:?}"),
+        }
+    }
+
+    fn on_result(&mut self, net: &mut Net, pkt: Packet) {
+        let now = net.now();
+        // ECN AIMD: one multiplicative decrease per RTT on a marked result
+        if pkt.ecn {
+            let guard = self.rtt.rto(crate::USEC * 20).min(200 * crate::USEC);
+            if now.saturating_sub(self.last_ecn_cut) > guard {
+                self.last_ecn_cut = now;
+                self.ssthresh = (self.cwnd / 2).max(8);
+                self.cwnd = self.ssthresh.min(self.max_cwnd);
+                self.round_mark = self.base + self.cwnd;
+            }
+        }
+        let base_seq = self.model.seq_base(self.iter);
+        if self.phase != Phase::Communicating
+            || pkt.seq < base_seq
+            || pkt.seq >= base_seq + self.frags()
+        {
+            return; // stale (previous iteration / duplicate after completion)
+        }
+        let rel = pkt.seq - base_seq;
+        if self.completed[rel as usize] {
+            return; // duplicate result
+        }
+        self.completed[rel as usize] = true;
+        self.n_completed += 1;
+        self.bytes_received += pkt.wire_bytes as u64;
+
+        // pull cache for the §5.3 case-2 query path
+        self.cache.push_back((pkt.seq, pkt.values.clone()));
+        if self.cache.len() > self.cache_cap {
+            self.cache.pop_front();
+        }
+
+        // train mode: assemble the aggregated lanes
+        if let (Some(buf), Some(v)) = (&mut self.collected, pkt.values.as_deref()) {
+            let s = rel as usize * self.lanes;
+            buf[s..s + v.len()].copy_from_slice(v);
+        }
+
+        // RTT probe
+        if let Some((probe_rel, sent_at)) = self.rtt_probe {
+            if probe_rel == rel {
+                self.rtt.sample(now.saturating_sub(sent_at).max(1));
+                self.rtt_probe = None;
+            }
+        }
+
+        // layer bookkeeping
+        let entry = self.entry_of(rel);
+        let layer = self.model.plan.sends[entry].layer as usize;
+        self.layer_remaining[layer] -= 1;
+        if self.layer_remaining[layer] == 0 {
+            self.layer_done_at[layer] = now;
+        }
+
+        if rel == self.base {
+            // §5.1: expected sequence number arrived → slide the window
+            while self.base < self.frags() && self.completed[self.base as usize] {
+                self.base += 1;
+            }
+            self.dupack = 0;
+            self.rto_backoff = 1;
+            self.base_progress_at = now;
+            if self.base >= self.round_mark {
+                // slow start to ssthresh, then additive increase per round
+                self.cwnd = if self.cwnd < self.ssthresh {
+                    (self.cwnd * 2).min(self.ssthresh)
+                } else {
+                    self.cwnd + 1
+                }
+                .min(self.max_cwnd);
+                self.round_mark = self.base + self.cwnd;
+            }
+        } else {
+            // Out-of-order completion is NORMAL under hash-based INA
+            // (tasks complete in arbitrary order). ESA's reminder recovery
+            // is cheap and paced, so it keeps the paper's dupACK=3; the
+            // ATP/SwitchML resend path is destructive (it flushes switch
+            // partials), so its suspicion threshold scales with the window.
+            self.dupack += 1;
+            let threshold = match self.cfg.policy {
+                PolicyKind::Esa | PolicyKind::HostPs | PolicyKind::StrawAlways | PolicyKind::StrawCoin => {
+                    crate::ps::DUPACK_THRESHOLD
+                }
+                _ => (self.cwnd / 8).max(8),
+            };
+            if self.dupack >= threshold
+                && self.sent[self.base as usize]
+                && !self.completed[self.base as usize]
+            {
+                self.dupack = 0;
+                self.recover_base(net);
+            }
+        }
+
+        if self.n_completed == self.frags() {
+            self.finish_communication(net);
+        } else {
+            self.try_send(net);
+        }
+    }
+
+    /// §5.3 loss recovery: recover a *batch* of stalled sequences starting
+    /// at the window base (losses cluster under bursts; one-at-a-time
+    /// recovery would serialize at an RTO each). Spurious reminders are
+    /// harmless by design — bitmaps dedup everywhere.
+    const RECOVERY_BATCH: u32 = 16;
+
+    fn recover_base(&mut self, net: &mut Net) {
+        // pace: one recovery round per base per half-RTO
+        let now = net.now();
+        if self.last_recover_base == self.base
+            && now.saturating_sub(self.last_recover_at) < RTO_MIN_NS / 2
+        {
+            return;
+        }
+        self.last_recover_base = self.base;
+        self.last_recover_at = now;
+        let mut recovered = 0;
+        let mut rel = self.base;
+        while recovered < Self::RECOVERY_BATCH && rel < self.frags() && rel < self.base + self.cwnd {
+            if self.sent[rel as usize] && !self.completed[rel as usize] {
+                self.recover_one(net, rel);
+                recovered += 1;
+            }
+            rel += 1;
+        }
+    }
+
+    fn recover_one(&mut self, net: &mut Net, rel: u32) {
+        if rel >= self.frags() || self.completed[rel as usize] || !self.sent[rel as usize] {
+            return;
+        }
+        match (self.cfg.policy, self.cfg.ps) {
+            (PolicyKind::Atp, _) | (PolicyKind::SwitchMl, _) | (_, None) => {
+                let seq = self.abs_seq(rel);
+                let entry = self.entry_of(rel);
+                let mut pkt = Packet::gradient(
+                    self.model.id,
+                    seq,
+                    crate::packet::task_hash(self.model.id, seq),
+                    1 << self.cfg.widx,
+                    self.model.n_workers as u8,
+                    self.prio[entry],
+                    self.cfg.node,
+                    self.cfg.switch,
+                    self.packet_wire_bytes(),
+                );
+                // ATP resend semantics: the switch must not re-aggregate a
+                // resend; it evicts any matching partial toward the PS and
+                // forwards the resend there, resolving split aggregations.
+                pkt.resend = self.cfg.policy == PolicyKind::Atp;
+                pkt.values = self.payload_slice(rel);
+                net.transmit(self.cfg.node, pkt);
+            }
+            (_, Some(ps)) => {
+                let seq = self.abs_seq(rel);
+                let rem = Packet::reminder(
+                    self.model.id,
+                    seq,
+                    self.cfg.node,
+                    ps,
+                    false,
+                    self.packet_wire_bytes(),
+                );
+                net.transmit(self.cfg.node, rem);
+            }
+        }
+    }
+
+    /// §5.3 selective retransmission: the PS named this exact (worker,
+    /// seq). Reply with the cached result when we already pulled it
+    /// (case 2), else retransmit our gradient over the reliable channel.
+    fn on_nack(&mut self, net: &mut Net, pkt: Packet) {
+        let Some(ps) = self.cfg.ps else { return };
+        if let Some((_, values)) = self.cache.iter().find(|(s, _)| *s == pkt.seq) {
+            let reply = Packet {
+                kind: PacketKind::CachedResult,
+                job: self.model.id,
+                seq: pkt.seq,
+                agg_index: 0,
+                bitmap: self.model.full_bitmap(),
+                fan_in: self.model.n_workers as u8,
+                priority: 0,
+                src: self.cfg.node,
+                dst: ps,
+                wire_bytes: self.packet_wire_bytes(),
+                reliable: true,
+                resend: false,
+                ecn: false,
+                values: values.clone(),
+                sent_at: 0,
+            };
+            net.transmit(self.cfg.node, reply);
+            return;
+        }
+        // retransmit our own contribution if the seq belongs to the
+        // current iteration (older iterations have long completed)
+        let base_seq = self.model.seq_base(self.iter);
+        if pkt.seq < base_seq || pkt.seq >= base_seq + self.frags() {
+            return;
+        }
+        let rel = pkt.seq - base_seq;
+        if self.completed[rel as usize] {
+            // §5.3 case 2: we pulled this parameter but the cache evicted
+            // it — reply with a cached-result marker (plus the assembled
+            // values in train mode) so the PS can complete and re-multicast.
+            let values = self.collected.as_ref().map(|buf| {
+                let s = rel as usize * self.lanes;
+                Box::from(&buf[s..s + self.lanes])
+            });
+            let reply = Packet {
+                kind: PacketKind::CachedResult,
+                job: self.model.id,
+                seq: pkt.seq,
+                agg_index: 0,
+                bitmap: self.model.full_bitmap(),
+                fan_in: self.model.n_workers as u8,
+                priority: 0,
+                src: self.cfg.node,
+                dst: ps,
+                wire_bytes: self.packet_wire_bytes(),
+                reliable: true,
+                resend: false,
+                ecn: false,
+                values,
+                sent_at: 0,
+            };
+            net.transmit(self.cfg.node, reply);
+            return;
+        }
+        if !self.sent[rel as usize] {
+            return; // not yet pushed (BP still running); the natural send covers it
+        }
+        let entry = self.entry_of(rel);
+        let retr = Packet {
+            kind: PacketKind::Retransmit,
+            job: self.model.id,
+            seq: pkt.seq,
+            agg_index: 0,
+            bitmap: 1 << self.cfg.widx,
+            fan_in: self.model.n_workers as u8,
+            priority: self.prio[entry],
+            src: self.cfg.node,
+            dst: ps,
+            wire_bytes: self.packet_wire_bytes(),
+            reliable: true,
+            resend: false,
+            ecn: false,
+            values: self.payload_slice(rel),
+            sent_at: 0,
+        };
+        self.sent[rel as usize] = true;
+        net.transmit(self.cfg.node, retr);
+    }
+
+    // ----------------------------------------------------------------
+    // timers
+    // ----------------------------------------------------------------
+
+    fn arm_rto(&mut self, net: &mut Net) {
+        self.rto_epoch += 1;
+        let rto = self.rtt.rto(RTO_MIN_NS) * self.rto_backoff as u64;
+        net.timer(net.now() + rto, self.cfg.node, TK_RTO | (self.rto_epoch & 0xffff_ffff));
+    }
+
+    /// Handle a timer addressed to this worker.
+    pub fn on_timer(&mut self, net: &mut Net, key: u64) {
+        match key & TK_MASK {
+            TK_START => {
+                if self.phase == Phase::Idle {
+                    self.start(net);
+                }
+            }
+            TK_AVAIL => {
+                self.try_send(net);
+            }
+            TK_RTO => {
+                if (key & !TK_MASK) != (self.rto_epoch & 0xffff_ffff)
+                    || self.phase != Phase::Communicating
+                {
+                    return; // stale epoch
+                }
+                let rto = self.rtt.rto(RTO_MIN_NS) * self.rto_backoff as u64;
+                let idx = (self.base as usize).min(self.frags() as usize - 1);
+                let stalled = net.now().saturating_sub(self.base_progress_at) >= rto
+                    && self.sent[idx]
+                    && !self.completed[idx];
+                if stalled {
+                    // Loss recovery WITHOUT multiplicative decrease: random
+                    // loss is not congestion — ECN marks own the congestion
+                    // signal (modern DC-transport separation). Backoff stays
+                    // shallow so clustered losses clear quickly.
+                    self.rto_backoff = (self.rto_backoff * 2).min(4);
+                    self.recover_base(net);
+                }
+                self.arm_rto(net);
+            }
+            TK_FP_DONE => {
+                self.finish_iteration(net);
+            }
+            other => debug_assert!(false, "worker timer {other:#x}"),
+        }
+    }
+
+    // ----------------------------------------------------------------
+    // iteration lifecycle
+    // ----------------------------------------------------------------
+
+    /// All results received: run the forward-propagation chain (§7.2.1 —
+    /// FP of layer *l* needs FP of *l-1* and layer *l*'s results).
+    fn finish_communication(&mut self, net: &mut Net) {
+        let now = net.now();
+        self.phase = Phase::Computing;
+        let mut fp = 0u64;
+        for l in 0..self.model.profile.n_layers() {
+            fp = fp.max(self.layer_done_at[l]) + self.model.comp_ns(l);
+        }
+        let completion = fp.max(now);
+        net.timer(completion, self.cfg.node, TK_FP_DONE);
+    }
+
+    fn finish_iteration(&mut self, net: &mut Net) {
+        let now = net.now();
+        self.records.push(IterRecord {
+            comm_start: self.comm_start,
+            completion: now,
+            bytes_received: self.bytes_received,
+        });
+        let iter_ns = now.saturating_sub(self.comm_start) as f64;
+        self.ema_iter_ns = if self.records.len() == 1 {
+            iter_ns
+        } else {
+            0.7 * self.ema_iter_ns + 0.3 * iter_ns
+        };
+        self.iter += 1;
+        if self.iter >= self.model.iterations {
+            self.phase = Phase::Done;
+            return;
+        }
+        self.begin_iteration(net);
+        self.try_send(net);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NetworkConfig, PolicyKind};
+    use crate::job::dnn::profile_by_name;
+    use crate::net::{Event, Topology};
+
+    fn mkworld(policy: PolicyKind) -> (Net, Worker) {
+        let net = Net::new(Topology::star(4), NetworkConfig::default(), Rng::new(1));
+        let model = Arc::new(JobModel::new(
+            0,
+            profile_by_name("microbench", Some(4096)).unwrap(),
+            2,
+            256,
+            2,
+        ));
+        let cfg = WorkerCfg {
+            node: 1,
+            switch: 0,
+            ps: Some(3),
+            widx: 0,
+            policy,
+            window_bytes: 4 * 306,
+            max_window_bytes: 16 * 306,
+            jitter_max_ns: 0,
+            region_cap: None,
+        };
+        (net, Worker::new(cfg, model, Rng::new(2)))
+    }
+
+    fn drain_sends(net: &mut Net) -> Vec<Packet> {
+        let mut v = Vec::new();
+        while let Some((_, ev)) = net.queue.pop() {
+            if let Event::Deliver { pkt, .. } = ev {
+                v.push(pkt);
+            }
+        }
+        v
+    }
+
+    fn result_for(pkt_seq: u32, dst: NodeId) -> Packet {
+        Packet {
+            kind: PacketKind::Result,
+            job: 0,
+            seq: pkt_seq,
+            agg_index: 0,
+            bitmap: 0b11,
+            fan_in: 2,
+            priority: 0,
+            src: 0,
+            dst,
+            wire_bytes: 306,
+            reliable: false,
+            resend: false,
+            ecn: false,
+            values: None,
+            sent_at: 0,
+        }
+    }
+
+    #[test]
+    fn start_sends_up_to_window() {
+        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        w.start(&mut net);
+        // microbench 4096B / 256B payload = 16 frags; window = 4 pkts
+        let sends = drain_sends(&mut net);
+        let grads: Vec<_> = sends.iter().filter(|p| p.kind == PacketKind::Gradient).collect();
+        assert_eq!(grads.len(), 4);
+        assert_eq!(grads[0].seq, 0);
+        assert_eq!(grads[3].seq, 3);
+        assert!(grads.iter().all(|p| p.bitmap == 0b01 && p.fan_in == 2));
+        assert!(grads.iter().all(|p| p.priority > 0));
+    }
+
+    #[test]
+    fn window_slides_on_expected_seq() {
+        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        w.start(&mut net);
+        drain_sends(&mut net);
+        w.handle(&mut net, result_for(0, 1));
+        let sends = drain_sends(&mut net);
+        assert_eq!(sends.len(), 1, "one completion frees one window slot");
+        assert_eq!(sends[0].seq, 4);
+        assert_eq!(w.base, 1);
+    }
+
+    #[test]
+    fn out_of_order_results_do_not_slide_base() {
+        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        w.start(&mut net);
+        drain_sends(&mut net);
+        w.handle(&mut net, result_for(1, 1));
+        w.handle(&mut net, result_for(2, 1));
+        assert_eq!(w.base, 0);
+        assert_eq!(drain_sends(&mut net).len(), 0, "window still blocked on seq 0");
+        w.handle(&mut net, result_for(0, 1));
+        assert_eq!(w.base, 3, "base jumps past already-completed seqs");
+        assert_eq!(drain_sends(&mut net).len(), 3);
+    }
+
+    #[test]
+    fn esa_dupack_3_sends_reminder_to_ps() {
+        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        w.start(&mut net);
+        drain_sends(&mut net);
+        // ESA keeps the paper's dupACK threshold of 3 (reminder recovery
+        // is cheap and paced at the PS)
+        for s in 1..=3 {
+            w.handle(&mut net, result_for(s, 1));
+        }
+        let sends = drain_sends(&mut net);
+        let rem: Vec<_> = sends.iter().filter(|p| p.kind == PacketKind::ReminderToPs).collect();
+        assert_eq!(rem.len(), 1);
+        assert_eq!(rem[0].seq, 0);
+        assert_eq!(rem[0].dst, 3);
+    }
+
+    #[test]
+    fn atp_dupacks_retransmit_to_switch_with_resend_flag() {
+        let (mut net, mut w) = mkworld(PolicyKind::Atp);
+        w.start(&mut net);
+        drain_sends(&mut net);
+        for s in 1..=9 {
+            w.handle(&mut net, result_for(s, 1));
+            if s <= 7 {
+                drain_sends(&mut net);
+            }
+        }
+        let sends = drain_sends(&mut net);
+        let retr: Vec<_> = sends.iter().filter(|p| p.kind == PacketKind::Gradient && p.resend).collect();
+        assert!(retr.iter().any(|p| p.seq == 0 && p.dst == 0), "resend seq 0 to switch");
+    }
+
+    #[test]
+    fn rto_fires_recovery_with_shallow_backoff() {
+        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        w.start(&mut net);
+        drain_sends(&mut net);
+        let cwnd0 = w.cwnd;
+        // deliver nothing; pump the RTO timer chain three times
+        for _ in 0..3 {
+            let rto = w.rtt.rto(RTO_MIN_NS) * w.rto_backoff as u64;
+            net.timer(net.now() + rto, 1, TK_RTO | (w.rto_epoch & 0xffff_ffff));
+            while let Some((_, ev)) = net.queue.pop() {
+                match ev {
+                    Event::Timer { key, .. } if key & TK_MASK == TK_RTO => {
+                        w.on_timer(&mut net, key);
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // loss recovery is decoupled from congestion control: window intact
+        assert_eq!(w.cwnd, cwnd0, "no multiplicative decrease on RTO");
+        assert!(w.rto_backoff > 1 && w.rto_backoff <= 4, "shallow backoff");
+    }
+
+    #[test]
+    fn ecn_mark_halves_window_once_per_guard() {
+        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        w.cwnd = 16;
+        w.max_cwnd = 64;
+        w.start(&mut net);
+        drain_sends(&mut net);
+        let mut r = result_for(1, 1);
+        r.ecn = true;
+        w.handle(&mut net, r);
+        assert_eq!(w.cwnd, 8, "ECN mark halves the window");
+        let mut r2 = result_for(2, 1);
+        r2.ecn = true;
+        w.handle(&mut net, r2);
+        assert_eq!(w.cwnd, 8, "second mark within the guard window is ignored");
+    }
+
+    #[test]
+    fn nack_answers_with_cached_result_when_pulled() {
+        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        w.start(&mut net);
+        drain_sends(&mut net);
+        w.handle(&mut net, result_for(0, 1));
+        drain_sends(&mut net);
+        let nack = Packet {
+            kind: PacketKind::Nack,
+            job: 0,
+            seq: 0,
+            agg_index: 0,
+            bitmap: 1,
+            fan_in: 2,
+            priority: 0,
+            src: 3,
+            dst: 1,
+            wire_bytes: 64,
+            reliable: true,
+            resend: false,
+            ecn: false,
+            values: None,
+            sent_at: 0,
+        };
+        w.handle(&mut net, nack);
+        let sends = drain_sends(&mut net);
+        assert_eq!(sends.len(), 1);
+        assert_eq!(sends[0].kind, PacketKind::CachedResult);
+        assert_eq!(sends[0].bitmap, 0b11);
+    }
+
+    #[test]
+    fn nack_retransmits_gradient_when_not_pulled() {
+        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        w.start(&mut net);
+        drain_sends(&mut net);
+        let nack = Packet {
+            kind: PacketKind::Nack,
+            job: 0,
+            seq: 2,
+            agg_index: 0,
+            bitmap: 1,
+            fan_in: 2,
+            priority: 0,
+            src: 3,
+            dst: 1,
+            wire_bytes: 64,
+            reliable: true,
+            resend: false,
+            ecn: false,
+            values: None,
+            sent_at: 0,
+        };
+        w.handle(&mut net, nack);
+        let sends = drain_sends(&mut net);
+        assert_eq!(sends.len(), 1);
+        assert_eq!(sends[0].kind, PacketKind::Retransmit);
+        assert_eq!(sends[0].bitmap, 0b01);
+        assert_eq!(sends[0].dst, 3);
+        assert!(sends[0].reliable);
+    }
+
+    #[test]
+    fn iteration_completes_and_records_jct() {
+        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        w.start(&mut net);
+        drain_sends(&mut net);
+        for s in 0..16 {
+            w.handle(&mut net, result_for(s, 1));
+            drain_sends(&mut net);
+        }
+        // microbench has no compute: fire the FP_DONE timer directly
+        w.on_timer(&mut net, TK_FP_DONE);
+        assert_eq!(w.records.len(), 1);
+        assert!(!w.done(), "second iteration should start");
+        assert_eq!(w.iter, 1);
+    }
+
+    #[test]
+    fn stale_results_from_previous_iteration_ignored() {
+        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        w.start(&mut net);
+        drain_sends(&mut net);
+        for s in 0..16 {
+            w.handle(&mut net, result_for(s, 1));
+        }
+        w.on_timer(&mut net, TK_FP_DONE);
+        drain_sends(&mut net);
+        // iteration 1 active; a duplicate result for iteration 0 arrives
+        let before = w.n_completed;
+        w.handle(&mut net, result_for(5, 1));
+        assert_eq!(w.n_completed, before, "stale seq must not count");
+    }
+
+    #[test]
+    fn train_mode_payload_flows_and_collects() {
+        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        let frags = w.frags() as usize;
+        let payload: Vec<i32> = (0..frags * 64).map(|i| i as i32).collect();
+        w.set_payload(Arc::new(payload.clone()));
+        w.start(&mut net);
+        let sends = drain_sends(&mut net);
+        assert_eq!(sends[0].values.as_deref().unwrap(), &payload[0..64]);
+        // a result with values gets assembled
+        let mut r = result_for(0, 1);
+        r.values = Some(vec![7i32; 64].into_boxed_slice());
+        w.handle(&mut net, r);
+        drain_sends(&mut net);
+        for s in 1..16 {
+            w.handle(&mut net, result_for(s, 1));
+            drain_sends(&mut net);
+        }
+        let collected = w.take_collected().unwrap();
+        assert_eq!(&collected[0..64], &[7i32; 64][..]);
+    }
+
+    #[test]
+    fn priorities_front_layer_higher_for_dnn_a() {
+        let mut net = Net::new(Topology::star(4), NetworkConfig::default(), Rng::new(1));
+        let model = Arc::new(JobModel::new(
+            0,
+            profile_by_name("dnn_a", None).unwrap(),
+            8,
+            256,
+            2,
+        ));
+        let cfg = WorkerCfg {
+            node: 1,
+            switch: 0,
+            ps: Some(3),
+            widx: 0,
+            policy: PolicyKind::Esa,
+            window_bytes: 60 * 1024,
+            max_window_bytes: 240 * 1024,
+            jitter_max_ns: 0,
+            region_cap: None,
+        };
+        let mut w = Worker::new(cfg, model, Rng::new(2));
+        w.start(&mut net);
+        // plan: [L2P1 (layer1), L1P1 (layer0), L1P2, L2P2]
+        assert!(w.prio[1] > w.prio[0], "front layer (l=1) outranks back (l=2)");
+        assert_eq!(w.prio[1], w.prio[2]);
+        assert_eq!(w.prio[0], w.prio[3]);
+    }
+
+    #[test]
+    fn region_cap_bounds_window() {
+        let net = Net::new(Topology::star(4), NetworkConfig::default(), Rng::new(1));
+        let model = Arc::new(JobModel::new(
+            0,
+            profile_by_name("microbench", Some(1 << 20)).unwrap(),
+            2,
+            128,
+            1,
+        ));
+        let cfg = WorkerCfg {
+            node: 1,
+            switch: 0,
+            ps: None,
+            widx: 0,
+            policy: PolicyKind::SwitchMl,
+            window_bytes: 60 * 1024,
+            max_window_bytes: 240 * 1024,
+            jitter_max_ns: 0,
+            region_cap: Some(10),
+        };
+        let w = Worker::new(cfg, model, Rng::new(2));
+        drop(net);
+        assert!(w.cwnd() <= 10);
+    }
+}

@@ -1,0 +1,162 @@
+//! §5.4 priority computation and 8-bit compression.
+//!
+//! The end host computes, per gradient tensor,
+//!
+//! ```text
+//! P_j(l) = (1 / T_j) * (L_j / l) * (Comm_j / Comp_j)
+//! ```
+//!
+//! where `T_j` is the job's remaining time to convergence (estimated from
+//! attained service when unknown — a LAS fallback, cf. Tiresias), `l` the
+//! 1-based layer of the tensor counted from the *front* of the model,
+//! `L_j` the layer count, and `Comm/Comp` the ratio measured from the
+//! previous iteration. The product form needs no cross-job normalization:
+//! each end host computes it independently (§5.4).
+//!
+//! The wire carries 8 bits, so the float priority is compressed on a log2
+//! scale — the same trick as the float→fixed gradient conversion: order
+//! preserving, resolution ~0.2 in log2, covering ~±12.7 doublings around
+//! the center. 0 is reserved as the absolute floor that downgrading
+//! (`>> 1`) drains toward.
+
+use crate::SimTime;
+
+/// Log-scale compression: `p8 = clamp(128 + 10*log2(P), 1, 255)`.
+const LOG_SCALE: f64 = 10.0;
+const CENTER: f64 = 128.0;
+
+/// Inputs the end host has at hand when pushing a tensor (§5.1: "these
+/// information are readily accessible").
+#[derive(Debug, Clone, Copy)]
+pub struct PriorityInputs {
+    /// Remaining time to convergence, if the job declared a target;
+    /// otherwise `None` and `attained_ns` drives the estimate.
+    pub remaining_ns: Option<SimTime>,
+    /// Service attained so far (the LAS fallback: jobs that have run
+    /// longer are assumed to have longer left — Gittins-style).
+    pub attained_ns: SimTime,
+    /// Communication / computation overhead ratio from the last iteration.
+    pub comm_comp: f64,
+    /// Total layers in the model.
+    pub n_layers: u32,
+}
+
+impl PriorityInputs {
+    /// Effective `T_j` in seconds (floored away from zero).
+    fn t_j_secs(&self) -> f64 {
+        let ns = match self.remaining_ns {
+            Some(r) => r.max(1),
+            None => self.attained_ns.max(1),
+        };
+        (ns as f64 / 1e9).max(1e-6)
+    }
+}
+
+/// The raw (uncompressed) §5.4 priority for layer `l` (1-based from the
+/// model front).
+pub fn priority_raw(inp: &PriorityInputs, layer_1based: u32) -> f64 {
+    let l = layer_1based.max(1) as f64;
+    let lj = inp.n_layers.max(1) as f64;
+    let ratio = if inp.comm_comp.is_finite() {
+        inp.comm_comp.max(1e-3)
+    } else {
+        // microbenchmarks: communication-only, saturate high
+        1e3
+    };
+    (1.0 / inp.t_j_secs()) * (lj / l) * ratio
+}
+
+/// Compress a raw priority into the 8-bit header field.
+pub fn compress(p: f64) -> u8 {
+    if !(p > 0.0) {
+        return 1;
+    }
+    let v = CENTER + LOG_SCALE * p.log2();
+    v.round().clamp(1.0, 255.0) as u8
+}
+
+/// The full §5.4 pipeline: inputs + layer -> wire priority.
+pub fn priority_for(inp: &PriorityInputs, layer_1based: u32) -> u8 {
+    compress(priority_raw(inp, layer_1based))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::SEC;
+
+    fn base() -> PriorityInputs {
+        PriorityInputs {
+            remaining_ns: Some(10 * SEC),
+            attained_ns: 0,
+            comm_comp: 1.0,
+            n_layers: 2,
+        }
+    }
+
+    #[test]
+    fn front_layers_win() {
+        let inp = base();
+        assert!(
+            priority_for(&inp, 1) > priority_for(&inp, 2),
+            "front layer must outrank back layer"
+        );
+    }
+
+    #[test]
+    fn comm_heavy_jobs_win() {
+        let a = PriorityInputs { comm_comp: 2.0, ..base() }; // DNN A
+        let b = PriorityInputs { comm_comp: 0.5, ..base() }; // DNN B
+        assert!(priority_for(&a, 1) > priority_for(&b, 1));
+    }
+
+    #[test]
+    fn shorter_remaining_time_wins() {
+        let short = PriorityInputs { remaining_ns: Some(SEC), ..base() };
+        let long = PriorityInputs { remaining_ns: Some(100 * SEC), ..base() };
+        assert!(priority_for(&short, 1) > priority_for(&long, 1));
+    }
+
+    #[test]
+    fn las_fallback_prefers_young_jobs() {
+        let young = PriorityInputs { remaining_ns: None, attained_ns: SEC, ..base() };
+        let old = PriorityInputs { remaining_ns: None, attained_ns: 50 * SEC, ..base() };
+        assert!(priority_for(&young, 1) > priority_for(&old, 1));
+    }
+
+    #[test]
+    fn compression_is_order_preserving() {
+        let mut last = 0u8;
+        for exp in -10..=10 {
+            let p = 2f64.powi(exp);
+            let c = compress(p);
+            assert!(c >= last, "compress must be monotone");
+            last = c;
+        }
+    }
+
+    #[test]
+    fn compression_clamps_and_reserves_zero() {
+        assert_eq!(compress(0.0), 1);
+        assert_eq!(compress(-1.0), 1);
+        assert_eq!(compress(f64::MIN_POSITIVE), 1);
+        assert_eq!(compress(1e300), 255);
+        assert!(compress(1.0) == 128);
+    }
+
+    #[test]
+    fn microbench_ratio_saturates() {
+        let inp = PriorityInputs { comm_comp: f64::INFINITY, ..base() };
+        assert!(priority_for(&inp, 1) > 200);
+    }
+
+    #[test]
+    fn paper_example_ordering_dnn_a_vs_b() {
+        // §7.2.1 priority setting: L_j = 2; DNN A comm/comp = 2, B = 0.5.
+        // With equal remaining time, every DNN A layer-l tensor outranks
+        // the same-l DNN B tensor, and A's layer 2 still beats B's layer 1.
+        let a = PriorityInputs { comm_comp: 2.0, ..base() };
+        let b = PriorityInputs { comm_comp: 0.5, ..base() };
+        assert!(priority_for(&a, 2) > priority_for(&b, 1));
+    }
+}

@@ -1,0 +1,62 @@
+//! Integration: the shipped `configs/*.toml` files parse into valid
+//! experiments, and file-driven runs work end to end.
+
+use std::path::Path;
+
+use esa::config::{ExperimentConfig, PolicyKind};
+use esa::sim::Simulation;
+
+#[test]
+fn shipped_configs_parse_and_validate() {
+    for name in ["fig8_point.toml", "quickstart.toml", "testbed_multitenant.toml"] {
+        let path = Path::new("configs").join(name);
+        let cfg = ExperimentConfig::from_file(&path)
+            .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        cfg.validate().unwrap();
+        assert!(!cfg.jobs.is_empty(), "{name}");
+    }
+}
+
+#[test]
+fn fig8_point_matches_paper_parameters() {
+    let cfg = ExperimentConfig::from_file(Path::new("configs/fig8_point.toml")).unwrap();
+    assert_eq!(cfg.policy, PolicyKind::Esa);
+    assert_eq!(cfg.jobs.len(), 8);
+    assert!(cfg.jobs.iter().all(|j| j.n_workers == 8 && j.model == "dnn_a"));
+    assert_eq!(cfg.switch.memory_bytes, 5 * 1024 * 1024);
+    assert_eq!(cfg.net.base_rtt_ns, 10_000);
+    assert_eq!(cfg.jitter_max_ns, 300_000);
+}
+
+#[test]
+fn quickstart_config_runs() {
+    let mut cfg = ExperimentConfig::from_file(Path::new("configs/quickstart.toml")).unwrap();
+    // shrink for test speed
+    for j in &mut cfg.jobs {
+        j.tensor_bytes = Some(256 * 1024);
+    }
+    cfg.iterations = 1;
+    let m = Simulation::run_experiment(cfg).unwrap();
+    assert!(!m.truncated);
+    assert_eq!(m.jobs.len(), 4);
+}
+
+#[test]
+fn config_policy_override_through_table() {
+    use esa::config::parse_toml;
+    let t = parse_toml("policy = \"straw2\"\n[job.x]\nmodel = \"dnn_b\"\nworkers = 2").unwrap();
+    let cfg = ExperimentConfig::from_table(&t).unwrap();
+    assert_eq!(cfg.policy, PolicyKind::StrawCoin);
+    assert_eq!(cfg.jobs[0].model, "dnn_b");
+}
+
+#[test]
+fn bad_configs_are_rejected_with_context() {
+    use esa::config::parse_toml;
+    let t = parse_toml("policy = \"not-a-policy\"").unwrap();
+    let err = ExperimentConfig::from_table(&t).unwrap_err().to_string();
+    assert!(err.contains("not-a-policy"), "{err}");
+
+    let t = parse_toml("[job.x]\nworkers = 99").unwrap();
+    assert!(ExperimentConfig::from_table(&t).is_err(), "bitmap width limit");
+}

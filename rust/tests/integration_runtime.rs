@@ -1,0 +1,170 @@
+//! Integration: the PJRT runtime + end-to-end trainer against the real
+//! AOT artifacts. These tests need `make artifacts`; they *fail* with a
+//! clear message when artifacts are absent (CI runs `make test`, which
+//! builds them first).
+
+use esa::config::PolicyKind;
+use esa::runtime::{ArtifactDir, Engine, HostTensor};
+use esa::train::{Trainer, TrainerCfg};
+use esa::util::fixed;
+
+fn engine() -> Option<Engine> {
+    let dir = ArtifactDir::default_location();
+    if !dir.exists("train_step") {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::with_dir(dir).expect("PJRT init"))
+}
+
+#[test]
+fn loads_and_validates_all_artifacts() {
+    let Some(engine) = engine() else { return };
+    for name in ["train_step", "fwd_loss", "aggregate", "apply_update"] {
+        let g = engine.load(name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(g.meta.name, name);
+        assert!(!g.meta.inputs.is_empty());
+        assert!(!g.meta.outputs.is_empty());
+    }
+}
+
+#[test]
+fn rust_fixed_point_matches_pallas_aggregate_kernel() {
+    // the bit-compatibility contract between util::fixed and the L1
+    // kernel: aggregate(random i32s) must equal the rust wrapping sum
+    let Some(engine) = engine() else { return };
+    let agg = engine.load("aggregate").unwrap();
+    let n = agg.meta.extra_u64("n_workers").unwrap() as usize;
+    let flat = agg.meta.extra_u64("flat_len").unwrap() as usize;
+    let mut rng = esa::util::rng::Rng::new(42);
+    let mut stacked = vec![0i32; n * flat];
+    let mut mask = vec![0i32; n];
+    let mut reference = vec![0i32; flat];
+    for w in 0..n {
+        mask[w] = if w % 3 == 2 { 0 } else { 1 }; // partial-mask case
+        for i in 0..flat {
+            stacked[w * flat + i] = rng.uniform(-1e9, 1e9) as i32;
+        }
+        if mask[w] == 1 {
+            let row = stacked[w * flat..(w + 1) * flat].to_vec();
+            fixed::agg_add_slice(&mut reference, &row);
+        }
+    }
+    let outs = agg
+        .execute(&[HostTensor::I32(stacked), HostTensor::I32(mask)])
+        .unwrap();
+    assert_eq!(outs[0].as_i32().unwrap(), &reference[..], "kernel != wrapping sum");
+}
+
+#[test]
+fn train_step_outputs_quantized_clipped_gradients() {
+    let Some(engine) = engine() else { return };
+    let ts = engine.load("train_step").unwrap();
+    let flat = ts.meta.extra_u64("flat_len").unwrap() as usize;
+    let vocab = ts.meta.extra_u64("vocab").unwrap() as i64;
+    let batch = ts.meta.extra_u64("batch").unwrap() as usize;
+    let seq = ts.meta.extra_u64("seq_len").unwrap() as usize;
+    let params = engine.dir.load_f32_blob("init_params.f32").unwrap();
+    assert_eq!(params.len(), flat);
+    let tokens: Vec<i32> = (0..batch * (seq + 1)).map(|i| (i as i64 % vocab) as i32).collect();
+    let outs = ts
+        .execute(&[HostTensor::F32(params), HostTensor::I32(tokens)])
+        .unwrap();
+    let loss = outs[0].scalar_f32().unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    // gradient clipped to unit norm ⇒ |q| <= 2^SCALE_BITS
+    let qg = outs[1].as_i32().unwrap();
+    assert_eq!(qg.len(), flat);
+    let max = qg.iter().map(|v| v.unsigned_abs()).max().unwrap();
+    assert!(max <= 1 << fixed::SCALE_BITS, "clip violated: {max}");
+}
+
+#[test]
+fn apply_update_moves_parameters() {
+    let Some(engine) = engine() else { return };
+    let au = engine.load("apply_update").unwrap();
+    let flat = au.meta.extra_u64("flat_len").unwrap() as usize;
+    let lr = au.meta.extra_f64("lr").unwrap() as f32;
+    let params = vec![1.0f32; flat];
+    // aggregated gradient of quantized 0.5 from 2 workers
+    let q_half = fixed::quantize(0.5);
+    let agg = vec![q_half.wrapping_mul(2); flat];
+    let outs = au
+        .execute(&[
+            HostTensor::F32(params),
+            HostTensor::I32(agg),
+            HostTensor::F32(vec![2.0]),
+        ])
+        .unwrap();
+    let new = outs[0].as_f32().unwrap();
+    // p' = p - lr * mean = 1 - lr*0.5
+    let expect = 1.0 - lr * 0.5;
+    assert!((new[0] - expect).abs() < 1e-4, "{} vs {expect}", new[0]);
+}
+
+#[test]
+fn short_training_reduces_loss_and_crosschecks() {
+    let Some(engine) = engine() else { return };
+    let cfg = TrainerCfg {
+        n_workers: 2,
+        steps: 8,
+        policy: PolicyKind::Esa,
+        seed: 3,
+        crosscheck_every: 4, // exercises the Pallas cross-check path
+        log_every: 0,
+    };
+    let mut t = Trainer::new(&engine, cfg).unwrap();
+    let hist = t.run().unwrap();
+    assert_eq!(hist.len(), 8);
+    let first = hist.first().unwrap().mean_loss;
+    let last = hist.last().unwrap().mean_loss;
+    assert!(
+        last < first,
+        "loss must decrease over 8 INA-aggregated steps: {first} -> {last}"
+    );
+}
+
+#[test]
+fn fig6a_equivalence_ina_vs_plain_ps_training() {
+    // Fig. 6a's claim: ESA does not affect training. Because the INA path
+    // is numerically exact (integer summation is associative), the ESA
+    // and no-INA (BytePS) parameter trajectories must be IDENTICAL.
+    let Some(engine) = engine() else { return };
+    let mk = |policy| {
+        let cfg = TrainerCfg {
+            n_workers: 2,
+            steps: 3,
+            policy,
+            seed: 11,
+            crosscheck_every: 0,
+            log_every: 0,
+        };
+        let mut t = Trainer::new(&engine, cfg).unwrap();
+        t.run().unwrap();
+        t.params().to_vec()
+    };
+    let esa = mk(PolicyKind::Esa);
+    let byteps = mk(PolicyKind::HostPs);
+    assert_eq!(esa.len(), byteps.len());
+    let diffs = esa.iter().zip(&byteps).filter(|(a, b)| a != b).count();
+    assert_eq!(diffs, 0, "{diffs} params diverged between ESA and no-INA");
+}
+
+#[test]
+fn training_through_atp_matches_esa_numerically() {
+    let Some(engine) = engine() else { return };
+    let mk = |policy| {
+        let cfg = TrainerCfg {
+            n_workers: 2,
+            steps: 2,
+            policy,
+            seed: 21,
+            crosscheck_every: 0,
+            log_every: 0,
+        };
+        let mut t = Trainer::new(&engine, cfg).unwrap();
+        t.run().unwrap();
+        t.params().to_vec()
+    };
+    assert_eq!(mk(PolicyKind::Esa), mk(PolicyKind::Atp));
+}
