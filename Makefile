@@ -1,0 +1,29 @@
+# Convenience targets for the ESA reproduction. The rust simulator is
+# self-contained (`cd rust && cargo build`); the python side exists only to
+# AOT-lower the training graphs once (`make artifacts`).
+
+ARTIFACTS ?= artifacts
+PRESET ?= tiny
+WORKERS ?= 4
+
+.PHONY: build test bench figures artifacts clean-artifacts
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+## Regenerate every paper figure at quick scale (ESA_BENCH_QUICK=1).
+figures: build
+	cd rust && ESA_BENCH_QUICK=1 cargo run --release -- figures all
+
+bench: build
+	cd rust && cargo bench
+
+## AOT-lower the jax/Pallas graphs to HLO text (needs jax; see DESIGN.md §7).
+artifacts:
+	cd python && python -m compile.aot --out-dir ../$(ARTIFACTS) --preset $(PRESET) --workers $(WORKERS)
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS)

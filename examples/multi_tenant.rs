@@ -48,9 +48,9 @@ fn main() -> anyhow::Result<()> {
         log::info!(
             "{}: preemptions={} fallbacks={} reminder_evictions={}",
             policy.name(),
-            sim.switch.stats.preemptions,
-            sim.switch.stats.passthroughs,
-            sim.switch.stats.reminder_evictions
+            sim.switch().stats.preemptions,
+            sim.switch().stats.passthroughs,
+            sim.switch().stats.reminder_evictions
         );
     }
     print!(

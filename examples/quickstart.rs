@@ -36,8 +36,8 @@ fn main() -> anyhow::Result<()> {
             policy.name().to_string(),
             format!("{:.3}", m.avg_jct_ms()),
             format!("{:.2}", m.avg_throughput_gbps()),
-            sim.switch.stats.preemptions.to_string(),
-            sim.switch.stats.passthroughs.to_string(),
+            sim.switch().stats.preemptions.to_string(),
+            sim.switch().stats.passthroughs.to_string(),
             format!("{:.1}", m.events_per_sec() / 1e6),
         ]);
     }

@@ -1,0 +1,19 @@
+//! Regenerates Fig. 12 (beyond the paper): the multi-rack hierarchical
+//! aggregation sweep — avg JCT vs rack count for ESA/ATP/SwitchML on the
+//! 8-job × 8-worker DNN-A workload, plus the uplink compression that
+//! rack-level partial aggregation buys. `racks = 1` must match the
+//! single-switch fig8/fig10 operating point exactly.
+
+use esa::sim::figures::{fig12_hierarchical, Scale};
+
+fn main() {
+    esa::util::logging::init();
+    let scale = Scale::from_env();
+    println!(
+        "# fig12: tensor x{}, {} iterations, seed {}",
+        scale.tensor, scale.iterations, scale.seed
+    );
+    let t0 = std::time::Instant::now();
+    fig12_hierarchical(&scale).expect("fig12 harness").print();
+    println!("# wall: {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -43,7 +43,7 @@ fn bench_event_queue() {
 }
 
 fn bench_switch_pipeline() {
-    let wiring = vec![JobWiring { ps: 100, workers: (1..=8).collect(), fan_in: 8, packet_bytes: 306 }];
+    let wiring = vec![JobWiring { ps: 100, workers: (1..=8).collect(), fan_in: 8, fan_in_total: 8, packet_bytes: 306 }];
     let mut sw = Switch::new(0, PolicyKind::Esa, 16384, wiring, Rng::new(1));
     let mut out = Vec::with_capacity(16);
     bench("switch pipeline (ESA, 8-worker tasks)", || {

@@ -20,6 +20,6 @@ fn main() {
     }
     println!("ps pending entries: {}", sim.ps(0).pending_entries(0));
     println!("ps stats: {:?}", sim.ps(0).stats);
-    println!("switch stats: {:?}", sim.switch.stats);
+    println!("switch stats: {:?}", sim.switch().stats);
     println!("net stats: dropped={} sent={}", sim.net.stats.dropped, sim.net.stats.sent);
 }

@@ -159,6 +159,12 @@ pub struct ExperimentConfig {
     pub policy: PolicyKind,
     pub net: NetworkConfig,
     pub switch: SwitchConfig,
+    /// First-level (rack) switches in the fabric. `1` (default) is the
+    /// paper's single-switch star; `>= 2` builds a two-tier hierarchy:
+    /// hosts spread round-robin over rack switches, racks aggregate their
+    /// local workers, and the edge switch (co-located with rack 0) folds
+    /// the rack partials into the final result.
+    pub racks: usize,
     pub jobs: Vec<JobSpec>,
     /// Measured iterations per job.
     pub iterations: u32,
@@ -184,6 +190,7 @@ impl Default for ExperimentConfig {
             policy: PolicyKind::Esa,
             net: NetworkConfig::default(),
             switch: SwitchConfig::default(),
+            racks: 1,
             jobs: Vec::new(),
             iterations: 3,
             jitter_max_ns: 300 * USEC,
@@ -219,6 +226,7 @@ impl ExperimentConfig {
         cfg.net.base_rtt_ns = (t.float_or("net.base_rtt_us", 10.0) * USEC as f64) as u64;
         cfg.net.loss_prob = t.float_or("net.loss_prob", 0.0);
         cfg.switch.memory_bytes = t.int_or("switch.memory_bytes", cfg.switch.memory_bytes as i64) as u64;
+        cfg.racks = t.int_or("sim.racks", cfg.racks as i64) as usize;
         cfg.iterations = t.int_or("sim.iterations", cfg.iterations as i64) as u32;
         cfg.jitter_max_ns = (t.float_or("sim.jitter_max_us", 300.0) * USEC as f64) as u64;
         cfg.start_spread_ns = (t.float_or("sim.start_spread_us", 1000.0) * USEC as f64) as u64;
@@ -259,6 +267,9 @@ impl ExperimentConfig {
         }
         if self.switch.pool_slots(self.policy) == 0 {
             bail!("switch memory too small for a single aggregator");
+        }
+        if self.racks == 0 || self.racks > 64 {
+            bail!("racks must be in 1..=64, got {}", self.racks);
         }
         if self.iterations == 0 {
             bail!("iterations must be >= 1");
@@ -377,6 +388,26 @@ mod tests {
         assert_eq!(c.jobs[7].model, "dnn_b");
         assert_eq!(c.iterations, 5);
         assert_eq!(c.net.loss_prob, 0.0001);
+    }
+
+    #[test]
+    fn racks_knob_parses_and_validates() {
+        let t = parse_toml(
+            r#"
+            [sim]
+            racks = 4
+            "#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.racks, 4);
+        let mut bad = ExperimentConfig::default();
+        bad.racks = 0;
+        assert!(bad.validate().is_err());
+        bad.racks = 65;
+        assert!(bad.validate().is_err());
+        bad.racks = 64;
+        assert!(bad.validate().is_ok());
     }
 
     #[test]

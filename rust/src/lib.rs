@@ -8,7 +8,12 @@
 //!   allocation*, the fallback parameter server with the reminder mechanism,
 //!   window-based workers, the ATP / SwitchML / strawman baselines, a
 //!   discrete-event network substrate (the NS3 stand-in), the DNN job model
-//!   of §7.2.1, and the figure-regeneration harnesses.
+//!   of §7.2.1, and the figure-regeneration harnesses. The switch model
+//!   generalizes the paper's single-switch star to a **multi-switch
+//!   hierarchical fabric** (`racks >= 2`): rack switches aggregate their
+//!   local workers, fold rack partials up to an edge switch, and ESA's
+//!   preemption/priority primitives run independently at each tier
+//!   (DESIGN.md §6).
 //! - **Layer 2 (python/compile/model.py)** — a transformer-LM training step
 //!   AOT-lowered to HLO text and executed from rust through PJRT.
 //! - **Layer 1 (python/compile/kernels/)** — Pallas kernels for the switch
@@ -24,9 +29,9 @@
 //! |----------------|------|
 //! | [`util`]       | deterministic PRNG, fixed-point codec, stats, CLI, logging |
 //! | [`config`]     | TOML-subset parser + experiment schema |
-//! | [`net`]        | discrete-event engine: links, topologies, loss injection |
-//! | [`packet`]     | ESA/ATP wire formats (§5.1) |
-//! | [`switch`]     | aggregator pool + the Fig. 5 pipeline; one policy per system |
+//! | [`net`]        | discrete-event engine: links, star + two-tier topologies, loss injection |
+//! | [`packet`]     | ESA/ATP wire formats (§5.1) + the two-tier `RackPartial` |
+//! | [`switch`]     | aggregator pool + the Fig. 5 pipeline, per tier; one policy per system |
 //! | [`ps`]         | fallback PS: partial dictionary + reminder mechanism |
 //! | [`worker`]     | fragmentation, priority tagging (§5.4), windows, loss recovery (§5.3) |
 //! | [`job`]        | DNN A/B + testbed-profile job models, trace generation |

@@ -4,8 +4,8 @@
 //! ```text
 //! esa sim      [--config f.toml] [--policy esa] [--model dnn_a] [--jobs 8]
 //!              [--workers 8] [--iterations 3] [--seed 1] [--loss 0.0]
-//!              [--memory-mb 5] [--tensor-mb N]
-//! esa figures  [fig6b fig7 fig8 fig9 fig10 fig11 | all] [--quick]
+//!              [--memory-mb 5] [--tensor-mb N] [--racks 1]
+//! esa figures  [fig6b fig7 fig8 fig9 fig10 fig11 fig12 | all] [--quick]
 //! esa train    [--steps 100] [--workers 4] [--policy esa] [--seed 0]
 //!              [--csv out.csv]
 //! esa trace    [--n 20] [--rate 50]
@@ -58,7 +58,7 @@ fn print_help() {
          \n\
          subcommands:\n\
          \x20 sim      run one simulated experiment and print its metrics\n\
-         \x20 figures  regenerate the paper's evaluation figures (fig6b..fig11 | all)\n\
+         \x20 figures  regenerate the paper's evaluation figures (fig6b..fig12 | all)\n\
          \x20 train    end-to-end training through the simulated data plane (needs `make artifacts`)\n\
          \x20 trace    emit a synthetic cluster job trace\n\
          \n\
@@ -79,6 +79,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
         cfg.seed = args.get_parsed_or("seed", 1)?;
         cfg.net.loss_prob = args.get_parsed_or("loss", 0.0)?;
         cfg.switch.memory_bytes = args.get_parsed_or("memory-mb", 5u64)? * 1024 * 1024;
+        cfg.racks = args.get_parsed_or("racks", 1usize)?;
         if let Some(mb) = args.get_parsed::<u64>("tensor-mb")? {
             for j in &mut cfg.jobs {
                 j.tensor_bytes = Some(mb * 1024 * 1024);
@@ -119,13 +120,16 @@ fn cmd_sim(args: &Args) -> Result<()> {
         m.events_per_sec() / 1e6,
         if m.truncated { " | TRUNCATED" } else { "" }
     );
-    // data-plane counters for the deep-dive view
-    let st = &sim.switch.stats;
-    println!(
-        "switch: {} grads, {} aggs, {} completions, {} preemptions, {} failed-preempt, {} passthrough, {} reminder-evictions",
-        st.grad_pkts, st.aggregations, st.completions, st.preemptions, st.failed_preemptions,
-        st.passthroughs, st.reminder_evictions
-    );
+    // data-plane counters for the deep-dive view, one line per switch
+    for sw in &m.switches {
+        let st = &sw.stats;
+        println!(
+            "switch[{}:{}]: {} grads, {} rack-partials, {} aggs, {} completions, {} uplinks, {} preemptions, {} failed-preempt, {} passthrough, {} reminder-evictions",
+            sw.node, sw.tier, st.grad_pkts, st.rack_partial_pkts, st.aggregations, st.completions,
+            st.rack_uplinks, st.preemptions, st.failed_preemptions, st.passthroughs,
+            st.reminder_evictions
+        );
+    }
     Ok(())
 }
 
@@ -137,7 +141,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
     };
     let mut which: Vec<String> = args.positional.clone();
     if which.is_empty() || which.iter().any(|w| w == "all") {
-        which = ["fig6b", "fig7", "fig8", "fig9", "fig10", "fig11"]
+        which = ["fig6b", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12"]
             .iter()
             .map(|s| s.to_string())
             .collect();
@@ -166,6 +170,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
             }
             "fig10" => figures::fig10_utilization(&scale)?.print(),
             "fig11" => figures::fig11_priority_ablation(&scale)?.print(),
+            "fig12" => figures::fig12_hierarchical(&scale)?.print(),
             other => bail!("unknown figure `{other}`"),
         }
     }

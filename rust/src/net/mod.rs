@@ -33,6 +33,8 @@ pub struct NetStats {
     pub dropped: u64,
     pub bytes_sent: u64,
     pub gradient_pkts: u64,
+    /// Rack → edge uplink partials (two-tier fabrics only).
+    pub rack_partial_pkts: u64,
     pub partial_pkts: u64,
     pub result_pkts: u64,
     pub param_pkts: u64,
@@ -46,6 +48,7 @@ impl NetStats {
         self.bytes_sent += pkt.wire_bytes as u64;
         match pkt.kind {
             PacketKind::Gradient => self.gradient_pkts += 1,
+            PacketKind::RackPartial => self.rack_partial_pkts += 1,
             PacketKind::PartialToPs => self.partial_pkts += 1,
             PacketKind::Result => self.result_pkts += 1,
             PacketKind::Param => self.param_pkts += 1,

@@ -36,6 +36,20 @@ pub struct Topology {
 
 impl Topology {
     /// Single-switch star with `n_hosts` servers (node ids 1..=n_hosts).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use esa::net::{Topology, SWITCH_NODE};
+    ///
+    /// let t = Topology::star(4);
+    /// assert_eq!(t.n_nodes(), 5);
+    /// assert!(t.is_switch(SWITCH_NODE));
+    /// // every host is one hop from the switch, and host-to-host traffic
+    /// // routes through it
+    /// assert_eq!(t.next_hop(3, SWITCH_NODE), SWITCH_NODE);
+    /// assert_eq!(t.next_hop(1, 2), SWITCH_NODE);
+    /// ```
     pub fn star(n_hosts: usize) -> Topology {
         let n_nodes = n_hosts + 1;
         let mut roles = vec![NodeRole::Host; n_nodes];
@@ -50,6 +64,26 @@ impl Topology {
 
     /// Two-tier: `racks` first-level switches (ids 0..racks), hosts spread
     /// round-robin; switch 0 doubles as the second-level edge switch.
+    ///
+    /// `two_tier(1, n)` is structurally identical to [`Topology::star`]`(n)`
+    /// — the degenerate single-rack fabric *is* the star, which is what
+    /// keeps `racks = 1` simulations bit-compatible with the seed.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use esa::net::Topology;
+    ///
+    /// // 2 racks, 4 hosts: hosts 2,4 hang off rack 0; hosts 3,5 off rack 1
+    /// let t = Topology::two_tier(2, 4);
+    /// assert_eq!(t.n_switches(), 2);
+    /// assert_eq!(t.parent_of(2), 0);
+    /// assert_eq!(t.parent_of(3), 1);
+    /// // cross-rack traffic climbs to the edge (switch 0) and back down
+    /// assert_eq!(t.next_hop(3, 2), 1);
+    /// assert_eq!(t.next_hop(1, 2), 0);
+    /// assert_eq!(t.next_hop(0, 2), 2);
+    /// ```
     pub fn two_tier(racks: usize, n_hosts: usize) -> Topology {
         assert!(racks >= 1);
         let n_nodes = racks + n_hosts;

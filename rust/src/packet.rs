@@ -18,6 +18,13 @@ use crate::{JobId, NodeId, SimTime};
 pub enum PacketKind {
     /// Worker → switch: one gradient fragment (UDP-like, droppable).
     Gradient,
+    /// Rack switch → edge switch (two-tier fabrics): a completed
+    /// rack-local aggregation folding upward. Carries the rack's arrival
+    /// bitmap (the OR of its local workers' bits) and the job's *global*
+    /// fan-in, so the edge completes when every rack has folded in.
+    /// Travels the same Fig. 5 pipeline as a gradient — it can allocate,
+    /// aggregate, collide, preempt and be preempted at the edge.
+    RackPartial,
     /// Switch → PS: a partial aggregation result. Carries the evicted /
     /// failed-preempt / reminder-fetched value and its arrival bitmap.
     PartialToPs,

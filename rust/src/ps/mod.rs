@@ -194,6 +194,14 @@ impl Ps {
                 self.stats.partials += 1;
                 self.merge_contribution(now, pkt, out);
             }
+            PacketKind::RackPartial => {
+                // two-tier fabrics: a rack-level partial that lost at the
+                // edge (collision loser or eviction victim) falls back
+                // here; its bitmap is a plain worker-bit union, so the
+                // dictionary merge is identical to any other partial
+                self.stats.partials += 1;
+                self.merge_contribution(now, pkt, out);
+            }
             PacketKind::Gradient => {
                 // collision loser / failed preempt forwarded by the switch
                 self.stats.passthrough_grads += 1;
@@ -271,7 +279,8 @@ impl Ps {
             Self::nack_missing(&mut self.stats, js, &mut entry, node, out);
             js.entries.insert(seq, entry);
         } else {
-            Self::bump_dupacks(&mut self.stats, js, now, seq, switch, out);
+            let node = self.node;
+            Self::bump_dupacks(&mut self.stats, js, now, seq, node, switch, out);
         }
     }
 
@@ -494,11 +503,13 @@ impl Ps {
     /// incomplete entry; at the threshold the PS reminds the switch.
     /// (Tracked via a per-entry counter bumped by newer arrivals; the scan
     /// table is small so the linear pass is fine at PS packet rates.)
+    #[allow(clippy::too_many_arguments)]
     fn bump_dupacks(
         stats: &mut PsStats,
         js: &mut JobState,
         _now: SimTime,
         newer_seq: u32,
+        node: NodeId,
         switch: NodeId,
         out: &mut Vec<Packet>,
     ) {
@@ -522,7 +533,9 @@ impl Ps {
                 e.reminders_sent += 1;
                 e.dupack = 0;
             }
-            out.push(Packet::reminder(job, seq, 0, switch, true, packet_bytes));
+            // src must be this PS node: on two-tier fabrics the node-0
+            // stage demultiplexer reads `src == 0` as "edge-originated"
+            out.push(Packet::reminder(job, seq, node, switch, true, packet_bytes));
         }
     }
 

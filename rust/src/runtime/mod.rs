@@ -5,9 +5,14 @@
 //! Interchange is HLO *text* (`HloModuleProto::from_text_file`): the
 //! image's xla_extension 0.5.1 rejects serialized protos from jax ≥ 0.5
 //! (64-bit instruction ids), while the text parser reassigns ids — see
-//! /opt/xla-example/README.md and DESIGN.md.
+//! DESIGN.md §7.
+//!
+//! Offline builds (no native xla_extension) compile against the in-tree
+//! [`xla`] stub: host-side literal plumbing works, device execution fails
+//! fast with a clear "PJRT unavailable" error.
 
 pub mod artifacts;
+pub mod xla;
 
 use anyhow::{bail, Context, Result};
 

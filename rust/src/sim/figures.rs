@@ -453,12 +453,91 @@ pub fn fig11_priority_ablation(scale: &Scale) -> Result<Figure> {
     })
 }
 
+// ---------------------------------------------------------------------
+// Fig. 12 — multi-rack hierarchical aggregation (beyond the paper)
+// ---------------------------------------------------------------------
+
+/// Rack-count sweep for a fixed 8-job × 8-worker DNN-A workload: average
+/// JCT per fabric size plus the uplink-compression ratio (edge ingress
+/// packets over worker gradient packets) that rack-level partial
+/// aggregation buys. `racks = 1` is the paper's single-switch star; the
+/// paper's per-switch ESA primitives compose across tiers unchanged.
+pub fn fig12_hierarchical(scale: &Scale) -> Result<Figure> {
+    let systems = [PolicyKind::Esa, PolicyKind::Atp, PolicyKind::SwitchMl];
+    let rack_counts = [1usize, 2, 4, 8];
+    let mut cfgs = Vec::new();
+    for &p in &systems {
+        for &r in &rack_counts {
+            let mut cfg = base_cfg(scale, p);
+            cfg.racks = r;
+            cfg.jobs = (0..8)
+                .map(|_| job("dnn_a", 8, Some(scale.scaled(16 << 20))))
+                .collect();
+            cfgs.push(cfg);
+        }
+    }
+    let ms = run_grid(cfgs)?;
+    let mut rows = Vec::new();
+    for (pi, p) in systems.iter().enumerate() {
+        let mut row = vec![p.name().to_string()];
+        for (ri, _) in rack_counts.iter().enumerate() {
+            row.push(fmt_ms(ms[pi * rack_counts.len() + ri].avg_jct_ms()));
+        }
+        rows.push(row);
+    }
+    // uplink compression at the largest ESA fabric: edge ingress vs the
+    // gradient volume the workers pushed into the racks
+    let esa_idx = systems
+        .iter()
+        .position(|&p| p == PolicyKind::Esa)
+        .expect("ESA is in the sweep");
+    let esa_big = &ms[esa_idx * rack_counts.len() + rack_counts.len() - 1];
+    let rack_grads: u64 = esa_big
+        .switches
+        .iter()
+        .filter(|s| s.tier == "rack")
+        .map(|s| s.stats.grad_pkts)
+        .sum();
+    let edge_in: u64 = esa_big
+        .switches
+        .iter()
+        .filter(|s| s.tier == "edge")
+        .map(|s| s.stats.rack_partial_pkts)
+        .sum();
+    let compression = if edge_in > 0 {
+        rack_grads as f64 / edge_in as f64
+    } else {
+        f64::NAN
+    };
+    Ok(Figure {
+        id: "fig12",
+        title: "hierarchical fabric: avg JCT (ms) vs rack count, 8 jobs x 8 workers (DNN A)"
+            .into(),
+        table: render_table(&["system", "1 rack", "2 racks", "4 racks", "8 racks"], &rows),
+        notes: vec![
+            format!(
+                "ESA at 8 racks: rack-level folding compresses the uplink {compression:.2}x \
+                 ({rack_grads} worker gradients -> {edge_in} rack partials at the edge)"
+            ),
+            "racks=1 reproduces the paper's single-switch star exactly".into(),
+        ],
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn tiny_scale() -> Scale {
         Scale { tensor: 0.02, iterations: 1, seed: 3 }
+    }
+
+    #[test]
+    fn fig12_runs_at_tiny_scale() {
+        let f = fig12_hierarchical(&tiny_scale()).unwrap();
+        assert!(f.table.contains("ESA"));
+        assert!(f.table.contains("8 racks"));
+        assert!(f.notes[0].contains("compresses"));
     }
 
     #[test]

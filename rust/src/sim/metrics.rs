@@ -9,9 +9,10 @@
 //!   by its upper bound (the all-gradients volume over the 100 Gbps line),
 //!   averaged per job.
 
+use crate::switch::SwitchStats;
 use crate::util::stats::Summary;
 use crate::worker::IterRecord;
-use crate::{JobId, SimTime};
+use crate::{JobId, NodeId, SimTime};
 
 /// Per-job outcome assembled from all its workers' records.
 #[derive(Debug, Clone)]
@@ -92,10 +93,26 @@ impl JobMetrics {
     }
 }
 
+/// One switch's data-plane counters, tagged with its place in the fabric.
+///
+/// A single-switch star reports one `root` entry; a two-tier fabric
+/// reports the `edge` switch first, then every `rack` switch in node
+/// order (rack 0 shares node 0 with the edge — same physical switch, two
+/// pipeline stages).
+#[derive(Debug, Clone)]
+pub struct SwitchReport {
+    pub node: NodeId,
+    /// `"root"`, `"edge"` or `"rack"`.
+    pub tier: &'static str,
+    pub stats: SwitchStats,
+}
+
 /// Whole-experiment outcome.
 #[derive(Debug, Clone)]
 pub struct ExperimentMetrics {
     pub jobs: Vec<JobMetrics>,
+    /// Per-switch data-plane counters (one entry per pipeline stage).
+    pub switches: Vec<SwitchReport>,
     /// Simulated ns consumed.
     pub sim_ns: SimTime,
     /// Events processed (perf accounting).
@@ -202,6 +219,7 @@ mod tests {
         let j1 = JobMetrics::from_workers(1, "x", &[vec![rec(0, 4_000_000, 100)]]).unwrap();
         let em = ExperimentMetrics {
             jobs: vec![j0, j1],
+            switches: Vec::new(),
             sim_ns: 4_000_000,
             events: 1000,
             wall_secs: 0.5,

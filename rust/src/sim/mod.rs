@@ -1,10 +1,19 @@
-//! The experiment driver: binds workers, the switch and the fallback PSes
-//! over the discrete-event fabric and runs an `ExperimentConfig` to
-//! completion, producing `ExperimentMetrics`.
+//! The experiment driver: binds workers, the switch fabric and the
+//! fallback PSes over the discrete-event substrate and runs an
+//! `ExperimentConfig` to completion, producing `ExperimentMetrics`.
 //!
-//! Node layout: node 0 is the switch; workers follow, job by job; then one
-//! PS node per job (SwitchML allocates the node but never uses it — its
-//! design has no PS).
+//! Node layout (`racks = R`): nodes `0..R` are the first-level switches;
+//! workers follow, job by job; then one PS node per job (SwitchML
+//! allocates the node but never uses it — its design has no PS). With
+//! `R = 1` this degenerates to the paper's single-switch star — node 0 is
+//! the one switch and the simulation replays the seed behaviour exactly.
+//! With `R >= 2` a second-level **edge** switch is co-located with rack 0
+//! at node 0 (one physical switch, two pipeline stages): rack switches
+//! aggregate their local workers and fold completed rack partials upward
+//! as `RackPartial` packets; the edge folds rack partials on the job's
+//! global fan-in and multicasts one `Result` per rack, which each rack
+//! replicates to its local workers. Packets between the two node-0 stages
+//! recirculate in-process (zero wire cost — same ASIC).
 
 pub mod figures;
 pub mod metrics;
@@ -17,14 +26,14 @@ use anyhow::{Context, Result};
 use crate::config::{ExperimentConfig, PolicyKind};
 use crate::job::{dnn::profile_by_name, JobModel};
 use crate::net::{Event, Net, Topology, SWITCH_NODE};
-use crate::packet::Packet;
+use crate::packet::{Packet, PacketKind};
 use crate::ps::{Ps, SCAN_INTERVAL_NS, TIMER_SCAN};
-use crate::switch::{JobWiring, Switch};
+use crate::switch::{JobWiring, Switch, SwitchTier};
 use crate::util::rng::Rng;
 use crate::worker::{Worker, WorkerCfg, TK_START};
 use crate::{JobId, NodeId};
 
-pub use metrics::{ExperimentMetrics, JobMetrics};
+pub use metrics::{ExperimentMetrics, JobMetrics, SwitchReport};
 
 #[derive(Debug, Clone, Copy)]
 enum ActorRef {
@@ -37,7 +46,12 @@ enum ActorRef {
 pub struct Simulation {
     pub cfg: ExperimentConfig,
     pub net: Net,
-    pub switch: Switch,
+    /// First-level switches, indexed by node id (`switches[r]` sits at
+    /// node `r`). With `racks == 1` this is the single root switch.
+    switches: Vec<Switch>,
+    /// Second-level edge switch, co-located with rack 0 at node 0
+    /// (`racks >= 2` only).
+    edge: Option<Switch>,
     workers: Vec<Worker>,
     pses: Vec<Ps>,
     node_actor: Vec<ActorRef>,
@@ -45,6 +59,9 @@ pub struct Simulation {
     /// worker index ranges per job (into `workers`).
     job_workers: Vec<(usize, usize)>,
     out_buf: Vec<Packet>,
+    /// Zero-hop recirculations between the co-located node-0 stages
+    /// (racks >= 2 only); persistent so the hot path never allocates.
+    recirc_buf: Vec<Packet>,
     truncated: bool,
 }
 
@@ -54,19 +71,22 @@ impl Simulation {
         cfg.validate()?;
         let mut root = Rng::new(cfg.seed);
         let n_jobs = cfg.jobs.len();
+        let racks = cfg.racks;
         let n_worker_nodes: usize = cfg.jobs.iter().map(|j| j.n_workers).sum();
-        let n_nodes = 1 + n_worker_nodes + n_jobs;
-        let topo = Topology::star(n_nodes - 1);
-        let mut net = Net::new(topo, cfg.net.clone(), root.split(1));
+        let n_hosts = n_worker_nodes + n_jobs;
+        let n_nodes = racks + n_hosts;
+        // `two_tier(1, n)` is structurally identical to `star(n)` (the
+        // parity tests in tests/integration_hierarchy.rs pin this), so one
+        // constructor serves both layouts.
+        let topo = Topology::two_tier(racks, n_hosts);
 
         // node assignment
         let mut node_actor = vec![ActorRef::Switch; n_nodes];
-        let mut next_node: NodeId = 1;
+        let mut next_node: NodeId = racks as NodeId;
         let pool_slots = cfg.switch.pool_slots(cfg.policy);
 
-        // models + wiring
+        // models + worker/PS node ids
         let mut models = Vec::new();
-        let mut wiring = Vec::new();
         let mut worker_nodes: Vec<Vec<NodeId>> = Vec::new();
         for (j, spec) in cfg.jobs.iter().enumerate() {
             let profile = profile_by_name(&spec.model, spec.tensor_bytes)
@@ -97,25 +117,74 @@ impl Simulation {
                 n
             })
             .collect();
+
+        // Tier-relative wiring (see the JobWiring docs): each rack switch
+        // sees its local workers and local fan-in; the edge sees one
+        // "member" per rack hosting the job and the global fan-in.
+        let packet_bytes = cfg.policy.packet_bytes() as u32;
+        let mut rack_wirings: Vec<Vec<JobWiring>> = (0..racks).map(|_| Vec::new()).collect();
+        let mut edge_wiring: Vec<JobWiring> = Vec::new();
         for (j, model) in models.iter().enumerate() {
-            wiring.push(JobWiring {
+            let total = model.n_workers as u8;
+            let mut job_racks: Vec<NodeId> = Vec::new();
+            for (r, wiring) in rack_wirings.iter_mut().enumerate() {
+                let local: Vec<NodeId> = worker_nodes[j]
+                    .iter()
+                    .copied()
+                    .filter(|&n| topo.parent_of(n) == r as NodeId)
+                    .collect();
+                if !local.is_empty() {
+                    job_racks.push(r as NodeId);
+                }
+                wiring.push(JobWiring {
+                    ps: ps_nodes[j],
+                    fan_in: local.len() as u8,
+                    fan_in_total: total,
+                    workers: local,
+                    packet_bytes,
+                });
+            }
+            edge_wiring.push(JobWiring {
                 ps: ps_nodes[j],
-                workers: worker_nodes[j].clone(),
-                fan_in: model.n_workers as u8,
-                packet_bytes: cfg.policy.packet_bytes() as u32,
+                workers: job_racks,
+                fan_in: total,
+                fan_in_total: total,
+                packet_bytes,
             });
         }
 
-        let mut switch = Switch::new(SWITCH_NODE, cfg.policy, pool_slots, wiring, root.split(2));
-        switch.set_age_gate(cfg.net.base_rtt_ns);
+        let mut net = Net::new(topo, cfg.net.clone(), root.split(1));
+
+        // Switches. Rack 0 (or the lone root switch) keeps the seed's rng
+        // stream order so `racks = 1` replays single-switch runs exactly.
+        let mut switches = Vec::with_capacity(racks);
+        for (r, wiring) in rack_wirings.into_iter().enumerate() {
+            let rng = if r == 0 { root.split(2) } else { root.split(200 + r as u64) };
+            let mut sw = Switch::new(r as NodeId, cfg.policy, pool_slots, wiring, rng);
+            sw.set_age_gate(cfg.net.base_rtt_ns);
+            if racks > 1 {
+                sw.set_tier(SwitchTier::Rack { edge: SWITCH_NODE });
+            }
+            switches.push(sw);
+        }
+        let edge = if racks > 1 {
+            let mut sw =
+                Switch::new(SWITCH_NODE, cfg.policy, pool_slots, edge_wiring, root.split(199));
+            sw.set_age_gate(cfg.net.base_rtt_ns);
+            sw.set_tier(SwitchTier::Edge);
+            Some(sw)
+        } else {
+            None
+        };
 
         // workers
         let mut workers = Vec::new();
         let mut job_workers = Vec::new();
         for (j, model) in models.iter().enumerate() {
             let lo = workers.len();
-            let region_cap = switch.policy().region_len(j as JobId);
             for (w, &node) in worker_nodes[j].iter().enumerate() {
+                let rack = net.topo.parent_of(node);
+                let region_cap = switches[rack as usize].policy().region_len(j as JobId);
                 node_actor[node as usize] = ActorRef::Worker(workers.len() as u32);
                 let ps = if cfg.policy == PolicyKind::SwitchMl {
                     None
@@ -125,7 +194,7 @@ impl Simulation {
                 workers.push(Worker::new(
                     WorkerCfg {
                         node,
-                        switch: SWITCH_NODE,
+                        switch: rack,
                         ps,
                         widx: w as u8,
                         policy: cfg.policy,
@@ -141,7 +210,7 @@ impl Simulation {
             job_workers.push((lo, workers.len()));
         }
 
-        // PSes
+        // PSes (reminders address the tree root — the edge fans them down)
         let mut pses = Vec::new();
         for (j, model) in models.iter().enumerate() {
             node_actor[ps_nodes[j] as usize] = ActorRef::Ps(pses.len() as u32);
@@ -173,13 +242,15 @@ impl Simulation {
         Ok(Simulation {
             cfg,
             net,
-            switch,
+            switches,
+            edge,
             workers,
             pses,
             node_actor,
             models,
             job_workers,
             out_buf: Vec::with_capacity(64),
+            recirc_buf: Vec::new(),
             truncated: false,
         })
     }
@@ -196,6 +267,17 @@ impl Simulation {
         &self.pses[job as usize]
     }
 
+    /// The switch at the top of the aggregation tree: the single root
+    /// switch (`racks == 1`) or the second-tier edge switch.
+    pub fn switch(&self) -> &Switch {
+        self.edge.as_ref().unwrap_or(&self.switches[0])
+    }
+
+    /// All first-level switches, indexed by node id.
+    pub fn rack_switches(&self) -> &[Switch] {
+        &self.switches
+    }
+
     pub fn n_jobs(&self) -> usize {
         self.models.len()
     }
@@ -204,47 +286,85 @@ impl Simulation {
         self.workers.iter().all(|w| w.done())
     }
 
+    /// Deliver a packet that arrived at a switch node: terminate it in the
+    /// right pipeline stage, or observe-and-forward a transit packet.
+    ///
+    /// With `racks >= 2`, node 0 hosts two stages (rack 0 + edge). Packets
+    /// are routed to a stage by kind and origin — `RackPartial`s terminate
+    /// at the edge; `Param`/reminder traffic from hosts targets the edge
+    /// while self-emitted (`src == 0`) downlink copies target rack 0 — and
+    /// zero-hop recirculations between the stages run in-process.
+    fn deliver_at_switch(&mut self, now: crate::SimTime, node: NodeId, pkt: Packet) {
+        if pkt.dst != node {
+            // transit: observe (ATP dealloc on param), then forward
+            self.switches[node as usize].on_transit(now, &pkt);
+            if node == SWITCH_NODE {
+                if let Some(edge) = self.edge.as_mut() {
+                    edge.on_transit(now, &pkt);
+                }
+            }
+            self.net.transmit(node, pkt);
+            return;
+        }
+        debug_assert!(self.recirc_buf.is_empty());
+        let mut pending = pkt;
+        loop {
+            let use_edge = node == SWITCH_NODE
+                && self.edge.is_some()
+                && match pending.kind {
+                    PacketKind::RackPartial => true,
+                    PacketKind::Param | PacketKind::ReminderToSwitch => {
+                        pending.src != SWITCH_NODE
+                    }
+                    _ => false,
+                };
+            self.out_buf.clear();
+            if use_edge {
+                self.edge
+                    .as_mut()
+                    .expect("use_edge implies edge")
+                    .handle(now, pending, &mut self.out_buf);
+            } else {
+                self.switches[node as usize].handle(now, pending, &mut self.out_buf);
+            }
+            for o in std::mem::take(&mut self.out_buf) {
+                if o.dst == node {
+                    self.recirc_buf.push(o);
+                } else {
+                    self.net.transmit(node, o);
+                }
+            }
+            match self.recirc_buf.pop() {
+                Some(p) => pending = p,
+                None => break,
+            }
+        }
+    }
+
     /// Dispatch one event. Returns false when the queue is exhausted.
     fn step(&mut self) -> bool {
         let Some((now, ev)) = self.net.queue.pop() else {
             return false;
         };
         match ev {
-            Event::Deliver { at, pkt } => {
-                if at == SWITCH_NODE {
-                    if pkt.dst == SWITCH_NODE {
-                        // INA packet terminating at the switch
-                        self.out_buf.clear();
-                        self.switch.handle(now, pkt, &mut self.out_buf);
-                        for p in std::mem::take(&mut self.out_buf) {
-                            self.net.transmit(SWITCH_NODE, p);
-                        }
-                    } else {
-                        // transit: observe (ATP dealloc), then forward
-                        self.switch.on_transit(now, &pkt);
-                        self.net.transmit(SWITCH_NODE, pkt);
+            Event::Deliver { at, pkt } => match self.node_actor[at as usize] {
+                ActorRef::Switch => self.deliver_at_switch(now, at, pkt),
+                ActorRef::Worker(i) => {
+                    self.workers[i as usize].handle(&mut self.net, pkt);
+                }
+                ActorRef::Ps(i) => {
+                    let ps = &mut self.pses[i as usize];
+                    self.out_buf.clear();
+                    ps.handle(now, pkt, &mut self.out_buf);
+                    let node = ps.node;
+                    if ps.needs_scan_timer() {
+                        self.net.timer(now + SCAN_INTERVAL_NS, node, TIMER_SCAN);
                     }
-                } else {
-                    match self.node_actor[at as usize] {
-                        ActorRef::Worker(i) => {
-                            self.workers[i as usize].handle(&mut self.net, pkt);
-                        }
-                        ActorRef::Ps(i) => {
-                            let ps = &mut self.pses[i as usize];
-                            self.out_buf.clear();
-                            ps.handle(now, pkt, &mut self.out_buf);
-                            let node = ps.node;
-                            if ps.needs_scan_timer() {
-                                self.net.timer(now + SCAN_INTERVAL_NS, node, TIMER_SCAN);
-                            }
-                            for p in std::mem::take(&mut self.out_buf) {
-                                self.net.transmit(node, p);
-                            }
-                        }
-                        ActorRef::Switch => unreachable!("host packet routed to switch actor"),
+                    for p in std::mem::take(&mut self.out_buf) {
+                        self.net.transmit(node, p);
                     }
                 }
-            }
+            },
             Event::Timer { node, key } => match self.node_actor[node as usize] {
                 ActorRef::Worker(i) => {
                     self.workers[i as usize].on_timer(&mut self.net, key);
@@ -269,6 +389,23 @@ impl Simulation {
     }
 
     /// Run to completion (all jobs done, queue exhausted, or time cap).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use esa::config::{ExperimentConfig, PolicyKind};
+    /// use esa::sim::Simulation;
+    ///
+    /// let mut cfg = ExperimentConfig::synthetic(PolicyKind::Esa, "microbench", 1, 2);
+    /// cfg.iterations = 1;
+    /// for j in &mut cfg.jobs {
+    ///     j.tensor_bytes = Some(64 * 1024);
+    /// }
+    /// let metrics = Simulation::run_experiment(cfg).unwrap();
+    /// assert!(!metrics.truncated);
+    /// assert_eq!(metrics.jobs.len(), 1);
+    /// assert_eq!(metrics.switches.len(), 1, "a star reports one root switch");
+    /// ```
     pub fn run(&mut self) -> ExperimentMetrics {
         let wall = Instant::now();
         loop {
@@ -301,8 +438,30 @@ impl Simulation {
                 jobs.push(m);
             }
         }
+        let mut switches = Vec::new();
+        if let Some(edge) = &self.edge {
+            switches.push(SwitchReport {
+                node: SWITCH_NODE,
+                tier: "edge",
+                stats: edge.stats.clone(),
+            });
+            for (r, sw) in self.switches.iter().enumerate() {
+                switches.push(SwitchReport {
+                    node: r as NodeId,
+                    tier: "rack",
+                    stats: sw.stats.clone(),
+                });
+            }
+        } else {
+            switches.push(SwitchReport {
+                node: SWITCH_NODE,
+                tier: "root",
+                stats: self.switches[0].stats.clone(),
+            });
+        }
         ExperimentMetrics {
             jobs,
+            switches,
             sim_ns: self.net.now(),
             events: self.net.queue.processed(),
             wall_secs,

@@ -16,6 +16,15 @@
 //!    identity) to the evicted task's PS;
 //! 4. reminder packets (§5.1) fetch the resident partial the same way and
 //!    deallocate.
+//!
+//! The same pipeline runs at every tier of a hierarchical fabric (see
+//! DESIGN.md §6): a [`SwitchTier::Rack`] switch aggregates its local
+//! workers and folds the completed rack partial upward as one
+//! `RackPartial` packet; the [`SwitchTier::Edge`] switch aggregates rack
+//! partials on the job's global fan-in and multicasts one `Result` per
+//! rack, which each rack switch replicates to its local workers. ESA
+//! preemption, priority scheduling and reminder eviction operate
+//! independently at each tier.
 
 pub mod aggregator;
 pub mod policy;
@@ -28,13 +37,39 @@ use crate::{JobId, NodeId, SimTime};
 pub use aggregator::Aggregator;
 pub use policy::{CollisionOutcome, Policy};
 
+/// Which level of the aggregation tree a switch sits at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwitchTier {
+    /// The only switch of a single-switch star (the seed topology, and
+    /// `racks = 1` two-tier layouts): aggregates worker gradients and
+    /// multicasts results straight back to the workers.
+    Root,
+    /// First-level rack switch: aggregates its *local* workers' gradients
+    /// (per-job local fan-in) and forwards each completed rack partial up
+    /// to `edge` as one `RackPartial` packet.
+    Rack { edge: NodeId },
+    /// Second-level edge switch: aggregates `RackPartial` packets on the
+    /// job's global fan-in; completion multicasts one `Result` per rack
+    /// switch (its `JobWiring::workers` are rack switch nodes).
+    Edge,
+}
+
 /// Per-job wiring the switch needs: where the PS lives and who to
 /// multicast results to.
+///
+/// The meaning of `workers`/`fan_in` is tier-relative: for a `Root` switch
+/// they are the job's workers and global fan-in; for a `Rack` switch the
+/// *local* workers and *local* fan-in; for the `Edge` switch the rack
+/// switch nodes hosting the job and the global fan-in.
 #[derive(Debug, Clone)]
 pub struct JobWiring {
     pub ps: NodeId,
     pub workers: Vec<NodeId>,
     pub fan_in: u8,
+    /// The job's global fan-in (total workers) — what a rack switch stamps
+    /// into the `RackPartial` header so the edge completes correctly.
+    /// Equals `fan_in` at the root/edge tier.
+    pub fan_in_total: u8,
     /// Wire bytes of this job's packets (306 for ESA/ATP, 180 SwitchML).
     pub packet_bytes: u32,
 }
@@ -43,6 +78,12 @@ pub struct JobWiring {
 #[derive(Debug, Clone, Default)]
 pub struct SwitchStats {
     pub grad_pkts: u64,
+    /// `RackPartial` packets received (edge tier of two-tier fabrics).
+    pub rack_partial_pkts: u64,
+    /// Completed rack aggregations folded upward (rack tier).
+    pub rack_uplinks: u64,
+    /// Edge results/params replicated to local workers (rack tier).
+    pub rack_downlinks: u64,
     /// Fold-in operations performed (each one removes a packet from the
     /// network — the paper's traffic argument in §4 Discussion).
     pub aggregations: u64,
@@ -63,6 +104,8 @@ pub struct Switch {
     policy: Policy,
     pool: Vec<Aggregator>,
     wiring: Vec<JobWiring>,
+    /// Where in the aggregation tree this switch sits (default [`SwitchTier::Root`]).
+    tier: SwitchTier,
     rng: Rng,
     /// Priority downgrading is age-gated: an occupant is only aged once it
     /// has held the slot longer than ~one base RTT, so transient
@@ -84,6 +127,7 @@ impl Switch {
             policy,
             pool: (0..pool_slots).map(|_| Aggregator::empty()).collect(),
             wiring,
+            tier: SwitchTier::Root,
             rng,
             age_gate_ns: 10 * crate::USEC,
             stats: SwitchStats::default(),
@@ -93,6 +137,15 @@ impl Switch {
     /// Configure the downgrade age gate (defaults to 10 µs ≈ base RTT).
     pub fn set_age_gate(&mut self, ns: SimTime) {
         self.age_gate_ns = ns;
+    }
+
+    /// Place this switch at a tier of the aggregation tree.
+    pub fn set_tier(&mut self, tier: SwitchTier) {
+        self.tier = tier;
+    }
+
+    pub fn tier(&self) -> SwitchTier {
+        self.tier
     }
 
     pub fn pool_slots(&self) -> usize {
@@ -119,29 +172,32 @@ impl Switch {
     }
 
     /// Handle a packet delivered *to* the switch (dst == switch):
-    /// gradients and reminders. Emits outgoing packets into `out`.
+    /// gradients, rack partials, reminders and multicast replication.
+    /// Emits outgoing packets into `out`.
     pub fn handle(&mut self, now: SimTime, pkt: Packet, out: &mut Vec<Packet>) {
         match pkt.kind {
-            PacketKind::Gradient => self.handle_gradient(now, pkt, out),
+            PacketKind::Gradient => {
+                self.stats.grad_pkts += 1;
+                self.handle_gradient(now, pkt, out);
+            }
+            // A rack's completed partial rides the same per-packet
+            // pipeline at the edge: allocate / aggregate / collide.
+            PacketKind::RackPartial => {
+                self.stats.rack_partial_pkts += 1;
+                self.handle_gradient(now, pkt, out);
+            }
             PacketKind::ReminderToSwitch => self.handle_reminder(now, pkt, out),
             PacketKind::Param => self.handle_param_multicast(now, pkt, out),
+            PacketKind::Result => self.handle_result_replicate(pkt, out),
             other => {
                 debug_assert!(false, "switch-addressed packet of kind {other:?}");
             }
         }
     }
 
-    /// A PS parameter packet addressed to the switch: replicate it to the
-    /// job's multicast group (§5.1 pull path). For ATP this is also the
-    /// ACK that deallocates the held-complete aggregator (§2.2).
-    fn handle_param_multicast(&mut self, now: SimTime, pkt: Packet, out: &mut Vec<Packet>) {
-        if self.policy.kind == PolicyKind::Atp {
-            let idx = self.slot_index(pkt.job, pkt.seq) as usize;
-            let slot = &mut self.pool[idx];
-            if slot.occupied && slot.job == pkt.job && slot.seq == pkt.seq {
-                self.stats.busy_ns += slot.deallocate(now);
-            }
-        }
+    /// Clone `pkt` to every member of its job's multicast group (workers
+    /// at the root/rack tier, rack switches at the edge).
+    fn replicate_to_group(&self, pkt: &Packet, out: &mut Vec<Packet>) {
         let wiring = &self.wiring[pkt.job as usize];
         for &w in &wiring.workers {
             let mut p = pkt.clone();
@@ -149,6 +205,35 @@ impl Switch {
             p.dst = w;
             out.push(p);
         }
+    }
+
+    /// An edge `Result` addressed to this rack switch: replicate the
+    /// completed aggregation to the job's local workers (the downlink half
+    /// of tier-aware completion).
+    fn handle_result_replicate(&mut self, pkt: Packet, out: &mut Vec<Packet>) {
+        debug_assert!(
+            matches!(self.tier, SwitchTier::Rack { .. }),
+            "Result addressed to a non-rack switch"
+        );
+        self.stats.rack_downlinks += 1;
+        self.replicate_to_group(&pkt, out);
+    }
+
+    /// A PS parameter packet addressed to the switch: replicate it to the
+    /// job's multicast group (§5.1 pull path). For ATP this is also the
+    /// ACK that deallocates the held-complete aggregator (§2.2).
+    fn handle_param_multicast(&mut self, now: SimTime, pkt: Packet, out: &mut Vec<Packet>) {
+        if matches!(self.tier, SwitchTier::Rack { .. }) {
+            self.stats.rack_downlinks += 1;
+        }
+        if self.policy.kind == PolicyKind::Atp {
+            let idx = self.slot_index(pkt.job, pkt.seq) as usize;
+            let slot = &mut self.pool[idx];
+            if slot.occupied && slot.job == pkt.job && slot.seq == pkt.seq {
+                self.stats.busy_ns += slot.deallocate(now);
+            }
+        }
+        self.replicate_to_group(&pkt, out);
     }
 
     /// Observe a transit packet (dst != switch) before forwarding. ATP
@@ -165,7 +250,6 @@ impl Switch {
     }
 
     fn handle_gradient(&mut self, now: SimTime, mut pkt: Packet, out: &mut Vec<Packet>) {
-        self.stats.grad_pkts += 1;
         let idx = self.slot_index(pkt.job, pkt.seq) as usize;
 
         // ATP resend: never aggregate — evict any matching partial to the
@@ -175,6 +259,14 @@ impl Switch {
             self.handle_resend(now, idx, pkt, out);
             return;
         }
+        // Tier-local fan-in: a rack switch completes on its *local* worker
+        // count, not the global fan-in stamped in the gradient header; the
+        // edge completes on the global fan-in the RackPartial carries.
+        let fan_in = match self.tier {
+            SwitchTier::Rack { .. } => self.wiring[pkt.job as usize].fan_in,
+            _ => pkt.fan_in,
+        };
+        let level2 = self.tier == SwitchTier::Edge;
         let slot = &mut self.pool[idx];
 
         if !slot.occupied {
@@ -184,10 +276,11 @@ impl Switch {
                 pkt.job,
                 pkt.seq,
                 pkt.bitmap,
-                pkt.fan_in,
+                fan_in,
                 pkt.priority,
                 pkt.values.as_deref(),
             );
+            slot.level2 = level2;
             self.stats.allocations += 1;
             if slot.complete() {
                 // single-worker job: degenerate immediate completion
@@ -274,10 +367,11 @@ impl Switch {
                     pkt.job,
                     pkt.seq,
                     pkt.bitmap,
-                    pkt.fan_in,
+                    fan_in,
                     pkt.priority,
                     pkt.values.as_deref(),
                 );
+                slot.level2 = level2;
                 self.stats.allocations += 1;
                 let ps = self.wiring[evicted_job as usize].ps;
                 out.push(Packet {
@@ -374,7 +468,25 @@ impl Switch {
 
     /// A PS reminder fetches the resident partial (packet swap) and
     /// deallocates (Fig. 4 steps 5–6).
+    ///
+    /// At the edge of a two-tier fabric the PS addresses recovery at the
+    /// tree root: before flushing its own partial (if any), the edge fans
+    /// the reminder down to every rack hosting the job, so rack-resident
+    /// partials of the stuck task are flushed to the PS as well.
     fn handle_reminder(&mut self, now: SimTime, pkt: Packet, out: &mut Vec<Packet>) {
+        if self.tier == SwitchTier::Edge {
+            let wiring = &self.wiring[pkt.job as usize];
+            for &rack in &wiring.workers {
+                out.push(Packet::reminder(
+                    pkt.job,
+                    pkt.seq,
+                    self.node,
+                    rack,
+                    true,
+                    wiring.packet_bytes,
+                ));
+            }
+        }
         let idx = self.slot_index(pkt.job, pkt.seq) as usize;
         let slot = &mut self.pool[idx];
         if !slot.occupied || slot.job != pkt.job || slot.seq != pkt.seq {
@@ -408,13 +520,50 @@ impl Switch {
 
     /// Emit completion output for slot `idx` and deallocate (except ATP,
     /// which holds the slot until the parameter packet transits back).
+    ///
+    /// Tier-aware: a rack switch folds its completed local aggregation
+    /// *upward* as one `RackPartial` (uplink-forward); the root/edge
+    /// multicasts downward (to workers, or one `Result` per rack).
     fn complete_slot(&mut self, now: SimTime, idx: usize, out: &mut Vec<Packet>) {
         self.stats.completions += 1;
-        let (job, seq, bitmap, fan_in) = {
+        let (job, seq, bitmap, fan_in, priority) = {
             let s = &self.pool[idx];
-            (s.job, s.seq, s.bitmap, s.fan_in)
+            (s.job, s.seq, s.bitmap, s.fan_in, s.priority)
         };
         let wiring = &self.wiring[job as usize];
+        if let SwitchTier::Rack { edge } = self.tier {
+            self.stats.rack_uplinks += 1;
+            // ATP holds the slot (and a value copy) until the parameter
+            // packet comes back down; everyone else deallocates on the
+            // spot — that early release is ESA's memory-efficiency win,
+            // applied per tier.
+            let values = if self.policy.kind == PolicyKind::Atp {
+                self.pool[idx].value.clone()
+            } else {
+                self.pool[idx].value.take()
+            };
+            out.push(Packet {
+                kind: PacketKind::RackPartial,
+                job,
+                seq,
+                agg_index: idx as u32,
+                bitmap,
+                fan_in: wiring.fan_in_total,
+                priority,
+                src: self.node,
+                dst: edge,
+                wire_bytes: wiring.packet_bytes,
+                reliable: false,
+                resend: false,
+                ecn: false,
+                values,
+                sent_at: 0,
+            });
+            if self.policy.kind != PolicyKind::Atp {
+                self.stats.busy_ns += self.pool[idx].deallocate(now);
+            }
+            return;
+        }
         if self.policy.kind == PolicyKind::Atp {
             // result streams to the PS; slot held until param transit
             let values = self.pool[idx].value.clone();
@@ -468,8 +617,8 @@ mod tests {
 
     fn wiring2() -> Vec<JobWiring> {
         vec![
-            JobWiring { ps: 10, workers: vec![1, 2], fan_in: 2, packet_bytes: 306 },
-            JobWiring { ps: 11, workers: vec![3, 4], fan_in: 2, packet_bytes: 306 },
+            JobWiring { ps: 10, workers: vec![1, 2], fan_in: 2, fan_in_total: 2, packet_bytes: 306 },
+            JobWiring { ps: 11, workers: vec![3, 4], fan_in: 2, fan_in_total: 2, packet_bytes: 306 },
         ]
     }
 
@@ -668,9 +817,170 @@ mod tests {
         assert_eq!(sw.stats.preemptions, 1);
     }
 
+    /// A rack switch serving workers 1,2 of job 0 (global fan-in 4) under
+    /// edge node 9.
+    fn mkrack(kind: PolicyKind) -> Switch {
+        let wiring = vec![JobWiring {
+            ps: 10,
+            workers: vec![1, 2],
+            fan_in: 2,
+            fan_in_total: 4,
+            packet_bytes: 306,
+        }];
+        let mut sw = Switch::new(5, kind, 64, wiring, Rng::new(1));
+        sw.set_tier(SwitchTier::Rack { edge: 9 });
+        sw
+    }
+
+    /// An edge switch folding racks 5 and 6 for job 0 (global fan-in 4).
+    fn mkedge(kind: PolicyKind) -> Switch {
+        let wiring = vec![JobWiring {
+            ps: 10,
+            workers: vec![5, 6],
+            fan_in: 4,
+            fan_in_total: 4,
+            packet_bytes: 306,
+        }];
+        let mut sw = Switch::new(0, kind, 64, wiring, Rng::new(1));
+        sw.set_tier(SwitchTier::Edge);
+        sw
+    }
+
+    #[test]
+    fn rack_completion_folds_upward_as_rack_partial() {
+        let mut sw = mkrack(PolicyKind::Esa);
+        let mut out = Vec::new();
+        // headers stamp the GLOBAL fan-in (4); the rack completes on its
+        // local fan-in of 2
+        let mut p0 = Packet::gradient(0, 3, 0, 1 << 0, 4, 9, 1, 5, 306);
+        p0.agg_index = sw.slot_index(0, 3);
+        let mut p1 = Packet::gradient(0, 3, 0, 1 << 1, 4, 9, 2, 5, 306);
+        p1.agg_index = sw.slot_index(0, 3);
+        sw.handle(10, p0, &mut out);
+        assert!(out.is_empty());
+        assert_eq!(sw.occupied_slots(), 1);
+        sw.handle(20, p1, &mut out);
+        assert_eq!(out.len(), 1, "one uplink packet, not a worker multicast");
+        let up = &out[0];
+        assert_eq!(up.kind, PacketKind::RackPartial);
+        assert_eq!(up.dst, 9, "uplink goes to the edge switch");
+        assert_eq!(up.bitmap, 0b11, "carries the rack's aggregated bitmap");
+        assert_eq!(up.fan_in, 4, "carries the job's global fan-in");
+        assert_eq!(sw.occupied_slots(), 0, "ESA rack deallocates on uplink");
+        assert_eq!(sw.stats.rack_uplinks, 1);
+    }
+
+    #[test]
+    fn atp_rack_holds_slot_until_param_comes_down() {
+        let mut sw = mkrack(PolicyKind::Atp);
+        let mut out = Vec::new();
+        let mut p0 = Packet::gradient(0, 3, 0, 1 << 0, 4, 0, 1, 5, 306);
+        p0.agg_index = sw.slot_index(0, 3);
+        let mut p1 = Packet::gradient(0, 3, 0, 1 << 1, 4, 0, 2, 5, 306);
+        p1.agg_index = sw.slot_index(0, 3);
+        sw.handle(10, p0, &mut out);
+        sw.handle(20, p1, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].kind, PacketKind::RackPartial);
+        assert_eq!(sw.occupied_slots(), 1, "ATP rack holds the slot");
+        // the parameter replicated down deallocates + fans to local workers
+        let mut param = out[0].clone();
+        param.kind = PacketKind::Param;
+        param.src = 9;
+        param.dst = 5;
+        out.clear();
+        sw.handle(60, param, &mut out);
+        assert_eq!(sw.occupied_slots(), 0);
+        assert_eq!(out.len(), 2, "param replicated to both local workers");
+        assert_eq!(out.iter().map(|p| p.dst).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn edge_folds_rack_partials_on_global_fan_in() {
+        let mut sw = mkedge(PolicyKind::Esa);
+        let mut out = Vec::new();
+        let mut a = Packet::gradient(0, 3, 0, 0b0011, 4, 9, 5, 0, 306);
+        a.kind = PacketKind::RackPartial;
+        a.agg_index = sw.slot_index(0, 3);
+        let mut b = Packet::gradient(0, 3, 0, 0b1100, 4, 9, 6, 0, 306);
+        b.kind = PacketKind::RackPartial;
+        b.agg_index = sw.slot_index(0, 3);
+        sw.handle(10, a, &mut out);
+        assert!(out.is_empty(), "half the workers in: edge waits");
+        assert!(sw.slot(sw.slot_index(0, 3) as usize).level2, "edge slots are level-2");
+        sw.handle(20, b, &mut out);
+        assert_eq!(out.len(), 2, "one Result per rack switch");
+        assert!(out.iter().all(|p| p.kind == PacketKind::Result));
+        assert_eq!(out.iter().map(|p| p.dst).collect::<Vec<_>>(), vec![5, 6]);
+        assert_eq!(sw.occupied_slots(), 0);
+        assert_eq!(sw.stats.rack_partial_pkts, 2);
+    }
+
+    #[test]
+    fn rack_replicates_edge_result_to_local_workers() {
+        let mut sw = mkrack(PolicyKind::Esa);
+        let mut out = Vec::new();
+        let mut res = Packet::gradient(0, 3, 0, 0b1111, 4, 0, 9, 5, 306);
+        res.kind = PacketKind::Result;
+        sw.handle(50, res, &mut out);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|p| p.kind == PacketKind::Result));
+        assert_eq!(out.iter().map(|p| p.dst).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(sw.stats.rack_downlinks, 1);
+    }
+
+    #[test]
+    fn edge_reminder_fans_down_to_racks_and_flushes_local() {
+        let mut sw = mkedge(PolicyKind::Esa);
+        let mut out = Vec::new();
+        let mut a = Packet::gradient(0, 3, 0, 0b0011, 4, 9, 5, 0, 306);
+        a.kind = PacketKind::RackPartial;
+        a.agg_index = sw.slot_index(0, 3);
+        sw.handle(10, a, &mut out);
+        out.clear();
+        sw.handle(1000, Packet::reminder(0, 3, 10, 0, true, 306), &mut out);
+        let down: Vec<_> = out.iter().filter(|p| p.kind == PacketKind::ReminderToSwitch).collect();
+        assert_eq!(down.len(), 2, "reminder replicated to both racks");
+        assert_eq!(down.iter().map(|p| p.dst).collect::<Vec<_>>(), vec![5, 6]);
+        let flush: Vec<_> = out.iter().filter(|p| p.kind == PacketKind::PartialToPs).collect();
+        assert_eq!(flush.len(), 1, "edge partial flushed to the PS");
+        assert_eq!(flush[0].bitmap, 0b0011);
+        assert_eq!(sw.occupied_slots(), 0);
+    }
+
+    #[test]
+    fn esa_preemption_works_at_the_edge_tier() {
+        let wiring = vec![
+            JobWiring { ps: 10, workers: vec![5, 6], fan_in: 4, fan_in_total: 4, packet_bytes: 306 },
+            JobWiring { ps: 11, workers: vec![5, 6], fan_in: 4, fan_in_total: 4, packet_bytes: 306 },
+        ];
+        let mut sw = Switch::new(0, PolicyKind::Esa, 64, wiring, Rng::new(1));
+        sw.set_tier(SwitchTier::Edge);
+        let mut out = Vec::new();
+        let mut low = Packet::gradient(0, 5, 0, 0b0011, 4, 3, 5, 0, 306);
+        low.kind = PacketKind::RackPartial;
+        low.agg_index = sw.slot_index(0, 5);
+        sw.handle(10, low, &mut out);
+        let idx = sw.slot_index(0, 5);
+        let mut seq = 0u32;
+        while sw.slot_index(1, seq) != idx {
+            seq += 1;
+        }
+        let mut high = Packet::gradient(1, seq, 0, 0b1100, 4, 200, 6, 0, 306);
+        high.kind = PacketKind::RackPartial;
+        high.agg_index = idx;
+        sw.handle(20, high, &mut out);
+        assert_eq!(sw.stats.preemptions, 1);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].kind, PacketKind::PartialToPs);
+        assert_eq!(out[0].bitmap, 0b0011, "evicted rack partial carries its bitmap");
+        assert_eq!(out[0].dst, 10, "eviction goes to the loser job's PS");
+    }
+
     #[test]
     fn single_worker_job_completes_immediately() {
-        let wiring = vec![JobWiring { ps: 10, workers: vec![1], fan_in: 1, packet_bytes: 306 }];
+        let wiring =
+            vec![JobWiring { ps: 10, workers: vec![1], fan_in: 1, fan_in_total: 1, packet_bytes: 306 }];
         let mut sw = Switch::new(0, PolicyKind::Esa, 16, wiring, Rng::new(1));
         let mut out = Vec::new();
         let mut p = Packet::gradient(0, 0, 0, 1, 1, 5, 1, 0, 306);

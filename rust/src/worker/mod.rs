@@ -60,6 +60,8 @@ enum Phase {
 #[derive(Debug, Clone)]
 pub struct WorkerCfg {
     pub node: NodeId,
+    /// Where gradients are pushed: the root switch in a star, this
+    /// worker's *rack* switch in a two-tier fabric.
     pub switch: NodeId,
     /// The job's fallback PS; `None` for SwitchML (no PS in that design).
     pub ps: Option<NodeId>,

@@ -108,7 +108,7 @@ fn seed_changes_jitter_but_not_totals() {
         c.jobs[0].tensor_bytes = Some(512 * 1024);
         let mut sim = Simulation::new(c).unwrap();
         let m = sim.run();
-        (m.avg_jct_ms(), sim.switch.stats.completions)
+        (m.avg_jct_ms(), sim.switch().stats.completions)
     };
     let (jct_a, comp_a) = mk(1);
     let (jct_b, comp_b) = mk(2);

@@ -43,22 +43,22 @@ fn esa_preempts_and_atp_does_not() {
     esa_cfg.switch.memory_bytes = 256 * 1024; // force contention
     let mut esa = Simulation::new(esa_cfg).unwrap();
     esa.run();
-    assert!(esa.switch.stats.preemptions > 0, "contended ESA must preempt");
+    assert!(esa.switch().stats.preemptions > 0, "contended ESA must preempt");
 
     let mut atp_cfg = cfg(PolicyKind::Atp, "dnn_a", 4, 4, 2048);
     atp_cfg.switch.memory_bytes = 256 * 1024;
     let mut atp = Simulation::new(atp_cfg).unwrap();
     atp.run();
-    assert_eq!(atp.switch.stats.preemptions, 0, "ATP is non-preemptive");
-    assert!(atp.switch.stats.passthroughs > 0, "contended ATP must fall back");
+    assert_eq!(atp.switch().stats.preemptions, 0, "ATP is non-preemptive");
+    assert!(atp.switch().stats.passthroughs > 0, "contended ATP must fall back");
 }
 
 #[test]
 fn switchml_never_touches_the_ps() {
     let mut sim = Simulation::new(cfg(PolicyKind::SwitchMl, "dnn_a", 4, 4, 512)).unwrap();
     sim.run();
-    assert_eq!(sim.switch.stats.passthroughs, 0);
-    assert_eq!(sim.switch.stats.preemptions, 0);
+    assert_eq!(sim.switch().stats.passthroughs, 0);
+    assert_eq!(sim.switch().stats.preemptions, 0);
     for j in 0..4 {
         let st = &sim.ps(j).stats;
         assert_eq!(st.partials + st.passthrough_grads, 0, "SwitchML has no PS fallback");
@@ -69,8 +69,8 @@ fn switchml_never_touches_the_ps() {
 fn hostps_never_touches_the_switch_aggregators() {
     let mut sim = Simulation::new(cfg(PolicyKind::HostPs, "dnn_a", 2, 4, 512)).unwrap();
     sim.run();
-    assert_eq!(sim.switch.stats.grad_pkts, 0, "BytePS gradients bypass INA");
-    assert_eq!(sim.switch.stats.completions, 0);
+    assert_eq!(sim.switch().stats.grad_pkts, 0, "BytePS gradients bypass INA");
+    assert_eq!(sim.switch().stats.completions, 0);
 }
 
 #[test]
@@ -215,8 +215,8 @@ fn long_run_has_no_slot_leaks() {
     // partial re-occupied a slot) may linger until later traffic or a
     // reminder evicts them — bounded well under 10% of the pool. A
     // control-plane end-of-job flush is listed as future work.
-    let occupied = sim.switch.occupied_slots();
-    let pool = sim.switch.pool_slots();
+    let occupied = sim.switch().occupied_slots();
+    let pool = sim.switch().pool_slots();
     assert!(
         occupied < pool / 10,
         "suspicious residual occupancy: {occupied}/{pool} slots still held"

@@ -25,8 +25,8 @@ fn prop(name: &str, cases: u64, mut f: impl FnMut(&mut Rng)) {
 fn random_switch(rng: &mut Rng, policy: PolicyKind) -> Switch {
     let pool = rng.uniform_u64(8, 128) as usize;
     let wiring = vec![
-        JobWiring { ps: 100, workers: vec![1, 2, 3], fan_in: 3, packet_bytes: 306 },
-        JobWiring { ps: 101, workers: vec![4, 5], fan_in: 2, packet_bytes: 306 },
+        JobWiring { ps: 100, workers: vec![1, 2, 3], fan_in: 3, fan_in_total: 3, packet_bytes: 306 },
+        JobWiring { ps: 101, workers: vec![4, 5], fan_in: 2, fan_in_total: 2, packet_bytes: 306 },
     ];
     Switch::new(0, policy, pool, wiring, rng.split(7))
 }
