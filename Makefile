@@ -6,7 +6,7 @@ ARTIFACTS ?= artifacts
 PRESET ?= tiny
 WORKERS ?= 4
 
-.PHONY: build test bench figures artifacts clean-artifacts
+.PHONY: build test bench bench-figures figures artifacts clean-artifacts
 
 build:
 	cd rust && cargo build --release
@@ -18,7 +18,13 @@ test:
 figures: build
 	cd rust && ESA_BENCH_QUICK=1 cargo run --release -- figures all
 
+## Hot-path micro-benchmarks; refreshes BENCH_hotpath.json at the repo
+## root (the machine-readable perf trajectory — see README § Benchmarks).
 bench: build
+	cd rust && cargo bench --bench hotpath
+
+## Every figure-regeneration harness (slow, paper scale).
+bench-figures: build
 	cd rust && cargo bench
 
 ## AOT-lower the jax/Pallas graphs to HLO text (needs jax; see DESIGN.md §7).

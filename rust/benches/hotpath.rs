@@ -1,6 +1,12 @@
 //! L3 hot-path micro-benchmarks (hand-rolled harness — criterion is not
 //! available offline): per-component ops/s plus an end-to-end events/s
-//! figure. These are the §Perf numbers tracked in EXPERIMENTS.md.
+//! figure per policy, printed for humans AND written to
+//! `BENCH_hotpath.json` at the repository root — the machine-readable
+//! perf trajectory every PR is judged against (README § Benchmarks).
+//!
+//! `ESA_BENCH_QUICK=1` shrinks the workloads ~8× for CI smoke runs; the
+//! JSON records which mode produced it. Every config is seed-pinned so
+//! two runs on the same machine measure the same work.
 
 use std::time::Instant;
 
@@ -12,7 +18,41 @@ use esa::switch::{JobWiring, Switch};
 use esa::util::fixed;
 use esa::util::rng::Rng;
 
-fn bench<F: FnMut() -> u64>(name: &str, mut f: F) {
+/// One component measurement, destined for the JSON report.
+struct Component {
+    name: &'static str,
+    mops: f64,
+}
+
+/// One end-to-end simulation measurement (seed-pinned config).
+struct EndToEnd {
+    policy: &'static str,
+    model: &'static str,
+    jobs: usize,
+    workers: usize,
+    iterations: u32,
+    seed: u64,
+    tensor_bytes: u64,
+    events: u64,
+    sim_ns: u64,
+    wall_secs: f64,
+    events_per_sec: f64,
+}
+
+fn quick() -> bool {
+    std::env::var("ESA_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Workload scale divisor: 1 at full scale, 8 in quick mode.
+fn scale(n: u64) -> u64 {
+    if quick() {
+        (n / 8).max(1)
+    } else {
+        n
+    }
+}
+
+fn bench<F: FnMut() -> u64>(out: &mut Vec<Component>, name: &'static str, mut f: F) {
     // warmup
     f();
     let mut best = f64::MIN;
@@ -23,12 +63,13 @@ fn bench<F: FnMut() -> u64>(name: &str, mut f: F) {
         best = best.max(rate);
     }
     println!("{name:<40} {:>12.2} M ops/s", best / 1e6);
+    out.push(Component { name, mops: best / 1e6 });
 }
 
-fn bench_event_queue() {
+fn bench_event_queue(out: &mut Vec<Component>) {
     let mut q = EventQueue::new();
-    bench("event_queue push+pop (64k live)", || {
-        let n = 1_000_000u64;
+    bench(out, "event_queue push+pop (64k live)", || {
+        let n = scale(1_000_000);
         // keep 64k events live to exercise realistic heap depth
         for i in 0..65_536 {
             q.schedule(q.now() + 1 + (i % 97), Event::Timer { node: 0, key: i });
@@ -40,14 +81,39 @@ fn bench_event_queue() {
         while q.pop().is_some() {}
         n + 65_536
     });
+    let mut q = EventQueue::new();
+    bench(out, "packet_slab schedule+pop (deliver)", || {
+        let n = scale(1_000_000);
+        // the Deliver path: every event round-trips a packet through the
+        // free-list slab at a realistic live depth
+        for i in 0..4_096u64 {
+            q.schedule(
+                q.now() + 1 + (i % 97),
+                Event::Deliver { at: 0, pkt: Packet::gradient(0, i as u32, 0, 1, 8, 0, 1, 0, 306) },
+            );
+        }
+        for i in 0..n {
+            let (t, ev) = q.pop().unwrap();
+            let Event::Deliver { pkt, .. } = ev else { unreachable!() };
+            q.schedule(t + 1 + (i % 89), Event::Deliver { at: 0, pkt });
+        }
+        while q.pop().is_some() {}
+        n + 4_096
+    });
 }
 
-fn bench_switch_pipeline() {
-    let wiring = vec![JobWiring { ps: 100, workers: (1..=8).collect(), fan_in: 8, fan_in_total: 8, packet_bytes: 306 }];
+fn bench_switch_pipeline(out: &mut Vec<Component>) {
+    let wiring = vec![JobWiring {
+        ps: 100,
+        workers: (1..=8).collect(),
+        fan_in: 8,
+        fan_in_total: 8,
+        packet_bytes: 306,
+    }];
     let mut sw = Switch::new(0, PolicyKind::Esa, 16384, wiring, Rng::new(1));
-    let mut out = Vec::with_capacity(16);
-    bench("switch pipeline (ESA, 8-worker tasks)", || {
-        let n = 2_000_000u64;
+    let mut buf = Vec::with_capacity(16);
+    bench(out, "switch pipeline (ESA, 8-worker tasks)", || {
+        let n = scale(2_000_000);
         let mut t = 0;
         for i in 0..n {
             let seq = (i / 8) as u32;
@@ -55,17 +121,17 @@ fn bench_switch_pipeline() {
             let mut p = Packet::gradient(0, seq, 0, 1 << w, 8, 128, 1, 0, 306);
             p.agg_index = sw.slot_index(0, seq);
             t += 10;
-            out.clear();
-            sw.handle(t, p, &mut out);
+            buf.clear();
+            sw.handle(t, p, &mut buf);
         }
         n
     });
 }
 
-fn bench_transmit() {
+fn bench_transmit(out: &mut Vec<Component>) {
     let mut net = Net::new(Topology::star(64), NetworkConfig::default(), Rng::new(2));
-    bench("net transmit + deliver", || {
-        let n = 1_000_000u64;
+    bench(out, "net transmit + deliver", || {
+        let n = scale(1_000_000);
         for i in 0..n {
             let src = 1 + (i % 63) as u32;
             net.transmit(src, Packet::gradient(0, i as u32, 0, 1, 8, 0, src, 0, 306));
@@ -78,12 +144,12 @@ fn bench_transmit() {
     });
 }
 
-fn bench_fixed_point() {
+fn bench_fixed_point(out: &mut Vec<Component>) {
     let mut rng = Rng::new(3);
     let xs: Vec<f32> = (0..4096).map(|_| rng.uniform(-10.0, 10.0) as f32).collect();
     let mut qs = vec![0i32; 4096];
-    bench("fixed quantize (4k lanes)", || {
-        let reps = 20_000u64;
+    bench(out, "fixed quantize (4k lanes)", || {
+        let reps = scale(20_000);
         for _ in 0..reps {
             fixed::quantize_slice(&xs, &mut qs);
             std::hint::black_box(&qs);
@@ -92,8 +158,8 @@ fn bench_fixed_point() {
     });
     let add = qs.clone();
     let mut acc = vec![0i32; 4096];
-    bench("aggregator add (4k lanes)", || {
-        let reps = 100_000u64;
+    bench(out, "aggregator add (4k lanes)", || {
+        let reps = scale(100_000);
         for _ in 0..reps {
             fixed::agg_add_slice(&mut acc, &add);
             std::hint::black_box(&acc);
@@ -102,9 +168,9 @@ fn bench_fixed_point() {
     });
 }
 
-fn bench_hash_and_rng() {
-    bench("task_hash", || {
-        let n = 20_000_000u64;
+fn bench_hash_and_rng(out: &mut Vec<Component>) {
+    bench(out, "task_hash", || {
+        let n = scale(20_000_000);
         let mut acc = 0u32;
         for i in 0..n {
             acc = acc.wrapping_add(task_hash((i % 7) as u16, i as u32));
@@ -113,8 +179,8 @@ fn bench_hash_and_rng() {
         n
     });
     let mut rng = Rng::new(4);
-    bench("xoshiro256** next_u64", || {
-        let n = 50_000_000u64;
+    bench(out, "xoshiro256** next_u64", || {
+        let n = scale(50_000_000);
         let mut acc = 0u64;
         for _ in 0..n {
             acc = acc.wrapping_add(rng.next_u64());
@@ -124,14 +190,24 @@ fn bench_hash_and_rng() {
     });
 }
 
-fn bench_end_to_end() {
+/// The headline trajectory number: a seed-pinned 4-job × 8-worker dnn_a
+/// mix per policy, measured in delivered events per wall second.
+fn bench_end_to_end() -> Vec<EndToEnd> {
     println!();
-    for policy in [PolicyKind::Esa, PolicyKind::Atp, PolicyKind::SwitchMl] {
+    let tensor_bytes: u64 = if quick() { 1024 * 1024 } else { 4 * 1024 * 1024 };
+    let mut rows = Vec::new();
+    for policy in [
+        PolicyKind::Esa,
+        PolicyKind::Atp,
+        PolicyKind::SwitchMl,
+        PolicyKind::StrawAlways,
+        PolicyKind::StrawCoin,
+    ] {
         let mut cfg = ExperimentConfig::synthetic(policy, "dnn_a", 4, 8);
         cfg.iterations = 1;
         cfg.seed = 9;
         for j in &mut cfg.jobs {
-            j.tensor_bytes = Some(4 * 1024 * 1024);
+            j.tensor_bytes = Some(tensor_bytes);
         }
         let m = Simulation::run_experiment(cfg).unwrap();
         println!(
@@ -141,15 +217,92 @@ fn bench_end_to_end() {
             m.events,
             m.wall_secs
         );
+        rows.push(EndToEnd {
+            policy: policy.key(),
+            model: "dnn_a",
+            jobs: 4,
+            workers: 8,
+            iterations: 1,
+            seed: 9,
+            tensor_bytes,
+            events: m.events,
+            sim_ns: m.sim_ns,
+            wall_secs: m.wall_secs,
+            events_per_sec: m.events_per_sec(),
+        });
     }
+    rows
+}
+
+/// Hand-rolled JSON (the crate is offline-first: no serde). Keys are
+/// stable; floats are emitted with enough precision to diff runs.
+fn write_json(components: &[Component], e2e: &[EndToEnd]) -> std::io::Result<String> {
+    let mut s = String::with_capacity(4096);
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"esa-bench-hotpath/1\",\n");
+    s.push_str("  \"provenance\": \"measured\",\n");
+    s.push_str(&format!("  \"quick\": {},\n", quick()));
+    s.push_str("  \"components\": [\n");
+    for (i, c) in components.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"mops\": {:.3}}}{}\n",
+            c.name,
+            c.mops,
+            if i + 1 < components.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"end_to_end\": [\n");
+    for (i, r) in e2e.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"policy\": \"{}\", \"model\": \"{}\", \"jobs\": {}, \"workers\": {}, \
+             \"iterations\": {}, \"seed\": {}, \"tensor_bytes\": {}, \"events\": {}, \
+             \"sim_ns\": {}, \"wall_secs\": {:.4}, \"events_per_sec\": {:.1}}}{}\n",
+            r.policy,
+            r.model,
+            r.jobs,
+            r.workers,
+            r.iterations,
+            r.seed,
+            r.tensor_bytes,
+            r.events,
+            r.sim_ns,
+            r.wall_secs,
+            r.events_per_sec,
+            if i + 1 < e2e.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    // Benches run with cwd = rust/. Full runs refresh the tracked
+    // trajectory file at the repo root; quick (CI smoke) runs go to a
+    // scratch path so `ESA_BENCH_QUICK=1` can never clobber the
+    // committed baseline with 8×-shrunk numbers.
+    let path = if quick() {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/target/BENCH_hotpath.quick.json")
+    } else {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json")
+    };
+    std::fs::write(path, &s)?;
+    Ok(path.to_string())
 }
 
 fn main() {
-    println!("# hotpath micro-benchmarks (best of 3)");
-    bench_event_queue();
-    bench_switch_pipeline();
-    bench_transmit();
-    bench_fixed_point();
-    bench_hash_and_rng();
-    bench_end_to_end();
+    println!(
+        "# hotpath micro-benchmarks (best of 3{})",
+        if quick() { ", quick mode" } else { "" }
+    );
+    let mut components = Vec::new();
+    bench_event_queue(&mut components);
+    bench_switch_pipeline(&mut components);
+    bench_transmit(&mut components);
+    bench_fixed_point(&mut components);
+    bench_hash_and_rng(&mut components);
+    let e2e = bench_end_to_end();
+    match write_json(&components, &e2e) {
+        Ok(path) => println!("\nwrote {path}"),
+        Err(e) => {
+            eprintln!("failed to write BENCH_hotpath.json: {e}");
+            std::process::exit(1);
+        }
+    }
 }

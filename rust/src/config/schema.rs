@@ -53,6 +53,20 @@ impl PolicyKind {
         }
     }
 
+    /// Stable lowercase machine key — the canonical [`Self::parse`] form,
+    /// used wherever the policy is serialized (`BENCH_hotpath.json`).
+    /// [`Self::name`] is the human-facing display form.
+    pub fn key(&self) -> &'static str {
+        match self {
+            PolicyKind::Esa => "esa",
+            PolicyKind::Atp => "atp",
+            PolicyKind::SwitchMl => "switchml",
+            PolicyKind::StrawAlways => "straw1",
+            PolicyKind::StrawCoin => "straw2",
+            PolicyKind::HostPs => "hostps",
+        }
+    }
+
     /// Gradient lanes per packet (f32/i32 values). ATP/ESA carry 64 values
     /// in a 306 B packet; SwitchML carries 32 in a 180 B packet (§7.1.1).
     pub fn lanes(&self) -> usize {
@@ -303,6 +317,20 @@ impl ExperimentConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn policy_key_round_trips_through_parse() {
+        for p in [
+            PolicyKind::Esa,
+            PolicyKind::Atp,
+            PolicyKind::SwitchMl,
+            PolicyKind::StrawAlways,
+            PolicyKind::StrawCoin,
+            PolicyKind::HostPs,
+        ] {
+            assert_eq!(PolicyKind::parse(p.key()).unwrap(), p, "{p:?}");
+        }
+    }
 
     #[test]
     fn defaults_match_paper() {

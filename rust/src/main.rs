@@ -112,12 +112,14 @@ fn cmd_sim(args: &Args) -> Result<()> {
         )
     );
     println!(
-        "avg JCT {:.3} ms | events {} | sim {:.3} ms | wall {:.2} s ({:.1} M events/s){}",
+        "avg JCT {:.3} ms | events {} | sim {:.3} ms | wall {:.2} s ({:.1} M events/s) | \
+         transit {:.1} us{}",
         m.avg_jct_ms(),
         m.events,
         m.sim_ns as f64 / 1e6,
         m.wall_secs,
         m.events_per_sec() / 1e6,
+        m.avg_transit_ns / 1e3,
         if m.truncated { " | TRUNCATED" } else { "" }
     );
     // data-plane counters for the deep-dive view, one line per switch

@@ -1,8 +1,25 @@
 //! The discrete-event core: a time-ordered queue with deterministic
 //! tie-breaking (insertion sequence), the one invariant every simulation
 //! result in this repo rests on.
+//!
+//! Layout (DESIGN.md §9): packets live in a free-list slab
+//! ([`PacketSlab`]) and the priority heap holds only 24-byte `Entry`
+//! records — `(time, seq, tagged node, slot-or-key)` — so every
+//! heap sift moves three machine words instead of a ~100-byte
+//! `Event::Deliver`. The heap itself is a 4-ary array min-heap: shallower
+//! than a binary heap (log₄ vs log₂ levels) and its four children share
+//! one cache line of entries.
+//!
+//! **Determinism contract.** Events are popped in strictly increasing
+//! `(time, seq)` order, where `seq` is the schedule counter. That order is
+//! a *total* order (seq is unique), so it is independent of the heap's
+//! internal shape — swapping the binary heap for the 4-ary slab-backed
+//! core cannot change any simulation result, and the
+//! [`EventQueue::enable_shadow`] oracle makes that claim executable: it
+//! runs the pre-slab `BinaryHeap` core in lockstep and panics on the
+//! first divergence in pop order.
 
-use std::cmp::Ordering;
+use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::packet::Packet;
@@ -19,39 +36,114 @@ pub enum Event {
     Timer { node: NodeId, key: u64 },
 }
 
+/// Free-list slab of in-flight packets. Slots are recycled LIFO, so a
+/// steady-state simulation (schedule rate ≈ pop rate) touches the same
+/// few cache-warm slots over and over and never allocates after warm-up.
+pub struct PacketSlab {
+    slots: Vec<Option<Packet>>,
+    free: Vec<u32>,
+}
+
+impl Default for PacketSlab {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PacketSlab {
+    pub fn new() -> PacketSlab {
+        PacketSlab { slots: Vec::new(), free: Vec::new() }
+    }
+
+    /// Packets currently resident.
+    #[inline]
+    pub fn live(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// Allocated slot capacity (high-water mark of concurrent packets).
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Store `pkt`, returning its slot index.
+    #[inline]
+    pub fn insert(&mut self, pkt: Packet) -> u32 {
+        match self.free.pop() {
+            Some(i) => {
+                debug_assert!(self.slots[i as usize].is_none());
+                self.slots[i as usize] = Some(pkt);
+                i
+            }
+            None => {
+                self.slots.push(Some(pkt));
+                (self.slots.len() - 1) as u32
+            }
+        }
+    }
+
+    /// Take the packet out of `slot`, freeing it for reuse.
+    #[inline]
+    pub fn remove(&mut self, slot: u32) -> Packet {
+        let pkt = self.slots[slot as usize].take().expect("empty slab slot");
+        self.free.push(slot);
+        pkt
+    }
+}
+
+/// High bit of the node tag marks a timer entry; the low 31 bits are the
+/// node id (node counts are tiny — racks + hosts — so bit 31 is free).
+const TIMER_TAG: u32 = 1 << 31;
+
+/// One heap record: 24 bytes, `Copy`, no payload. `payload` is the timer
+/// key for timers and the [`PacketSlab`] slot for deliveries.
+#[derive(Clone, Copy)]
 struct Entry {
     time: SimTime,
-    seq: u64,
-    event: Event,
+    /// Truncated schedule counter; ties on `time` break by wrapping
+    /// sequence order, which equals true insertion order as long as
+    /// concurrent same-time entries span < 2³¹ schedules (the queue would
+    /// need billions of co-resident events to violate that).
+    seq: u32,
+    tag: u32,
+    payload: u64,
 }
 
-impl PartialEq for Entry {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl Eq for Entry {}
-impl PartialOrd for Entry {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Entry {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap: invert so earliest (time, seq) pops first.
-        other
-            .time
-            .cmp(&self.time)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
+// The whole point of the slab split: heap sifts move 24 bytes, not a
+// full packet. Keep it that way.
+const _: () = assert!(std::mem::size_of::<Entry>() == 24);
+
+/// `(time, seq)` strict order — the determinism contract. Wrapping
+/// comparison on `seq` keeps ties correct across u32 counter wrap.
+#[inline]
+fn before(a: Entry, b: Entry) -> bool {
+    a.time < b.time || (a.time == b.time && (a.seq.wrapping_sub(b.seq) as i32) < 0)
 }
 
-/// Deterministic min-heap event queue.
+/// Children per heap node. 4-ary: one extra compare per level buys half
+/// the levels and keeps sibling entries within a cache line or two.
+const ARITY: usize = 4;
+
+/// Deterministic min-heap event queue (slab-backed 4-ary heap).
 pub struct EventQueue {
-    heap: BinaryHeap<Entry>,
-    next_seq: u64,
+    heap: Vec<Entry>,
+    slab: PacketSlab,
+    /// Total schedules ever (un-truncated); entries store the low 32
+    /// bits as their tie-break `seq`.
+    scheduled: u64,
     now: SimTime,
     processed: u64,
+    /// Release-profile schedules that targeted the past and were clamped
+    /// to `now` (debug builds assert instead). Surfaced in
+    /// `ExperimentMetrics::past_schedules`.
+    past_schedules: u64,
+    /// Differential-test oracle: the pre-slab binary-heap core run in
+    /// lockstep (`enable_shadow`). Keyed on the *un-truncated* schedule
+    /// counter so plain tuple order equals true insertion order even
+    /// across u32 seq wrap. `None` in production — one branch on the hot
+    /// path.
+    shadow: Option<Box<BinaryHeap<Reverse<(SimTime, u64)>>>>,
 }
 
 impl Default for EventQueue {
@@ -63,10 +155,13 @@ impl Default for EventQueue {
 impl EventQueue {
     pub fn new() -> EventQueue {
         EventQueue {
-            heap: BinaryHeap::with_capacity(1 << 16),
-            next_seq: 0,
+            heap: Vec::with_capacity(1 << 16),
+            slab: PacketSlab::new(),
+            scheduled: 0,
             now: 0,
             processed: 0,
+            past_schedules: 0,
+            shadow: None,
         }
     }
 
@@ -82,6 +177,19 @@ impl EventQueue {
         self.processed
     }
 
+    /// Release-profile past-schedule clamps observed (0 in a healthy run;
+    /// debug builds panic at the offending call site instead).
+    #[inline]
+    pub fn past_schedules(&self) -> u64 {
+        self.past_schedules
+    }
+
+    /// The packet slab (occupancy introspection for tests/benches).
+    #[inline]
+    pub fn slab(&self) -> &PacketSlab {
+        &self.slab
+    }
+
     #[inline]
     pub fn len(&self) -> usize {
         self.heap.len()
@@ -92,30 +200,136 @@ impl EventQueue {
         self.heap.is_empty()
     }
 
+    /// Run the pre-slab `BinaryHeap` event core in lockstep from here on:
+    /// every pop asserts both cores agree on `(time, seq)`. This is the
+    /// golden-determinism oracle (tests only — it doubles queue work).
+    pub fn enable_shadow(&mut self) {
+        let mut shadow = BinaryHeap::with_capacity(self.heap.len());
+        // Live entries hold truncated seqs; recover the full counter from
+        // the signed offset to `scheduled` (valid under the same < 2³¹
+        // co-resident-span invariant the core's tie-break rests on).
+        for e in &self.heap {
+            let delta = e.seq.wrapping_sub(self.scheduled as u32) as i32 as i64;
+            shadow.push(Reverse((e.time, self.scheduled.wrapping_add(delta as u64))));
+        }
+        self.shadow = Some(Box::new(shadow));
+    }
+
     /// Schedule `event` at absolute time `at` (must not precede `now`).
+    ///
+    /// Debug builds assert on past scheduling; release builds saturate the
+    /// time to `now` and count the violation in [`Self::past_schedules`]
+    /// so a misbehaving actor is visible in `ExperimentMetrics` rather
+    /// than silently reordering history.
     #[inline]
     pub fn schedule(&mut self, at: SimTime, event: Event) {
         debug_assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
-        let seq = self.next_seq;
-        self.next_seq += 1;
-        self.heap.push(Entry { time: at.max(self.now), seq, event });
+        let at = if at < self.now {
+            self.past_schedules += 1;
+            self.now
+        } else {
+            at
+        };
+        let seq64 = self.scheduled;
+        self.scheduled = self.scheduled.wrapping_add(1);
+        let seq = seq64 as u32;
+        let (tag, payload) = match event {
+            Event::Deliver { at: node, pkt } => {
+                debug_assert_eq!(node & TIMER_TAG, 0, "node id overflows the tag");
+                (node, self.slab.insert(pkt) as u64)
+            }
+            Event::Timer { node, key } => {
+                debug_assert_eq!(node & TIMER_TAG, 0, "node id overflows the tag");
+                (node | TIMER_TAG, key)
+            }
+        };
+        if let Some(shadow) = &mut self.shadow {
+            shadow.push(Reverse((at, seq64)));
+        }
+        self.heap.push(Entry { time: at, seq, tag, payload });
+        self.sift_up(self.heap.len() - 1);
     }
 
     /// Pop the earliest event, advancing `now`.
     #[inline]
     pub fn pop(&mut self) -> Option<(SimTime, Event)> {
-        let e = self.heap.pop()?;
+        let len = self.heap.len();
+        if len == 0 {
+            return None;
+        }
+        let e = self.heap[0];
+        let last = self.heap.pop().expect("len checked above");
+        if len > 1 {
+            self.heap[0] = last;
+            self.sift_down(0);
+        }
+        if let Some(shadow) = &mut self.shadow {
+            let Reverse((t, s)) = shadow.pop().expect("shadow core drained early");
+            assert_eq!(
+                (t, s as u32),
+                (e.time, e.seq),
+                "event-core divergence: binary-heap oracle would pop ({t}, {s})"
+            );
+        }
         debug_assert!(e.time >= self.now);
         self.now = e.time;
         self.processed += 1;
-        Some((e.time, e.event))
+        let event = if e.tag & TIMER_TAG != 0 {
+            Event::Timer { node: e.tag & !TIMER_TAG, key: e.payload }
+        } else {
+            Event::Deliver { at: e.tag, pkt: self.slab.remove(e.payload as u32) }
+        };
+        Some((e.time, event))
+    }
+
+    /// Hole-insertion sift toward the root (entries are `Copy`: one read,
+    /// k parent moves, one write — no swaps).
+    #[inline]
+    fn sift_up(&mut self, mut pos: usize) {
+        let e = self.heap[pos];
+        while pos > 0 {
+            let parent = (pos - 1) / ARITY;
+            if before(e, self.heap[parent]) {
+                self.heap[pos] = self.heap[parent];
+                pos = parent;
+            } else {
+                break;
+            }
+        }
+        self.heap[pos] = e;
+    }
+
+    #[inline]
+    fn sift_down(&mut self, mut pos: usize) {
+        let e = self.heap[pos];
+        let len = self.heap.len();
+        loop {
+            let first = ARITY * pos + 1;
+            if first >= len {
+                break;
+            }
+            let mut min = first;
+            let last = (first + ARITY).min(len);
+            for c in first + 1..last {
+                if before(self.heap[c], self.heap[min]) {
+                    min = c;
+                }
+            }
+            if before(self.heap[min], e) {
+                self.heap[pos] = self.heap[min];
+                pos = min;
+            } else {
+                break;
+            }
+        }
+        self.heap[pos] = e;
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::packet::{Packet, PacketKind};
+    use crate::packet::{Packet, PacketKind, UNSTAMPED};
 
     fn pkt(dst: NodeId) -> Packet {
         Packet {
@@ -133,7 +347,7 @@ mod tests {
             resend: false,
             ecn: false,
             values: None,
-            sent_at: 0,
+            sent_at: UNSTAMPED,
         }
     }
 
@@ -184,6 +398,72 @@ mod tests {
     }
 
     #[test]
+    fn deliveries_round_trip_the_slab() {
+        let mut q = EventQueue::new();
+        q.schedule(10, Event::Deliver { at: 7, pkt: pkt(7) });
+        q.schedule(20, Event::Deliver { at: 9, pkt: pkt(9) });
+        assert_eq!(q.slab().live(), 2);
+        match q.pop() {
+            Some((10, Event::Deliver { at: 7, pkt })) => assert_eq!(pkt.dst, 7),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(q.slab().live(), 1);
+        match q.pop() {
+            Some((20, Event::Deliver { at: 9, pkt })) => assert_eq!(pkt.dst, 9),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(q.slab().live(), 0);
+    }
+
+    #[test]
+    fn slab_recycles_slots_without_growing() {
+        let mut q = EventQueue::new();
+        // steady state: schedule/pop in lockstep — the slab must stay at
+        // its high-water capacity and recycle slots
+        for i in 0..4u64 {
+            q.schedule(i, Event::Deliver { at: 0, pkt: pkt(0) });
+        }
+        let cap = q.slab().capacity();
+        for i in 4..10_000u64 {
+            q.pop();
+            q.schedule(i, Event::Deliver { at: 0, pkt: pkt(0) });
+        }
+        assert_eq!(q.slab().capacity(), cap, "steady state must not grow the slab");
+        while q.pop().is_some() {}
+        assert_eq!(q.slab().live(), 0);
+    }
+
+    /// The golden-determinism differential: random interleavings of
+    /// schedules (with heavy ties) and pops through the 4-ary slab core
+    /// with the binary-heap shadow oracle asserting identical pop order.
+    #[test]
+    fn four_ary_heap_matches_binary_heap_order() {
+        let mut rng = crate::util::rng::Rng::new(0xD1FF);
+        for round in 0..50 {
+            let mut q = EventQueue::new();
+            q.enable_shadow();
+            let mut live = 0u64;
+            for _ in 0..2_000 {
+                if live > 0 && rng.chance(0.45) {
+                    q.pop().unwrap();
+                    live -= 1;
+                } else {
+                    // coarse times force frequent (time, seq) ties
+                    let t = q.now() + rng.next_below(8);
+                    if rng.chance(0.3) {
+                        q.schedule(t, Event::Deliver { at: 3, pkt: pkt(3) });
+                    } else {
+                        q.schedule(t, Event::Timer { node: 0, key: live });
+                    }
+                    live += 1;
+                }
+            }
+            while q.pop().is_some() {}
+            assert!(q.is_empty(), "round {round}");
+        }
+    }
+
+    #[test]
     #[should_panic(expected = "scheduling into the past")]
     #[cfg(debug_assertions)]
     fn scheduling_into_past_panics_in_debug() {
@@ -191,5 +471,25 @@ mod tests {
         q.schedule(10, Event::Timer { node: 0, key: 0 });
         q.pop();
         q.schedule(5, Event::Timer { node: 0, key: 1 });
+    }
+
+    /// Release profile: past schedules saturate to `now`, are counted,
+    /// and still pop in a legal order (`cargo test --release` covers this
+    /// half of the schedule-clamp contract; the debug half is the
+    /// should-panic test above).
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn scheduling_into_past_clamps_and_counts_in_release() {
+        let mut q = EventQueue::new();
+        q.schedule(10, Event::Timer { node: 0, key: 0 });
+        q.pop();
+        assert_eq!(q.past_schedules(), 0);
+        q.schedule(5, Event::Timer { node: 0, key: 1 });
+        q.schedule(12, Event::Timer { node: 0, key: 2 });
+        assert_eq!(q.past_schedules(), 1, "exactly one clamp");
+        let (t1, _) = q.pop().unwrap();
+        assert_eq!(t1, 10, "clamped event fires at now, not in the past");
+        let (t2, _) = q.pop().unwrap();
+        assert_eq!(t2, 12);
     }
 }

@@ -16,7 +16,7 @@ pub mod topology;
 
 use crate::config::NetworkConfig;
 
-use crate::packet::{Packet, PacketKind};
+use crate::packet::{Packet, PacketKind, UNSTAMPED};
 use crate::util::rng::Rng;
 use crate::{NodeId, SimTime};
 
@@ -32,6 +32,13 @@ pub struct NetStats {
     pub delivered: u64,
     pub dropped: u64,
     pub bytes_sent: u64,
+    /// Sum of first-transmit → final-delivery wire latency (ns) over
+    /// packets that reached their destination, and their count: the
+    /// average in-network transit time. Depends on `sent_at` being
+    /// stamped exactly once (see `packet::UNSTAMPED` — the old `== 0`
+    /// sentinel re-stamped t=0 packets on every hop, shrinking this).
+    pub transit_ns_total: u64,
+    pub transit_pkts: u64,
     pub gradient_pkts: u64,
     /// Rack → edge uplink partials (two-tier fabrics only).
     pub rack_partial_pkts: u64,
@@ -123,10 +130,19 @@ impl Net {
             self.stats.dropped += 1;
             return;
         }
-        if pkt.sent_at == 0 {
+        // Stamp on first transmit only. The sentinel is UNSTAMPED, not 0:
+        // a packet first sent at t=0 is legitimately stamped 0 and must
+        // keep that stamp on every later hop (re-stamping skewed the
+        // transit accounting below for the very first window).
+        if pkt.sent_at == UNSTAMPED {
             pkt.sent_at = now;
         }
         let arrive = depart + self.hop_latency;
+        if next == pkt.dst {
+            // final hop: the packet's whole wire life is now known
+            self.stats.transit_ns_total += arrive - pkt.sent_at;
+            self.stats.transit_pkts += 1;
+        }
         self.stats.delivered += 1;
         self.queue.schedule(arrive, Event::Deliver { at: next, pkt });
     }
@@ -135,6 +151,15 @@ impl Net {
     #[inline]
     pub fn timer(&mut self, at: SimTime, node: NodeId, key: u64) {
         self.queue.schedule(at, Event::Timer { node, key });
+    }
+
+    /// Average first-transmit → final-delivery wire latency (ns) over
+    /// packets that reached their destination.
+    pub fn avg_transit_ns(&self) -> f64 {
+        if self.stats.transit_pkts == 0 {
+            return 0.0;
+        }
+        self.stats.transit_ns_total as f64 / self.stats.transit_pkts as f64
     }
 
     /// Earliest time the egress link `from -> next_hop(from, dst)` frees up
@@ -219,6 +244,28 @@ mod tests {
             Event::Deliver { at, .. } => assert_eq!(at, 2),
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn first_transmit_at_t0_keeps_its_stamp_on_later_hops() {
+        let mut net = mknet(0.0);
+        let pkt = grad(1, 2); // host -> host: routes via the switch
+        assert_eq!(pkt.sent_at, UNSTAMPED);
+        net.transmit(1, pkt);
+        assert_eq!(net.stats.transit_pkts, 0, "transit hop is not the final hop");
+        let (_, ev) = net.queue.pop().unwrap();
+        let Event::Deliver { at: 0, pkt } = ev else { panic!() };
+        assert_eq!(pkt.sent_at, 0, "first hop left at t=0, stamped 0");
+        net.transmit(0, pkt); // second hop departs later — must NOT re-stamp
+        let (t2, ev) = net.queue.pop().unwrap();
+        let Event::Deliver { pkt, .. } = ev else { panic!() };
+        assert_eq!(pkt.sent_at, 0, "t=0 stamp survives the second hop");
+        // transit accounting covers the WHOLE wire life; the old `== 0`
+        // sentinel re-stamped this packet at hop 2 and counted only the
+        // second leg
+        assert_eq!(net.stats.transit_pkts, 1);
+        assert_eq!(net.stats.transit_ns_total, t2, "full path latency, not one leg");
+        assert_eq!(net.avg_transit_ns(), t2 as f64);
     }
 
     #[test]

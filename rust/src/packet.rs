@@ -13,6 +13,12 @@
 
 use crate::{JobId, NodeId, SimTime};
 
+/// Sentinel for "this packet has not been put on the wire yet". The
+/// fabric stamps `sent_at` on first transmit; `0` is a *valid* stamp (a
+/// packet can legitimately first transmit at t=0), so the sentinel lives
+/// at the other end of the time axis.
+pub const UNSTAMPED: SimTime = SimTime::MAX;
+
 /// What a packet is, which determines how each actor handles it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PacketKind {
@@ -80,7 +86,8 @@ pub struct Packet {
     pub ecn: bool,
     /// Fixed-point payload lanes; `None` in timing-only simulations.
     pub values: Option<Box<[i32]>>,
-    /// Time the packet was first sent (for RTT estimation).
+    /// Time the packet was first put on the wire (for RTT estimation);
+    /// [`UNSTAMPED`] until the fabric stamps it on first transmit.
     pub sent_at: SimTime,
 }
 
@@ -113,7 +120,7 @@ impl Packet {
             resend: false,
             ecn: false,
             values: None,
-            sent_at: 0,
+            sent_at: UNSTAMPED,
         }
     }
 
@@ -140,7 +147,7 @@ impl Packet {
             resend: false,
             ecn: false,
             values: None,
-            sent_at: 0,
+            sent_at: UNSTAMPED,
         }
     }
 

@@ -18,7 +18,7 @@
 
 use std::collections::{BTreeMap, HashMap};
 
-use crate::packet::{Packet, PacketKind};
+use crate::packet::{Packet, PacketKind, UNSTAMPED};
 use crate::util::fixed::agg_add_slice;
 use crate::{JobId, NodeId, SimTime, MSEC};
 
@@ -341,7 +341,7 @@ impl Ps {
                 resend: false,
                 ecn: false,
                 values,
-                sent_at: 0,
+                sent_at: UNSTAMPED,
             });
             return;
         }
@@ -449,7 +449,7 @@ impl Ps {
                     resend: false,
                     ecn: false,
                     values: None,
-                    sent_at: 0,
+                    sent_at: UNSTAMPED,
                 });
             }
         }
@@ -487,7 +487,7 @@ impl Ps {
             resend: false,
             ecn: false,
             values: entry.values.clone(),
-            sent_at: 0,
+            sent_at: UNSTAMPED,
         });
         // cache bounded completed results
         js.completed.insert(seq, entry.values);
@@ -596,7 +596,7 @@ mod tests {
             resend: false,
             ecn: false,
             values: values.map(|v| v.into_boxed_slice()),
-            sent_at: 0,
+            sent_at: UNSTAMPED,
         }
     }
 

@@ -117,6 +117,15 @@ pub struct ExperimentMetrics {
     pub sim_ns: SimTime,
     /// Events processed (perf accounting).
     pub events: u64,
+    /// Schedules that targeted the past and were clamped to `now` by the
+    /// event queue (release profile; debug builds assert at the call
+    /// site). Nonzero means an actor computed a stale timestamp — the
+    /// run completed but deserves a look.
+    pub past_schedules: u64,
+    /// Average first-transmit → final-delivery wire latency (ns) across
+    /// all delivered packets — the fabric-level congestion observable
+    /// (depends on the stamp-once `sent_at` discipline).
+    pub avg_transit_ns: f64,
     /// Wall-clock seconds the simulation took (perf accounting).
     pub wall_secs: f64,
     /// True if the run hit `max_sim_ns` before all jobs finished.
@@ -222,6 +231,8 @@ mod tests {
             switches: Vec::new(),
             sim_ns: 4_000_000,
             events: 1000,
+            past_schedules: 0,
+            avg_transit_ns: 0.0,
             wall_secs: 0.5,
             truncated: false,
         };

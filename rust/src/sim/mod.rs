@@ -35,12 +35,59 @@ use crate::{JobId, NodeId};
 
 pub use metrics::{ExperimentMetrics, JobMetrics, SwitchReport};
 
+/// Disjoint RNG stream labels per actor class. The seed's scheme aliased
+/// labels across classes at scale (worker `100 + idx` hit the edge's
+/// `199` at idx 99 and the rack switches' `200 + r` from idx 100).
+/// Streams stayed distinct only because `Rng::split` folds the root's
+/// call sequence into each child seed — an accident of the current
+/// implementation, not a guarantee; the label is meant to be the
+/// identity that separates call sites. Unique labels make independence
+/// a property the type system of this module can pin (see the
+/// disjointness test) instead of one inherited from call order, so
+/// reordering construction can never silently correlate actor noise.
+/// Worker labels keep the seed's `100 + idx` so existing worker streams
+/// are preserved; switch classes moved to a high namespace no realistic
+/// worker count can reach.
+mod rng_stream {
+    /// Fabric loss injection.
+    pub const NET: u64 = 1;
+    /// Rack switch 0 (or the lone root switch) — the seed's label, so
+    /// `racks = 1` replays single-switch seed runs stream-for-stream.
+    const RACK0: u64 = 2;
+    /// Job start spread.
+    pub const START: u64 = 3;
+    /// Workers: `WORKER_BASE + global index` (the seed's assignment).
+    const WORKER_BASE: u64 = 100;
+    /// Rack switches `r >= 1`: `RACK_BASE + r`, far above any worker.
+    const RACK_BASE: u64 = 1 << 40;
+    /// The second-tier edge switch of a multi-rack fabric.
+    pub const EDGE: u64 = RACK_BASE - 1;
+
+    pub fn worker(idx: usize) -> u64 {
+        let label = WORKER_BASE + idx as u64;
+        assert!(label < EDGE, "worker index {idx} overflows its rng namespace");
+        label
+    }
+
+    pub fn rack(r: usize) -> u64 {
+        if r == 0 {
+            RACK0
+        } else {
+            RACK_BASE + r as u64
+        }
+    }
+}
+
 #[derive(Debug, Clone, Copy)]
 enum ActorRef {
     Switch,
     Worker(u32),
     Ps(u32),
 }
+
+/// Initial capacity of the persistent dispatch out-buffer; the buffer
+/// must never fall below it (DESIGN.md §9 buffer discipline).
+const OUT_BUF_CAP: usize = 64;
 
 /// A fully wired simulated experiment.
 pub struct Simulation {
@@ -153,13 +200,13 @@ impl Simulation {
             });
         }
 
-        let mut net = Net::new(topo, cfg.net.clone(), root.split(1));
+        let mut net = Net::new(topo, cfg.net.clone(), root.split(rng_stream::NET));
 
         // Switches. Rack 0 (or the lone root switch) keeps the seed's rng
         // stream order so `racks = 1` replays single-switch runs exactly.
         let mut switches = Vec::with_capacity(racks);
         for (r, wiring) in rack_wirings.into_iter().enumerate() {
-            let rng = if r == 0 { root.split(2) } else { root.split(200 + r as u64) };
+            let rng = root.split(rng_stream::rack(r));
             let mut sw = Switch::new(r as NodeId, cfg.policy, pool_slots, wiring, rng);
             sw.set_age_gate(cfg.net.base_rtt_ns);
             if racks > 1 {
@@ -168,8 +215,13 @@ impl Simulation {
             switches.push(sw);
         }
         let edge = if racks > 1 {
-            let mut sw =
-                Switch::new(SWITCH_NODE, cfg.policy, pool_slots, edge_wiring, root.split(199));
+            let mut sw = Switch::new(
+                SWITCH_NODE,
+                cfg.policy,
+                pool_slots,
+                edge_wiring,
+                root.split(rng_stream::EDGE),
+            );
             sw.set_age_gate(cfg.net.base_rtt_ns);
             sw.set_tier(SwitchTier::Edge);
             Some(sw)
@@ -204,7 +256,7 @@ impl Simulation {
                         region_cap,
                     },
                     Arc::clone(model),
-                    root.split(100 + workers.len() as u64),
+                    root.split(rng_stream::worker(workers.len())),
                 ));
             }
             job_workers.push((lo, workers.len()));
@@ -226,7 +278,7 @@ impl Simulation {
         }
 
         // schedule job starts: spec offset + U(0, start_spread)
-        let mut start_rng = root.split(3);
+        let mut start_rng = root.split(rng_stream::START);
         for (j, spec) in cfg.jobs.iter().enumerate() {
             let spread = if cfg.start_spread_ns > 0 {
                 start_rng.next_below(cfg.start_spread_ns)
@@ -249,7 +301,7 @@ impl Simulation {
             node_actor,
             models,
             job_workers,
-            out_buf: Vec::with_capacity(64),
+            out_buf: Vec::with_capacity(OUT_BUF_CAP),
             recirc_buf: Vec::new(),
             truncated: false,
         })
@@ -307,6 +359,12 @@ impl Simulation {
             return;
         }
         debug_assert!(self.recirc_buf.is_empty());
+        // Buffer discipline (DESIGN.md §9): borrow the persistent buffer
+        // for the whole recirculation loop and put it back — drained but
+        // with its capacity intact — when done. `mem::take` per pass left
+        // a fresh zero-capacity Vec behind, re-allocating on every event.
+        let mut out = std::mem::take(&mut self.out_buf);
+        debug_assert!(out.is_empty());
         let mut pending = pkt;
         loop {
             let use_edge = node == SWITCH_NODE
@@ -318,16 +376,15 @@ impl Simulation {
                     }
                     _ => false,
                 };
-            self.out_buf.clear();
             if use_edge {
                 self.edge
                     .as_mut()
                     .expect("use_edge implies edge")
-                    .handle(now, pending, &mut self.out_buf);
+                    .handle(now, pending, &mut out);
             } else {
-                self.switches[node as usize].handle(now, pending, &mut self.out_buf);
+                self.switches[node as usize].handle(now, pending, &mut out);
             }
-            for o in std::mem::take(&mut self.out_buf) {
+            for o in out.drain(..) {
                 if o.dst == node {
                     self.recirc_buf.push(o);
                 } else {
@@ -339,10 +396,19 @@ impl Simulation {
                 None => break,
             }
         }
+        self.out_buf = out;
+        debug_assert!(
+            self.out_buf.capacity() >= OUT_BUF_CAP,
+            "dispatch out-buffer lost its capacity: the hot path is allocating again"
+        );
     }
 
     /// Dispatch one event. Returns false when the queue is exhausted.
-    fn step(&mut self) -> bool {
+    ///
+    /// Public for perf tooling and the allocation-discipline tests, which
+    /// need to observe the simulation mid-flight; experiment code should
+    /// call [`Self::run`].
+    pub fn step(&mut self) -> bool {
         let Some((now, ev)) = self.net.queue.pop() else {
             return false;
         };
@@ -353,16 +419,7 @@ impl Simulation {
                     self.workers[i as usize].handle(&mut self.net, pkt);
                 }
                 ActorRef::Ps(i) => {
-                    let ps = &mut self.pses[i as usize];
-                    self.out_buf.clear();
-                    ps.handle(now, pkt, &mut self.out_buf);
-                    let node = ps.node;
-                    if ps.needs_scan_timer() {
-                        self.net.timer(now + SCAN_INTERVAL_NS, node, TIMER_SCAN);
-                    }
-                    for p in std::mem::take(&mut self.out_buf) {
-                        self.net.transmit(node, p);
-                    }
+                    self.dispatch_ps(i, now, |ps, t, out| ps.handle(t, pkt, out));
                 }
             },
             Event::Timer { node, key } => match self.node_actor[node as usize] {
@@ -371,21 +428,39 @@ impl Simulation {
                 }
                 ActorRef::Ps(i) => {
                     debug_assert_eq!(key, TIMER_SCAN);
-                    let ps = &mut self.pses[i as usize];
-                    self.out_buf.clear();
-                    ps.on_scan(now, &mut self.out_buf);
-                    let node = ps.node;
-                    if ps.needs_scan_timer() {
-                        self.net.timer(now + SCAN_INTERVAL_NS, node, TIMER_SCAN);
-                    }
-                    for p in std::mem::take(&mut self.out_buf) {
-                        self.net.transmit(node, p);
-                    }
+                    self.dispatch_ps(i, now, |ps, t, out| {
+                        ps.on_scan(t, out);
+                    });
                 }
                 ActorRef::Switch => {}
             },
         }
         true
+    }
+
+    /// Run one PS callback under the shared buffer discipline: borrow the
+    /// persistent out-buffer, re-arm the scan timer if needed, transmit
+    /// everything emitted, and restore the buffer with capacity intact.
+    fn dispatch_ps<F>(&mut self, i: u32, now: crate::SimTime, f: F)
+    where
+        F: FnOnce(&mut Ps, crate::SimTime, &mut Vec<Packet>),
+    {
+        let ps = &mut self.pses[i as usize];
+        let mut out = std::mem::take(&mut self.out_buf);
+        debug_assert!(out.is_empty());
+        f(ps, now, &mut out);
+        let node = ps.node;
+        if ps.needs_scan_timer() {
+            self.net.timer(now + SCAN_INTERVAL_NS, node, TIMER_SCAN);
+        }
+        for p in out.drain(..) {
+            self.net.transmit(node, p);
+        }
+        self.out_buf = out;
+        debug_assert!(
+            self.out_buf.capacity() >= OUT_BUF_CAP,
+            "dispatch out-buffer lost its capacity: the hot path is allocating again"
+        );
     }
 
     /// Run to completion (all jobs done, queue exhausted, or time cap).
@@ -464,6 +539,8 @@ impl Simulation {
             switches,
             sim_ns: self.net.now(),
             events: self.net.queue.processed(),
+            past_schedules: self.net.queue.past_schedules(),
+            avg_transit_ns: self.net.avg_transit_ns(),
             wall_secs,
             truncated: self.truncated,
         }
@@ -597,6 +674,25 @@ mod tests {
         let mut sim = Simulation::new(cfg).unwrap();
         let m = sim.run();
         assert!(m.sim_ns >= 5 * crate::MSEC);
+    }
+
+    #[test]
+    fn rng_stream_labels_are_disjoint_across_actor_classes() {
+        // The seed aliased labels at scale: worker 99 reused label 199
+        // (the edge's) and workers 100+ reused 200+r (the rack
+        // switches'). Pin the namespaces apart for any plausible fleet so
+        // stream independence never rests on split-call order.
+        use std::collections::HashSet;
+        let mut seen = HashSet::new();
+        assert!(seen.insert(super::rng_stream::NET));
+        assert!(seen.insert(super::rng_stream::START));
+        assert!(seen.insert(super::rng_stream::EDGE));
+        for r in 0..64 {
+            assert!(seen.insert(super::rng_stream::rack(r)), "rack {r} label collides");
+        }
+        for w in 0..100_000 {
+            assert!(seen.insert(super::rng_stream::worker(w)), "worker {w} label collides");
+        }
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub mod aggregator;
 pub mod policy;
 
 use crate::config::PolicyKind;
-use crate::packet::{Packet, PacketKind};
+use crate::packet::{Packet, PacketKind, UNSTAMPED};
 use crate::util::rng::Rng;
 use crate::{JobId, NodeId, SimTime};
 
@@ -315,7 +315,7 @@ impl Switch {
                         resend: false,
                         ecn: false,
                         values,
-                        sent_at: 0,
+                        sent_at: UNSTAMPED,
                     });
                 }
                 return;
@@ -389,7 +389,7 @@ impl Switch {
                     resend: false,
                     ecn: false,
                     values: evicted_values,
-                    sent_at: 0,
+                    sent_at: UNSTAMPED,
                 });
                 if self.pool[idx].complete() {
                     self.complete_slot(now, idx, out);
@@ -427,7 +427,7 @@ impl Switch {
                     resend: false,
                     ecn: false,
                     values,
-                    sent_at: 0,
+                    sent_at: UNSTAMPED,
                 });
                 return;
             }
@@ -451,7 +451,7 @@ impl Switch {
                 resend: false,
                 ecn: false,
                 values,
-                sent_at: 0,
+                sent_at: UNSTAMPED,
             });
         }
         if pkt.bitmap & flushed_bitmap == 0 {
@@ -514,7 +514,7 @@ impl Switch {
             resend: false,
             ecn: false,
             values,
-            sent_at: 0,
+            sent_at: UNSTAMPED,
         });
     }
 
@@ -557,7 +557,7 @@ impl Switch {
                 resend: false,
                 ecn: false,
                 values,
-                sent_at: 0,
+                sent_at: UNSTAMPED,
             });
             if self.policy.kind != PolicyKind::Atp {
                 self.stats.busy_ns += self.pool[idx].deallocate(now);
@@ -582,7 +582,7 @@ impl Switch {
                 resend: false,
                 ecn: false,
                 values,
-                sent_at: 0,
+                sent_at: UNSTAMPED,
             });
             return;
         }
@@ -604,7 +604,7 @@ impl Switch {
                 resend: false,
                 ecn: false,
                 values: values.clone(),
-                sent_at: 0,
+                sent_at: UNSTAMPED,
             });
         }
         self.stats.busy_ns += self.pool[idx].deallocate(now);

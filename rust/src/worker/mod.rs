@@ -27,7 +27,7 @@ use std::sync::Arc;
 use crate::config::PolicyKind;
 use crate::job::JobModel;
 use crate::net::Net;
-use crate::packet::{Packet, PacketKind};
+use crate::packet::{Packet, PacketKind, UNSTAMPED};
 use crate::ps::{RttEstimator, RTO_MIN_NS};
 use crate::util::rng::Rng;
 use crate::worker::priority::{priority_for, PriorityInputs};
@@ -607,7 +607,7 @@ impl Worker {
                 resend: false,
                 ecn: false,
                 values: values.clone(),
-                sent_at: 0,
+                sent_at: UNSTAMPED,
             };
             net.transmit(self.cfg.node, reply);
             return;
@@ -642,7 +642,7 @@ impl Worker {
                 resend: false,
                 ecn: false,
                 values,
-                sent_at: 0,
+                sent_at: UNSTAMPED,
             };
             net.transmit(self.cfg.node, reply);
             return;
@@ -666,7 +666,7 @@ impl Worker {
             resend: false,
             ecn: false,
             values: self.payload_slice(rel),
-            sent_at: 0,
+            sent_at: UNSTAMPED,
         };
         self.sent[rel as usize] = true;
         net.transmit(self.cfg.node, retr);
@@ -817,7 +817,7 @@ mod tests {
             resend: false,
             ecn: false,
             values: None,
-            sent_at: 0,
+            sent_at: UNSTAMPED,
         }
     }
 
@@ -958,7 +958,7 @@ mod tests {
             resend: false,
             ecn: false,
             values: None,
-            sent_at: 0,
+            sent_at: UNSTAMPED,
         };
         w.handle(&mut net, nack);
         let sends = drain_sends(&mut net);
@@ -987,7 +987,7 @@ mod tests {
             resend: false,
             ecn: false,
             values: None,
-            sent_at: 0,
+            sent_at: UNSTAMPED,
         };
         w.handle(&mut net, nack);
         let sends = drain_sends(&mut net);

@@ -170,6 +170,83 @@ fn racks_one_is_the_single_switch_star() {
     assert!(st.completions > 0, "the root still aggregates normally");
 }
 
+// ---------------------------------------------------------------------
+// Golden determinism: the event-core swap must be invisible
+// ---------------------------------------------------------------------
+
+/// The slab-backed 4-ary heap must be bit-identical to the pre-swap
+/// binary-heap core for every policy at both fabric shapes. Two layers of
+/// evidence per config:
+///
+/// 1. `enable_shadow()` runs the old `BinaryHeap` core in lockstep inside
+///    the queue and panics on the first pop-order divergence — the
+///    executable form of "before vs after the swap";
+/// 2. two independent runs must agree on `sim_ns` / `events` /
+///    `avg_jct_ms` to the bit.
+///
+/// Scope: this pins the *event-core* swap. Comparing against a pre-PR
+/// checkout is additionally exact for every `racks = 1` config and for
+/// all non-StrawCoin policies at `racks >= 2`; StrawCoin multi-rack runs
+/// legitimately differ from pre-PR because the same PR renamespaces the
+/// edge/rack-switch RNG labels its coin flips draw from (the one actor
+/// class that samples switch randomness — see `sim::rng_stream`).
+#[test]
+fn golden_event_core_swap_is_bit_identical_for_all_policies() {
+    for policy in [
+        PolicyKind::Esa,
+        PolicyKind::Atp,
+        PolicyKind::SwitchMl,
+        PolicyKind::StrawAlways,
+        PolicyKind::StrawCoin,
+    ] {
+        for racks in [1usize, 4] {
+            let run = || {
+                let mut sim = Simulation::new(cfg(policy, racks, 2, 4)).unwrap();
+                sim.net.queue.enable_shadow();
+                sim.run()
+            };
+            let a = run();
+            let b = run();
+            assert!(!a.truncated, "{policy:?} racks={racks} stalled");
+            assert_eq!(a.sim_ns, b.sim_ns, "{policy:?} racks={racks} sim_ns");
+            assert_eq!(a.events, b.events, "{policy:?} racks={racks} events");
+            assert_eq!(
+                a.avg_jct_ms().to_bits(),
+                b.avg_jct_ms().to_bits(),
+                "{policy:?} racks={racks} avg_jct_ms must match to the bit"
+            );
+            assert_eq!(
+                a.avg_transit_ns.to_bits(),
+                b.avg_transit_ns.to_bits(),
+                "{policy:?} racks={racks} avg_transit_ns must match to the bit"
+            );
+            assert_eq!(a.past_schedules, 0, "{policy:?} racks={racks} clamped a schedule");
+        }
+    }
+}
+
+/// 128 workers across the fabric: beyond the seed's rng collision point
+/// (worker labels 199/200+ used to alias the edge and rack switches).
+/// The run must complete and replay exactly.
+#[test]
+fn rng_streams_stay_disjoint_at_128_workers() {
+    let mut c = ExperimentConfig::synthetic(PolicyKind::Esa, "microbench", 16, 8);
+    c.racks = 4;
+    c.iterations = 1;
+    c.seed = 33;
+    c.jitter_max_ns = 20 * esa::USEC;
+    for j in &mut c.jobs {
+        j.tensor_bytes = Some(64 * 1024);
+    }
+    let a = Simulation::run_experiment(c.clone()).unwrap();
+    let b = Simulation::run_experiment(c).unwrap();
+    assert!(!a.truncated, "128-worker fabric stalled");
+    assert_eq!(a.jobs.len(), 16);
+    assert_eq!(a.sim_ns, b.sim_ns);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.avg_jct_ms().to_bits(), b.avg_jct_ms().to_bits());
+}
+
 #[test]
 fn two_tier_is_deterministic_across_runs() {
     let a = Simulation::run_experiment(cfg(PolicyKind::Esa, 3, 2, 6)).unwrap();
