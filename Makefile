@@ -6,13 +6,28 @@ ARTIFACTS ?= artifacts
 PRESET ?= tiny
 WORKERS ?= 4
 
-.PHONY: build test bench bench-figures figures artifacts clean-artifacts
+.PHONY: build test bench bench-figures figures sweep bless artifacts clean-artifacts
 
 build:
 	cd rust && cargo build --release
 
 test:
 	cd rust && cargo test -q
+
+## Run a scenario sweep on all cores. Default: the built-in quick grid
+## (5 INA policies x racks {1,4}); point SWEEP_CONFIG at a sweep TOML for
+## a custom grid. Artifacts land in rust/target/sweeps/.
+SWEEP_CONFIG ?=
+sweep: build
+	cd rust && ESA_BENCH_QUICK=1 ./target/release/esa sweep \
+		$(if $(SWEEP_CONFIG),--config $(abspath $(SWEEP_CONFIG)),) --out-dir target/sweeps
+
+## Regenerate the committed golden sweep snapshot (run on real hardware,
+## then commit). The CI sweep gate diffs every build against this file.
+bless: build
+	cd rust && ESA_BENCH_QUICK=1 ./target/release/esa sweep --threads 1 --out-dir target/bless
+	cp rust/target/bless/SWEEP_quick.json rust/tests/golden/sweep_quick.json
+	@echo "blessed rust/tests/golden/sweep_quick.json — review and commit it"
 
 ## Regenerate every paper figure at quick scale (ESA_BENCH_QUICK=1).
 figures: build

@@ -1,3 +1,9 @@
+//! Debug printout for the loss-recovery machinery: one seed-42 microbench
+//! job under 1% per-hop loss, dumping worker/PS/switch/net state after the
+//! run. Lives in `examples/` (it is a developer probe, not a shipped
+//! binary); run with `cargo run --example dbg_loss`. Exits non-zero when
+//! the run truncates so scripted bisection can branch on it.
+
 use esa::config::{ExperimentConfig, PolicyKind};
 use esa::sim::Simulation;
 
@@ -6,13 +12,21 @@ fn main() {
     cfg.iterations = 2;
     cfg.jitter_max_ns = 20 * esa::USEC;
     cfg.seed = 42;
-    for j in &mut cfg.jobs { j.tensor_bytes = Some(256 * 1024); }
+    for j in &mut cfg.jobs {
+        j.tensor_bytes = Some(256 * 1024);
+    }
     cfg.net.loss_prob = 0.01;
     let mut sim = Simulation::new(cfg).unwrap();
     let m = sim.run();
-    println!("truncated={} sim_ns={} events={} jobs_done={}", m.truncated, m.sim_ns, m.events, m.jobs.len());
+    println!(
+        "truncated={} sim_ns={} events={} jobs_done={}",
+        m.truncated,
+        m.sim_ns,
+        m.events,
+        m.jobs.len()
+    );
     for (j, job) in m.jobs.iter().enumerate() {
-        println!("job {}: iters={} jct={:.3}ms", j, job.iterations, job.avg_jct_ns()/1e6);
+        println!("job {}: iters={} jct={:.3}ms", j, job.iterations, job.avg_jct_ns() / 1e6);
     }
     for w in 0..4 {
         let wk = sim.worker_mut(0, w);
@@ -22,4 +36,8 @@ fn main() {
     println!("ps stats: {:?}", sim.ps(0).stats);
     println!("switch stats: {:?}", sim.switch().stats);
     println!("net stats: dropped={} sent={}", sim.net.stats.dropped, sim.net.stats.sent);
+    if m.truncated {
+        eprintln!("run truncated: loss recovery stalled before the iteration budget");
+        std::process::exit(1);
+    }
 }

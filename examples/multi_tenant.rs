@@ -26,12 +26,14 @@ fn main() -> anyhow::Result<()> {
                 n_workers: 4,
                 start_ns: 0,
                 tensor_bytes: Some(24 * 1024 * 1024),
+                iterations: None,
             },
             JobSpec {
                 model: "vgg16".into(),
                 n_workers: 4,
                 start_ns: 0,
                 tensor_bytes: Some(96 * 1024 * 1024),
+                iterations: None,
             },
         ];
         let mut sim = Simulation::new(cfg)?;

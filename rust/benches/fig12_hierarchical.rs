@@ -3,8 +3,11 @@
 //! 8-job × 8-worker DNN-A workload, plus the uplink compression that
 //! rack-level partial aggregation buys. `racks = 1` must match the
 //! single-switch fig8/fig10 operating point exactly.
+//!
+//! The grid is one sweep-engine definition; besides the human table this
+//! writes `SWEEP_fig12_hierarchical.json`/`.csv` under `target/sweeps/`.
 
-use esa::sim::figures::{fig12_hierarchical, Scale};
+use esa::sim::figures::{fig12_hierarchical_report, Scale};
 
 fn main() {
     esa::util::logging::init();
@@ -14,6 +17,10 @@ fn main() {
         scale.tensor, scale.iterations, scale.seed
     );
     let t0 = std::time::Instant::now();
-    fig12_hierarchical(&scale).expect("fig12 harness").print();
+    let (report, fig) = fig12_hierarchical_report(&scale).expect("fig12 harness");
+    fig.print();
+    let out_dir = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/target/sweeps"));
+    let (json, csv) = report.write(out_dir).expect("writing sweep artifacts");
+    println!("# wrote {} + {}", json.display(), csv.display());
     println!("# wall: {:.1} s", t0.elapsed().as_secs_f64());
 }

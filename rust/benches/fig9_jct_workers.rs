@@ -1,16 +1,22 @@
 //! Regenerates Fig. 9: average JCT vs workers per job (8 jobs), three
 //! mixes. Paper expectation: ESA's gain over ATP grows with worker count
 //! (more synchronization cost → more preemption benefit).
+//!
+//! Each mix is one sweep-engine grid; besides the human tables this
+//! writes the `SWEEP_fig9_*.json`/`.csv` artifacts under `target/sweeps/`.
 
-use esa::sim::figures::{fig9_jct_vs_workers, Scale};
+use esa::sim::figures::{fig9_jct_vs_workers_reports, Scale};
 
 fn main() {
     esa::util::logging::init();
     let scale = Scale::from_env();
     println!("# fig9: tensor x{}, {} iterations, seed {}", scale.tensor, scale.iterations, scale.seed);
     let t0 = std::time::Instant::now();
-    for fig in fig9_jct_vs_workers(&scale).expect("fig9 harness") {
+    let out_dir = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/target/sweeps"));
+    for (report, fig) in fig9_jct_vs_workers_reports(&scale).expect("fig9 harness") {
         fig.print();
+        let (json, csv) = report.write(out_dir).expect("writing sweep artifacts");
+        println!("# wrote {} + {}", json.display(), csv.display());
     }
     println!("# wall: {:.1} s", t0.elapsed().as_secs_f64());
 }

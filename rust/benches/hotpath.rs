@@ -16,6 +16,7 @@ use esa::packet::{task_hash, Packet};
 use esa::sim::Simulation;
 use esa::switch::{JobWiring, Switch};
 use esa::util::fixed;
+use esa::util::json::JsonWriter;
 use esa::util::rng::Rng;
 
 /// One component measurement, destined for the JSON report.
@@ -196,13 +197,7 @@ fn bench_end_to_end() -> Vec<EndToEnd> {
     println!();
     let tensor_bytes: u64 = if quick() { 1024 * 1024 } else { 4 * 1024 * 1024 };
     let mut rows = Vec::new();
-    for policy in [
-        PolicyKind::Esa,
-        PolicyKind::Atp,
-        PolicyKind::SwitchMl,
-        PolicyKind::StrawAlways,
-        PolicyKind::StrawCoin,
-    ] {
+    for policy in PolicyKind::ALL_INA {
         let mut cfg = ExperimentConfig::synthetic(policy, "dnn_a", 4, 8);
         cfg.iterations = 1;
         cfg.seed = 9;
@@ -234,45 +229,42 @@ fn bench_end_to_end() -> Vec<EndToEnd> {
     rows
 }
 
-/// Hand-rolled JSON (the crate is offline-first: no serde). Keys are
-/// stable; floats are emitted with enough precision to diff runs.
+/// Emitted through the shared `util::json` writer (the crate is
+/// offline-first: no serde). Keys are stable; floats carry fixed
+/// precision so two runs diff cleanly.
 fn write_json(components: &[Component], e2e: &[EndToEnd]) -> std::io::Result<String> {
-    let mut s = String::with_capacity(4096);
-    s.push_str("{\n");
-    s.push_str("  \"schema\": \"esa-bench-hotpath/1\",\n");
-    s.push_str("  \"provenance\": \"measured\",\n");
-    s.push_str(&format!("  \"quick\": {},\n", quick()));
-    s.push_str("  \"components\": [\n");
-    for (i, c) in components.iter().enumerate() {
-        s.push_str(&format!(
-            "    {{\"name\": \"{}\", \"mops\": {:.3}}}{}\n",
-            c.name,
-            c.mops,
-            if i + 1 < components.len() { "," } else { "" }
-        ));
+    let mut w = JsonWriter::new();
+    w.begin_obj(None);
+    w.str_field("schema", "esa-bench-hotpath/1");
+    w.str_field("provenance", "measured");
+    w.bool_field("quick", quick());
+    w.begin_arr(Some("components"));
+    for c in components {
+        w.begin_obj(None);
+        w.str_field("name", c.name);
+        w.f64_field("mops", c.mops, 3);
+        w.end_obj();
     }
-    s.push_str("  ],\n");
-    s.push_str("  \"end_to_end\": [\n");
-    for (i, r) in e2e.iter().enumerate() {
-        s.push_str(&format!(
-            "    {{\"policy\": \"{}\", \"model\": \"{}\", \"jobs\": {}, \"workers\": {}, \
-             \"iterations\": {}, \"seed\": {}, \"tensor_bytes\": {}, \"events\": {}, \
-             \"sim_ns\": {}, \"wall_secs\": {:.4}, \"events_per_sec\": {:.1}}}{}\n",
-            r.policy,
-            r.model,
-            r.jobs,
-            r.workers,
-            r.iterations,
-            r.seed,
-            r.tensor_bytes,
-            r.events,
-            r.sim_ns,
-            r.wall_secs,
-            r.events_per_sec,
-            if i + 1 < e2e.len() { "," } else { "" }
-        ));
+    w.end_arr();
+    w.begin_arr(Some("end_to_end"));
+    for r in e2e {
+        w.begin_obj(None);
+        w.str_field("policy", r.policy);
+        w.str_field("model", r.model);
+        w.u64_field("jobs", r.jobs as u64);
+        w.u64_field("workers", r.workers as u64);
+        w.u64_field("iterations", r.iterations as u64);
+        w.u64_field("seed", r.seed);
+        w.u64_field("tensor_bytes", r.tensor_bytes);
+        w.u64_field("events", r.events);
+        w.u64_field("sim_ns", r.sim_ns);
+        w.f64_field("wall_secs", r.wall_secs, 4);
+        w.f64_field("events_per_sec", r.events_per_sec, 1);
+        w.end_obj();
     }
-    s.push_str("  ]\n}\n");
+    w.end_arr();
+    w.end_obj();
+    let s = w.finish();
     // Benches run with cwd = rust/. Full runs refresh the tracked
     // trajectory file at the repo root; quick (CI smoke) runs go to a
     // scratch path so `ESA_BENCH_QUICK=1` can never clobber the

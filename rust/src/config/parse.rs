@@ -83,6 +83,40 @@ impl TomlTable {
         self.get(path)
             .with_context(|| format!("config key `{path}` missing"))
     }
+    /// Typed array accessor: `Ok(None)` when absent, a pointed error when
+    /// present but not an array of strings.
+    pub fn str_list(&self, path: &str) -> Result<Option<Vec<String>>> {
+        self.typed_list(path, "strings", |v| v.as_str().map(String::from))
+    }
+    /// Typed array accessor for integer lists (see [`Self::str_list`]).
+    pub fn int_list(&self, path: &str) -> Result<Option<Vec<i64>>> {
+        self.typed_list(path, "integers", |v| v.as_int())
+    }
+    /// Typed array accessor for float lists; integer literals promote.
+    pub fn float_list(&self, path: &str) -> Result<Option<Vec<f64>>> {
+        self.typed_list(path, "numbers", |v| v.as_float())
+    }
+    fn typed_list<T>(
+        &self,
+        path: &str,
+        kind: &str,
+        f: impl Fn(&TomlValue) -> Option<T>,
+    ) -> Result<Option<Vec<T>>> {
+        let Some(v) = self.get(path) else {
+            return Ok(None);
+        };
+        let arr = v
+            .as_array()
+            .with_context(|| format!("config key `{path}` must be an array of {kind}"))?;
+        arr.iter()
+            .map(|item| {
+                f(item).with_context(|| {
+                    format!("config key `{path}` must be an array of {kind}, got {item:?}")
+                })
+            })
+            .collect::<Result<Vec<T>>>()
+            .map(Some)
+    }
     pub fn keys(&self) -> impl Iterator<Item = &String> {
         self.entries.keys()
     }
@@ -330,6 +364,23 @@ mod tests {
         assert_eq!(t.int_or("b", 9), 9);
         assert_eq!(t.str_or("c", "x"), "x");
         assert!(t.require("nope").is_err());
+    }
+
+    #[test]
+    fn typed_lists() {
+        let t = parse_toml("seeds = [1, 2]\nnames = [\"a\"]\nloss = [0.0, 1e-4]\nmixed = [1, \"x\"]")
+            .unwrap();
+        assert_eq!(t.int_list("seeds").unwrap(), Some(vec![1, 2]));
+        assert_eq!(t.str_list("names").unwrap(), Some(vec!["a".to_string()]));
+        assert_eq!(t.float_list("loss").unwrap(), Some(vec![0.0, 1e-4]));
+        assert_eq!(t.int_list("absent").unwrap(), None);
+        // present but wrong shape/type -> pointed errors
+        assert!(t.int_list("names").is_err());
+        assert!(t.str_list("seeds").is_err());
+        assert!(t.int_list("mixed").is_err());
+        let t = parse_toml("seeds = 3").unwrap();
+        let err = t.int_list("seeds").unwrap_err().to_string();
+        assert!(err.contains("array"), "{err}");
     }
 
     #[test]

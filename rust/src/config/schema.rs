@@ -30,6 +30,16 @@ pub enum PolicyKind {
 }
 
 impl PolicyKind {
+    /// The five INA systems (everything but the no-INA `HostPs` baseline),
+    /// in the canonical sweep/bench order.
+    pub const ALL_INA: [PolicyKind; 5] = [
+        PolicyKind::Esa,
+        PolicyKind::Atp,
+        PolicyKind::SwitchMl,
+        PolicyKind::StrawAlways,
+        PolicyKind::StrawCoin,
+    ];
+
     pub fn parse(s: &str) -> Result<PolicyKind> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "esa" => PolicyKind::Esa,
@@ -163,6 +173,9 @@ pub struct JobSpec {
     pub start_ns: u64,
     /// Override of the model's tensor partition size (microbenchmarks).
     pub tensor_bytes: Option<u64>,
+    /// Per-job override of the experiment-wide iteration budget — trace
+    /// replays mix long and short jobs in one experiment.
+    pub iterations: Option<u32>,
 }
 
 /// A full simulated experiment.
@@ -265,6 +278,10 @@ impl ExperimentConfig {
                         .get(&format!("{base}.tensor_bytes"))
                         .and_then(|v| v.as_int())
                         .map(|v| v as u64),
+                    iterations: t
+                        .get(&format!("{base}.iterations"))
+                        .and_then(|v| v.as_int())
+                        .map(|v| v as u32),
                 });
             }
         }
@@ -292,6 +309,9 @@ impl ExperimentConfig {
             if j.n_workers == 0 || j.n_workers > 32 {
                 bail!("job {i}: workers must be in 1..=32");
             }
+            if j.iterations == Some(0) {
+                bail!("job {i}: iterations override must be >= 1");
+            }
         }
         Ok(())
     }
@@ -307,6 +327,7 @@ impl ExperimentConfig {
                     n_workers,
                     start_ns: 0,
                     tensor_bytes: None,
+                    iterations: None,
                 })
                 .collect(),
             ..ExperimentConfig::default()
@@ -416,6 +437,28 @@ mod tests {
         assert_eq!(c.jobs[7].model, "dnn_b");
         assert_eq!(c.iterations, 5);
         assert_eq!(c.net.loss_prob, 0.0001);
+    }
+
+    #[test]
+    fn per_job_iteration_override() {
+        let t = parse_toml(
+            r#"
+            [job.a]
+            model = "dnn_a"
+            workers = 4
+            iterations = 7
+            [job.b]
+            model = "dnn_b"
+            workers = 4
+            "#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.jobs[0].iterations, Some(7));
+        assert_eq!(c.jobs[1].iterations, None);
+        let mut bad = c;
+        bad.jobs[0].iterations = Some(0);
+        assert!(bad.validate().is_err());
     }
 
     #[test]

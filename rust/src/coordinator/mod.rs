@@ -1,18 +1,18 @@
 //! The control plane: job registry with admission control, priority-input
 //! bookkeeping (§5.4's `T_j` and `Comm/Comp` live here between
-//! iterations), PS placement, and a thread-pool experiment launcher used
-//! by the figure harnesses (std threads — tokio is not available offline,
-//! and the event loops themselves are single-threaded and deterministic).
+//! iterations), PS placement, and the experiment launcher used by the
+//! figure harnesses — a thin wrapper over the reusable
+//! [`crate::util::executor`] thread pool (std threads — tokio is not
+//! available offline, and the event loops themselves are single-threaded
+//! and deterministic).
 
 pub mod registry;
-
-use std::sync::mpsc;
-use std::thread;
 
 use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::sim::{ExperimentMetrics, Simulation};
+use crate::util::executor::{default_threads, run_ordered};
 
 pub use registry::{JobInfo, JobState, Registry};
 
@@ -21,51 +21,7 @@ pub use registry::{JobInfo, JobState, Registry};
 /// deterministic; parallelism is across experiments only, so results are
 /// identical to serial execution.
 pub fn run_parallel(cfgs: Vec<ExperimentConfig>) -> Vec<Result<ExperimentMetrics>> {
-    let n = cfgs.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let threads = thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(4)
-        .min(n);
-    let (task_tx, task_rx) = mpsc::channel::<(usize, ExperimentConfig)>();
-    let task_rx = std::sync::Arc::new(std::sync::Mutex::new(task_rx));
-    let (res_tx, res_rx) = mpsc::channel::<(usize, Result<ExperimentMetrics>)>();
-    for (i, cfg) in cfgs.into_iter().enumerate() {
-        task_tx.send((i, cfg)).expect("queueing work");
-    }
-    drop(task_tx);
-
-    let mut handles = Vec::new();
-    for _ in 0..threads {
-        let rx = std::sync::Arc::clone(&task_rx);
-        let tx = res_tx.clone();
-        handles.push(thread::spawn(move || loop {
-            let job = { rx.lock().unwrap().recv() };
-            match job {
-                Ok((i, cfg)) => {
-                    let result = Simulation::run_experiment(cfg);
-                    if tx.send((i, result)).is_err() {
-                        return;
-                    }
-                }
-                Err(_) => return,
-            }
-        }));
-    }
-    drop(res_tx);
-
-    let mut out: Vec<Option<Result<ExperimentMetrics>>> = (0..n).map(|_| None).collect();
-    for (i, r) in res_rx {
-        out[i] = Some(r);
-    }
-    for h in handles {
-        let _ = h.join();
-    }
-    out.into_iter()
-        .map(|o| o.expect("worker thread dropped a result"))
-        .collect()
+    run_ordered(default_threads(), cfgs, |_, cfg| Simulation::run_experiment(cfg))
 }
 
 #[cfg(test)]

@@ -27,7 +27,7 @@
 //!
 //! | module         | role |
 //! |----------------|------|
-//! | [`util`]       | deterministic PRNG, fixed-point codec, stats, CLI, logging |
+//! | [`util`]       | deterministic PRNG, fixed-point codec, stats, CLI, logging, thread-pool executor, byte-stable JSON |
 //! | [`config`]     | TOML-subset parser + experiment schema |
 //! | [`net`]        | discrete-event engine: links, star + two-tier topologies, loss injection |
 //! | [`packet`]     | ESA/ATP wire formats (§5.1) + the two-tier `RackPartial` |
@@ -35,7 +35,7 @@
 //! | [`ps`]         | fallback PS: partial dictionary + reminder mechanism |
 //! | [`worker`]     | fragmentation, priority tagging (§5.4), windows, loss recovery (§5.3) |
 //! | [`job`]        | DNN A/B + testbed-profile job models, trace generation |
-//! | [`sim`]        | experiment driver + JCT/throughput/utilization metrics |
+//! | [`sim`]        | experiment driver, JCT/throughput/utilization metrics, parallel scenario sweeps |
 //! | [`runtime`]    | PJRT loader for `artifacts/*.hlo.txt` |
 //! | [`train`]      | end-to-end trainer: real gradients through the simulated switch |
 //! | [`coordinator`]| control plane: job registry, priority inputs, experiment launch |

@@ -5,6 +5,8 @@
 //! esa sim      [--config f.toml] [--policy esa] [--model dnn_a] [--jobs 8]
 //!              [--workers 8] [--iterations 3] [--seed 1] [--loss 0.0]
 //!              [--memory-mb 5] [--tensor-mb N] [--racks 1]
+//! esa sweep    [--config sweep.toml] [--threads N] [--out-dir DIR]
+//!              [--name X] [--seeds 1,2,3]
 //! esa figures  [fig6b fig7 fig8 fig9 fig10 fig11 fig12 | all] [--quick]
 //! esa train    [--steps 100] [--workers 4] [--policy esa] [--seed 0]
 //!              [--csv out.csv]
@@ -17,7 +19,9 @@ use esa::config::{ExperimentConfig, PolicyKind};
 use esa::job::trace::{generate, TraceConfig};
 use esa::runtime::Engine;
 use esa::sim::figures::{self, Scale};
+use esa::sim::sweep::{run_sweep, SweepConfig};
 use esa::sim::Simulation;
+use esa::util::executor::default_threads;
 use esa::train::{Trainer, TrainerCfg};
 use esa::util::cli::Args;
 use esa::util::rng::Rng;
@@ -34,6 +38,7 @@ fn main() {
     };
     let result = match args.subcommand.as_deref() {
         Some("sim") => cmd_sim(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("figures") => cmd_figures(&args),
         Some("train") => cmd_train(&args),
         Some("trace") => cmd_trace(&args),
@@ -58,6 +63,7 @@ fn print_help() {
          \n\
          subcommands:\n\
          \x20 sim      run one simulated experiment and print its metrics\n\
+         \x20 sweep    expand a scenario grid and run it on all cores (SWEEP_<name>.json + .csv)\n\
          \x20 figures  regenerate the paper's evaluation figures (fig6b..fig12 | all)\n\
          \x20 train    end-to-end training through the simulated data plane (needs `make artifacts`)\n\
          \x20 trace    emit a synthetic cluster job trace\n\
@@ -132,6 +138,46 @@ fn cmd_sim(args: &Args) -> Result<()> {
             st.reminder_evictions
         );
     }
+    Ok(())
+}
+
+/// `esa sweep`: expand a declarative scenario grid and run every cell on
+/// the thread pool. Without `--config` this runs the built-in quick grid
+/// (all five INA policies × racks {1, 4}) — the workload the CI golden
+/// gate pins. Output is byte-identical across runs and thread counts.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        SweepConfig::from_file(std::path::Path::new(path))?
+    } else {
+        SweepConfig::quick()
+    };
+    if let Some(name) = args.get("name") {
+        cfg.name = name.to_string();
+    }
+    if let Some(seeds) = args.get_comma_list::<u64>("seeds")? {
+        cfg.seeds = seeds;
+    }
+    cfg.validate()?;
+    let threads: usize = args.get_parsed_or("threads", default_threads())?;
+    let out_dir = std::path::PathBuf::from(args.get_or("out-dir", "."));
+    let n_cells = cfg.expand().len();
+    println!(
+        "sweep {}: {} cells x {} seed replicas on {} threads",
+        cfg.name,
+        n_cells,
+        cfg.seeds.len(),
+        threads.max(1)
+    );
+    let t0 = std::time::Instant::now();
+    let report = run_sweep(&cfg, threads)?;
+    print!("{}", report.summary_table());
+    let (json_path, csv_path) = report.write(&out_dir)?;
+    println!(
+        "wall {:.2} s | wrote {} + {}",
+        t0.elapsed().as_secs_f64(),
+        json_path.display(),
+        csv_path.display()
+    );
     Ok(())
 }
 

@@ -13,7 +13,9 @@ use anyhow::Result;
 
 use crate::config::{ExperimentConfig, JobSpec, PolicyKind};
 use crate::coordinator::run_parallel;
+use crate::sim::sweep::{run_sweep, slug, ModelMix, SweepConfig, SweepReport};
 use crate::sim::ExperimentMetrics;
+use crate::util::executor::default_threads;
 use crate::util::stats::render_table;
 use crate::{MSEC, USEC};
 
@@ -66,6 +68,21 @@ fn job(model: &str, workers: usize, tensor: Option<u64>) -> JobSpec {
         n_workers: workers,
         start_ns: 0,
         tensor_bytes: tensor,
+        iterations: None,
+    }
+}
+
+/// The §7.2.1 DNN mix convention shared by the JCT figures: DNN A pushes
+/// 16 MB per iteration, everything else 8 MB (scaled).
+fn model_mix(scale: &Scale, model: &str) -> ModelMix {
+    let bytes = match model {
+        "dnn_a" => 16 * 1024 * 1024,
+        _ => 8 * 1024 * 1024,
+    };
+    ModelMix {
+        name: model.to_string(),
+        tensor_bytes: Some(scale.scaled(bytes)),
+        weight: 1.0,
     }
 }
 
@@ -246,52 +263,56 @@ pub fn fig7_microbench(scale: &Scale) -> Result<(Figure, Figure)> {
 // Fig. 8 / Fig. 9 — average JCT sweeps (the headline result)
 // ---------------------------------------------------------------------
 
+/// Shared fig8/fig9 harness, now a thin sweep definition: one
+/// [`SweepConfig`] per mix, executed by [`run_sweep`] on the shared
+/// thread pool. Exactly one of `jobs_axis`/`workers_axis` has more than
+/// one point; cells come back in grid order (policy-major), so the
+/// table row for policy `pi` reads cells `pi*n .. pi*n+n`.
 fn jct_sweep(
     scale: &Scale,
     id: &'static str,
     title: &str,
-    points: &[(usize, usize)], // (n_jobs, n_workers)
+    jobs_axis: &[usize],
+    workers_axis: &[usize],
     xlabels: &[String],
     mixes: &[(&str, &[&str])],
-) -> Result<Vec<Figure>> {
+) -> Result<Vec<(SweepReport, Figure)>> {
     let systems = [PolicyKind::Esa, PolicyKind::Atp, PolicyKind::SwitchMl];
-    let mut figures = Vec::new();
+    let npoints = jobs_axis.len().max(workers_axis.len());
+    let mut out = Vec::new();
     for (mix_name, models) in mixes {
-        let mut cfgs = Vec::new();
-        for &p in &systems {
-            for &(nj, nw) in points {
-                let mut cfg = base_cfg(scale, p);
-                cfg.jobs = (0..nj)
-                    .map(|k| {
-                        let model = models[k % models.len()];
-                        let bytes = match model {
-                            "dnn_a" => 16 * 1024 * 1024,
-                            _ => 8 * 1024 * 1024,
-                        };
-                        job(model, nw, Some(scale.scaled(bytes)))
-                    })
-                    .collect();
-                cfgs.push(cfg);
-            }
-        }
-        let ms = run_grid(cfgs)?;
+        let sweep = SweepConfig {
+            name: format!("{id}_{}", slug(mix_name)),
+            policies: systems.to_vec(),
+            racks: vec![1],
+            workers: workers_axis.to_vec(),
+            jobs: jobs_axis.to_vec(),
+            seeds: vec![scale.seed],
+            loss_probs: vec![0.0],
+            tensor_bytes: vec![None],
+            models: models.iter().map(|m| model_mix(scale, m)).collect(),
+            iterations: scale.iterations,
+            base: ExperimentConfig::default(),
+            trace: None,
+        };
+        let report = run_sweep(&sweep, default_threads())?;
         let mut rows = Vec::new();
         for (pi, p) in systems.iter().enumerate() {
             let mut row = vec![p.name().to_string()];
-            for (xi, _) in points.iter().enumerate() {
-                row.push(fmt_ms(ms[pi * points.len() + xi].avg_jct_ms()));
+            for xi in 0..npoints {
+                row.push(fmt_ms(report.cells[pi * npoints + xi].jct_ms_mean));
             }
             rows.push(row);
         }
         // speedups at the most contended point (last)
-        let last = points.len() - 1;
-        let esa = ms[last].avg_jct_ms();
-        let atp = ms[points.len() + last].avg_jct_ms();
-        let sml = ms[2 * points.len() + last].avg_jct_ms();
+        let last = npoints - 1;
+        let esa = report.cells[last].jct_ms_mean;
+        let atp = report.cells[npoints + last].jct_ms_mean;
+        let sml = report.cells[2 * npoints + last].jct_ms_mean;
         let mut headers: Vec<&str> = vec!["system"];
         let xl: Vec<&str> = xlabels.iter().map(|s| s.as_str()).collect();
         headers.extend(xl);
-        figures.push(Figure {
+        let figure = Figure {
             id,
             title: format!("{title} — mix: {mix_name}"),
             table: render_table(&headers, &rows),
@@ -300,45 +321,54 @@ fn jct_sweep(
                 fmt_ratio(atp, esa),
                 fmt_ratio(sml, esa),
             )],
-        });
+        };
+        out.push((report, figure));
     }
-    Ok(figures)
+    Ok(out)
 }
 
-/// §7.2.2 Fig. 8: avg JCT vs number of jobs (8 workers each), three mixes.
-pub fn fig8_jct_vs_jobs(scale: &Scale) -> Result<Vec<Figure>> {
-    let points: Vec<(usize, usize)> = [2usize, 4, 6, 8].iter().map(|&j| (j, 8)).collect();
-    let labels: Vec<String> = points.iter().map(|(j, _)| j.to_string()).collect();
+const JCT_MIXES: [(&str, &[&str]); 3] = [
+    ("all DNN A", &["dnn_a"]),
+    ("all DNN B", &["dnn_b"]),
+    ("A:B = 1:1", &["dnn_a", "dnn_b"]),
+];
+
+/// §7.2.2 Fig. 8 as sweep definitions (one report + rendered figure per
+/// mix): avg JCT vs number of jobs (8 workers each).
+pub fn fig8_jct_vs_jobs_reports(scale: &Scale) -> Result<Vec<(SweepReport, Figure)>> {
     jct_sweep(
         scale,
         "fig8",
         "avg JCT (ms) vs #jobs, 8 workers/job",
-        &points,
-        &labels,
-        &[
-            ("all DNN A", &["dnn_a"]),
-            ("all DNN B", &["dnn_b"]),
-            ("A:B = 1:1", &["dnn_a", "dnn_b"]),
-        ],
+        &[2, 4, 6, 8],
+        &[8],
+        &["2".into(), "4".into(), "6".into(), "8".into()],
+        &JCT_MIXES,
+    )
+}
+
+/// §7.2.2 Fig. 8: avg JCT vs number of jobs (8 workers each), three mixes.
+pub fn fig8_jct_vs_jobs(scale: &Scale) -> Result<Vec<Figure>> {
+    Ok(fig8_jct_vs_jobs_reports(scale)?.into_iter().map(|(_, f)| f).collect())
+}
+
+/// §7.2.2 Fig. 9 as sweep definitions (one report + rendered figure per
+/// mix): avg JCT vs workers per job (8 jobs).
+pub fn fig9_jct_vs_workers_reports(scale: &Scale) -> Result<Vec<(SweepReport, Figure)>> {
+    jct_sweep(
+        scale,
+        "fig9",
+        "avg JCT (ms) vs #workers/job, 8 jobs",
+        &[8],
+        &[2, 4, 6, 8],
+        &["2".into(), "4".into(), "6".into(), "8".into()],
+        &JCT_MIXES,
     )
 }
 
 /// §7.2.2 Fig. 9: avg JCT vs workers per job (8 jobs), three mixes.
 pub fn fig9_jct_vs_workers(scale: &Scale) -> Result<Vec<Figure>> {
-    let points: Vec<(usize, usize)> = [2usize, 4, 6, 8].iter().map(|&w| (8, w)).collect();
-    let labels: Vec<String> = points.iter().map(|(_, w)| w.to_string()).collect();
-    jct_sweep(
-        scale,
-        "fig9",
-        "avg JCT (ms) vs #workers/job, 8 jobs",
-        &points,
-        &labels,
-        &[
-            ("all DNN A", &["dnn_a"]),
-            ("all DNN B", &["dnn_b"]),
-            ("A:B = 1:1", &["dnn_a", "dnn_b"]),
-        ],
-    )
+    Ok(fig9_jct_vs_workers_reports(scale)?.into_iter().map(|(_, f)| f).collect())
 }
 
 // ---------------------------------------------------------------------
@@ -462,26 +492,33 @@ pub fn fig11_priority_ablation(scale: &Scale) -> Result<Figure> {
 /// packets over worker gradient packets) that rack-level partial
 /// aggregation buys. `racks = 1` is the paper's single-switch star; the
 /// paper's per-switch ESA primitives compose across tiers unchanged.
-pub fn fig12_hierarchical(scale: &Scale) -> Result<Figure> {
+pub fn fig12_hierarchical_report(scale: &Scale) -> Result<(SweepReport, Figure)> {
     let systems = [PolicyKind::Esa, PolicyKind::Atp, PolicyKind::SwitchMl];
     let rack_counts = [1usize, 2, 4, 8];
-    let mut cfgs = Vec::new();
-    for &p in &systems {
-        for &r in &rack_counts {
-            let mut cfg = base_cfg(scale, p);
-            cfg.racks = r;
-            cfg.jobs = (0..8)
-                .map(|_| job("dnn_a", 8, Some(scale.scaled(16 << 20))))
-                .collect();
-            cfgs.push(cfg);
-        }
-    }
-    let ms = run_grid(cfgs)?;
+    let sweep = SweepConfig {
+        name: "fig12_hierarchical".into(),
+        policies: systems.to_vec(),
+        racks: rack_counts.to_vec(),
+        workers: vec![8],
+        jobs: vec![8],
+        seeds: vec![scale.seed],
+        loss_probs: vec![0.0],
+        tensor_bytes: vec![None],
+        models: vec![ModelMix {
+            name: "dnn_a".into(),
+            tensor_bytes: Some(scale.scaled(16 << 20)),
+            weight: 1.0,
+        }],
+        iterations: scale.iterations,
+        base: ExperimentConfig::default(),
+        trace: None,
+    };
+    let report = run_sweep(&sweep, default_threads())?;
     let mut rows = Vec::new();
     for (pi, p) in systems.iter().enumerate() {
         let mut row = vec![p.name().to_string()];
         for (ri, _) in rack_counts.iter().enumerate() {
-            row.push(fmt_ms(ms[pi * rack_counts.len() + ri].avg_jct_ms()));
+            row.push(fmt_ms(report.cells[pi * rack_counts.len() + ri].jct_ms_mean));
         }
         rows.push(row);
     }
@@ -491,25 +528,11 @@ pub fn fig12_hierarchical(scale: &Scale) -> Result<Figure> {
         .iter()
         .position(|&p| p == PolicyKind::Esa)
         .expect("ESA is in the sweep");
-    let esa_big = &ms[esa_idx * rack_counts.len() + rack_counts.len() - 1];
-    let rack_grads: u64 = esa_big
-        .switches
-        .iter()
-        .filter(|s| s.tier == "rack")
-        .map(|s| s.stats.grad_pkts)
-        .sum();
-    let edge_in: u64 = esa_big
-        .switches
-        .iter()
-        .filter(|s| s.tier == "edge")
-        .map(|s| s.stats.rack_partial_pkts)
-        .sum();
-    let compression = if edge_in > 0 {
-        rack_grads as f64 / edge_in as f64
-    } else {
-        f64::NAN
-    };
-    Ok(Figure {
+    let esa_big = &report.cells[esa_idx * rack_counts.len() + rack_counts.len() - 1];
+    let rack_grads = esa_big.rack_grad_pkts;
+    let edge_in = esa_big.edge_partial_pkts;
+    let compression = if edge_in > 0.0 { rack_grads / edge_in } else { f64::NAN };
+    let figure = Figure {
         id: "fig12",
         title: "hierarchical fabric: avg JCT (ms) vs rack count, 8 jobs x 8 workers (DNN A)"
             .into(),
@@ -517,11 +540,18 @@ pub fn fig12_hierarchical(scale: &Scale) -> Result<Figure> {
         notes: vec![
             format!(
                 "ESA at 8 racks: rack-level folding compresses the uplink {compression:.2}x \
-                 ({rack_grads} worker gradients -> {edge_in} rack partials at the edge)"
+                 ({rack_grads:.0} worker gradients -> {edge_in:.0} rack partials at the edge)"
             ),
             "racks=1 reproduces the paper's single-switch star exactly".into(),
         ],
-    })
+    };
+    Ok((report, figure))
+}
+
+/// Rack-count sweep rendered as the Fig. 12 table (see
+/// [`fig12_hierarchical_report`] for the machine-readable artifact).
+pub fn fig12_hierarchical(scale: &Scale) -> Result<Figure> {
+    Ok(fig12_hierarchical_report(scale)?.1)
 }
 
 #[cfg(test)]

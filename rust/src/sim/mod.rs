@@ -17,6 +17,7 @@
 
 pub mod figures;
 pub mod metrics;
+pub mod sweep;
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -144,7 +145,7 @@ impl Simulation {
                 profile,
                 spec.n_workers,
                 payload,
-                cfg.iterations,
+                spec.iterations.unwrap_or(cfg.iterations),
             ));
             let nodes: Vec<NodeId> = (0..spec.n_workers)
                 .map(|_| {
@@ -703,6 +704,7 @@ mod tests {
                 n_workers: 2,
                 start_ns: 0,
                 tensor_bytes: None,
+                iterations: None,
             }],
             ..ExperimentConfig::default()
         };

@@ -1,0 +1,1048 @@
+//! The parallel scenario-sweep engine behind `esa sweep`.
+//!
+//! A [`SweepConfig`] declares a grid — `policy × racks × workers × jobs ×
+//! loss_prob × tensor_bytes`, each cell replicated across `seeds` — or,
+//! alternatively, a Poisson arrival mix drawn from [`crate::job::trace`].
+//! [`run_sweep`] expands the grid into independent [`ExperimentConfig`]
+//! cells, executes every `(cell, seed)` replica on the shared
+//! [`crate::util::executor`] thread pool, aggregates replicas per cell
+//! (mean/p50/p95 JCT with a 95% CI, switch-memory utilization, transit
+//! latency, `past_schedules`), and renders a byte-stable
+//! `SWEEP_<name>.json` + CSV pair.
+//!
+//! **Determinism contract** (pinned by `tests/integration_sweep.rs` and
+//! the CI sweep gate): each replica simulation is single-threaded and
+//! seed-deterministic, the executor returns results in task order
+//! regardless of thread count, and aggregation + serialization walk cells
+//! in grid order with fixed float precision — so the emitted bytes are
+//! identical across runs and across `--threads 1` vs `--threads N`.
+//! Wall-clock observables (`wall_secs`, events/s) are deliberately
+//! excluded from the artifacts.
+//!
+//! Grid expansion order (outer to inner): policy, racks, workers, jobs,
+//! loss_prob, tensor_bytes. Seeds vary fastest, *within* a cell.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{
+    parse_toml, ExperimentConfig, JobSpec, NetworkConfig, PolicyKind, SwitchConfig, TomlTable,
+};
+use crate::job::trace::{generate, TraceConfig};
+use crate::sim::{ExperimentMetrics, Simulation};
+use crate::util::executor::run_ordered;
+use crate::util::json::JsonWriter;
+use crate::util::rng::Rng;
+use crate::util::stats::{render_table, Percentiles, Summary};
+use crate::{MSEC, USEC};
+
+/// Decouples the sweep's trace stream from the simulation's root RNG
+/// (which is seeded with the same cell seed).
+const TRACE_STREAM_SALT: u64 = 0x7ace_5eed_c0ff_ee01;
+
+/// One entry of the job-model mix, cycled over the jobs of a cell.
+#[derive(Debug, Clone)]
+pub struct ModelMix {
+    /// Model profile name resolved by `job::dnn`.
+    pub name: String,
+    /// Per-model tensor override; the cell's `tensor_bytes` axis value,
+    /// when set, takes precedence over this.
+    pub tensor_bytes: Option<u64>,
+    /// Relative weight in trace mode (ignored for fixed grids).
+    pub weight: f64,
+}
+
+impl ModelMix {
+    pub fn plain(name: &str) -> ModelMix {
+        ModelMix { name: name.to_string(), tensor_bytes: None, weight: 1.0 }
+    }
+}
+
+/// Poisson arrival mix: replaces the `workers`/`jobs` axes with jobs
+/// drawn from [`crate::job::trace::generate`], seeded per replica.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// Jobs per cell.
+    pub n: usize,
+    /// Mean arrival rate (jobs per simulated second).
+    pub rate_per_sec: f64,
+    /// Worker-count choices (uniform).
+    pub worker_choices: Vec<usize>,
+    /// Iteration-count range (uniform, inclusive).
+    pub iter_range: (u32, u32),
+}
+
+/// A declarative sweep grid (see the module docs for expansion order).
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Artifact name: `SWEEP_<name>.json` / `.csv`. Filename-safe.
+    pub name: String,
+    pub policies: Vec<PolicyKind>,
+    pub racks: Vec<usize>,
+    /// Workers per job (ignored in trace mode).
+    pub workers: Vec<usize>,
+    /// Jobs per cell (ignored in trace mode).
+    pub jobs: Vec<usize>,
+    /// Replica seeds per cell.
+    pub seeds: Vec<u64>,
+    pub loss_probs: Vec<f64>,
+    /// Tensor override axis; `None` entries defer to the per-model value.
+    pub tensor_bytes: Vec<Option<u64>>,
+    /// Model mix, cycled over a cell's jobs (trace mode: arrival mix).
+    pub models: Vec<ModelMix>,
+    /// Measured iterations per job.
+    pub iterations: u32,
+    /// Template for everything the axes don't touch (net, switch memory,
+    /// jitter, windows, time cap). Its `jobs`/`policy`/`seed` are ignored.
+    pub base: ExperimentConfig,
+    pub trace: Option<TraceSpec>,
+}
+
+/// The coordinates of one grid cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellSpec {
+    pub policy: PolicyKind,
+    pub racks: usize,
+    /// 0 in trace mode (worker counts vary per job).
+    pub workers: usize,
+    pub jobs: usize,
+    pub loss_prob: f64,
+    pub tensor_bytes: Option<u64>,
+}
+
+/// One cell's replica-aggregated outcome.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub spec: CellSpec,
+    pub replicas: usize,
+    /// Pooled per-job average JCTs across all replicas (ms).
+    pub jct_ms_mean: f64,
+    pub jct_ms_p50: f64,
+    pub jct_ms_p95: f64,
+    /// 95% normal CI half-width over the pooled per-job JCTs (0 when
+    /// fewer than two samples).
+    pub jct_ms_ci95: f64,
+    /// Mean §7.3 switch-memory utilization across replicas.
+    pub mem_util: f64,
+    /// Mean first-transmit → final-delivery transit latency (µs).
+    pub transit_us: f64,
+    /// Events processed, summed across replicas.
+    pub events: u64,
+    /// Past-schedule clamps, summed across replicas.
+    pub past_schedules: u64,
+    /// Replicas that hit the time cap.
+    pub truncated: usize,
+    /// Mean worker-gradient packets absorbed by first-level switches.
+    pub rack_grad_pkts: f64,
+    /// Mean rack partials reaching the edge (0 for single-switch stars).
+    pub edge_partial_pkts: f64,
+}
+
+/// A completed sweep: the config that produced it plus one result per
+/// grid cell, in grid order.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub config: SweepConfig,
+    pub cells: Vec<CellResult>,
+}
+
+/// Lowercase a free-form label into a filename-safe slug (`A:B = 1:1` →
+/// `a_b_1_1`).
+pub fn slug(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c.to_ascii_lowercase());
+        } else if !out.ends_with('_') && !out.is_empty() {
+            out.push('_');
+        }
+    }
+    out.trim_end_matches('_').to_string()
+}
+
+fn filename_safe(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+/// Read an optional integer key as `u32`, rejecting out-of-range values
+/// with a pointed error instead of silently wrapping through `as`.
+fn u32_key(t: &TomlTable, key: &str, default: u32) -> Result<u32> {
+    match t.get(key) {
+        None => Ok(default),
+        Some(v) => {
+            let x = v.as_int().with_context(|| format!("{key} must be an integer"))?;
+            u32::try_from(x)
+                .map_err(|_| anyhow::anyhow!("{key}: {x} is outside 0..={}", u32::MAX))
+        }
+    }
+}
+
+impl SweepConfig {
+    /// The built-in CI grid: all five INA policies × racks {1, 4} on a
+    /// fast 2-job × 4-worker microbench cell — the workload the golden
+    /// snapshot (`tests/golden/sweep_quick.json`) pins.
+    pub fn quick() -> SweepConfig {
+        let base = ExperimentConfig { jitter_max_ns: 20 * USEC, ..ExperimentConfig::default() };
+        SweepConfig {
+            name: "quick".into(),
+            policies: PolicyKind::ALL_INA.to_vec(),
+            racks: vec![1, 4],
+            workers: vec![4],
+            jobs: vec![2],
+            seeds: vec![42],
+            loss_probs: vec![0.0],
+            tensor_bytes: vec![Some(256 * 1024)],
+            models: vec![ModelMix::plain("microbench")],
+            iterations: 2,
+            base,
+            trace: None,
+        }
+    }
+
+    /// Load from a TOML-subset sweep file (see README § `esa sweep`).
+    pub fn from_file(path: &Path) -> Result<SweepConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading sweep config {}", path.display()))?;
+        Self::parse_str(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Parse a sweep document from text.
+    pub fn parse_str(text: &str) -> Result<SweepConfig> {
+        let t = parse_toml(text)?;
+        Self::from_table(&t)
+    }
+
+    /// Build from a parsed table. Axes live under `[axes]`, the model mix
+    /// under `[models]`, base-experiment overrides under `[base]`, and an
+    /// optional Poisson mix under `[trace]`. Every malformed axis fails
+    /// here with a pointed error — a bad cell must never be skipped.
+    pub fn from_table(t: &TomlTable) -> Result<SweepConfig> {
+        let mut cfg = SweepConfig::quick();
+        cfg.name = t.str_or("name", "sweep");
+        cfg.iterations = u32_key(t, "iterations", 3)?;
+
+        cfg.policies = match t.str_list("axes.policies")? {
+            None => vec![PolicyKind::Esa],
+            Some(names) => names
+                .iter()
+                .map(|s| PolicyKind::parse(s).context("axes.policies"))
+                .collect::<Result<Vec<_>>>()?,
+        };
+        fn usize_axis(t: &TomlTable, key: &str) -> Result<Option<Vec<usize>>> {
+            match t.int_list(key)? {
+                None => Ok(None),
+                Some(v) => v
+                    .into_iter()
+                    .map(|x| {
+                        usize::try_from(x).map_err(|_| {
+                            anyhow::anyhow!("{key}: value {x} must be non-negative")
+                        })
+                    })
+                    .collect::<Result<Vec<usize>>>()
+                    .map(Some),
+            }
+        }
+        let explicit_workers = usize_axis(t, "axes.workers")?;
+        let explicit_jobs = usize_axis(t, "axes.jobs")?;
+        cfg.racks = usize_axis(t, "axes.racks")?.unwrap_or_else(|| vec![1]);
+        cfg.workers = explicit_workers.clone().unwrap_or_else(|| vec![8]);
+        cfg.jobs = explicit_jobs.clone().unwrap_or_else(|| vec![4]);
+        cfg.seeds = match t.int_list("axes.seeds")? {
+            None => vec![1],
+            Some(v) => v
+                .into_iter()
+                .map(|x| {
+                    u64::try_from(x)
+                        .map_err(|_| anyhow::anyhow!("axes.seeds: {x} must be non-negative"))
+                })
+                .collect::<Result<Vec<u64>>>()?,
+        };
+        cfg.loss_probs = t.float_list("axes.loss_prob")?.unwrap_or_else(|| vec![0.0]);
+        cfg.tensor_bytes = match t.int_list("axes.tensor_kb")? {
+            None => vec![None],
+            Some(v) => v
+                .into_iter()
+                .map(|kb| {
+                    u64::try_from(kb)
+                        .map(|kb| Some(kb * 1024))
+                        .map_err(|_| anyhow::anyhow!("axes.tensor_kb: {kb} must be non-negative"))
+                })
+                .collect::<Result<Vec<Option<u64>>>>()?,
+        };
+
+        let names = t
+            .str_list("models.names")?
+            .unwrap_or_else(|| vec!["dnn_a".to_string()]);
+        let tensors = t.int_list("models.tensor_kb")?;
+        let weights = t.float_list("models.weights")?;
+        if let Some(ts) = &tensors {
+            if ts.len() != names.len() {
+                bail!(
+                    "models.tensor_kb has {} entries for {} models.names",
+                    ts.len(),
+                    names.len()
+                );
+            }
+        }
+        if let Some(ws) = &weights {
+            if ws.len() != names.len() {
+                bail!(
+                    "models.weights has {} entries for {} models.names",
+                    ws.len(),
+                    names.len()
+                );
+            }
+        }
+        cfg.models = names
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                let tensor_bytes = match tensors.as_ref().map(|ts| ts[i]) {
+                    None => None,
+                    Some(kb) => Some(
+                        u64::try_from(kb)
+                            .map(|kb| kb * 1024)
+                            .map_err(|_| {
+                                anyhow::anyhow!("models.tensor_kb: {kb} must be non-negative")
+                            })?,
+                    ),
+                };
+                Ok(ModelMix {
+                    name: name.clone(),
+                    tensor_bytes,
+                    weight: weights.as_ref().map(|ws| ws[i]).unwrap_or(1.0),
+                })
+            })
+            .collect::<Result<Vec<ModelMix>>>()?;
+
+        cfg.base = ExperimentConfig {
+            switch: SwitchConfig {
+                memory_bytes: (t.float_or("base.memory_mb", 5.0) * 1024.0 * 1024.0) as u64,
+                ..SwitchConfig::default()
+            },
+            net: NetworkConfig {
+                bandwidth_gbps: t.float_or("base.bandwidth_gbps", 100.0),
+                base_rtt_ns: (t.float_or("base.base_rtt_us", 10.0) * USEC as f64) as u64,
+                loss_prob: 0.0,
+            },
+            jitter_max_ns: (t.float_or("base.jitter_max_us", 300.0) * USEC as f64) as u64,
+            start_spread_ns: (t.float_or("base.start_spread_us", 1000.0) * USEC as f64) as u64,
+            max_sim_ns: (t.float_or("base.max_sim_ms", 60_000.0) * MSEC as f64) as u64,
+            ..ExperimentConfig::default()
+        };
+
+        // any trace.* key engages trace mode — a [trace] section missing
+        // `n` must be an error, never a silent fall-back to the fixed grid
+        cfg.trace = if t.keys().any(|k| k == "trace" || k.starts_with("trace.")) {
+            if explicit_workers.is_some() || explicit_jobs.is_some() {
+                bail!(
+                    "[trace] replaces the workers/jobs axes — remove axes.workers/axes.jobs \
+                     or drop the [trace] section"
+                );
+            }
+            let n = t
+                .require("trace.n")
+                .context("[trace] needs `n` (jobs per cell)")?
+                .as_int()
+                .context("trace.n must be an integer")?;
+            if n <= 0 {
+                bail!("trace.n must be >= 1, got {n}");
+            }
+            Some(TraceSpec {
+                n: n as usize,
+                rate_per_sec: t.float_or("trace.rate_per_sec", 50.0),
+                worker_choices: usize_axis(t, "trace.worker_choices")?
+                    .unwrap_or_else(|| vec![4, 8, 16]),
+                iter_range: (u32_key(t, "trace.iter_min", 1)?, u32_key(t, "trace.iter_max", 3)?),
+            })
+        } else {
+            None
+        };
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Reject impossible grids with pointed errors — an invalid axis
+    /// value must fail the whole sweep up front, never skip cells.
+    pub fn validate(&self) -> Result<()> {
+        if !filename_safe(&self.name) {
+            bail!(
+                "sweep name `{}` must be filename-safe ([A-Za-z0-9_-], non-empty) — it names \
+                 SWEEP_<name>.json",
+                self.name
+            );
+        }
+        if self.policies.is_empty() {
+            bail!("axes.policies must list at least one policy");
+        }
+        if self.seeds.is_empty() {
+            bail!("axes.seeds must list at least one seed (an empty seed list would run nothing)");
+        }
+        if self.racks.is_empty()
+            || self.workers.is_empty()
+            || self.jobs.is_empty()
+            || self.loss_probs.is_empty()
+            || self.tensor_bytes.is_empty()
+        {
+            bail!("every sweep axis must list at least one value");
+        }
+        for &r in &self.racks {
+            if r == 0 || r > 64 {
+                bail!("axes.racks: {r} is outside 1..=64");
+            }
+        }
+        if self.trace.is_none() {
+            for &w in &self.workers {
+                if w == 0 || w > 32 {
+                    bail!(
+                        "axes.workers: a {w}-worker cell is impossible (workers must be in \
+                         1..=32, the aggregation bitmap width)"
+                    );
+                }
+            }
+            for &j in &self.jobs {
+                if j == 0 {
+                    bail!("axes.jobs: a 0-job cell measures nothing (jobs must be >= 1)");
+                }
+            }
+        }
+        for &l in &self.loss_probs {
+            if !(0.0..1.0).contains(&l) {
+                bail!("axes.loss_prob: {l} is outside [0, 1)");
+            }
+        }
+        for t in &self.tensor_bytes {
+            if *t == Some(0) {
+                bail!("axes.tensor_kb: tensors must be non-empty");
+            }
+        }
+        if self.models.is_empty() {
+            bail!("models.names must list at least one model");
+        }
+        if self.iterations == 0 {
+            bail!("iterations must be >= 1");
+        }
+        if let Some(tr) = &self.trace {
+            if tr.n == 0 {
+                bail!("trace.n must be >= 1");
+            }
+            if tr.rate_per_sec <= 0.0 {
+                bail!("trace.rate_per_sec must be positive");
+            }
+            if tr.worker_choices.is_empty() {
+                bail!("trace.worker_choices must list at least one worker count");
+            }
+            for &w in &tr.worker_choices {
+                if w == 0 || w > 32 {
+                    bail!("trace.worker_choices: {w} is outside 1..=32");
+                }
+            }
+            if tr.iter_range.0 == 0 || tr.iter_range.0 > tr.iter_range.1 {
+                bail!(
+                    "trace iterations range [{}, {}] must satisfy 1 <= min <= max",
+                    tr.iter_range.0,
+                    tr.iter_range.1
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand the grid in the documented order (policy outermost,
+    /// tensor_bytes innermost; trace mode collapses workers/jobs).
+    pub fn expand(&self) -> Vec<CellSpec> {
+        let (workers, jobs): (&[usize], &[usize]) = match &self.trace {
+            Some(tr) => (&[0], std::slice::from_ref(&tr.n)),
+            None => (&self.workers, &self.jobs),
+        };
+        let mut cells = Vec::new();
+        for &policy in &self.policies {
+            for &racks in &self.racks {
+                for &w in workers {
+                    for &j in jobs {
+                        for &loss in &self.loss_probs {
+                            for &tensor in &self.tensor_bytes {
+                                cells.push(CellSpec {
+                                    policy,
+                                    racks,
+                                    workers: w,
+                                    jobs: j,
+                                    loss_prob: loss,
+                                    tensor_bytes: tensor,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        cells
+    }
+
+    /// Materialize one `(cell, seed)` replica as an `ExperimentConfig`.
+    pub fn cell_experiment(&self, spec: &CellSpec, seed: u64) -> ExperimentConfig {
+        let mut cfg = self.base.clone();
+        cfg.name = format!("{}:{}:r{}:s{}", self.name, spec.policy.key(), spec.racks, seed);
+        cfg.policy = spec.policy;
+        cfg.racks = spec.racks;
+        cfg.seed = seed;
+        cfg.iterations = self.iterations;
+        cfg.net.loss_prob = spec.loss_prob;
+        cfg.jobs = match &self.trace {
+            Some(tr) => {
+                let tc = TraceConfig {
+                    rate_per_sec: tr.rate_per_sec,
+                    mix: self.models.iter().map(|m| (m.name.clone(), m.weight)).collect(),
+                    worker_choices: tr.worker_choices.clone(),
+                    iter_range: tr.iter_range,
+                };
+                let mut rng = Rng::new(seed ^ TRACE_STREAM_SALT);
+                generate(&tc, tr.n, &mut rng)
+                    .into_iter()
+                    .map(|e| {
+                        let mix = self.models.iter().find(|m| m.name == e.model);
+                        JobSpec {
+                            n_workers: e.n_workers,
+                            start_ns: e.arrival_ns,
+                            tensor_bytes: spec
+                                .tensor_bytes
+                                .or(mix.and_then(|m| m.tensor_bytes)),
+                            iterations: Some(e.iterations),
+                            model: e.model,
+                        }
+                    })
+                    .collect()
+            }
+            None => (0..spec.jobs)
+                .map(|k| {
+                    let mix = &self.models[k % self.models.len()];
+                    JobSpec {
+                        model: mix.name.clone(),
+                        n_workers: spec.workers,
+                        start_ns: 0,
+                        tensor_bytes: spec.tensor_bytes.or(mix.tensor_bytes),
+                        iterations: None,
+                    }
+                })
+                .collect(),
+        };
+        cfg
+    }
+}
+
+fn aggregate(spec: CellSpec, bandwidth_gbps: f64, replicas: &[ExperimentMetrics]) -> CellResult {
+    let mut jct = Summary::new();
+    let mut jct_pcts = Percentiles::new();
+    let mut util = Summary::new();
+    let mut transit = Summary::new();
+    let mut rack_grads = Summary::new();
+    let mut edge_partials = Summary::new();
+    let mut events = 0u64;
+    let mut past_schedules = 0u64;
+    let mut truncated = 0usize;
+    for m in replicas {
+        for j in &m.jobs {
+            let v = j.avg_jct_ns();
+            if v.is_finite() {
+                jct.add(v / 1e6);
+                jct_pcts.add(v / 1e6);
+            }
+        }
+        util.add(m.avg_utilization(bandwidth_gbps));
+        transit.add(m.avg_transit_ns / 1e3);
+        rack_grads.add(
+            m.switches
+                .iter()
+                .filter(|s| s.tier == "rack" || s.tier == "root")
+                .map(|s| s.stats.grad_pkts)
+                .sum::<u64>() as f64,
+        );
+        edge_partials.add(
+            m.switches
+                .iter()
+                .filter(|s| s.tier == "edge")
+                .map(|s| s.stats.rack_partial_pkts)
+                .sum::<u64>() as f64,
+        );
+        events += m.events;
+        past_schedules += m.past_schedules;
+        truncated += m.truncated as usize;
+    }
+    let ci95 = if jct.count() >= 2 {
+        1.96 * jct.stddev() / (jct.count() as f64).sqrt()
+    } else {
+        0.0
+    };
+    CellResult {
+        spec,
+        replicas: replicas.len(),
+        jct_ms_mean: jct.mean(),
+        jct_ms_p50: jct_pcts.percentile(50.0),
+        jct_ms_p95: jct_pcts.percentile(95.0),
+        jct_ms_ci95: ci95,
+        mem_util: util.mean(),
+        transit_us: transit.mean(),
+        events,
+        past_schedules,
+        truncated,
+        rack_grad_pkts: rack_grads.mean(),
+        edge_partial_pkts: edge_partials.mean(),
+    }
+}
+
+/// Expand and execute a sweep on up to `threads` workers. Any failing
+/// replica fails the whole sweep with its cell coordinates attached.
+pub fn run_sweep(cfg: &SweepConfig, threads: usize) -> Result<SweepReport> {
+    cfg.validate()?;
+    let cells = cfg.expand();
+    let tasks: Vec<(usize, u64)> = cells
+        .iter()
+        .enumerate()
+        .flat_map(|(ci, _)| cfg.seeds.iter().map(move |&s| (ci, s)))
+        .collect();
+    let metrics = run_ordered(threads, tasks, |_, (ci, seed)| {
+        let exp = cfg.cell_experiment(&cells[ci], seed);
+        (ci, seed, Simulation::run_experiment(exp))
+    });
+    let n_seeds = cfg.seeds.len();
+    let mut results = Vec::with_capacity(cells.len());
+    for (ci, chunk) in metrics.chunks(n_seeds).enumerate() {
+        let spec = cells[ci];
+        let mut replicas = Vec::with_capacity(n_seeds);
+        for (tci, seed, m) in chunk {
+            debug_assert_eq!(*tci, ci);
+            let m = m.as_ref().map_err(|e| {
+                anyhow::anyhow!(
+                    "cell {}/r{}/w{}/j{} seed {seed}: {e:#}",
+                    spec.policy.key(),
+                    spec.racks,
+                    spec.workers,
+                    spec.jobs
+                )
+            })?;
+            replicas.push(m.clone());
+        }
+        results.push(aggregate(spec, cfg.base.net.bandwidth_gbps, &replicas));
+    }
+    Ok(SweepReport { config: cfg.clone(), cells: results })
+}
+
+fn f64_or_null(w: &mut JsonWriter, key: &str, v: f64, decimals: usize) {
+    if v.is_finite() {
+        w.f64_field(key, v, decimals);
+    } else {
+        w.null_field(key);
+    }
+}
+
+impl SweepReport {
+    /// The byte-stable JSON artifact (see the module determinism notes).
+    pub fn to_json(&self) -> String {
+        let c = &self.config;
+        let mut w = JsonWriter::new();
+        w.begin_obj(None);
+        w.str_field("schema", "esa-sweep/1");
+        w.str_field("provenance", "simulated");
+        w.str_field("name", &c.name);
+        w.u64_field("iterations", c.iterations as u64);
+        w.begin_obj(Some("axes"));
+        w.begin_arr(Some("policies"));
+        for p in &c.policies {
+            w.str_item(p.key());
+        }
+        w.end_arr();
+        w.begin_arr(Some("racks"));
+        for &r in &c.racks {
+            w.u64_item(r as u64);
+        }
+        w.end_arr();
+        if c.trace.is_none() {
+            w.begin_arr(Some("workers"));
+            for &x in &c.workers {
+                w.u64_item(x as u64);
+            }
+            w.end_arr();
+            w.begin_arr(Some("jobs"));
+            for &x in &c.jobs {
+                w.u64_item(x as u64);
+            }
+            w.end_arr();
+        }
+        w.begin_arr(Some("seeds"));
+        for &s in &c.seeds {
+            w.u64_item(s);
+        }
+        w.end_arr();
+        w.begin_arr(Some("loss_prob"));
+        for &l in &c.loss_probs {
+            w.f64_item(l, 6);
+        }
+        w.end_arr();
+        w.begin_arr(Some("tensor_bytes"));
+        for &t in &c.tensor_bytes {
+            match t {
+                Some(b) => w.u64_item(b),
+                None => w.null_item(),
+            }
+        }
+        w.end_arr();
+        w.end_obj();
+        w.begin_arr(Some("models"));
+        for m in &c.models {
+            w.str_item(&m.name);
+        }
+        w.end_arr();
+        if let Some(tr) = &c.trace {
+            w.begin_obj(Some("trace"));
+            w.u64_field("n", tr.n as u64);
+            w.f64_field("rate_per_sec", tr.rate_per_sec, 3);
+            w.begin_arr(Some("worker_choices"));
+            for &x in &tr.worker_choices {
+                w.u64_item(x as u64);
+            }
+            w.end_arr();
+            w.u64_field("iter_min", tr.iter_range.0 as u64);
+            w.u64_field("iter_max", tr.iter_range.1 as u64);
+            w.end_obj();
+        }
+        w.begin_arr(Some("cells"));
+        for cell in &self.cells {
+            let s = &cell.spec;
+            w.begin_obj(None);
+            w.str_field("policy", s.policy.key());
+            w.u64_field("racks", s.racks as u64);
+            if c.trace.is_some() {
+                w.null_field("workers");
+            } else {
+                w.u64_field("workers", s.workers as u64);
+            }
+            w.u64_field("jobs", s.jobs as u64);
+            w.f64_field("loss_prob", s.loss_prob, 6);
+            match s.tensor_bytes {
+                Some(b) => w.u64_field("tensor_bytes", b),
+                None => w.null_field("tensor_bytes"),
+            }
+            w.u64_field("replicas", cell.replicas as u64);
+            f64_or_null(&mut w, "jct_ms_mean", cell.jct_ms_mean, 6);
+            f64_or_null(&mut w, "jct_ms_p50", cell.jct_ms_p50, 6);
+            f64_or_null(&mut w, "jct_ms_p95", cell.jct_ms_p95, 6);
+            f64_or_null(&mut w, "jct_ms_ci95", cell.jct_ms_ci95, 6);
+            f64_or_null(&mut w, "mem_util", cell.mem_util, 6);
+            f64_or_null(&mut w, "transit_us", cell.transit_us, 3);
+            w.u64_field("events", cell.events);
+            w.u64_field("past_schedules", cell.past_schedules);
+            w.u64_field("truncated", cell.truncated as u64);
+            f64_or_null(&mut w, "rack_grad_pkts", cell.rack_grad_pkts, 1);
+            f64_or_null(&mut w, "edge_partial_pkts", cell.edge_partial_pkts, 1);
+            w.end_obj();
+        }
+        w.end_arr();
+        w.end_obj();
+        w.finish()
+    }
+
+    /// Flat CSV companion, one row per cell in grid order.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "policy,racks,workers,jobs,loss_prob,tensor_bytes,replicas,jct_ms_mean,\
+             jct_ms_p50,jct_ms_p95,jct_ms_ci95,mem_util,transit_us,events,past_schedules,\
+             truncated,rack_grad_pkts,edge_partial_pkts\n",
+        );
+        let fnum = |v: f64, d: usize| {
+            if v.is_finite() {
+                format!("{v:.d$}")
+            } else {
+                String::new()
+            }
+        };
+        for cell in &self.cells {
+            let sp = &cell.spec;
+            let workers = if self.config.trace.is_some() {
+                String::new()
+            } else {
+                sp.workers.to_string()
+            };
+            let tensor = sp.tensor_bytes.map(|b| b.to_string()).unwrap_or_default();
+            let loss = format!("{:.6}", sp.loss_prob);
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                sp.policy.key(),
+                sp.racks,
+                workers,
+                sp.jobs,
+                loss,
+                tensor,
+                cell.replicas,
+                fnum(cell.jct_ms_mean, 6),
+                fnum(cell.jct_ms_p50, 6),
+                fnum(cell.jct_ms_p95, 6),
+                fnum(cell.jct_ms_ci95, 6),
+                fnum(cell.mem_util, 6),
+                fnum(cell.transit_us, 3),
+                cell.events,
+                cell.past_schedules,
+                cell.truncated,
+                fnum(cell.rack_grad_pkts, 1),
+                fnum(cell.edge_partial_pkts, 1),
+            ));
+        }
+        s
+    }
+
+    /// Human summary for the CLI.
+    pub fn summary_table(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .cells
+            .iter()
+            .map(|cell| {
+                let sp = &cell.spec;
+                vec![
+                    sp.policy.name().to_string(),
+                    sp.racks.to_string(),
+                    if self.config.trace.is_some() {
+                        "mix".into()
+                    } else {
+                        sp.workers.to_string()
+                    },
+                    sp.jobs.to_string(),
+                    format!("{:.4}", sp.loss_prob),
+                    format!("{:.3}", cell.jct_ms_mean),
+                    format!("{:.3}", cell.jct_ms_p95),
+                    format!("{:.3}", cell.mem_util),
+                    cell.truncated.to_string(),
+                ]
+            })
+            .collect();
+        render_table(
+            &[
+                "policy",
+                "racks",
+                "workers",
+                "jobs",
+                "loss",
+                "JCT mean (ms)",
+                "JCT p95 (ms)",
+                "mem util",
+                "trunc",
+            ],
+            &rows,
+        )
+    }
+
+    /// Write `SWEEP_<name>.json` + `SWEEP_<name>.csv` under `dir`,
+    /// returning the two paths.
+    pub fn write(&self, dir: &Path) -> Result<(PathBuf, PathBuf)> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating sweep output dir {}", dir.display()))?;
+        let json_path = dir.join(format!("SWEEP_{}.json", self.config.name));
+        let csv_path = dir.join(format!("SWEEP_{}.csv", self.config.name));
+        std::fs::write(&json_path, self.to_json())
+            .with_context(|| format!("writing {}", json_path.display()))?;
+        std::fs::write(&csv_path, self.to_csv())
+            .with_context(|| format!("writing {}", csv_path.display()))?;
+        Ok((json_path, csv_path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SweepConfig {
+        let mut cfg = SweepConfig::quick();
+        cfg.name = "tiny".into();
+        cfg.policies = vec![PolicyKind::Esa, PolicyKind::Atp];
+        cfg.racks = vec![1];
+        cfg.workers = vec![2];
+        cfg.jobs = vec![1];
+        cfg.tensor_bytes = vec![Some(64 * 1024)];
+        cfg.iterations = 1;
+        cfg
+    }
+
+    #[test]
+    fn expansion_order_is_policy_major() {
+        let mut cfg = tiny();
+        cfg.racks = vec![1, 4];
+        let cells = cfg.expand();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].policy, PolicyKind::Esa);
+        assert_eq!(cells[0].racks, 1);
+        assert_eq!(cells[1].policy, PolicyKind::Esa);
+        assert_eq!(cells[1].racks, 4);
+        assert_eq!(cells[2].policy, PolicyKind::Atp);
+        assert_eq!(cells[2].racks, 1);
+    }
+
+    #[test]
+    fn quick_grid_is_five_policies_by_two_fabrics() {
+        let cfg = SweepConfig::quick();
+        cfg.validate().unwrap();
+        let cells = cfg.expand();
+        assert_eq!(cells.len(), 10);
+        assert!(cells.iter().filter(|c| c.racks == 4).count() == 5);
+    }
+
+    #[test]
+    fn runs_and_serializes_deterministically() {
+        let cfg = tiny();
+        let a = run_sweep(&cfg, 1).unwrap();
+        let b = run_sweep(&cfg, 3).unwrap();
+        assert_eq!(a.to_json(), b.to_json());
+        assert_eq!(a.to_csv(), b.to_csv());
+        assert_eq!(a.cells.len(), 2);
+        assert!(a.cells[0].jct_ms_mean > 0.0);
+        assert_eq!(a.cells[0].truncated, 0);
+        assert!(a.to_json().contains("\"schema\": \"esa-sweep/1\""));
+    }
+
+    #[test]
+    fn multi_seed_aggregation_pools_jobs() {
+        let mut cfg = tiny();
+        cfg.policies = vec![PolicyKind::Esa];
+        cfg.seeds = vec![1, 2, 3];
+        let r = run_sweep(&cfg, 2).unwrap();
+        assert_eq!(r.cells[0].replicas, 3);
+        // 3 replicas × 1 job each: CI comes from >= 2 samples
+        assert!(r.cells[0].jct_ms_ci95 >= 0.0);
+        assert!(r.cells[0].jct_ms_p95 >= r.cells[0].jct_ms_p50);
+    }
+
+    #[test]
+    fn trace_mode_builds_poisson_jobs() {
+        let mut cfg = tiny();
+        cfg.policies = vec![PolicyKind::Esa];
+        cfg.trace = Some(TraceSpec {
+            n: 3,
+            rate_per_sec: 500.0,
+            worker_choices: vec![2],
+            iter_range: (1, 2),
+        });
+        cfg.validate().unwrap();
+        let cells = cfg.expand();
+        assert_eq!(cells.len(), 1);
+        let exp = cfg.cell_experiment(&cells[0], 42);
+        assert_eq!(exp.jobs.len(), 3);
+        assert!(exp.jobs.iter().all(|j| j.iterations.is_some()));
+        // deterministic per seed
+        let again = cfg.cell_experiment(&cells[0], 42);
+        assert_eq!(exp.jobs.len(), again.jobs.len());
+        assert_eq!(exp.jobs[0].start_ns, again.jobs[0].start_ns);
+        let r = run_sweep(&cfg, 2).unwrap();
+        assert_eq!(r.cells[0].spec.jobs, 3);
+        assert!(r.to_json().contains("\"trace\""));
+    }
+
+    #[test]
+    fn parse_full_document() {
+        let cfg = SweepConfig::parse_str(
+            r#"
+            name = "fig9_like"
+            iterations = 2
+            [axes]
+            policies = ["esa", "atp", "switchml"]
+            racks = [1]
+            workers = [2, 4]
+            jobs = [8]
+            seeds = [2022, 2023]
+            loss_prob = [0.0]
+            tensor_kb = [1024]
+            [models]
+            names = ["dnn_a", "dnn_b"]
+            tensor_kb = [16384, 8192]
+            [base]
+            memory_mb = 1.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.policies.len(), 3);
+        assert_eq!(cfg.workers, vec![2, 4]);
+        assert_eq!(cfg.seeds, vec![2022, 2023]);
+        assert_eq!(cfg.models[1].tensor_bytes, Some(8192 * 1024));
+        assert_eq!(cfg.base.switch.memory_bytes, 1024 * 1024);
+        assert_eq!(cfg.expand().len(), 6);
+    }
+
+    #[test]
+    fn unknown_policy_is_a_pointed_error() {
+        let err = SweepConfig::parse_str("[axes]\npolicies = [\"esa\", \"bogus\"]")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("axes.policies"), "{err}");
+    }
+
+    #[test]
+    fn empty_seed_list_rejected() {
+        let err = SweepConfig::parse_str("[axes]\nseeds = []").unwrap_err().to_string();
+        assert!(err.contains("seed"), "{err}");
+    }
+
+    #[test]
+    fn zero_worker_cell_rejected() {
+        let err = SweepConfig::parse_str("[axes]\nworkers = [4, 0]")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("workers"), "{err}");
+        assert!(err.contains("1..=32"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_axis_keys_rejected() {
+        let err = SweepConfig::parse_str("[axes]\nracks = [1]\nracks = [2]")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate key"), "{err}");
+    }
+
+    #[test]
+    fn negative_values_do_not_wrap() {
+        let err = SweepConfig::parse_str("[axes]\nseeds = [1, -1]").unwrap_err().to_string();
+        assert!(err.contains("non-negative"), "{err}");
+        let err = SweepConfig::parse_str("[axes]\ntensor_kb = [-4]").unwrap_err().to_string();
+        assert!(err.contains("non-negative"), "{err}");
+        let err = SweepConfig::parse_str("iterations = -1").unwrap_err().to_string();
+        assert!(err.contains("iterations"), "{err}");
+        let err = SweepConfig::parse_str("[models]\nnames = [\"dnn_a\"]\ntensor_kb = [-1]")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("non-negative"), "{err}");
+        let err = SweepConfig::parse_str("[trace]\nn = 2\niter_min = -3")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("iter_min"), "{err}");
+    }
+
+    #[test]
+    fn trace_section_without_n_is_an_error_not_a_silent_fallback() {
+        let err = SweepConfig::parse_str("[trace]\nrate_per_sec = 100.0")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("trace.n"), "{err}");
+    }
+
+    #[test]
+    fn trace_conflicts_with_grid_axes() {
+        let err = SweepConfig::parse_str("[axes]\nworkers = [4]\n[trace]\nn = 8")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("replaces the workers/jobs axes"), "{err}");
+    }
+
+    #[test]
+    fn unsafe_name_rejected() {
+        let err = SweepConfig::parse_str("name = \"../evil\"").unwrap_err().to_string();
+        assert!(err.contains("filename-safe"), "{err}");
+    }
+
+    #[test]
+    fn slug_flattens_labels() {
+        assert_eq!(slug("A:B = 1:1"), "a_b_1_1");
+        assert_eq!(slug("all DNN A"), "all_dnn_a");
+        assert_eq!(slug("__x__"), "x");
+    }
+}

@@ -78,6 +78,28 @@ impl Args {
         Ok(self.get_parsed(name)?.unwrap_or(default))
     }
 
+    /// Parse a comma-separated option value (`--seeds 1,2,3`) into a
+    /// typed list. Empty segments are rejected so a trailing comma is a
+    /// loud error rather than a silently shorter axis.
+    pub fn get_comma_list<T: std::str::FromStr>(&self, name: &str) -> Result<Option<Vec<T>>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let Some(s) = self.get(name) else {
+            return Ok(None);
+        };
+        s.split(',')
+            .map(|part| {
+                let part = part.trim();
+                if part.is_empty() {
+                    bail!("--{name}={s}: empty list element");
+                }
+                part.parse::<T>().map_err(|e| anyhow!("--{name}={s}: `{part}`: {e}"))
+            })
+            .collect::<Result<Vec<T>>>()
+            .map(Some)
+    }
+
     pub fn require(&self, name: &str) -> Result<&str> {
         self.get(name)
             .with_context(|| format!("missing required option --{name}"))
@@ -139,5 +161,20 @@ mod tests {
     fn require_missing_errors() {
         let a = parse("sim");
         assert!(a.require("config").is_err());
+    }
+
+    #[test]
+    fn comma_list_parses() {
+        let a = parse("sweep --seeds 1,2,3");
+        assert_eq!(a.get_comma_list::<u64>("seeds").unwrap(), Some(vec![1, 2, 3]));
+        assert_eq!(a.get_comma_list::<u64>("racks").unwrap(), None);
+    }
+
+    #[test]
+    fn comma_list_rejects_bad_elements() {
+        let a = parse("sweep --seeds 1,x,3");
+        assert!(a.get_comma_list::<u64>("seeds").is_err());
+        let a = parse("sweep --seeds 1,,3");
+        assert!(a.get_comma_list::<u64>("seeds").is_err());
     }
 }

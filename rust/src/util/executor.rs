@@ -1,0 +1,106 @@
+//! A reusable bounded thread-pool executor for embarrassingly parallel
+//! work (std threads — tokio is not available offline).
+//!
+//! [`run_ordered`] is the one primitive: run `items` through `f` on up to
+//! `threads` workers and return the results **in input order**, whatever
+//! the completion order was. Workers self-schedule off a shared queue
+//! (the idle ones steal the next pending item), so a straggler item never
+//! serializes the rest of the grid behind it. Because each item's
+//! computation is independent and results are re-assembled by index, the
+//! output is bit-identical to a serial run — this is what the sweep
+//! engine's "byte-identical across `--threads 1` vs `--threads N`"
+//! guarantee rests on (DESIGN.md §10).
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Default worker count: one per available core (minimum 1).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+}
+
+/// Run `f` over `items` on up to `threads` workers, returning results in
+/// input order. `f` receives `(index, item)`. A panic in any worker
+/// propagates to the caller when the scope joins.
+pub fn run_ordered<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let queue: Mutex<VecDeque<(usize, T)>> =
+        Mutex::new(items.into_iter().enumerate().collect());
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let next = queue.lock().unwrap().pop_front();
+                match next {
+                    Some((i, item)) => {
+                        let r = f(i, item);
+                        *slots[i].lock().unwrap() = Some(r);
+                    }
+                    None => return,
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("executor slot poisoned")
+                .expect("worker dropped a result")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let out = run_ordered(8, items, |i, x| {
+            assert_eq!(i as u64, x);
+            x * 2
+        });
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_matches_many() {
+        let items: Vec<u64> = (0..37).collect();
+        let one = run_ordered(1, items.clone(), |_, x| x.wrapping_mul(0x9e37_79b9));
+        let many = run_ordered(6, items, |_, x| x.wrapping_mul(0x9e37_79b9));
+        assert_eq!(one, many);
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let out: Vec<u32> = run_ordered(4, Vec::<u32>::new(), |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let out = run_ordered(64, vec![1, 2, 3], |_, x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

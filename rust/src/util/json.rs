@@ -1,0 +1,239 @@
+//! Minimal hand-rolled JSON emitter (the crate is offline-first: no
+//! serde). One field per line, two-space indent, **stable field order and
+//! caller-fixed float precision** — outputs are meant to be byte-diffed
+//! (`BENCH_hotpath.json`, `SWEEP_<name>.json` and the CI golden gates),
+//! so nothing about the encoding may depend on hash order, locale, or
+//! float shortest-round-trip heuristics.
+
+/// Streaming JSON writer. Containers are opened/closed explicitly; the
+/// writer tracks comma placement and indentation.
+///
+/// ```
+/// use esa::util::json::JsonWriter;
+///
+/// let mut w = JsonWriter::new();
+/// w.begin_obj(None);
+/// w.str_field("schema", "demo/1");
+/// w.begin_arr(Some("xs"));
+/// w.f64_item(1.5, 2);
+/// w.end_arr();
+/// w.end_obj();
+/// assert_eq!(w.finish(), "{\n  \"schema\": \"demo/1\",\n  \"xs\": [\n    1.50\n  ]\n}\n");
+/// ```
+#[derive(Debug, Default)]
+pub struct JsonWriter {
+    out: String,
+    /// One entry per open container; `true` once it has an item.
+    stack: Vec<bool>,
+}
+
+fn push_escaped(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+impl JsonWriter {
+    pub fn new() -> JsonWriter {
+        JsonWriter { out: String::with_capacity(4096), stack: Vec::new() }
+    }
+
+    fn newline_indent(&mut self) {
+        self.out.push('\n');
+        for _ in 0..self.stack.len() {
+            self.out.push_str("  ");
+        }
+    }
+
+    /// Start one item in the current container: comma bookkeeping, then
+    /// the optional `"key": ` prefix. At the top level (empty stack) this
+    /// is a no-op prefix so the document starts flush at column 0.
+    fn item(&mut self, key: Option<&str>) {
+        if let Some(has) = self.stack.last_mut() {
+            if *has {
+                self.out.push(',');
+            }
+            *has = true;
+            self.newline_indent();
+        }
+        if let Some(k) = key {
+            self.out.push('"');
+            push_escaped(&mut self.out, k);
+            self.out.push_str("\": ");
+        }
+    }
+
+    pub fn begin_obj(&mut self, key: Option<&str>) {
+        self.item(key);
+        self.out.push('{');
+        self.stack.push(false);
+    }
+
+    pub fn end_obj(&mut self) {
+        let had_items = self.stack.pop().expect("end_obj without begin_obj");
+        if had_items {
+            self.newline_indent();
+        }
+        self.out.push('}');
+    }
+
+    pub fn begin_arr(&mut self, key: Option<&str>) {
+        self.item(key);
+        self.out.push('[');
+        self.stack.push(false);
+    }
+
+    pub fn end_arr(&mut self) {
+        let had_items = self.stack.pop().expect("end_arr without begin_arr");
+        if had_items {
+            self.newline_indent();
+        }
+        self.out.push(']');
+    }
+
+    pub fn str_field(&mut self, key: &str, v: &str) {
+        self.item(Some(key));
+        self.out.push('"');
+        push_escaped(&mut self.out, v);
+        self.out.push('"');
+    }
+
+    pub fn u64_field(&mut self, key: &str, v: u64) {
+        self.item(Some(key));
+        self.out.push_str(&v.to_string());
+    }
+
+    pub fn bool_field(&mut self, key: &str, v: bool) {
+        self.item(Some(key));
+        self.out.push_str(if v { "true" } else { "false" });
+    }
+
+    /// Fixed-precision float — the caller chooses how many decimals the
+    /// artifact carries, which makes diffs meaningful.
+    pub fn f64_field(&mut self, key: &str, v: f64, decimals: usize) {
+        self.item(Some(key));
+        self.out.push_str(&format!("{v:.decimals$}"));
+    }
+
+    pub fn null_field(&mut self, key: &str) {
+        self.item(Some(key));
+        self.out.push_str("null");
+    }
+
+    pub fn str_item(&mut self, v: &str) {
+        self.item(None);
+        self.out.push('"');
+        push_escaped(&mut self.out, v);
+        self.out.push('"');
+    }
+
+    pub fn u64_item(&mut self, v: u64) {
+        self.item(None);
+        self.out.push_str(&v.to_string());
+    }
+
+    pub fn f64_item(&mut self, v: f64, decimals: usize) {
+        self.item(None);
+        self.out.push_str(&format!("{v:.decimals$}"));
+    }
+
+    pub fn null_item(&mut self) {
+        self.item(None);
+        self.out.push_str("null");
+    }
+
+    /// Close the document: every container must be balanced. Appends the
+    /// trailing newline POSIX text files end with.
+    pub fn finish(mut self) -> String {
+        assert!(self.stack.is_empty(), "unbalanced JSON containers at finish");
+        self.out.push('\n');
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_object() {
+        let mut w = JsonWriter::new();
+        w.begin_obj(None);
+        w.str_field("a", "x");
+        w.u64_field("b", 7);
+        w.bool_field("c", true);
+        w.end_obj();
+        assert_eq!(w.finish(), "{\n  \"a\": \"x\",\n  \"b\": 7,\n  \"c\": true\n}\n");
+    }
+
+    #[test]
+    fn empty_containers_stay_inline() {
+        let mut w = JsonWriter::new();
+        w.begin_obj(None);
+        w.begin_arr(Some("xs"));
+        w.end_arr();
+        w.begin_obj(Some("o"));
+        w.end_obj();
+        w.end_obj();
+        assert_eq!(w.finish(), "{\n  \"xs\": [],\n  \"o\": {}\n}\n");
+    }
+
+    #[test]
+    fn nested_array_of_objects() {
+        let mut w = JsonWriter::new();
+        w.begin_obj(None);
+        w.begin_arr(Some("cells"));
+        for i in 0..2u64 {
+            w.begin_obj(None);
+            w.u64_field("i", i);
+            w.end_obj();
+        }
+        w.end_arr();
+        w.end_obj();
+        let s = w.finish();
+        assert_eq!(
+            s,
+            "{\n  \"cells\": [\n    {\n      \"i\": 0\n    },\n    {\n      \"i\": 1\n    }\n  ]\n}\n"
+        );
+    }
+
+    #[test]
+    fn fixed_precision_floats() {
+        let mut w = JsonWriter::new();
+        w.begin_obj(None);
+        w.f64_field("x", 1.0 / 3.0, 6);
+        w.f64_field("y", 2.0, 1);
+        w.end_obj();
+        assert!(w.finish().contains("\"x\": 0.333333,\n  \"y\": 2.0\n"));
+    }
+
+    #[test]
+    fn escaping() {
+        let mut w = JsonWriter::new();
+        w.begin_obj(None);
+        w.str_field("k\"ey", "a\\b\n\tc");
+        w.end_obj();
+        assert_eq!(w.finish(), "{\n  \"k\\\"ey\": \"a\\\\b\\n\\tc\"\n}\n");
+    }
+
+    #[test]
+    fn null_fields_and_items() {
+        let mut w = JsonWriter::new();
+        w.begin_obj(None);
+        w.null_field("t");
+        w.begin_arr(Some("xs"));
+        w.null_item();
+        w.u64_item(3);
+        w.end_arr();
+        w.end_obj();
+        assert_eq!(w.finish(), "{\n  \"t\": null,\n  \"xs\": [\n    null,\n    3\n  ]\n}\n");
+    }
+}

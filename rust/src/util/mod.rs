@@ -1,10 +1,13 @@
 //! Cross-cutting substrates built from scratch (no crates.io equivalents are
 //! available offline): deterministic PRNG, the fixed-point codec mirroring
-//! the L1 Pallas kernel, streaming statistics, a minimal CLI parser, and a
-//! logger implementing the `log` facade.
+//! the L1 Pallas kernel, streaming statistics, a minimal CLI parser, a
+//! logger implementing the `log` facade, an ordered thread-pool executor,
+//! and a byte-stable JSON emitter for the machine-readable artifacts.
 
 pub mod cli;
+pub mod executor;
 pub mod fixed;
+pub mod json;
 pub mod logging;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,107 @@
+//! Integration: the parallel scenario-sweep engine (`esa sweep`) —
+//! thread-count invariance, run-to-run byte stability, file-based
+//! configs, and the committed golden snapshot for the CI quick grid
+//! (all five INA policies × racks {1, 4}).
+
+use esa::config::PolicyKind;
+use esa::sim::sweep::{run_sweep, SweepConfig};
+
+/// The determinism contract the CI sweep gate enforces end-to-end:
+/// identical bytes across two runs AND across `--threads 1` vs N.
+#[test]
+fn quick_sweep_byte_identical_across_runs_and_thread_counts() {
+    let cfg = SweepConfig::quick();
+    let a = run_sweep(&cfg, 1).unwrap();
+    let b = run_sweep(&cfg, 4).unwrap();
+    let c = run_sweep(&cfg, 4).unwrap();
+    assert_eq!(a.to_json(), b.to_json(), "threads 1 vs 4 must serialize identically");
+    assert_eq!(b.to_json(), c.to_json(), "two identical runs must serialize identically");
+    assert_eq!(a.to_csv(), b.to_csv(), "CSV must be byte-stable too");
+}
+
+#[test]
+fn quick_sweep_covers_five_policies_and_both_fabrics_cleanly() {
+    let report = run_sweep(&SweepConfig::quick(), 4).unwrap();
+    assert_eq!(report.cells.len(), 10, "5 policies x racks {{1,4}}");
+    for cell in &report.cells {
+        assert_eq!(cell.truncated, 0, "{:?} stalled", cell.spec);
+        assert!(cell.jct_ms_mean > 0.0, "{:?}", cell.spec);
+        assert!(cell.events > 0, "{:?}", cell.spec);
+    }
+    // the two-tier cells actually exercised the edge fold for ESA
+    let esa_4racks = report
+        .cells
+        .iter()
+        .find(|c| c.spec.policy == PolicyKind::Esa && c.spec.racks == 4)
+        .expect("ESA racks=4 cell");
+    assert!(
+        esa_4racks.edge_partial_pkts > 0.0,
+        "no rack partials reached the edge: {esa_4racks:?}"
+    );
+}
+
+#[test]
+fn file_config_round_trips_through_the_engine() {
+    let dir = std::env::temp_dir().join("esa_sweep_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mini.toml");
+    std::fs::write(
+        &path,
+        r#"
+        name = "mini"
+        iterations = 1
+        [axes]
+        policies = ["esa"]
+        racks = [1]
+        workers = [2]
+        jobs = [1]
+        seeds = [7]
+        tensor_kb = [64]
+        [models]
+        names = ["microbench"]
+        "#,
+    )
+    .unwrap();
+    let cfg = SweepConfig::from_file(&path).unwrap();
+    let report = run_sweep(&cfg, 2).unwrap();
+    assert_eq!(report.cells.len(), 1);
+    assert_eq!(report.cells[0].truncated, 0);
+    let (json_path, csv_path) = report.write(&dir).unwrap();
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    assert_eq!(json, report.to_json(), "written artifact must match in-memory bytes");
+    let csv = std::fs::read_to_string(&csv_path).unwrap();
+    assert_eq!(csv.lines().count(), 2, "header + one cell row");
+    assert!(json_path.file_name().unwrap().to_str().unwrap() == "SWEEP_mini.json");
+}
+
+#[test]
+fn missing_config_file_is_a_pointed_error() {
+    let err = SweepConfig::from_file(std::path::Path::new("/nonexistent/sweep.toml"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("reading sweep config"), "{err}");
+}
+
+/// The golden gate: the committed snapshot pins the quick grid's bytes.
+/// A `provenance: placeholder` snapshot (no blessed numbers yet — the
+/// build environment never ran on real hardware) skips the comparison
+/// with a loud message; `make bless` regenerates and flips it to
+/// `simulated`, after which any drift fails here and in CI.
+#[test]
+fn quick_sweep_matches_committed_golden() {
+    let golden = include_str!("golden/sweep_quick.json");
+    if golden.contains("\"provenance\": \"placeholder\"") {
+        eprintln!(
+            "tests/golden/sweep_quick.json is an unblessed placeholder — run `make bless` \
+             on real hardware and commit the result; skipping the byte comparison"
+        );
+        return;
+    }
+    let fresh = run_sweep(&SweepConfig::quick(), 2).unwrap().to_json();
+    assert_eq!(
+        fresh,
+        golden,
+        "quick sweep drifted from the blessed golden snapshot — if the change is \
+         intentional, regenerate via `make bless` and commit"
+    );
+}
