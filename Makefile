@@ -6,7 +6,7 @@ ARTIFACTS ?= artifacts
 PRESET ?= tiny
 WORKERS ?= 4
 
-.PHONY: build test bench bench-figures figures sweep bless artifacts clean-artifacts
+.PHONY: build test bench bench-figures figures sweep churn bless artifacts clean-artifacts
 
 build:
 	cd rust && cargo build --release
@@ -21,6 +21,13 @@ SWEEP_CONFIG ?=
 sweep: build
 	cd rust && ESA_BENCH_QUICK=1 ./target/release/esa sweep \
 		$(if $(SWEEP_CONFIG),--config $(abspath $(SWEEP_CONFIG)),) --out-dir target/sweeps
+
+## Replay the default Poisson job-churn scenario (runtime admission +
+## reclamation) under ESA/ATP/SwitchML; CHURN_quick.json lands in
+## rust/target/churn/. Override flags via CHURN_FLAGS="--jobs 20 ...".
+CHURN_FLAGS ?=
+churn: build
+	cd rust && ./target/release/esa churn $(CHURN_FLAGS) --out-dir target/churn
 
 ## Regenerate the committed golden sweep snapshot (run on real hardware,
 ## then commit). The CI sweep gate diffs every build against this file.

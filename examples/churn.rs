@@ -1,0 +1,77 @@
+//! Online job churn over a shared switch fabric: Poisson arrivals are
+//! admitted at runtime, completed jobs' aggregator memory is reclaimed,
+//! and the same trace is replayed under ESA, ATP and the static-partition
+//! SwitchML baseline. Prints the per-policy JCT-under-churn table (the
+//! arrival→completion time, admission queueing included), the utilization
+//! summary, and a compact reserved-vs-occupied strip chart per policy —
+//! the Fig.-2-style view: static regions stay carved while idle, ESA's
+//! shared pool only ever holds live partials.
+//!
+//! Run with: `cargo run --release --example churn`
+
+use esa::config::{ChurnKnobs, PolicyKind};
+use esa::sim::churn::{run_churn, ChurnSpec};
+use esa::USEC;
+
+fn main() -> anyhow::Result<()> {
+    esa::util::logging::init();
+
+    let mut spec = ChurnSpec::quick();
+    spec.name = "example".into();
+    spec.policies = vec![PolicyKind::Esa, PolicyKind::Atp, PolicyKind::SwitchMl];
+    spec.racks = 2;
+    spec.n_jobs = 10;
+    spec.rate_per_sec = 8_000.0;
+    spec.worker_choices = vec![2, 4];
+    spec.iter_range = (1, 2);
+    spec.models[0].tensor_bytes = Some(768 * 1024);
+    spec.base.switch.memory_bytes = 256 * 1024; // scarce: ~936 slots/stage
+    spec.knobs = ChurnKnobs { sample_tick_ns: 50 * USEC, region_slots: 0 };
+
+    println!(
+        "churn: {} Poisson arrivals at {:.0}/s over {} racks, {} KB switch SRAM\n",
+        spec.n_jobs,
+        spec.rate_per_sec,
+        spec.racks,
+        spec.base.switch.memory_bytes / 1024
+    );
+
+    let report = run_churn(&spec)?;
+    print!("{}", report.summary_table());
+    println!("{}\n", report.gap_summary());
+
+    // Reserved-vs-occupied strip chart: one row per policy, one char per
+    // sample bucket. '#' = slots occupied by live partials, '-' = slots
+    // reserved by a region grant but idle, '.' = free.
+    const WIDTH: usize = 64;
+    println!("memory over time ('#' occupied, '-' reserved-but-idle, '.' free):");
+    for p in &report.per_policy {
+        let ch = p.metrics.churn.as_ref().expect("churn metrics present");
+        let total = ch.total_slots() as f64;
+        let n = ch.samples.len();
+        if n == 0 {
+            continue;
+        }
+        let cols = WIDTH.min(n);
+        let mut row = String::with_capacity(cols);
+        for b in 0..cols {
+            let s = &ch.samples[b * n / cols];
+            let occ = s.occupied as f64 / total;
+            let rsv = s.reserved as f64 / total;
+            row.push(if occ > 0.10 {
+                '#'
+            } else if rsv > 0.10 {
+                '-'
+            } else {
+                '.'
+            });
+        }
+        println!("  {:>8} |{row}|", p.policy.name());
+    }
+    println!(
+        "\nexpectation: the SwitchML row shows '-' stretches (regions carved but idle,\n\
+         and arrivals queueing behind them: peakQ > 0), while ESA never reserves more\n\
+         than it occupies and admits every arrival on the spot."
+    );
+    Ok(())
+}

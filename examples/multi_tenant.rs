@@ -1,9 +1,15 @@
 //! The §7.1.2 multi-tenant scenario: a computation-bound job (ResNet50
 //! profile) and a communication-bound one (VGG16 profile) share 1 MB of
-//! switch memory. Shows per-job JCT under every system plus the
-//! data-plane counters that explain the outcome — where ESA's gains
-//! concentrate (the VGG16-like job) and why (preemption priority goes to
-//! the communication-bound tenant).
+//! aggregator memory per switch. Shows per-job JCT under every system
+//! plus the data-plane counters that explain the outcome — where ESA's
+//! gains concentrate (the VGG16-like job) and why (preemption priority
+//! goes to the communication-bound tenant).
+//!
+//! Runs the paper's default fabric (`racks = 1`); set `cfg.racks >= 2` to
+//! replay the same contention on the two-tier hierarchy, where the
+//! counters below come from the tree-root (edge) pipeline stage and each
+//! rack runs its own pool (DESIGN.md §6). For contention under a
+//! *changing* job mix, see `examples/churn.rs`.
 
 use esa::config::{ExperimentConfig, JobSpec, PolicyKind};
 use esa::sim::Simulation;
@@ -47,6 +53,8 @@ fn main() -> anyhow::Result<()> {
                 format!("{:.2}", j.agg_throughput_bps() * 8.0 / 1e9),
             ]);
         }
+        // `Simulation::switch()` is the top of the aggregation tree: the
+        // lone root switch here, the edge stage once `racks >= 2`.
         log::info!(
             "{}: preemptions={} fallbacks={} reminder_evictions={}",
             policy.name(),

@@ -10,4 +10,4 @@ pub mod parse;
 pub mod schema;
 
 pub use parse::{parse_toml, TomlTable, TomlValue};
-pub use schema::{ExperimentConfig, JobSpec, NetworkConfig, PolicyKind, SwitchConfig};
+pub use schema::{ChurnKnobs, ExperimentConfig, JobSpec, NetworkConfig, PolicyKind, SwitchConfig};

@@ -127,6 +127,10 @@ impl TomlTable {
             .entries
             .keys()
             .filter_map(|k| k.strip_prefix(&pfx))
+            // a bare `[job.x]` header records only its marker key (no
+            // sub-keys); a section with no actual `key = value` entries
+            // is not a section instance — skip the marker
+            .filter(|rest| rest.contains('.'))
             .filter_map(|rest| rest.split('.').next())
             .map(String::from)
             .collect();
@@ -159,6 +163,16 @@ pub fn parse_toml(text: &str) -> Result<TomlTable> {
             }
             validate_key_path(header).with_context(|| format!("line {}", lineno + 1))?;
             prefix = header.to_string();
+            // Record the header itself so a *key-less* section is still
+            // visible to section-presence checks (`[churn]` and `[trace]`
+            // engage their modes with defaults even when empty). The
+            // marker only matters to presence checks over `keys()`:
+            // typed accessors never read bare section paths, and
+            // `section_names` skips markers (an empty `[job.x]` is not a
+            // job instance).
+            if table.get(&prefix).is_none() {
+                table.insert(prefix.clone(), TomlValue::Bool(true));
+            }
             continue;
         }
         let (key, value) = line
@@ -328,6 +342,22 @@ mod tests {
         let t = parse_toml("[job.0]\nmodel = \"dnn_a\"\n[job.1]\nmodel = \"dnn_b\"").unwrap();
         assert_eq!(t.section_names("job"), vec!["0", "1"]);
         assert_eq!(t.get("job.0.model").unwrap().as_str(), Some("dnn_a"));
+    }
+
+    #[test]
+    fn key_less_sections_are_visible() {
+        // `[churn]` / `[trace]` engage their modes even when empty — the
+        // header itself is recorded, so presence checks over `keys()` see it
+        let t = parse_toml("[churn]\n[net]\nbw = 1").unwrap();
+        assert!(t.keys().any(|k| k == "churn"));
+        assert!(t.keys().any(|k| k == "net"));
+        assert_eq!(t.get("net.bw").unwrap().as_int(), Some(1));
+        // re-opening a section does not trip the duplicate-key check
+        assert!(parse_toml("[a]\nx = 1\n[a]\ny = 2").is_ok());
+        // ...but a key-less section is NOT a section instance: an empty
+        // [job.b] must not materialize a phantom default job
+        let t = parse_toml("[job.a]\nmodel = \"x\"\n[job.b]").unwrap();
+        assert_eq!(t.section_names("job"), vec!["a"]);
     }
 
     #[test]

@@ -162,6 +162,62 @@ impl SwitchConfig {
     }
 }
 
+/// Online job-churn knobs (DESIGN.md §11). When present on an
+/// [`ExperimentConfig`], jobs are *not* wired into the fabric at
+/// construction: each `JobSpec::start_ns` becomes an arrival event, the
+/// coordinator admits jobs at runtime (queueing statically partitioned
+/// jobs until a region frees), completed jobs' switch memory is reclaimed,
+/// and a periodic sampler records the per-job slot-occupancy timeline.
+#[derive(Debug, Clone)]
+pub struct ChurnKnobs {
+    /// Utilization sampler tick (ns). Long runs coarsen it adaptively
+    /// (tick doubles whenever the timeline would outgrow its in-memory
+    /// bound), so the recorded timeline always covers the whole run.
+    pub sample_tick_ns: u64,
+    /// Region size (slots) granted to each statically partitioned job;
+    /// `0` = auto (a quarter of the pool).
+    pub region_slots: u32,
+}
+
+impl Default for ChurnKnobs {
+    fn default() -> Self {
+        ChurnKnobs { sample_tick_ns: 200 * USEC, region_slots: 0 }
+    }
+}
+
+impl ChurnKnobs {
+    /// Parse the optional `[churn]` section: any `churn.*` key engages
+    /// churn mode with defaults filling the rest; no section, no churn.
+    /// Shared by experiment configs and sweep configs so both dialects
+    /// stay identical.
+    pub fn from_table(t: &TomlTable) -> Result<Option<ChurnKnobs>> {
+        if !t.keys().any(|k| k == "churn" || k.starts_with("churn.")) {
+            return Ok(None);
+        }
+        let defaults = ChurnKnobs::default();
+        let region_slots = match t.get("churn.region_slots") {
+            None => defaults.region_slots,
+            Some(v) => {
+                let x = v.as_int().context("churn.region_slots must be an integer")?;
+                u32::try_from(x).map_err(|_| {
+                    anyhow::anyhow!("churn.region_slots: {x} must be non-negative")
+                })?
+            }
+        };
+        let sample_tick_ns = match t.get("churn.sample_tick_us") {
+            None => defaults.sample_tick_ns,
+            Some(v) => {
+                let us = v.as_float().context("churn.sample_tick_us must be a number")?;
+                if us <= 0.0 {
+                    bail!("churn.sample_tick_us must be positive, got {us}");
+                }
+                (us * USEC as f64) as u64
+            }
+        };
+        Ok(Some(ChurnKnobs { sample_tick_ns, region_slots }))
+    }
+}
+
 /// One training job in an experiment.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
@@ -207,6 +263,11 @@ pub struct ExperimentConfig {
     pub max_window_bytes: u64,
     /// Hard cap on simulated time (safety net against livelock bugs).
     pub max_sim_ns: u64,
+    /// Online job-churn mode: `None` (default) registers every job at
+    /// construction and runs the fixed set to completion; `Some` turns
+    /// `start_ns` into runtime arrivals with admission, reclamation and
+    /// the memory-utilization sampler (DESIGN.md §11).
+    pub churn: Option<ChurnKnobs>,
 }
 
 impl Default for ExperimentConfig {
@@ -228,6 +289,7 @@ impl Default for ExperimentConfig {
             // slow-start toward this; ECN clamps them under congestion.
             max_window_bytes: 1024 * 1024,
             max_sim_ns: 60 * crate::SEC,
+            churn: None,
         }
     }
 }
@@ -260,6 +322,8 @@ impl ExperimentConfig {
         cfg.window_bytes = t.int_or("sim.window_bytes", cfg.window_bytes as i64) as u64;
         cfg.max_window_bytes = t.int_or("sim.max_window_bytes", cfg.max_window_bytes as i64) as u64;
         cfg.max_sim_ns = (t.float_or("sim.max_sim_ms", 60_000.0) * MSEC as f64) as u64;
+
+        cfg.churn = ChurnKnobs::from_table(t)?;
 
         for sec in t.section_names("job") {
             let base = format!("job.{sec}");
@@ -304,6 +368,18 @@ impl ExperimentConfig {
         }
         if self.iterations == 0 {
             bail!("iterations must be >= 1");
+        }
+        if let Some(ch) = &self.churn {
+            if ch.sample_tick_ns == 0 {
+                bail!("churn.sample_tick_us must be positive");
+            }
+            let pool = self.switch.pool_slots(self.policy) as u32;
+            if ch.region_slots > pool {
+                bail!(
+                    "churn.region_slots {} exceeds the {pool}-slot pool — no job could ever be admitted",
+                    ch.region_slots
+                );
+            }
         }
         for (i, j) in self.jobs.iter().enumerate() {
             if j.n_workers == 0 || j.n_workers > 32 {
@@ -459,6 +535,51 @@ mod tests {
         let mut bad = c;
         bad.jobs[0].iterations = Some(0);
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn churn_section_parses_and_validates() {
+        let t = parse_toml(
+            r#"
+            [churn]
+            sample_tick_us = 50.0
+            region_slots = 128
+            [job.a]
+            model = "dnn_a"
+            workers = 4
+            "#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        let ch = c.churn.as_ref().unwrap();
+        assert_eq!(ch.sample_tick_ns, 50 * USEC);
+        assert_eq!(ch.region_slots, 128);
+
+        // absent section: no churn
+        let t = parse_toml("[job.a]\nmodel = \"dnn_a\"\nworkers = 4").unwrap();
+        assert!(ExperimentConfig::from_table(&t).unwrap().churn.is_none());
+
+        // a bare, key-less [churn] engages churn mode with the defaults
+        let t = parse_toml("[churn]\n[job.a]\nmodel = \"dnn_a\"\nworkers = 4").unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        let ch = c.churn.as_ref().unwrap();
+        assert_eq!(ch.sample_tick_ns, ChurnKnobs::default().sample_tick_ns);
+        assert_eq!(ch.region_slots, 0);
+
+        // mistyped knobs are pointed errors, not silent defaults
+        let t = parse_toml("[churn]\nsample_tick_us = \"50\"").unwrap();
+        let err = ChurnKnobs::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("sample_tick_us"), "{err}");
+        let t = parse_toml("[churn]\nsample_tick_us = -5.0").unwrap();
+        assert!(ChurnKnobs::from_table(&t).is_err());
+
+        // zero tick and oversized regions are pointed errors
+        let mut bad = ExperimentConfig::default();
+        bad.churn = Some(ChurnKnobs { sample_tick_ns: 0, region_slots: 0 });
+        assert!(bad.validate().is_err());
+        let mut bad = ExperimentConfig::default();
+        bad.churn = Some(ChurnKnobs { sample_tick_ns: 1000, region_slots: u32::MAX });
+        assert!(bad.validate().unwrap_err().to_string().contains("pool"));
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Runtime admission control for online job churn (DESIGN.md §11).
+//!
+//! Batch experiments register every job at construction; under churn the
+//! coordinator decides *at arrival time* whether a job can start. Dynamic
+//! policies (ESA, ATP, the strawmen, BytePS) always admit — contention is
+//! resolved on the data plane itself. Statically partitioned policies
+//! (SwitchML) must carve a contiguous aggregator region first: when no
+//! region fits, the job waits in a FIFO queue and is admitted the moment a
+//! completing tenant's region is reclaimed — the reclaim-and-rebalance
+//! moment the utilization timeline makes visible.
+//!
+//! The controller is a pure state machine (no clocks, no RNG): every
+//! transition is driven by the deterministic event loop, so churn runs
+//! replay exactly from their seed.
+
+use std::collections::VecDeque;
+
+use crate::config::PolicyKind;
+use crate::switch::region::{Region, RegionAllocator};
+use crate::JobId;
+
+/// Job lifecycle under churn.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnPhase {
+    /// Not yet arrived.
+    Pending,
+    /// Arrived, waiting for a region (statically partitioned policies).
+    Queued,
+    /// Admitted and running.
+    Running,
+    /// Completed; its resources are reclaimed.
+    Completed,
+}
+
+/// Outcome of an arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Start now; `Some(region)` for statically partitioned policies.
+    Admit(Option<Region>),
+    /// No region fits — the job waits in the FIFO admission queue.
+    Queued,
+}
+
+/// Outcome of a completion: the reclaimed region (if the policy carves
+/// regions) plus every queued job the freed memory now admits, in FIFO
+/// order with its fresh grant.
+#[derive(Debug, Clone, Default)]
+pub struct Reclamation {
+    pub freed: Option<Region>,
+    pub admitted: Vec<(JobId, Region)>,
+}
+
+/// The coordinator's churn-mode admission state machine.
+pub struct AdmissionController {
+    policy: PolicyKind,
+    /// Region size granted to each statically partitioned job (slots).
+    region_slots: u32,
+    alloc: RegionAllocator,
+    queue: VecDeque<JobId>,
+    phase: Vec<ChurnPhase>,
+    peak_queue: u32,
+}
+
+impl AdmissionController {
+    pub fn new(policy: PolicyKind, pool_slots: u32, region_slots: u32, n_jobs: usize) -> Self {
+        AdmissionController {
+            policy,
+            region_slots,
+            alloc: RegionAllocator::new(pool_slots),
+            queue: VecDeque::new(),
+            phase: vec![ChurnPhase::Pending; n_jobs],
+            peak_queue: 0,
+        }
+    }
+
+    /// Whether this policy carves static per-job regions.
+    fn partitioned(&self) -> bool {
+        self.policy == PolicyKind::SwitchMl
+    }
+
+    pub fn phase(&self, job: JobId) -> ChurnPhase {
+        self.phase[job as usize]
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// High-water mark of the admission queue over the whole run.
+    pub fn peak_queue(&self) -> u32 {
+        self.peak_queue
+    }
+
+    /// Slots currently reserved by live grants (0 for dynamic policies —
+    /// their whole pool is shared, which is exactly ESA's point).
+    pub fn reserved_slots(&self) -> Option<u32> {
+        self.partitioned().then(|| self.alloc.reserved_slots())
+    }
+
+    /// A job arrived: admit it or queue it.
+    pub fn on_arrival(&mut self, job: JobId) -> Admission {
+        debug_assert_eq!(self.phase[job as usize], ChurnPhase::Pending);
+        if !self.partitioned() {
+            self.phase[job as usize] = ChurnPhase::Running;
+            return Admission::Admit(None);
+        }
+        match self.alloc.alloc(job, self.region_slots) {
+            Some(region) => {
+                self.phase[job as usize] = ChurnPhase::Running;
+                Admission::Admit(Some(region))
+            }
+            None => {
+                self.phase[job as usize] = ChurnPhase::Queued;
+                self.queue.push_back(job);
+                self.peak_queue = self.peak_queue.max(self.queue.len() as u32);
+                Admission::Queued
+            }
+        }
+    }
+
+    /// A job completed: reclaim its region (exactly once — the allocator
+    /// errors on a double free) and admit queued jobs while the freed
+    /// memory fits them, FIFO.
+    pub fn on_completion(&mut self, job: JobId) -> Reclamation {
+        debug_assert_eq!(self.phase[job as usize], ChurnPhase::Running);
+        self.phase[job as usize] = ChurnPhase::Completed;
+        let mut out = Reclamation::default();
+        if !self.partitioned() {
+            return out;
+        }
+        out.freed = Some(
+            self.alloc
+                .reclaim(job)
+                .expect("completion of a job that holds no region"),
+        );
+        while let Some(&head) = self.queue.front() {
+            match self.alloc.alloc(head, self.region_slots) {
+                Some(region) => {
+                    self.queue.pop_front();
+                    self.phase[head as usize] = ChurnPhase::Running;
+                    out.admitted.push((head, region));
+                }
+                None => break,
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dynamic_policies_always_admit() {
+        for p in [
+            PolicyKind::Esa,
+            PolicyKind::Atp,
+            PolicyKind::StrawAlways,
+            PolicyKind::StrawCoin,
+            PolicyKind::HostPs,
+        ] {
+            let mut c = AdmissionController::new(p, 100, 40, 8);
+            for j in 0..8 {
+                assert_eq!(c.on_arrival(j), Admission::Admit(None), "{p:?}");
+            }
+            assert_eq!(c.reserved_slots(), None);
+            assert!(c.on_completion(0).freed.is_none());
+        }
+    }
+
+    #[test]
+    fn partitioned_policy_queues_when_full_and_rebalances_fifo() {
+        let mut c = AdmissionController::new(PolicyKind::SwitchMl, 100, 40, 5);
+        assert_eq!(c.on_arrival(0), Admission::Admit(Some((0, 40))));
+        assert_eq!(c.on_arrival(1), Admission::Admit(Some((40, 40))));
+        assert_eq!(c.on_arrival(2), Admission::Queued, "20 slots left");
+        assert_eq!(c.on_arrival(3), Admission::Queued);
+        assert_eq!(c.queue_len(), 2);
+        assert_eq!(c.peak_queue(), 2);
+        assert_eq!(c.reserved_slots(), Some(80));
+
+        // job 0 finishes: its region goes to the queue head, exactly once
+        let r = c.on_completion(0);
+        assert_eq!(r.freed, Some((0, 40)));
+        assert_eq!(r.admitted, vec![(2, (0, 40))], "FIFO: job 2 before job 3");
+        assert_eq!(c.queue_len(), 1);
+        assert_eq!(c.phase(2), ChurnPhase::Running);
+        assert_eq!(c.phase(3), ChurnPhase::Queued);
+
+        // job 1 finishes: job 3 gets its region
+        let r = c.on_completion(1);
+        assert_eq!(r.admitted, vec![(3, (40, 40))]);
+        assert_eq!(c.queue_len(), 0);
+    }
+
+    #[test]
+    fn one_completion_can_admit_multiple_waiters() {
+        // one 80-slot tenant blocks two 40-slot waiters; its completion
+        // admits both in one reclamation
+        let mut c = AdmissionController::new(PolicyKind::SwitchMl, 100, 80, 4);
+        assert!(matches!(c.on_arrival(0), Admission::Admit(Some(_))));
+        c.region_slots = 40; // later jobs are smaller
+        assert_eq!(c.on_arrival(1), Admission::Queued);
+        assert_eq!(c.on_arrival(2), Admission::Queued);
+        let r = c.on_completion(0);
+        assert_eq!(r.admitted.len(), 2, "both waiters fit in the freed region");
+    }
+
+    #[test]
+    #[should_panic(expected = "holds no region")]
+    fn double_completion_is_caught() {
+        let mut c = AdmissionController::new(PolicyKind::SwitchMl, 100, 40, 2);
+        c.on_arrival(0);
+        c.on_completion(0);
+        // phase debug_assert fires first in debug; the allocator's
+        // exactly-once contract backstops release builds
+        c.phase[0] = ChurnPhase::Running;
+        c.on_completion(0);
+    }
+}

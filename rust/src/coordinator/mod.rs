@@ -1,11 +1,13 @@
 //! The control plane: job registry with admission control, priority-input
 //! bookkeeping (§5.4's `T_j` and `Comm/Comp` live here between
-//! iterations), PS placement, and the experiment launcher used by the
-//! figure harnesses — a thin wrapper over the reusable
+//! iterations), PS placement, the runtime [`admission`] state machine that
+//! drives online job churn (DESIGN.md §11), and the experiment launcher
+//! used by the figure harnesses — a thin wrapper over the reusable
 //! [`crate::util::executor`] thread pool (std threads — tokio is not
 //! available offline, and the event loops themselves are single-threaded
 //! and deterministic).
 
+pub mod admission;
 pub mod registry;
 
 use anyhow::Result;
@@ -14,6 +16,7 @@ use crate::config::ExperimentConfig;
 use crate::sim::{ExperimentMetrics, Simulation};
 use crate::util::executor::{default_threads, run_ordered};
 
+pub use admission::{Admission, AdmissionController, ChurnPhase, Reclamation};
 pub use registry::{JobInfo, JobState, Registry};
 
 /// Run many independent experiments on a bounded worker pool, preserving

@@ -3,9 +3,13 @@
 //! The paper motivates ESA with production scale (a Microsoft cluster with
 //! ~96k jobs over two months — about a thousand a day, §2.2). The real
 //! trace is not public, so this module generates Poisson-arrival job mixes
-//! with the paper's model distribution, used by the `trace` example and
-//! the coordinator's admission tests.
+//! with the paper's model distribution. Three consumers: the `esa trace`
+//! CLI verb, the sweep engine's `[trace]` mode (pre-baked arrival mixes
+//! per grid cell), and the online churn engine (`esa churn`), where each
+//! [`TraceEntry`] becomes a *runtime* arrival event the coordinator admits
+//! against the live fabric (DESIGN.md §11).
 
+use crate::config::JobSpec;
 use crate::util::rng::Rng;
 use crate::SimTime;
 
@@ -16,6 +20,22 @@ pub struct TraceEntry {
     pub model: String,
     pub n_workers: usize,
     pub iterations: u32,
+}
+
+impl TraceEntry {
+    /// Materialize the arrival as a [`JobSpec`]: the arrival time becomes
+    /// the job's start offset and the trace's iteration draw becomes a
+    /// per-job override. `tensor_bytes` is the caller's per-model (or
+    /// per-cell) size override, if any.
+    pub fn into_job_spec(self, tensor_bytes: Option<u64>) -> JobSpec {
+        JobSpec {
+            n_workers: self.n_workers,
+            start_ns: self.arrival_ns,
+            tensor_bytes,
+            iterations: Some(self.iterations),
+            model: self.model,
+        }
+    }
 }
 
 /// Trace generator parameters.
@@ -113,6 +133,17 @@ mod tests {
             generate(&TraceConfig::default(), 50, &mut r1),
             generate(&TraceConfig::default(), 50, &mut r2)
         );
+    }
+
+    #[test]
+    fn into_job_spec_carries_arrival_and_iterations() {
+        let e = TraceEntry { arrival_ns: 77, model: "dnn_b".into(), n_workers: 8, iterations: 4 };
+        let spec = e.into_job_spec(Some(4096));
+        assert_eq!(spec.start_ns, 77);
+        assert_eq!(spec.model, "dnn_b");
+        assert_eq!(spec.n_workers, 8);
+        assert_eq!(spec.iterations, Some(4));
+        assert_eq!(spec.tensor_bytes, Some(4096));
     }
 
     #[test]

@@ -34,11 +34,11 @@
 //! | [`switch`]     | aggregator pool + the Fig. 5 pipeline, per tier; one policy per system |
 //! | [`ps`]         | fallback PS: partial dictionary + reminder mechanism |
 //! | [`worker`]     | fragmentation, priority tagging (§5.4), windows, loss recovery (§5.3) |
-//! | [`job`]        | DNN A/B + testbed-profile job models, trace generation |
-//! | [`sim`]        | experiment driver, JCT/throughput/utilization metrics, parallel scenario sweeps |
+//! | [`job`]        | DNN A/B + testbed-profile job models, Poisson trace generation |
+//! | [`sim`]        | experiment driver, JCT/throughput/utilization metrics, parallel scenario sweeps, online job churn |
 //! | [`runtime`]    | PJRT loader for `artifacts/*.hlo.txt` |
 //! | [`train`]      | end-to-end trainer: real gradients through the simulated switch |
-//! | [`coordinator`]| control plane: job registry, priority inputs, experiment launch |
+//! | [`coordinator`]| control plane: job registry, runtime admission/reclamation, priority inputs, experiment launch |
 
 pub mod config;
 pub mod coordinator;

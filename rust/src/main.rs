@@ -7,6 +7,9 @@
 //!              [--memory-mb 5] [--tensor-mb N] [--racks 1]
 //! esa sweep    [--config sweep.toml] [--threads N] [--out-dir DIR]
 //!              [--name X] [--seeds 1,2,3]
+//! esa churn    [--policies esa,atp,switchml] [--jobs 8] [--rate 3000]
+//!              [--racks 2] [--workers 4,8] [--seed 42] [--memory-mb N]
+//!              [--tick-us 100] [--region-slots 0] [--name X] [--out-dir DIR]
 //! esa figures  [fig6b fig7 fig8 fig9 fig10 fig11 fig12 | all] [--quick]
 //! esa train    [--steps 100] [--workers 4] [--policy esa] [--seed 0]
 //!              [--csv out.csv]
@@ -18,6 +21,7 @@ use anyhow::{bail, Context, Result};
 use esa::config::{ExperimentConfig, PolicyKind};
 use esa::job::trace::{generate, TraceConfig};
 use esa::runtime::Engine;
+use esa::sim::churn::{run_churn, ChurnSpec};
 use esa::sim::figures::{self, Scale};
 use esa::sim::sweep::{run_sweep, SweepConfig};
 use esa::sim::Simulation;
@@ -39,6 +43,7 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("sim") => cmd_sim(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("churn") => cmd_churn(&args),
         Some("figures") => cmd_figures(&args),
         Some("train") => cmd_train(&args),
         Some("trace") => cmd_trace(&args),
@@ -64,6 +69,8 @@ fn print_help() {
          subcommands:\n\
          \x20 sim      run one simulated experiment and print its metrics\n\
          \x20 sweep    expand a scenario grid and run it on all cores (SWEEP_<name>.json + .csv)\n\
+         \x20 churn    replay one Poisson job-arrival trace under several policies with runtime\n\
+         \x20          admission + reclamation; writes the utilization timeline (CHURN_<name>.json)\n\
          \x20 figures  regenerate the paper's evaluation figures (fig6b..fig12 | all)\n\
          \x20 train    end-to-end training through the simulated data plane (needs `make artifacts`)\n\
          \x20 trace    emit a synthetic cluster job trace\n\
@@ -178,6 +185,54 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         json_path.display(),
         csv_path.display()
     );
+    Ok(())
+}
+
+/// `esa churn`: replay one seeded Poisson arrival trace under every
+/// listed policy with runtime admission, region reclamation and the
+/// memory-utilization sampler; print per-policy JCT-under-churn plus the
+/// gap vs ESA, and write the byte-deterministic `CHURN_<name>.json`.
+fn cmd_churn(args: &Args) -> Result<()> {
+    let mut spec = ChurnSpec::quick();
+    if let Some(name) = args.get("name") {
+        spec.name = name.to_string();
+    }
+    if let Some(list) = args.get("policies") {
+        spec.policies = list
+            .split(',')
+            .map(|s| PolicyKind::parse(s.trim()))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    spec.n_jobs = args.get_parsed_or("jobs", spec.n_jobs)?;
+    spec.rate_per_sec = args.get_parsed_or("rate", spec.rate_per_sec)?;
+    spec.racks = args.get_parsed_or("racks", spec.racks)?;
+    spec.seed = args.get_parsed_or("seed", spec.seed)?;
+    if let Some(ws) = args.get_comma_list::<usize>("workers")? {
+        spec.worker_choices = ws;
+    }
+    if let Some(mb) = args.get_parsed::<f64>("memory-mb")? {
+        spec.base.switch.memory_bytes = (mb * 1024.0 * 1024.0) as u64;
+    }
+    if let Some(us) = args.get_parsed::<f64>("tick-us")? {
+        spec.knobs.sample_tick_ns = (us * 1e3) as u64;
+    }
+    spec.knobs.region_slots = args.get_parsed_or("region-slots", spec.knobs.region_slots)?;
+    spec.validate()?;
+    let out_dir = std::path::PathBuf::from(args.get_or("out-dir", "."));
+    println!(
+        "churn {}: {} arrivals at {:.0}/s over {} rack(s), {} policies",
+        spec.name,
+        spec.n_jobs,
+        spec.rate_per_sec,
+        spec.racks,
+        spec.policies.len()
+    );
+    let t0 = std::time::Instant::now();
+    let report = run_churn(&spec)?;
+    print!("{}", report.summary_table());
+    println!("{}", report.gap_summary());
+    let path = report.write(&out_dir)?;
+    println!("wall {:.2} s | wrote {}", t0.elapsed().as_secs_f64(), path.display());
     Ok(())
 }
 

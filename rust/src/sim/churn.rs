@@ -1,0 +1,552 @@
+//! The online job-churn harness behind `esa churn`.
+//!
+//! ESA's headline claim is that preemptive allocation recovers the switch
+//! memory that synchronized deallocation — and, worse, *static
+//! partitioning* — leaves idle. A batch experiment cannot show this: with
+//! a fixed job set every policy eventually drains the same work. Under a
+//! **changing job mix** the difference is structural: ESA's shared pool
+//! reabsorbs a completed job's slots instantly, while a SwitchML-style
+//! static baseline keeps regions carved for their tenant's whole lifetime
+//! and queues arrivals it cannot fit.
+//!
+//! A [`ChurnSpec`] names one Poisson arrival trace (seeded, so every
+//! policy sees the *same* arrivals) and the policy list to replay it
+//! under. [`run_churn`] executes one churn-mode simulation per policy on
+//! the shared thread pool and assembles a [`ChurnReport`]: per-job
+//! arrival→completion JCTs (queueing included), admission-queue stats,
+//! and the per-tick memory-utilization timeline the switch sampler
+//! recorded. [`ChurnReport::write`] renders it as a byte-deterministic
+//! `CHURN_<name>.json` via [`crate::util::json::JsonWriter`] — identical
+//! bytes across runs, pinned by `tests/integration_churn.rs`.
+//!
+//! ```
+//! use esa::config::PolicyKind;
+//! use esa::sim::churn::{run_churn, ChurnSpec};
+//!
+//! let mut spec = ChurnSpec::quick();
+//! spec.policies = vec![PolicyKind::Esa];
+//! spec.n_jobs = 2;
+//! let report = run_churn(&spec).unwrap();
+//! assert_eq!(report.per_policy.len(), 1);
+//! let esa = &report.per_policy[0];
+//! assert!(esa.unfinished == 0, "every arrival must complete");
+//! assert!(!esa.metrics.churn.as_ref().unwrap().samples.is_empty());
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ChurnKnobs, ExperimentConfig, PolicyKind};
+use crate::coordinator::run_parallel;
+use crate::job::trace::{generate, TraceConfig, TraceEntry};
+use crate::sim::sweep::{filename_safe, ModelMix};
+use crate::sim::ExperimentMetrics;
+use crate::util::json::JsonWriter;
+use crate::util::rng::Rng;
+use crate::util::stats::{render_table, Percentiles, Summary};
+use crate::USEC;
+
+/// Decouples the churn arrival stream from the simulation's root RNG and
+/// from the sweep engine's trace stream (`sweep::TRACE_STREAM_SALT`).
+const CHURN_TRACE_SALT: u64 = 0xc402_52a1_7ab1_e5ed;
+
+/// One churn scenario: a seeded Poisson arrival mix replayed under every
+/// listed policy.
+#[derive(Debug, Clone)]
+pub struct ChurnSpec {
+    /// Artifact name: `CHURN_<name>.json`. Filename-safe.
+    pub name: String,
+    /// Policies to replay the identical trace under.
+    pub policies: Vec<PolicyKind>,
+    pub racks: usize,
+    /// Arrivals in the trace.
+    pub n_jobs: usize,
+    /// Mean arrival rate (jobs per simulated second).
+    pub rate_per_sec: f64,
+    /// Worker-count choices (uniform per arrival).
+    pub worker_choices: Vec<usize>,
+    /// Iteration-count range (uniform, inclusive).
+    pub iter_range: (u32, u32),
+    /// Model mix (weights drive the arrival draw).
+    pub models: Vec<ModelMix>,
+    /// Trace + simulation seed (one seed, every policy).
+    pub seed: u64,
+    /// Sampler tick + static region size.
+    pub knobs: ChurnKnobs,
+    /// Template for everything else (switch memory, net, jitter, caps).
+    pub base: ExperimentConfig,
+}
+
+impl ChurnSpec {
+    /// A fast default scenario: a scarce 256 KB pool under a brisk
+    /// arrival stream, ESA vs ATP vs the static-partition baseline.
+    pub fn quick() -> ChurnSpec {
+        let mut base = ExperimentConfig {
+            jitter_max_ns: 20 * USEC,
+            start_spread_ns: 0,
+            ..ExperimentConfig::default()
+        };
+        base.switch.memory_bytes = 256 * 1024;
+        ChurnSpec {
+            name: "quick".into(),
+            policies: vec![PolicyKind::Esa, PolicyKind::Atp, PolicyKind::SwitchMl],
+            racks: 2,
+            n_jobs: 8,
+            rate_per_sec: 3000.0,
+            worker_choices: vec![4],
+            iter_range: (1, 2),
+            models: vec![ModelMix {
+                name: "microbench".into(),
+                tensor_bytes: Some(512 * 1024),
+                weight: 1.0,
+            }],
+            seed: 42,
+            knobs: ChurnKnobs { sample_tick_ns: 100 * USEC, region_slots: 0 },
+            base,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !filename_safe(&self.name) {
+            bail!(
+                "churn name `{}` must be filename-safe ([A-Za-z0-9_-], non-empty) — it names \
+                 CHURN_<name>.json",
+                self.name
+            );
+        }
+        if self.policies.is_empty() {
+            bail!("churn needs at least one policy");
+        }
+        if self.n_jobs == 0 {
+            bail!("churn needs at least one arrival");
+        }
+        if self.rate_per_sec <= 0.0 {
+            bail!("rate_per_sec must be positive");
+        }
+        if self.worker_choices.is_empty() {
+            bail!("worker_choices must list at least one worker count");
+        }
+        for &w in &self.worker_choices {
+            if w == 0 || w > 32 {
+                bail!("worker_choices: {w} is outside 1..=32");
+            }
+        }
+        if self.iter_range.0 == 0 || self.iter_range.0 > self.iter_range.1 {
+            bail!(
+                "iteration range [{}, {}] must satisfy 1 <= min <= max",
+                self.iter_range.0,
+                self.iter_range.1
+            );
+        }
+        if self.models.is_empty() {
+            bail!("churn needs at least one model in the mix");
+        }
+        if self.knobs.sample_tick_ns == 0 {
+            bail!("sample tick must be positive");
+        }
+        if self.racks == 0 || self.racks > 64 {
+            bail!("racks must be in 1..=64");
+        }
+        Ok(())
+    }
+
+    /// The arrival trace — identical for every policy (same seed + salt).
+    pub fn arrivals(&self) -> Vec<TraceEntry> {
+        let tc = TraceConfig {
+            rate_per_sec: self.rate_per_sec,
+            mix: self.models.iter().map(|m| (m.name.clone(), m.weight)).collect(),
+            worker_choices: self.worker_choices.clone(),
+            iter_range: self.iter_range,
+        };
+        let mut rng = Rng::new(self.seed ^ CHURN_TRACE_SALT);
+        generate(&tc, self.n_jobs, &mut rng)
+    }
+
+    /// Materialize one policy's churn-mode experiment over the shared
+    /// arrival trace.
+    pub fn experiment(&self, policy: PolicyKind) -> ExperimentConfig {
+        self.experiment_over(policy, self.arrivals())
+    }
+
+    /// Same, over a trace the caller already generated — [`run_churn`]
+    /// draws the trace once and replays it under every policy.
+    fn experiment_over(&self, policy: PolicyKind, arrivals: Vec<TraceEntry>) -> ExperimentConfig {
+        let mut cfg = self.base.clone();
+        cfg.name = format!("churn:{}:{}", self.name, policy.key());
+        cfg.policy = policy;
+        cfg.racks = self.racks;
+        cfg.seed = self.seed;
+        cfg.start_spread_ns = 0; // arrivals are the trace's, exactly
+        cfg.churn = Some(self.knobs.clone());
+        cfg.jobs = arrivals
+            .into_iter()
+            .map(|e| {
+                let tensor = self
+                    .models
+                    .iter()
+                    .find(|m| m.name == e.model)
+                    .and_then(|m| m.tensor_bytes);
+                e.into_job_spec(tensor)
+            })
+            .collect();
+        cfg
+    }
+}
+
+/// One policy's outcome over the shared trace.
+#[derive(Debug, Clone)]
+pub struct PolicyChurn {
+    pub policy: PolicyKind,
+    pub metrics: ExperimentMetrics,
+    /// Mean arrival→completion JCT (ms), queueing included.
+    pub jct_ms_mean: f64,
+    pub jct_ms_p50: f64,
+    pub jct_ms_p95: f64,
+    /// Mean admission-queue wait (µs). Jobs still queued when a run is
+    /// cut off contribute their wait accrued so far (a lower bound), so
+    /// truncation cannot make the static baseline look better.
+    pub queued_us_mean: f64,
+    /// Mean occupied-slot fraction over the timeline.
+    pub mean_occupied_util: f64,
+    /// Mean reserved-slot fraction (== occupied for dynamic policies).
+    pub mean_reserved_util: f64,
+    pub peak_queue: u32,
+    /// Arrivals that never completed (truncated run).
+    pub unfinished: usize,
+}
+
+impl PolicyChurn {
+    fn from_metrics(policy: PolicyKind, metrics: ExperimentMetrics) -> Result<PolicyChurn> {
+        let ch = metrics
+            .churn
+            .as_ref()
+            .with_context(|| format!("{}: churn run produced no churn metrics", policy.name()))?;
+        let mut jct = Summary::new();
+        let mut jct_pcts = Percentiles::new();
+        let mut queued = Summary::new();
+        let mut unfinished = 0usize;
+        for j in &ch.jobs {
+            match j.jct_ns() {
+                Some(ns) => {
+                    jct.add(ns as f64 / 1e6);
+                    jct_pcts.add(ns as f64 / 1e6);
+                }
+                None => unfinished += 1,
+            }
+            match (j.queued_ns(), j.arrived_ns) {
+                (Some(q), _) => queued.add(q as f64 / 1e3),
+                // Still queued when the run was cut off: count the wait
+                // accrued so far (a lower bound) — skipping these jobs
+                // would under-report queueing exactly where it is worst.
+                (None, Some(arrived)) => {
+                    queued.add(metrics.sim_ns.saturating_sub(arrived) as f64 / 1e3)
+                }
+                (None, None) => {}
+            }
+        }
+        let (mean_occupied_util, mean_reserved_util, peak_queue) =
+            (ch.mean_occupied_util(), ch.mean_reserved_util(), ch.peak_queue);
+        Ok(PolicyChurn {
+            policy,
+            jct_ms_mean: jct.mean(),
+            jct_ms_p50: jct_pcts.percentile(50.0),
+            jct_ms_p95: jct_pcts.percentile(95.0),
+            queued_us_mean: queued.mean(),
+            mean_occupied_util,
+            mean_reserved_util,
+            peak_queue,
+            unfinished,
+            metrics,
+        })
+    }
+}
+
+/// A completed churn scenario: the spec, the shared arrival trace, and
+/// one [`PolicyChurn`] per policy in spec order.
+#[derive(Debug, Clone)]
+pub struct ChurnReport {
+    pub spec: ChurnSpec,
+    pub arrivals: Vec<TraceEntry>,
+    pub per_policy: Vec<PolicyChurn>,
+}
+
+/// Replay the spec's arrival trace under every listed policy (parallel
+/// across policies; each simulation is single-threaded + deterministic).
+pub fn run_churn(spec: &ChurnSpec) -> Result<ChurnReport> {
+    spec.validate()?;
+    // one trace draw, shared verbatim by every policy and the report
+    let arrivals = spec.arrivals();
+    let cfgs: Vec<ExperimentConfig> = spec
+        .policies
+        .iter()
+        .map(|&p| spec.experiment_over(p, arrivals.clone()))
+        .collect();
+    let results = run_parallel(cfgs);
+    let mut per_policy = Vec::with_capacity(spec.policies.len());
+    for (&policy, result) in spec.policies.iter().zip(results) {
+        let metrics =
+            result.with_context(|| format!("churn replay under {}", policy.name()))?;
+        per_policy.push(PolicyChurn::from_metrics(policy, metrics)?);
+    }
+    Ok(ChurnReport { spec: spec.clone(), arrivals, per_policy })
+}
+
+impl ChurnReport {
+    /// The ESA row, if the spec included it (gap baselines).
+    fn esa(&self) -> Option<&PolicyChurn> {
+        self.per_policy.iter().find(|p| p.policy == PolicyKind::Esa)
+    }
+
+    /// JCT ratio of `p` over the ESA baseline (1.0 for ESA itself).
+    /// `None` when either side has no finished jobs to average (a fully
+    /// truncated run yields NaN means, which must never reach the JSON).
+    pub fn jct_gap_vs_esa(&self, p: &PolicyChurn) -> Option<f64> {
+        let esa = self.esa()?;
+        if esa.jct_ms_mean > 0.0 && esa.jct_ms_mean.is_finite() && p.jct_ms_mean.is_finite() {
+            Some(p.jct_ms_mean / esa.jct_ms_mean)
+        } else {
+            None
+        }
+    }
+
+    /// Human summary for the CLI.
+    pub fn summary_table(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .per_policy
+            .iter()
+            .map(|p| {
+                vec![
+                    p.policy.name().to_string(),
+                    fmt_or_na(p.jct_ms_mean, 3),
+                    fmt_or_na(p.jct_ms_p50, 3),
+                    fmt_or_na(p.jct_ms_p95, 3),
+                    fmt_or_na(p.queued_us_mean, 1),
+                    fmt_or_na(p.mean_occupied_util, 4),
+                    fmt_or_na(p.mean_reserved_util, 4),
+                    p.peak_queue.to_string(),
+                    p.unfinished.to_string(),
+                ]
+            })
+            .collect();
+        render_table(
+            &[
+                "policy",
+                "JCT mean (ms)",
+                "JCT p50",
+                "JCT p95",
+                "queued (us)",
+                "occ util",
+                "rsvd util",
+                "peakQ",
+                "unfin",
+            ],
+            &rows,
+        )
+    }
+
+    /// The per-policy JCT gap line the run summary reports.
+    pub fn gap_summary(&self) -> String {
+        let Some(esa) = self.esa() else {
+            return "no ESA baseline in the policy list — no gap to report".into();
+        };
+        let mut parts = Vec::new();
+        for p in &self.per_policy {
+            if p.policy == PolicyKind::Esa {
+                continue;
+            }
+            match self.jct_gap_vs_esa(p) {
+                Some(gap) => parts.push(format!("{} {:.2}x", p.policy.name(), gap)),
+                None => parts.push(format!("{} n/a", p.policy.name())),
+            }
+        }
+        if parts.is_empty() {
+            return format!(
+                "ESA mean JCT {} ms (no baselines to compare)",
+                fmt_or_na(esa.jct_ms_mean, 3)
+            );
+        }
+        format!(
+            "JCT under churn vs ESA ({} ms): {}",
+            fmt_or_na(esa.jct_ms_mean, 3),
+            parts.join(", ")
+        )
+    }
+
+    /// The byte-deterministic `CHURN_<name>.json` document. Wall-clock
+    /// observables are excluded; every float is fixed-precision.
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_obj(None);
+        w.str_field("schema", "esa-churn/1");
+        w.str_field("provenance", "simulated");
+        w.str_field("name", &self.spec.name);
+        w.u64_field("seed", self.spec.seed);
+        w.u64_field("racks", self.spec.racks as u64);
+        w.f64_field("rate_per_sec", self.spec.rate_per_sec, 3);
+        w.f64_field("sample_tick_us", self.spec.knobs.sample_tick_ns as f64 / 1e3, 3);
+        w.begin_arr(Some("arrivals"));
+        for (j, e) in self.arrivals.iter().enumerate() {
+            w.begin_obj(None);
+            w.u64_field("job", j as u64);
+            w.f64_field("t_us", e.arrival_ns as f64 / 1e3, 3);
+            w.str_field("model", &e.model);
+            w.u64_field("workers", e.n_workers as u64);
+            w.u64_field("iterations", e.iterations as u64);
+            w.end_obj();
+        }
+        w.end_arr();
+        w.begin_arr(Some("policies"));
+        for p in &self.per_policy {
+            let ch = p.metrics.churn.as_ref().expect("churn metrics verified at build");
+            w.begin_obj(None);
+            w.str_field("policy", p.policy.key());
+            w.u64_field("pool_slots_per_stage", ch.pool_slots_per_stage as u64);
+            w.u64_field("stages", ch.stages as u64);
+            w.u64_field("region_slots", ch.region_slots as u64);
+            w.f64_field_or_null("jct_ms_mean", p.jct_ms_mean, 6);
+            w.f64_field_or_null("jct_ms_p50", p.jct_ms_p50, 6);
+            w.f64_field_or_null("jct_ms_p95", p.jct_ms_p95, 6);
+            w.f64_field_or_null("queued_us_mean", p.queued_us_mean, 3);
+            w.f64_field_or_null("mean_occupied_util", p.mean_occupied_util, 6);
+            w.f64_field_or_null("mean_reserved_util", p.mean_reserved_util, 6);
+            w.u64_field("peak_queue", p.peak_queue as u64);
+            w.u64_field("unfinished", p.unfinished as u64);
+            match self.jct_gap_vs_esa(p) {
+                Some(g) => w.f64_field("jct_gap_vs_esa", g, 4),
+                None => w.null_field("jct_gap_vs_esa"),
+            }
+            w.begin_arr(Some("jobs"));
+            for j in &ch.jobs {
+                w.begin_obj(None);
+                w.u64_field("job", j.job as u64);
+                opt_time_us(&mut w, "arrived_us", j.arrived_ns);
+                opt_time_us(&mut w, "admitted_us", j.admitted_ns);
+                opt_time_us(&mut w, "completed_us", j.completed_ns);
+                w.end_obj();
+            }
+            w.end_arr();
+            w.begin_arr(Some("timeline"));
+            for s in &ch.samples {
+                w.begin_obj(None);
+                w.f64_field("t_us", s.t as f64 / 1e3, 3);
+                w.u64_field("occupied", s.occupied as u64);
+                w.u64_field("reserved", s.reserved as u64);
+                w.begin_arr(Some("per_job"));
+                for &x in &s.per_job {
+                    w.u64_item(x as u64);
+                }
+                w.end_arr();
+                w.end_obj();
+            }
+            w.end_arr();
+            w.end_obj();
+        }
+        w.end_arr();
+        w.end_obj();
+        w.finish()
+    }
+
+    /// Write `CHURN_<name>.json` under `dir`, returning its path.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating churn output dir {}", dir.display()))?;
+        let path = dir.join(format!("CHURN_{}.json", self.spec.name));
+        std::fs::write(&path, self.to_json())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+fn opt_time_us(w: &mut JsonWriter, key: &str, v: Option<crate::SimTime>) {
+    match v {
+        Some(ns) => w.f64_field(key, ns as f64 / 1e3, 3),
+        None => w.null_field(key),
+    }
+}
+
+/// CLI-side twin of [`JsonWriter::f64_field_or_null`]: a NaN mean (no
+/// finished jobs in a truncated run) prints as `n/a`, never `NaN`.
+fn fmt_or_na(v: f64, decimals: usize) -> String {
+    if v.is_finite() {
+        format!("{v:.decimals$}")
+    } else {
+        "n/a".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(policies: Vec<PolicyKind>) -> ChurnSpec {
+        let mut spec = ChurnSpec::quick();
+        spec.name = "tiny".into();
+        spec.policies = policies;
+        spec.n_jobs = 3;
+        spec.worker_choices = vec![2];
+        spec.models[0].tensor_bytes = Some(128 * 1024);
+        spec
+    }
+
+    #[test]
+    fn quick_spec_validates() {
+        ChurnSpec::quick().validate().unwrap();
+    }
+
+    #[test]
+    fn arrivals_are_policy_independent_and_seed_deterministic() {
+        let spec = tiny(vec![PolicyKind::Esa]);
+        let a = spec.arrivals();
+        let b = spec.arrivals();
+        assert_eq!(a, b);
+        // experiments for different policies share the identical job list
+        let esa = spec.experiment(PolicyKind::Esa);
+        let sml = spec.experiment(PolicyKind::SwitchMl);
+        assert_eq!(esa.jobs.len(), sml.jobs.len());
+        for (x, y) in esa.jobs.iter().zip(&sml.jobs) {
+            assert_eq!(x.start_ns, y.start_ns);
+            assert_eq!(x.model, y.model);
+            assert_eq!(x.iterations, y.iterations);
+        }
+        assert!(esa.churn.is_some());
+    }
+
+    #[test]
+    fn tiny_churn_completes_with_timeline() {
+        let spec = tiny(vec![PolicyKind::Esa]);
+        let r = run_churn(&spec).unwrap();
+        let p = &r.per_policy[0];
+        assert_eq!(p.unfinished, 0, "all arrivals must finish");
+        assert!(p.jct_ms_mean > 0.0);
+        let ch = p.metrics.churn.as_ref().unwrap();
+        assert!(!ch.samples.is_empty(), "sampler must have ticked");
+        assert!(ch.jobs.iter().all(|j| j.completed_ns.is_some()));
+        // dynamic policy: reservation is exactly occupancy
+        assert!(ch.samples.iter().all(|s| s.reserved == s.occupied));
+    }
+
+    #[test]
+    fn report_json_is_deterministic() {
+        let spec = tiny(vec![PolicyKind::Esa, PolicyKind::SwitchMl]);
+        let a = run_churn(&spec).unwrap().to_json();
+        let b = run_churn(&spec).unwrap().to_json();
+        assert_eq!(a, b);
+        assert!(a.contains("\"schema\": \"esa-churn/1\""));
+        assert!(a.contains("\"timeline\""));
+    }
+
+    #[test]
+    fn bad_specs_are_pointed_errors() {
+        let mut s = tiny(vec![PolicyKind::Esa]);
+        s.name = "../evil".into();
+        assert!(s.validate().unwrap_err().to_string().contains("filename-safe"));
+        assert!(tiny(vec![]).validate().is_err());
+        let mut s = tiny(vec![PolicyKind::Esa]);
+        s.worker_choices = vec![40];
+        assert!(s.validate().unwrap_err().to_string().contains("1..=32"));
+        let mut s = tiny(vec![PolicyKind::Esa]);
+        s.knobs.sample_tick_ns = 0;
+        assert!(s.validate().is_err());
+    }
+}

@@ -93,6 +93,96 @@ impl JobMetrics {
     }
 }
 
+/// One tick of the churn-mode memory-utilization timeline: slot occupancy
+/// per job across every pipeline stage of the fabric, plus the slots
+/// *reserved* by live static-partition grants (reserved ≥ occupied is the
+/// idle memory the ESA paper's Fig. 2 argument is about; dynamic policies
+/// reserve nothing beyond what they occupy).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UtilSample {
+    /// Sample time (ns).
+    pub t: SimTime,
+    /// Occupied aggregator slots, summed over all switch stages.
+    pub occupied: u32,
+    /// Slots reserved by live region grants (× stages); equals `occupied`
+    /// for dynamic policies.
+    pub reserved: u32,
+    /// Occupied slots per job (dense, indexed by [`JobId`]).
+    pub per_job: Vec<u32>,
+}
+
+/// One job's lifecycle timestamps under churn. All `Option`: a truncated
+/// run can leave jobs that never arrived, queued, or unfinished.
+#[derive(Debug, Clone, Copy)]
+pub struct ChurnJobOutcome {
+    pub job: JobId,
+    /// When the arrival event fired.
+    pub arrived_ns: Option<SimTime>,
+    /// When the coordinator admitted it (= arrival unless it queued).
+    pub admitted_ns: Option<SimTime>,
+    /// When its last worker finished.
+    pub completed_ns: Option<SimTime>,
+}
+
+impl ChurnJobOutcome {
+    /// Arrival-to-completion time — the JCT-under-churn headline, which
+    /// *includes* admission queueing delay.
+    pub fn jct_ns(&self) -> Option<SimTime> {
+        Some(self.completed_ns?.saturating_sub(self.arrived_ns?))
+    }
+
+    /// Time spent waiting in the admission queue.
+    pub fn queued_ns(&self) -> Option<SimTime> {
+        Some(self.admitted_ns?.saturating_sub(self.arrived_ns?))
+    }
+}
+
+/// Churn-mode observables attached to [`ExperimentMetrics`] when the
+/// experiment ran with [`crate::config::ChurnKnobs`].
+#[derive(Debug, Clone)]
+pub struct ChurnMetrics {
+    pub jobs: Vec<ChurnJobOutcome>,
+    /// The utilization timeline, one entry per sampler tick.
+    pub samples: Vec<UtilSample>,
+    /// Effective sampler tick (ns): the configured tick, doubled each
+    /// time the timeline hit its in-memory bound and was decimated.
+    pub tick_ns: SimTime,
+    /// Aggregator slots per switch stage.
+    pub pool_slots_per_stage: u32,
+    /// Pipeline stages sampled (racks, plus the edge when present).
+    pub stages: u32,
+    /// High-water mark of the admission queue.
+    pub peak_queue: u32,
+    /// Region size granted per statically partitioned job (0 = dynamic).
+    pub region_slots: u32,
+}
+
+impl ChurnMetrics {
+    /// Total slots across the fabric (the utilization denominator).
+    pub fn total_slots(&self) -> u64 {
+        self.pool_slots_per_stage as u64 * self.stages as u64
+    }
+
+    /// Mean occupied-slot fraction over the timeline.
+    pub fn mean_occupied_util(&self) -> f64 {
+        self.mean_over_samples(|s| s.occupied)
+    }
+
+    /// Mean reserved-slot fraction over the timeline; the gap to
+    /// [`Self::mean_occupied_util`] is memory carved out but idle.
+    pub fn mean_reserved_util(&self) -> f64 {
+        self.mean_over_samples(|s| s.reserved)
+    }
+
+    fn mean_over_samples(&self, f: impl Fn(&UtilSample) -> u32) -> f64 {
+        if self.samples.is_empty() || self.total_slots() == 0 {
+            return 0.0;
+        }
+        let sum: u64 = self.samples.iter().map(|s| f(s) as u64).sum();
+        sum as f64 / (self.samples.len() as u64 * self.total_slots()) as f64
+    }
+}
+
 /// One switch's data-plane counters, tagged with its place in the fabric.
 ///
 /// A single-switch star reports one `root` entry; a two-tier fabric
@@ -130,6 +220,8 @@ pub struct ExperimentMetrics {
     pub wall_secs: f64,
     /// True if the run hit `max_sim_ns` before all jobs finished.
     pub truncated: bool,
+    /// Churn-mode timeline + lifecycle records (`None` for batch runs).
+    pub churn: Option<ChurnMetrics>,
 }
 
 impl ExperimentMetrics {
@@ -235,8 +327,42 @@ mod tests {
             avg_transit_ns: 0.0,
             wall_secs: 0.5,
             truncated: false,
+            churn: None,
         };
         assert!((em.avg_jct_ms() - 3.0).abs() < 1e-9);
         assert_eq!(em.events_per_sec(), 2000.0);
+    }
+
+    #[test]
+    fn churn_outcome_jct_includes_queueing() {
+        let j = ChurnJobOutcome {
+            job: 0,
+            arrived_ns: Some(1_000),
+            admitted_ns: Some(4_000),
+            completed_ns: Some(10_000),
+        };
+        assert_eq!(j.jct_ns(), Some(9_000), "arrival-to-completion");
+        assert_eq!(j.queued_ns(), Some(3_000));
+        let unfinished = ChurnJobOutcome { completed_ns: None, ..j };
+        assert_eq!(unfinished.jct_ns(), None);
+    }
+
+    #[test]
+    fn churn_utilization_means() {
+        let m = ChurnMetrics {
+            jobs: Vec::new(),
+            samples: vec![
+                UtilSample { t: 0, occupied: 10, reserved: 40, per_job: vec![10] },
+                UtilSample { t: 100, occupied: 30, reserved: 40, per_job: vec![30] },
+            ],
+            tick_ns: 100,
+            pool_slots_per_stage: 50,
+            stages: 2,
+            peak_queue: 0,
+            region_slots: 40,
+        };
+        assert_eq!(m.total_slots(), 100);
+        assert!((m.mean_occupied_util() - 0.2).abs() < 1e-12);
+        assert!((m.mean_reserved_util() - 0.4).abs() < 1e-12);
     }
 }

@@ -14,7 +14,16 @@
 //! global fan-in and multicasts one `Result` per rack, which each rack
 //! replicates to its local workers. Packets between the two node-0 stages
 //! recirculate in-process (zero wire cost — same ASIC).
+//!
+//! With [`crate::config::ChurnKnobs`] set, the driver switches from batch
+//! registration to an **online job lifecycle** (DESIGN.md §11): each job's
+//! `start_ns` becomes an arrival event dispatched to the coordinator's
+//! [`AdmissionController`], wiring and aggregator regions are installed on
+//! live switches at admission, completed jobs' memory is flushed and
+//! reclaimed, and a periodic sampler records the per-job slot-occupancy
+//! timeline that [`churn`] renders as `CHURN_<name>.json`.
 
+pub mod churn;
 pub mod figures;
 pub mod metrics;
 pub mod sweep;
@@ -25,16 +34,20 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::config::{ExperimentConfig, PolicyKind};
+use crate::coordinator::admission::{Admission, AdmissionController};
 use crate::job::{dnn::profile_by_name, JobModel};
 use crate::net::{Event, Net, Topology, SWITCH_NODE};
 use crate::packet::{Packet, PacketKind};
 use crate::ps::{Ps, SCAN_INTERVAL_NS, TIMER_SCAN};
+use crate::switch::region::Region;
 use crate::switch::{JobWiring, Switch, SwitchTier};
 use crate::util::rng::Rng;
 use crate::worker::{Worker, WorkerCfg, TK_START};
-use crate::{JobId, NodeId};
+use crate::{JobId, NodeId, SimTime};
 
-pub use metrics::{ExperimentMetrics, JobMetrics, SwitchReport};
+pub use metrics::{
+    ChurnJobOutcome, ChurnMetrics, ExperimentMetrics, JobMetrics, SwitchReport, UtilSample,
+};
 
 /// Disjoint RNG stream labels per actor class. The seed's scheme aliased
 /// labels across classes at scale (worker `100 + idx` hit the edge's
@@ -90,6 +103,44 @@ enum ActorRef {
 /// must never fall below it (DESIGN.md §9 buffer discipline).
 const OUT_BUF_CAP: usize = 64;
 
+/// Churn-mode timer keys, dispatched at the switch node (high 32 bits
+/// select the kind; admissions carry the job id in the low bits). The
+/// namespace is per *node class*: worker keys (`TK_START` & co.) only ever
+/// target worker nodes, so the values need not be globally unique.
+const TK_CHURN_ADMIT: u64 = 10 << 32;
+const TK_CHURN_SAMPLE: u64 = 11 << 32;
+const TK_CHURN_MASK: u64 = 0xffff_ffff_0000_0000;
+
+/// Timeline bound: when a churn run outlives `tick × cap`, the sampler
+/// decimates (keeps every other sample) and doubles its tick, so memory
+/// and the `CHURN_<name>.json` size stay bounded while the timeline still
+/// covers the whole run. Deterministic — purely a function of sim time.
+const MAX_TIMELINE_SAMPLES: usize = 8192;
+
+/// Runtime state of an online-churn experiment: the coordinator's
+/// admission machine plus the per-job wiring held back from the switches
+/// until arrival, lifecycle timestamps, and the utilization timeline.
+struct ChurnRuntime {
+    ctl: AdmissionController,
+    /// Sampler tick (ns).
+    tick_ns: SimTime,
+    /// Region size per statically partitioned job (0 for dynamic policies).
+    region_slots: u32,
+    /// Per job: one wiring per rack switch, plus the edge wiring.
+    wirings: Vec<(Vec<JobWiring>, JobWiring)>,
+    worker_nodes: Vec<Vec<NodeId>>,
+    /// Worker index -> job index.
+    worker_job: Vec<u32>,
+    /// Completion latch per worker (stale timers may fire after Done).
+    worker_done: Vec<bool>,
+    /// Unfinished workers per job; 0 triggers reclamation.
+    workers_left: Vec<u32>,
+    arrived_at: Vec<Option<SimTime>>,
+    admitted_at: Vec<Option<SimTime>>,
+    completed_at: Vec<Option<SimTime>>,
+    samples: Vec<UtilSample>,
+}
+
 /// A fully wired simulated experiment.
 pub struct Simulation {
     pub cfg: ExperimentConfig,
@@ -110,6 +161,9 @@ pub struct Simulation {
     /// Zero-hop recirculations between the co-located node-0 stages
     /// (racks >= 2 only); persistent so the hot path never allocates.
     recirc_buf: Vec<Packet>,
+    /// Online-churn runtime (`cfg.churn` set): runtime admission,
+    /// reclamation and the utilization sampler. `None` for batch runs.
+    churn: Option<ChurnRuntime>,
     truncated: bool,
 }
 
@@ -132,6 +186,21 @@ impl Simulation {
         let mut node_actor = vec![ActorRef::Switch; n_nodes];
         let mut next_node: NodeId = racks as NodeId;
         let pool_slots = cfg.switch.pool_slots(cfg.policy);
+
+        // Churn mode: resolve the static-partition region size up front
+        // (0 = auto, a quarter of the pool) so worker windows and the
+        // admission controller agree on it. Explicit oversized regions
+        // were already rejected by `cfg.validate()` above, and the auto
+        // size is `<= pool` whenever the pool is non-empty (also
+        // validated), so no re-check is needed here.
+        let churn_mode = cfg.churn.is_some();
+        let churn_region_slots = cfg.churn.as_ref().map(|k| {
+            if k.region_slots == 0 {
+                (pool_slots as u32 / 4).max(1)
+            } else {
+                k.region_slots
+            }
+        });
 
         // models + worker/PS node ids
         let mut models = Vec::new();
@@ -203,27 +272,55 @@ impl Simulation {
 
         let mut net = Net::new(topo, cfg.net.clone(), root.split(rng_stream::NET));
 
+        // Under churn the switches start with inert placeholder wirings
+        // (no members, fan-in 0) — the real wiring is installed at
+        // admission time (`churn_admit`), which is what makes the job
+        // lifecycle genuinely online rather than pre-registered.
+        let placeholders = || -> Vec<JobWiring> {
+            (0..n_jobs)
+                .map(|j| JobWiring {
+                    ps: ps_nodes[j],
+                    workers: Vec::new(),
+                    fan_in: 0,
+                    fan_in_total: 0,
+                    packet_bytes,
+                })
+                .collect()
+        };
+
         // Switches. Rack 0 (or the lone root switch) keeps the seed's rng
         // stream order so `racks = 1` replays single-switch runs exactly.
         let mut switches = Vec::with_capacity(racks);
-        for (r, wiring) in rack_wirings.into_iter().enumerate() {
+        for (r, wiring) in rack_wirings.iter_mut().enumerate() {
             let rng = root.split(rng_stream::rack(r));
+            let wiring = if churn_mode { placeholders() } else { std::mem::take(wiring) };
             let mut sw = Switch::new(r as NodeId, cfg.policy, pool_slots, wiring, rng);
             sw.set_age_gate(cfg.net.base_rtt_ns);
+            if churn_mode {
+                sw.enable_churn(n_jobs);
+            }
             if racks > 1 {
                 sw.set_tier(SwitchTier::Rack { edge: SWITCH_NODE });
             }
             switches.push(sw);
         }
         let edge = if racks > 1 {
+            let wiring = if churn_mode {
+                placeholders()
+            } else {
+                std::mem::take(&mut edge_wiring)
+            };
             let mut sw = Switch::new(
                 SWITCH_NODE,
                 cfg.policy,
                 pool_slots,
-                edge_wiring,
+                wiring,
                 root.split(rng_stream::EDGE),
             );
             sw.set_age_gate(cfg.net.base_rtt_ns);
+            if churn_mode {
+                sw.enable_churn(n_jobs);
+            }
             sw.set_tier(SwitchTier::Edge);
             Some(sw)
         } else {
@@ -237,7 +334,14 @@ impl Simulation {
             let lo = workers.len();
             for (w, &node) in worker_nodes[j].iter().enumerate() {
                 let rack = net.topo.parent_of(node);
-                let region_cap = switches[rack as usize].policy().region_len(j as JobId);
+                // Churn mode: regions are granted at admission, so the
+                // switch has none yet; the fixed churn region size caps
+                // the window instead.
+                let region_cap = match churn_region_slots {
+                    Some(rs) if cfg.policy == PolicyKind::SwitchMl => Some(rs),
+                    Some(_) => None,
+                    None => switches[rack as usize].policy().region_len(j as JobId),
+                };
                 node_actor[node as usize] = ActorRef::Worker(workers.len() as u32);
                 let ps = if cfg.policy == PolicyKind::SwitchMl {
                     None
@@ -278,7 +382,10 @@ impl Simulation {
             pses.push(ps);
         }
 
-        // schedule job starts: spec offset + U(0, start_spread)
+        // Schedule job starts: spec offset + U(0, start_spread). Batch
+        // mode starts the workers directly; churn mode schedules arrival
+        // events for the coordinator instead — admission happens at
+        // runtime, against whatever the fabric looks like at that moment.
         let mut start_rng = root.split(rng_stream::START);
         for (j, spec) in cfg.jobs.iter().enumerate() {
             let spread = if cfg.start_spread_ns > 0 {
@@ -287,10 +394,50 @@ impl Simulation {
                 0
             };
             let at = spec.start_ns + spread;
-            for &node in &worker_nodes[j] {
-                net.timer(at, node, TK_START);
+            if churn_mode {
+                net.timer(at, SWITCH_NODE, TK_CHURN_ADMIT | j as u64);
+            } else {
+                for &node in &worker_nodes[j] {
+                    net.timer(at, node, TK_START);
+                }
             }
         }
+
+        let churn = cfg.churn.as_ref().map(|knobs| {
+            net.timer(0, SWITCH_NODE, TK_CHURN_SAMPLE);
+            let region_slots = churn_region_slots.expect("resolved above");
+            let mut worker_job = vec![0u32; workers.len()];
+            for (j, &(lo, hi)) in job_workers.iter().enumerate() {
+                for wj in &mut worker_job[lo..hi] {
+                    *wj = j as u32;
+                }
+            }
+            ChurnRuntime {
+                ctl: AdmissionController::new(
+                    cfg.policy,
+                    pool_slots as u32,
+                    region_slots,
+                    n_jobs,
+                ),
+                tick_ns: knobs.sample_tick_ns,
+                region_slots: if cfg.policy == PolicyKind::SwitchMl { region_slots } else { 0 },
+                wirings: (0..n_jobs)
+                    .map(|j| {
+                        let per_rack: Vec<JobWiring> =
+                            (0..racks).map(|r| rack_wirings[r][j].clone()).collect();
+                        (per_rack, edge_wiring[j].clone())
+                    })
+                    .collect(),
+                worker_nodes: worker_nodes.clone(),
+                worker_job,
+                worker_done: vec![false; workers.len()],
+                workers_left: worker_nodes.iter().map(|ns| ns.len() as u32).collect(),
+                arrived_at: vec![None; n_jobs],
+                admitted_at: vec![None; n_jobs],
+                completed_at: vec![None; n_jobs],
+                samples: Vec::new(),
+            }
+        });
 
         Ok(Simulation {
             cfg,
@@ -304,6 +451,7 @@ impl Simulation {
             job_workers,
             out_buf: Vec::with_capacity(OUT_BUF_CAP),
             recirc_buf: Vec::new(),
+            churn,
             truncated: false,
         })
     }
@@ -426,6 +574,9 @@ impl Simulation {
             Event::Timer { node, key } => match self.node_actor[node as usize] {
                 ActorRef::Worker(i) => {
                     self.workers[i as usize].on_timer(&mut self.net, key);
+                    if self.churn.is_some() && self.workers[i as usize].done() {
+                        self.churn_worker_done(now, i as usize);
+                    }
                 }
                 ActorRef::Ps(i) => {
                     debug_assert_eq!(key, TIMER_SCAN);
@@ -433,7 +584,10 @@ impl Simulation {
                         ps.on_scan(t, out);
                     });
                 }
-                ActorRef::Switch => {}
+                // Switch-node timers belong to the churn coordinator
+                // (arrivals + the utilization sampler); batch runs never
+                // schedule any.
+                ActorRef::Switch => self.on_switch_timer(now, key),
             },
         }
         true
@@ -462,6 +616,149 @@ impl Simulation {
             self.out_buf.capacity() >= OUT_BUF_CAP,
             "dispatch out-buffer lost its capacity: the hot path is allocating again"
         );
+    }
+
+    // ----------------------------------------------------------------
+    // online job churn (DESIGN.md §11)
+    // ----------------------------------------------------------------
+
+    /// Dispatch a switch-node timer: a job arrival or a sampler tick.
+    fn on_switch_timer(&mut self, now: SimTime, key: u64) {
+        if self.churn.is_none() {
+            debug_assert!(false, "switch timer {key:#x} outside churn mode");
+            return;
+        }
+        match key & TK_CHURN_MASK {
+            TK_CHURN_ADMIT => self.churn_arrival(now, (key & 0xffff_ffff) as usize),
+            TK_CHURN_SAMPLE => self.churn_sample(now),
+            other => debug_assert!(false, "unknown switch timer {other:#x}"),
+        }
+    }
+
+    /// A job arrived: ask the coordinator; admit now or leave it queued
+    /// until a completing tenant's region is reclaimed.
+    fn churn_arrival(&mut self, now: SimTime, j: usize) {
+        let mut ch = self.churn.take().expect("arrival without churn state");
+        ch.arrived_at[j] = Some(now);
+        if let Admission::Admit(region) = ch.ctl.on_arrival(j as JobId) {
+            self.churn_admit(now, &mut ch, j, region);
+        }
+        self.churn = Some(ch);
+    }
+
+    /// Admit one job onto the live fabric: install its wiring at every
+    /// tier, grant its region (statically partitioned policies), and
+    /// start its workers.
+    fn churn_admit(
+        &mut self,
+        now: SimTime,
+        ch: &mut ChurnRuntime,
+        j: usize,
+        region: Option<Region>,
+    ) {
+        ch.admitted_at[j] = Some(now);
+        let job = j as JobId;
+        let (rack_w, edge_w) = &ch.wirings[j];
+        for (r, sw) in self.switches.iter_mut().enumerate() {
+            sw.install_wiring(job, rack_w[r].clone());
+            if let Some((start, len)) = region {
+                sw.grant_region(job, start, len);
+            }
+        }
+        if let Some(edge) = self.edge.as_mut() {
+            edge.install_wiring(job, edge_w.clone());
+            if let Some((start, len)) = region {
+                edge.grant_region(job, start, len);
+            }
+        }
+        for &node in &ch.worker_nodes[j] {
+            self.net.timer(now, node, TK_START);
+        }
+    }
+
+    /// A worker's timer left it Done: latch it once; the job's last
+    /// worker triggers reclamation.
+    fn churn_worker_done(&mut self, now: SimTime, widx: usize) {
+        let mut ch = self.churn.take().expect("worker-done without churn state");
+        if !ch.worker_done[widx] {
+            ch.worker_done[widx] = true;
+            let j = ch.worker_job[widx] as usize;
+            ch.workers_left[j] -= 1;
+            if ch.workers_left[j] == 0 {
+                self.churn_job_complete(now, &mut ch, j);
+            }
+        }
+        self.churn = Some(ch);
+    }
+
+    /// End of job: retire the job at every tier (in-flight stragglers
+    /// drop instead of re-occupying slots), flush its stale slots,
+    /// reclaim its region exactly once, and rebalance the freed memory
+    /// onto queued tenants (FIFO).
+    fn churn_job_complete(&mut self, now: SimTime, ch: &mut ChurnRuntime, j: usize) {
+        ch.completed_at[j] = Some(now);
+        let job = j as JobId;
+        for sw in &mut self.switches {
+            sw.retire_job(job);
+            sw.flush_job(now, job);
+        }
+        if let Some(edge) = self.edge.as_mut() {
+            edge.retire_job(job);
+            edge.flush_job(now, job);
+        }
+        let outcome = ch.ctl.on_completion(job);
+        if outcome.freed.is_some() {
+            for sw in &mut self.switches {
+                sw.revoke_region(job);
+            }
+            if let Some(edge) = self.edge.as_mut() {
+                edge.revoke_region(job);
+            }
+        }
+        for (qjob, region) in outcome.admitted {
+            self.churn_admit(now, ch, qjob as usize, Some(region));
+        }
+    }
+
+    /// One sampler tick: record occupied slots per job across every
+    /// pipeline stage plus the reserved (granted) total, then re-arm.
+    fn churn_sample(&mut self, now: SimTime) {
+        let mut ch = self.churn.take().expect("sample without churn state");
+        let mut per_job = vec![0u32; self.models.len()];
+        let mut occupied = 0u32;
+        for sw in self.switches.iter().chain(self.edge.as_ref()) {
+            for slot in sw.slots() {
+                if slot.occupied {
+                    occupied += 1;
+                    per_job[slot.job as usize] += 1;
+                }
+            }
+        }
+        let stages = self.switches.len() as u32 + self.edge.is_some() as u32;
+        let reserved = match ch.ctl.reserved_slots() {
+            Some(r) => r * stages,
+            None => occupied,
+        };
+        ch.samples.push(UtilSample { t: now, occupied, reserved, per_job });
+        // Adaptive decimation: a long run at a fine tick must not grow an
+        // unbounded in-memory timeline (and a multi-hundred-MB artifact).
+        if ch.samples.len() >= MAX_TIMELINE_SAMPLES {
+            let mut i = 0usize;
+            ch.samples.retain(|_| {
+                i += 1;
+                i % 2 == 1
+            });
+            ch.tick_ns *= 2;
+        }
+        // Re-arm only while other events are pending: if the queue is
+        // empty here, nothing (admissions included — they ride timers)
+        // can ever progress, and re-arming would keep the queue non-empty
+        // forever, defeating `run()`'s protocol-stall fast-exit and
+        // grinding out sampler events until the time cap.
+        if !self.all_done() && !self.net.queue.is_empty() {
+            self.net.timer(now + ch.tick_ns, SWITCH_NODE, TK_CHURN_SAMPLE);
+        }
+        self.churn = Some(ch);
     }
 
     /// Run to completion (all jobs done, queue exhausted, or time cap).
@@ -535,6 +832,22 @@ impl Simulation {
                 stats: self.switches[0].stats.clone(),
             });
         }
+        let churn = self.churn.as_ref().map(|ch| ChurnMetrics {
+            jobs: (0..self.models.len())
+                .map(|j| ChurnJobOutcome {
+                    job: j as JobId,
+                    arrived_ns: ch.arrived_at[j],
+                    admitted_ns: ch.admitted_at[j],
+                    completed_ns: ch.completed_at[j],
+                })
+                .collect(),
+            samples: ch.samples.clone(),
+            tick_ns: ch.tick_ns,
+            pool_slots_per_stage: self.switches[0].pool_slots() as u32,
+            stages: self.switches.len() as u32 + self.edge.is_some() as u32,
+            peak_queue: ch.ctl.peak_queue(),
+            region_slots: ch.region_slots,
+        });
         ExperimentMetrics {
             jobs,
             switches,
@@ -544,6 +857,7 @@ impl Simulation {
             avg_transit_ns: self.net.avg_transit_ns(),
             wall_secs,
             truncated: self.truncated,
+            churn,
         }
     }
 

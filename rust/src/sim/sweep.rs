@@ -27,7 +27,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::config::{
-    parse_toml, ExperimentConfig, JobSpec, NetworkConfig, PolicyKind, SwitchConfig, TomlTable,
+    parse_toml, ChurnKnobs, ExperimentConfig, JobSpec, NetworkConfig, PolicyKind, SwitchConfig,
+    TomlTable,
 };
 use crate::job::trace::{generate, TraceConfig};
 use crate::sim::{ExperimentMetrics, Simulation};
@@ -161,7 +162,7 @@ pub fn slug(s: &str) -> String {
     out.trim_end_matches('_').to_string()
 }
 
-fn filename_safe(name: &str) -> bool {
+pub(crate) fn filename_safe(name: &str) -> bool {
     !name.is_empty()
         && name
             .chars()
@@ -335,6 +336,17 @@ impl SweepConfig {
             ..ExperimentConfig::default()
         };
 
+        // A [churn] section switches every cell to the online job
+        // lifecycle (runtime admission + reclamation, DESIGN.md §11) —
+        // it pairs naturally with [trace], whose Poisson arrivals become
+        // genuine runtime arrivals instead of pre-registered start
+        // offsets. NOTE: sweep cells keep the batch JCT definition
+        // (per-iteration, from comm start — i.e. post-admission), so a
+        // queued job's admission wait is NOT in the cell's jct_ms_*; the
+        // arrival-to-completion JCT, queueing delay and utilization
+        // timeline live in `esa churn`'s CHURN_<name>.json.
+        cfg.base.churn = ChurnKnobs::from_table(t)?;
+
         // any trace.* key engages trace mode — a [trace] section missing
         // `n` must be an error, never a silent fall-back to the fixed grid
         cfg.trace = if t.keys().any(|k| k == "trace" || k.starts_with("trace.")) {
@@ -427,6 +439,11 @@ impl SweepConfig {
         if self.iterations == 0 {
             bail!("iterations must be >= 1");
         }
+        if let Some(ch) = &self.base.churn {
+            if ch.sample_tick_ns == 0 {
+                bail!("churn.sample_tick_us must be positive");
+            }
+        }
         if let Some(tr) = &self.trace {
             if tr.n == 0 {
                 bail!("trace.n must be >= 1");
@@ -506,15 +523,8 @@ impl SweepConfig {
                     .into_iter()
                     .map(|e| {
                         let mix = self.models.iter().find(|m| m.name == e.model);
-                        JobSpec {
-                            n_workers: e.n_workers,
-                            start_ns: e.arrival_ns,
-                            tensor_bytes: spec
-                                .tensor_bytes
-                                .or(mix.and_then(|m| m.tensor_bytes)),
-                            iterations: Some(e.iterations),
-                            model: e.model,
-                        }
+                        let tensor = spec.tensor_bytes.or(mix.and_then(|m| m.tensor_bytes));
+                        e.into_job_spec(tensor)
                     })
                     .collect()
             }
@@ -597,6 +607,35 @@ fn aggregate(spec: CellSpec, bandwidth_gbps: f64, replicas: &[ExperimentMetrics]
 
 /// Expand and execute a sweep on up to `threads` workers. Any failing
 /// replica fails the whole sweep with its cell coordinates attached.
+///
+/// # Examples
+///
+/// A two-cell grid, parsed from the same TOML dialect `esa sweep
+/// --config` takes; the report's JSON/CSV bytes are independent of the
+/// thread count:
+///
+/// ```
+/// use esa::sim::sweep::{run_sweep, SweepConfig};
+///
+/// let cfg = SweepConfig::parse_str(r#"
+///     name = "demo"
+///     iterations = 1
+///     [axes]
+///     policies = ["esa", "atp"]
+///     workers = [2]
+///     jobs = [1]
+///     seeds = [42]
+///     tensor_kb = [64]
+///     [models]
+///     names = ["microbench"]
+/// "#).unwrap();
+/// assert_eq!(cfg.expand().len(), 2, "policy axis x everything else");
+///
+/// let report = run_sweep(&cfg, 2).unwrap();
+/// assert_eq!(report.cells.len(), 2);
+/// assert!(report.cells.iter().all(|c| c.truncated == 0));
+/// assert_eq!(report.to_json(), run_sweep(&cfg, 1).unwrap().to_json());
+/// ```
 pub fn run_sweep(cfg: &SweepConfig, threads: usize) -> Result<SweepReport> {
     cfg.validate()?;
     let cells = cfg.expand();
@@ -630,14 +669,6 @@ pub fn run_sweep(cfg: &SweepConfig, threads: usize) -> Result<SweepReport> {
         results.push(aggregate(spec, cfg.base.net.bandwidth_gbps, &replicas));
     }
     Ok(SweepReport { config: cfg.clone(), cells: results })
-}
-
-fn f64_or_null(w: &mut JsonWriter, key: &str, v: f64, decimals: usize) {
-    if v.is_finite() {
-        w.f64_field(key, v, decimals);
-    } else {
-        w.null_field(key);
-    }
 }
 
 impl SweepReport {
@@ -710,6 +741,12 @@ impl SweepReport {
             w.u64_field("iter_max", tr.iter_range.1 as u64);
             w.end_obj();
         }
+        if let Some(ch) = &c.base.churn {
+            w.begin_obj(Some("churn"));
+            w.f64_field("sample_tick_us", ch.sample_tick_ns as f64 / 1e3, 3);
+            w.u64_field("region_slots", ch.region_slots as u64);
+            w.end_obj();
+        }
         w.begin_arr(Some("cells"));
         for cell in &self.cells {
             let s = &cell.spec;
@@ -728,17 +765,17 @@ impl SweepReport {
                 None => w.null_field("tensor_bytes"),
             }
             w.u64_field("replicas", cell.replicas as u64);
-            f64_or_null(&mut w, "jct_ms_mean", cell.jct_ms_mean, 6);
-            f64_or_null(&mut w, "jct_ms_p50", cell.jct_ms_p50, 6);
-            f64_or_null(&mut w, "jct_ms_p95", cell.jct_ms_p95, 6);
-            f64_or_null(&mut w, "jct_ms_ci95", cell.jct_ms_ci95, 6);
-            f64_or_null(&mut w, "mem_util", cell.mem_util, 6);
-            f64_or_null(&mut w, "transit_us", cell.transit_us, 3);
+            w.f64_field_or_null("jct_ms_mean", cell.jct_ms_mean, 6);
+            w.f64_field_or_null("jct_ms_p50", cell.jct_ms_p50, 6);
+            w.f64_field_or_null("jct_ms_p95", cell.jct_ms_p95, 6);
+            w.f64_field_or_null("jct_ms_ci95", cell.jct_ms_ci95, 6);
+            w.f64_field_or_null("mem_util", cell.mem_util, 6);
+            w.f64_field_or_null("transit_us", cell.transit_us, 3);
             w.u64_field("events", cell.events);
             w.u64_field("past_schedules", cell.past_schedules);
             w.u64_field("truncated", cell.truncated as u64);
-            f64_or_null(&mut w, "rack_grad_pkts", cell.rack_grad_pkts, 1);
-            f64_or_null(&mut w, "edge_partial_pkts", cell.edge_partial_pkts, 1);
+            w.f64_field_or_null("rack_grad_pkts", cell.rack_grad_pkts, 1);
+            w.f64_field_or_null("edge_partial_pkts", cell.edge_partial_pkts, 1);
             w.end_obj();
         }
         w.end_arr();
@@ -966,6 +1003,45 @@ mod tests {
         assert_eq!(cfg.models[1].tensor_bytes, Some(8192 * 1024));
         assert_eq!(cfg.base.switch.memory_bytes, 1024 * 1024);
         assert_eq!(cfg.expand().len(), 6);
+    }
+
+    #[test]
+    fn churn_section_engages_the_online_lifecycle() {
+        let cfg = SweepConfig::parse_str(
+            r#"
+            name = "churny"
+            [axes]
+            policies = ["esa", "switchml"]
+            [churn]
+            sample_tick_us = 100.0
+            region_slots = 64
+            [trace]
+            n = 4
+            rate_per_sec = 1000.0
+            "#,
+        )
+        .unwrap();
+        let ch = cfg.base.churn.as_ref().unwrap();
+        assert_eq!(ch.sample_tick_ns, 100 * crate::USEC);
+        assert_eq!(ch.region_slots, 64);
+        // cells inherit the churn knobs from the base template
+        let cells = cfg.expand();
+        let exp = cfg.cell_experiment(&cells[0], 7);
+        assert!(exp.churn.is_some());
+        let report = SweepReport { config: cfg, cells: Vec::new() };
+        assert!(report.to_json().contains("\"churn\""));
+        // plain grids stay churn-free (golden-snapshot bytes unchanged)
+        assert!(SweepConfig::quick().base.churn.is_none());
+    }
+
+    #[test]
+    fn churn_sweep_runs_end_to_end() {
+        let mut cfg = tiny();
+        cfg.policies = vec![PolicyKind::Esa];
+        cfg.base.churn = Some(ChurnKnobs { sample_tick_ns: 50 * crate::USEC, region_slots: 0 });
+        let r = run_sweep(&cfg, 2).unwrap();
+        assert_eq!(r.cells[0].truncated, 0, "churn cell must complete");
+        assert!(r.cells[0].jct_ms_mean > 0.0);
     }
 
     #[test]

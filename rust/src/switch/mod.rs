@@ -28,6 +28,7 @@
 
 pub mod aggregator;
 pub mod policy;
+pub mod region;
 
 use crate::config::PolicyKind;
 use crate::packet::{Packet, PacketKind, UNSTAMPED};
@@ -36,6 +37,7 @@ use crate::{JobId, NodeId, SimTime};
 
 pub use aggregator::Aggregator;
 pub use policy::{CollisionOutcome, Policy};
+pub use region::RegionAllocator;
 
 /// Which level of the aggregation tree a switch sits at.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -94,6 +96,12 @@ pub struct SwitchStats {
     pub passthroughs: u64,
     pub reminder_evictions: u64,
     pub duplicates: u64,
+    /// Stale slots cleared by the end-of-job control-plane flush (churn
+    /// mode only — see DESIGN.md §11 and the §8 known-delta it closes).
+    pub eoj_flushed: u64,
+    /// Slot-addressed packets dropped because their job holds no live
+    /// region (churn mode: stragglers of a completed, revoked tenant).
+    pub stale_drops: u64,
     /// Integral of slot-busy time (ns·slots) for occupancy accounting.
     pub busy_ns: u64,
 }
@@ -113,6 +121,11 @@ pub struct Switch {
     /// priority structure (unpaced halving preempt-thrashes under heavy
     /// contention; see DESIGN.md §5).
     age_gate_ns: SimTime,
+    /// Churn mode only (empty for batch runs): jobs retired by the
+    /// coordinator at completion. Slot-addressed stragglers of a retired
+    /// job are dropped instead of re-allocating aggregators the one-shot
+    /// end-of-job flush already reclaimed.
+    retired: Vec<bool>,
     pub stats: SwitchStats,
 }
 
@@ -130,6 +143,7 @@ impl Switch {
             tier: SwitchTier::Root,
             rng,
             age_gate_ns: 10 * crate::USEC,
+            retired: Vec::new(),
             stats: SwitchStats::default(),
         }
     }
@@ -166,6 +180,68 @@ impl Switch {
         &self.pool[idx]
     }
 
+    /// The whole aggregator pool (the churn-mode utilization sampler
+    /// walks this to count occupied slots per job).
+    pub fn slots(&self) -> &[Aggregator] {
+        &self.pool
+    }
+
+    // ----------------------------------------------------------------
+    // runtime admission (churn mode — DESIGN.md §11)
+    // ----------------------------------------------------------------
+
+    /// Install the real wiring for a job admitted at runtime. Until this
+    /// call the switch holds an inert placeholder (no members, fan-in 0),
+    /// so traffic for unadmitted jobs cannot be routed.
+    pub fn install_wiring(&mut self, job: JobId, wiring: JobWiring) {
+        self.wiring[job as usize] = wiring;
+    }
+
+    /// Switch to churn mode: drop any construction-time static
+    /// partitioning — regions are granted per admission
+    /// ([`Self::grant_region`]) and revoked at completion
+    /// ([`Self::revoke_region`]) — and start tracking job retirement.
+    pub fn enable_churn(&mut self, n_jobs: usize) {
+        self.policy.reset_regions(n_jobs);
+        self.retired = vec![false; n_jobs];
+    }
+
+    /// Mark a completed job so its in-flight stragglers are dropped
+    /// ([`Self::handle`]'s churn guard) instead of re-occupying slots the
+    /// end-of-job flush reclaimed.
+    pub fn retire_job(&mut self, job: JobId) {
+        self.retired[job as usize] = true;
+    }
+
+    /// Grant a statically partitioned job its slot region (admission).
+    pub fn grant_region(&mut self, job: JobId, start: u32, len: u32) {
+        self.policy.set_region(job, start, len);
+    }
+
+    /// Revoke a statically partitioned job's region (completion).
+    pub fn revoke_region(&mut self, job: JobId) {
+        self.policy.clear_region(job);
+    }
+
+    /// End-of-job control-plane flush: deallocate every slot still held by
+    /// `job`, returning how many were freed. Idempotent — a second call
+    /// finds nothing. This closes the stale-partial delta DESIGN.md §8
+    /// documents for batch runs: tasks that completed via the PS can leave
+    /// partials resident; under churn the coordinator clears them the
+    /// moment the job finishes, so freed memory is immediately reusable.
+    pub fn flush_job(&mut self, now: SimTime, job: JobId) -> u32 {
+        let mut freed = 0u32;
+        for slot in &mut self.pool {
+            if slot.occupied && slot.job == job {
+                slot.value = None;
+                self.stats.busy_ns += slot.deallocate(now);
+                freed += 1;
+            }
+        }
+        self.stats.eoj_flushed += freed as u64;
+        freed
+    }
+
     /// Slot index for a task under the active policy.
     pub fn slot_index(&self, job: JobId, seq: u32) -> u32 {
         self.policy.slot_for(job, seq, self.pool.len())
@@ -175,6 +251,23 @@ impl Switch {
     /// gradients, rack partials, reminders and multicast replication.
     /// Emits outgoing packets into `out`.
     pub fn handle(&mut self, now: SimTime, pkt: Packet, out: &mut Vec<Packet>) {
+        // Churn guard (batch runs never populate `retired`, so this is a
+        // single short-circuited branch for them): slot-addressed
+        // stragglers of a retired job are dropped — re-allocating would
+        // resurrect the stale-partial leak the one-shot end-of-job flush
+        // just reclaimed, and for SwitchML the revoked region has no slot
+        // mapping at all (`seq % 0`). The region_len check additionally
+        // covers statically partitioned traffic before any grant exists.
+        if matches!(
+            pkt.kind,
+            PacketKind::Gradient | PacketKind::RackPartial | PacketKind::ReminderToSwitch
+        ) && (self.retired.get(pkt.job as usize).copied().unwrap_or(false)
+            || (self.policy.kind == PolicyKind::SwitchMl
+                && self.policy.region_len(pkt.job).is_none()))
+        {
+            self.stats.stale_drops += 1;
+            return;
+        }
         match pkt.kind {
             PacketKind::Gradient => {
                 self.stats.grad_pkts += 1;
@@ -975,6 +1068,80 @@ mod tests {
         assert_eq!(out[0].kind, PacketKind::PartialToPs);
         assert_eq!(out[0].bitmap, 0b0011, "evicted rack partial carries its bitmap");
         assert_eq!(out[0].dst, 10, "eviction goes to the loser job's PS");
+    }
+
+    #[test]
+    fn end_of_job_flush_clears_only_that_jobs_slots() {
+        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut out = Vec::new();
+        sw.handle(10, grad(0, 5, 0, 9, &sw), &mut out);
+        sw.handle(10, grad(0, 6, 0, 9, &sw), &mut out);
+        sw.handle(10, grad(1, 3, 0, 9, &sw), &mut out);
+        assert_eq!(sw.occupied_slots(), 3);
+        assert_eq!(sw.flush_job(50, 0), 2, "both job-0 partials cleared");
+        assert_eq!(sw.occupied_slots(), 1, "job 1 untouched");
+        assert_eq!(sw.stats.eoj_flushed, 2);
+        assert_eq!(sw.flush_job(60, 0), 0, "idempotent: nothing left to flush");
+    }
+
+    #[test]
+    fn switchml_straggler_of_revoked_region_is_dropped() {
+        let mut sw = Switch::new(0, PolicyKind::SwitchMl, 64, wiring2(), Rng::new(1));
+        sw.enable_churn(2);
+        sw.grant_region(0, 0, 32);
+        let mut out = Vec::new();
+        sw.handle(10, grad(0, 5, 0, 0, &sw), &mut out);
+        assert_eq!(sw.occupied_slots(), 1);
+        sw.flush_job(20, 0);
+        sw.revoke_region(0);
+        // a straggler retransmit of the completed tenant: no region, no
+        // slot mapping — dropped, not fed to `slot_for`
+        let p = Packet::gradient(0, 5, 0, 1, 2, 0, 1, 0, 306);
+        sw.handle(30, p, &mut out);
+        assert_eq!(sw.stats.stale_drops, 1);
+        assert_eq!(sw.occupied_slots(), 0);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn retired_job_stragglers_cannot_reoccupy_flushed_slots() {
+        // Dynamic policies keep their hash mapping after completion, so a
+        // straggler would happily re-allocate — the retirement gate is
+        // what keeps the one-shot end-of-job flush final.
+        let mut sw = mkswitch(PolicyKind::Esa);
+        sw.enable_churn(2);
+        let mut out = Vec::new();
+        sw.handle(10, grad(0, 5, 0, 9, &sw), &mut out);
+        assert_eq!(sw.occupied_slots(), 1);
+        sw.retire_job(0);
+        assert_eq!(sw.flush_job(20, 0), 1);
+        // a duplicate of the flushed fragment arrives late
+        sw.handle(30, grad(0, 5, 0, 9, &sw), &mut out);
+        assert_eq!(sw.stats.stale_drops, 1);
+        assert_eq!(sw.occupied_slots(), 0, "ghost slot must not come back");
+        // other jobs are unaffected
+        sw.handle(40, grad(1, 3, 0, 9, &sw), &mut out);
+        assert_eq!(sw.occupied_slots(), 1);
+    }
+
+    #[test]
+    fn runtime_wiring_install_replaces_placeholder() {
+        let placeholder = vec![
+            JobWiring { ps: 10, workers: vec![], fan_in: 0, fan_in_total: 0, packet_bytes: 306 },
+        ];
+        let mut sw = Switch::new(0, PolicyKind::Esa, 16, placeholder, Rng::new(1));
+        sw.install_wiring(
+            0,
+            JobWiring { ps: 10, workers: vec![1, 2], fan_in: 2, fan_in_total: 2, packet_bytes: 306 },
+        );
+        let mut out = Vec::new();
+        let mut p = Packet::gradient(0, 0, 0, 1, 2, 5, 1, 0, 306);
+        p.agg_index = sw.slot_index(0, 0);
+        sw.handle(10, p, &mut out);
+        let mut p2 = Packet::gradient(0, 0, 0, 2, 2, 5, 2, 0, 306);
+        p2.agg_index = sw.slot_index(0, 0);
+        sw.handle(20, p2, &mut out);
+        assert_eq!(out.len(), 2, "completion multicasts to the installed members");
     }
 
     #[test]

@@ -42,10 +42,32 @@ impl Policy {
         self.regions = (0..n_jobs).map(|j| (j as u32 * len, len)).collect();
     }
 
+    /// Switch to churn-mode region management (DESIGN.md §11): every job
+    /// starts with *no* region; the coordinator grants one at admission
+    /// ([`Self::set_region`]) and revokes it at completion
+    /// ([`Self::clear_region`]).
+    pub fn reset_regions(&mut self, n_jobs: usize) {
+        self.regions = vec![(0, 0); n_jobs];
+    }
+
+    /// Grant a region to `job` (runtime admission).
+    pub fn set_region(&mut self, job: JobId, start: u32, len: u32) {
+        debug_assert!(len > 0, "granting an empty region");
+        self.regions[job as usize] = (start, len);
+    }
+
+    /// Revoke `job`'s region (end-of-job reclamation).
+    pub fn clear_region(&mut self, job: JobId) {
+        self.regions[job as usize] = (0, 0);
+    }
+
     /// Per-job static region length (workers cap their window to it so the
-    /// self-clocked SwitchML slot reuse never collides).
+    /// self-clocked SwitchML slot reuse never collides). `None` when no
+    /// region is granted — under churn a job has no region until admitted.
     pub fn region_len(&self, job: JobId) -> Option<u32> {
-        self.regions.get(job as usize).map(|&(_, len)| len)
+        self.regions
+            .get(job as usize)
+            .and_then(|&(_, len)| (len > 0).then_some(len))
     }
 
     /// The aggregator index for a task.
@@ -54,6 +76,7 @@ impl Policy {
         match self.kind {
             PolicyKind::SwitchMl => {
                 let (start, len) = self.regions[job as usize];
+                debug_assert!(len > 0, "SwitchML traffic for job {job} with no granted region");
                 start + (seq % len)
             }
             // ATP/ESA/strawmen: hash(jobID, seq) over the shared pool
@@ -162,6 +185,19 @@ mod tests {
             assert!((0..1024).contains(&s0));
             assert!((3072..4096).contains(&s3));
         }
+    }
+
+    #[test]
+    fn dynamic_regions_grant_and_revoke() {
+        let mut p = Policy::new(PolicyKind::SwitchMl);
+        p.reset_regions(3);
+        assert_eq!(p.region_len(1), None, "no region before admission");
+        p.set_region(1, 256, 128);
+        assert_eq!(p.region_len(1), Some(128));
+        assert_eq!(p.slot_for(1, 0, 4096), 256);
+        assert_eq!(p.slot_for(1, 130, 4096), 256 + 2);
+        p.clear_region(1);
+        assert_eq!(p.region_len(1), None, "revoked at completion");
     }
 
     #[test]

@@ -1,0 +1,208 @@
+//! Dynamic aggregator-region allocation for statically partitioned
+//! policies under job churn.
+//!
+//! SwitchML-style systems carve a contiguous slot region per job at
+//! admission time and address it as `region_start + seq % region_len`.
+//! With the fixed job set of a batch experiment the carving is a one-shot
+//! equal split ([`crate::switch::Policy::set_static_partitions`]); under an
+//! *online* job mix regions must be granted at arrival and reclaimed at
+//! completion. [`RegionAllocator`] is that free-list: first-fit
+//! allocation over a sorted, coalesced extent list, with an exactly-once
+//! reclamation contract — freeing a region twice (or a region that was
+//! never granted) is an error, never a silent pool inflation.
+//!
+//! The allocator models the *control-plane* view of one switch's SRAM; in
+//! a multi-tier fabric every tier carries the same grants (regions are
+//! per-job, symmetric across switches), so one allocator instance serves
+//! the whole fabric.
+
+use anyhow::{bail, Result};
+
+use crate::JobId;
+
+/// A granted slot region: `(start, len)` in pool-slot units.
+pub type Region = (u32, u32);
+
+/// First-fit free-list allocator over a switch's aggregator pool.
+///
+/// ```
+/// use esa::switch::region::RegionAllocator;
+///
+/// let mut a = RegionAllocator::new(100);
+/// let r0 = a.alloc(0, 40).unwrap();
+/// let r1 = a.alloc(1, 40).unwrap();
+/// assert_eq!((r0, r1), ((0, 40), (40, 40)));
+/// assert!(a.alloc(2, 40).is_none(), "only 20 slots left");
+/// assert_eq!(a.reclaim(0).unwrap(), (0, 40));
+/// assert_eq!(a.alloc(2, 40), Some((0, 40)), "freed extent is reused");
+/// assert!(a.reclaim(0).is_err(), "double reclamation is an error");
+/// ```
+#[derive(Debug, Clone)]
+pub struct RegionAllocator {
+    pool_slots: u32,
+    /// Free extents, sorted by start, adjacent extents coalesced.
+    free: Vec<Region>,
+    /// Live grants: `(job, start, len)`.
+    grants: Vec<(JobId, u32, u32)>,
+}
+
+impl RegionAllocator {
+    pub fn new(pool_slots: u32) -> RegionAllocator {
+        RegionAllocator {
+            pool_slots,
+            free: if pool_slots > 0 { vec![(0, pool_slots)] } else { Vec::new() },
+            grants: Vec::new(),
+        }
+    }
+
+    /// Total pool size this allocator manages.
+    pub fn pool_slots(&self) -> u32 {
+        self.pool_slots
+    }
+
+    /// Slots currently free (not granted to any job).
+    pub fn free_slots(&self) -> u32 {
+        self.free.iter().map(|&(_, len)| len).sum()
+    }
+
+    /// Slots currently granted (reserved whether or not they hold data —
+    /// the idle-reservation the utilization timeline makes visible).
+    pub fn reserved_slots(&self) -> u32 {
+        self.grants.iter().map(|&(_, _, len)| len).sum()
+    }
+
+    /// The live grant for `job`, if any.
+    pub fn grant_of(&self, job: JobId) -> Option<Region> {
+        self.grants
+            .iter()
+            .find(|&&(j, _, _)| j == job)
+            .map(|&(_, start, len)| (start, len))
+    }
+
+    /// First-fit: grant `len` slots to `job`, or `None` when no free
+    /// extent is large enough. A job can hold at most one region.
+    pub fn alloc(&mut self, job: JobId, len: u32) -> Option<Region> {
+        assert!(len > 0, "zero-length region grant");
+        assert!(
+            self.grant_of(job).is_none(),
+            "job {job} already holds a region"
+        );
+        let pos = self.free.iter().position(|&(_, flen)| flen >= len)?;
+        let (start, flen) = self.free[pos];
+        if flen == len {
+            self.free.remove(pos);
+        } else {
+            self.free[pos] = (start + len, flen - len);
+        }
+        self.grants.push((job, start, len));
+        Some((start, len))
+    }
+
+    /// Return `job`'s region to the free list, coalescing neighbours.
+    /// Errors if the job holds no region — the exactly-once contract: a
+    /// double reclamation would silently inflate the pool.
+    pub fn reclaim(&mut self, job: JobId) -> Result<Region> {
+        let Some(pos) = self.grants.iter().position(|&(j, _, _)| j == job) else {
+            bail!("job {job} holds no region (double reclamation?)");
+        };
+        let (_, start, len) = self.grants.remove(pos);
+        let at = self
+            .free
+            .iter()
+            .position(|&(s, _)| s > start)
+            .unwrap_or(self.free.len());
+        self.free.insert(at, (start, len));
+        // coalesce with the right neighbour, then the left
+        if at + 1 < self.free.len() {
+            let (s, l) = self.free[at];
+            let (rs, rl) = self.free[at + 1];
+            debug_assert!(s + l <= rs, "overlapping free extents");
+            if s + l == rs {
+                self.free[at] = (s, l + rl);
+                self.free.remove(at + 1);
+            }
+        }
+        if at > 0 {
+            let (ls, ll) = self.free[at - 1];
+            let (s, l) = self.free[at];
+            debug_assert!(ls + ll <= s, "overlapping free extents");
+            if ls + ll == s {
+                self.free[at - 1] = (ls, ll + l);
+                self.free.remove(at);
+            }
+        }
+        debug_assert!(
+            self.free_slots() + self.reserved_slots() == self.pool_slots,
+            "allocator accounting drifted"
+        );
+        Ok((start, len))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_fit_packs_from_the_front() {
+        let mut a = RegionAllocator::new(100);
+        assert_eq!(a.alloc(0, 30), Some((0, 30)));
+        assert_eq!(a.alloc(1, 30), Some((30, 30)));
+        assert_eq!(a.alloc(2, 30), Some((60, 30)));
+        assert_eq!(a.alloc(3, 30), None, "10 slots left");
+        assert_eq!(a.free_slots(), 10);
+        assert_eq!(a.reserved_slots(), 90);
+    }
+
+    #[test]
+    fn reclaimed_region_is_returned_exactly_once() {
+        let mut a = RegionAllocator::new(64);
+        a.alloc(7, 64).unwrap();
+        assert_eq!(a.free_slots(), 0);
+        assert_eq!(a.reclaim(7).unwrap(), (0, 64));
+        assert_eq!(a.free_slots(), 64, "the full region came back");
+        let err = a.reclaim(7).unwrap_err().to_string();
+        assert!(err.contains("double reclamation"), "{err}");
+        assert_eq!(a.free_slots(), 64, "the failed second reclaim freed nothing");
+    }
+
+    #[test]
+    fn reclaiming_an_ungranted_job_is_an_error() {
+        let mut a = RegionAllocator::new(64);
+        assert!(a.reclaim(3).is_err());
+    }
+
+    #[test]
+    fn coalescing_rebuilds_large_extents() {
+        let mut a = RegionAllocator::new(90);
+        a.alloc(0, 30).unwrap();
+        a.alloc(1, 30).unwrap();
+        a.alloc(2, 30).unwrap();
+        // free the middle, then the left: left+middle coalesce
+        a.reclaim(1).unwrap();
+        a.reclaim(0).unwrap();
+        assert_eq!(a.alloc(3, 60), Some((0, 60)), "coalesced extent serves a big job");
+        // free everything: one extent spanning the pool
+        a.reclaim(2).unwrap();
+        a.reclaim(3).unwrap();
+        assert_eq!(a.alloc(4, 90), Some((0, 90)));
+    }
+
+    #[test]
+    fn grant_of_tracks_live_grants() {
+        let mut a = RegionAllocator::new(50);
+        assert_eq!(a.grant_of(1), None);
+        a.alloc(1, 20).unwrap();
+        assert_eq!(a.grant_of(1), Some((0, 20)));
+        a.reclaim(1).unwrap();
+        assert_eq!(a.grant_of(1), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "already holds a region")]
+    fn double_grant_panics() {
+        let mut a = RegionAllocator::new(50);
+        a.alloc(1, 10).unwrap();
+        a.alloc(1, 10);
+    }
+}

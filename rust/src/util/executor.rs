@@ -10,6 +10,10 @@
 //! output is bit-identical to a serial run — this is what the sweep
 //! engine's "byte-identical across `--threads 1` vs `--threads N`"
 //! guarantee rests on (DESIGN.md §10).
+//!
+//! Three consumers: the sweep engine (one task per `(cell, seed)`
+//! replica), the churn harness (one task per policy), and
+//! [`crate::coordinator::run_parallel`] (one task per experiment).
 
 use std::collections::VecDeque;
 use std::sync::Mutex;
@@ -24,6 +28,24 @@ pub fn default_threads() -> usize {
 /// Run `f` over `items` on up to `threads` workers, returning results in
 /// input order. `f` receives `(index, item)`. A panic in any worker
 /// propagates to the caller when the scope joins.
+///
+/// # Examples
+///
+/// ```
+/// use esa::util::executor::run_ordered;
+///
+/// // results land in input order, not completion order
+/// let squares = run_ordered(4, vec![1u64, 2, 3, 4, 5], |i, x| {
+///     assert_eq!(i as u64 + 1, x);
+///     x * x
+/// });
+/// assert_eq!(squares, vec![1, 4, 9, 16, 25]);
+///
+/// // thread count never changes the result
+/// let serial = run_ordered(1, (0..20u64).collect(), |_, x| x.wrapping_mul(31));
+/// let pooled = run_ordered(8, (0..20u64).collect(), |_, x| x.wrapping_mul(31));
+/// assert_eq!(serial, pooled);
+/// ```
 pub fn run_ordered<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
 where
     T: Send,

@@ -1,9 +1,40 @@
 //! Minimal hand-rolled JSON emitter (the crate is offline-first: no
 //! serde). One field per line, two-space indent, **stable field order and
 //! caller-fixed float precision** — outputs are meant to be byte-diffed
-//! (`BENCH_hotpath.json`, `SWEEP_<name>.json` and the CI golden gates),
-//! so nothing about the encoding may depend on hash order, locale, or
-//! float shortest-round-trip heuristics.
+//! (`BENCH_hotpath.json`, `SWEEP_<name>.json`, `CHURN_<name>.json` and
+//! the CI golden gates), so nothing about the encoding may depend on hash
+//! order, locale, or float shortest-round-trip heuristics.
+//!
+//! The writer is deliberately *streaming*: callers open containers, emit
+//! typed fields/items in the exact order the artifact schema documents,
+//! and close them; [`JsonWriter::finish`] asserts the nesting balanced.
+//! There is no `Value` tree to reorder behind the emitter's back — the
+//! code path *is* the schema.
+//!
+//! # Examples
+//!
+//! An array-of-objects artifact, the shape every `SWEEP_`/`CHURN_` file
+//! uses:
+//!
+//! ```
+//! use esa::util::json::JsonWriter;
+//!
+//! let mut w = JsonWriter::new();
+//! w.begin_obj(None);
+//! w.str_field("schema", "example/1");
+//! w.begin_arr(Some("cells"));
+//! for (name, util) in [("esa", 0.8125), ("atp", 0.5)] {
+//!     w.begin_obj(None);
+//!     w.str_field("policy", name);
+//!     w.f64_field("util", util, 4); // fixed precision: byte-stable
+//!     w.end_obj();
+//! }
+//! w.end_arr();
+//! w.end_obj();
+//! let text = w.finish();
+//! assert!(text.contains("\"util\": 0.8125"));
+//! assert!(text.ends_with("}\n"), "POSIX trailing newline");
+//! ```
 
 /// Streaming JSON writer. Containers are opened/closed explicitly; the
 /// writer tracks comma placement and indentation.
@@ -121,6 +152,17 @@ impl JsonWriter {
     pub fn f64_field(&mut self, key: &str, v: f64, decimals: usize) {
         self.item(Some(key));
         self.out.push_str(&format!("{v:.decimals$}"));
+    }
+
+    /// Fixed-precision float, with non-finite values (NaN from empty
+    /// means, ±inf) written as `null` — a bare `NaN`/`inf` token is not
+    /// JSON and would corrupt the byte-diffed artifacts.
+    pub fn f64_field_or_null(&mut self, key: &str, v: f64, decimals: usize) {
+        if v.is_finite() {
+            self.f64_field(key, v, decimals);
+        } else {
+            self.null_field(key);
+        }
     }
 
     pub fn null_field(&mut self, key: &str) {
