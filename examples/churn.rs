@@ -9,8 +9,9 @@
 //!
 //! Run with: `cargo run --release --example churn`
 
-use esa::config::{ChurnKnobs, PolicyKind};
+use esa::config::ChurnKnobs;
 use esa::sim::churn::{run_churn, ChurnSpec};
+use esa::switch::policy::{atp, esa, switchml};
 use esa::USEC;
 
 fn main() -> anyhow::Result<()> {
@@ -18,7 +19,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut spec = ChurnSpec::quick();
     spec.name = "example".into();
-    spec.policies = vec![PolicyKind::Esa, PolicyKind::Atp, PolicyKind::SwitchMl];
+    spec.policies = vec![esa(), atp(), switchml()];
     spec.racks = 2;
     spec.n_jobs = 10;
     spec.rate_per_sec = 8_000.0;

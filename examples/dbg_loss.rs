@@ -4,11 +4,12 @@
 //! binary); run with `cargo run --example dbg_loss`. Exits non-zero when
 //! the run truncates so scripted bisection can branch on it.
 
-use esa::config::{ExperimentConfig, PolicyKind};
+use esa::config::ExperimentConfig;
 use esa::sim::Simulation;
+use esa::switch::policy::esa;
 
 fn main() {
-    let mut cfg = ExperimentConfig::synthetic(PolicyKind::Esa, "microbench", 1, 4);
+    let mut cfg = ExperimentConfig::synthetic(esa(), "microbench", 1, 4);
     cfg.iterations = 2;
     cfg.jitter_max_ns = 20 * esa::USEC;
     cfg.seed = 42;

@@ -3,8 +3,9 @@
 //! NACK retransmissions and cached-result replies — together with the
 //! JCT cost of recovery.
 
-use esa::config::{ExperimentConfig, PolicyKind};
+use esa::config::ExperimentConfig;
 use esa::sim::Simulation;
+use esa::switch::policy::esa;
 use esa::util::stats::render_table;
 
 fn main() -> anyhow::Result<()> {
@@ -13,7 +14,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut rows = Vec::new();
     for loss in [0.0, 0.0001, 0.001, 0.01] {
-        let mut cfg = ExperimentConfig::synthetic(PolicyKind::Esa, "microbench", 2, 4);
+        let mut cfg = ExperimentConfig::synthetic(esa(), "microbench", 2, 4);
         cfg.seed = 31;
         cfg.iterations = 2;
         cfg.net.loss_prob = loss;

@@ -11,8 +11,9 @@
 //! rack runs its own pool (DESIGN.md §6). For contention under a
 //! *changing* job mix, see `examples/churn.rs`.
 
-use esa::config::{ExperimentConfig, JobSpec, PolicyKind};
+use esa::config::{ExperimentConfig, JobSpec};
 use esa::sim::Simulation;
+use esa::switch::policy::{atp, esa, hostps};
 use esa::util::stats::render_table;
 
 fn main() -> anyhow::Result<()> {
@@ -20,9 +21,9 @@ fn main() -> anyhow::Result<()> {
     println!("multi-tenant: resnet50-like + vgg16-like, 4 workers each, 1 MB INA memory\n");
 
     let mut rows = Vec::new();
-    for policy in [PolicyKind::Esa, PolicyKind::Atp, PolicyKind::HostPs] {
+    for policy in [esa(), atp(), hostps()] {
         let mut cfg = ExperimentConfig::default();
-        cfg.policy = policy;
+        cfg.policy = policy.clone();
         cfg.seed = 2022;
         cfg.iterations = 2;
         cfg.switch.memory_bytes = 1024 * 1024;

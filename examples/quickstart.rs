@@ -5,8 +5,9 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use esa::config::{ExperimentConfig, PolicyKind};
+use esa::config::ExperimentConfig;
 use esa::sim::Simulation;
+use esa::switch::policy::{atp, esa, hostps, switchml};
 use esa::util::stats::render_table;
 
 fn main() -> anyhow::Result<()> {
@@ -14,13 +15,8 @@ fn main() -> anyhow::Result<()> {
     println!("ESA quickstart: 4 jobs (2x DNN-A + 2x DNN-B), 4 workers each, 1 MB INA memory\n");
 
     let mut rows = Vec::new();
-    for policy in [
-        PolicyKind::Esa,
-        PolicyKind::Atp,
-        PolicyKind::SwitchMl,
-        PolicyKind::HostPs,
-    ] {
-        let mut cfg = ExperimentConfig::synthetic(policy, "dnn_a", 4, 4);
+    for policy in [esa(), atp(), switchml(), hostps()] {
+        let mut cfg = ExperimentConfig::synthetic(policy.clone(), "dnn_a", 4, 4);
         cfg.seed = 7;
         cfg.iterations = 2;
         cfg.switch.memory_bytes = 1024 * 1024;

@@ -12,8 +12,8 @@
 //! make artifacts && cargo run --release --example train_e2e [steps]
 //! ```
 
-use esa::config::PolicyKind;
 use esa::runtime::Engine;
+use esa::switch::policy::{esa, hostps};
 use esa::train::{Trainer, TrainerCfg};
 
 fn main() -> anyhow::Result<()> {
@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     let cfg = TrainerCfg {
         n_workers: 4,
         steps,
-        policy: PolicyKind::Esa,
+        policy: esa(),
         seed: 2022,
         crosscheck_every: 25,
         log_every: 10,
@@ -77,8 +77,8 @@ fn main() -> anyhow::Result<()> {
         t.run()?;
         Ok(t.params().to_vec())
     };
-    let esa_params = mk(PolicyKind::Esa)?;
-    let noina_params = mk(PolicyKind::HostPs)?;
+    let esa_params = mk(esa())?;
+    let noina_params = mk(hostps())?;
     let diverged = esa_params
         .iter()
         .zip(&noina_params)

@@ -5,8 +5,8 @@
 //! strengthened to exactness because integer aggregation is associative);
 //! (b) the multi-tenant testbed-style TTA proxy (ResNet50 + VGG16).
 
-use esa::config::PolicyKind;
 use esa::runtime::{ArtifactDir, Engine};
+use esa::switch::policy::{esa, hostps};
 use esa::sim::figures::{fig6b_multi_tenant, Scale};
 use esa::train::{Trainer, TrainerCfg};
 
@@ -30,8 +30,8 @@ fn fig6a() {
         let mut t = Trainer::new(&engine, cfg).expect("trainer");
         t.run().expect("training")
     };
-    let esa = run(PolicyKind::Esa);
-    let byteps = run(PolicyKind::HostPs);
+    let esa = run(esa());
+    let byteps = run(hostps());
     println!("== fig6a — single-job loss curve: ESA vs BytePS (no INA)");
     println!("| step | ESA loss | BytePS loss |");
     println!("|------|----------|-------------|");

@@ -10,10 +10,11 @@
 
 use std::time::Instant;
 
-use esa::config::{ExperimentConfig, NetworkConfig, PolicyKind};
+use esa::config::{ExperimentConfig, NetworkConfig};
 use esa::net::{Event, EventQueue, Net, Topology};
 use esa::packet::{task_hash, Packet};
 use esa::sim::Simulation;
+use esa::switch::policy::{all_ina, esa};
 use esa::switch::{JobWiring, Switch};
 use esa::util::fixed;
 use esa::util::json::JsonWriter;
@@ -27,7 +28,7 @@ struct Component {
 
 /// One end-to-end simulation measurement (seed-pinned config).
 struct EndToEnd {
-    policy: &'static str,
+    policy: String,
     model: &'static str,
     jobs: usize,
     workers: usize,
@@ -111,7 +112,7 @@ fn bench_switch_pipeline(out: &mut Vec<Component>) {
         fan_in_total: 8,
         packet_bytes: 306,
     }];
-    let mut sw = Switch::new(0, PolicyKind::Esa, 16384, wiring, Rng::new(1));
+    let mut sw = Switch::new(0, esa(), 16384, wiring, Rng::new(1));
     let mut buf = Vec::with_capacity(16);
     bench(out, "switch pipeline (ESA, 8-worker tasks)", || {
         let n = scale(2_000_000);
@@ -197,8 +198,8 @@ fn bench_end_to_end() -> Vec<EndToEnd> {
     println!();
     let tensor_bytes: u64 = if quick() { 1024 * 1024 } else { 4 * 1024 * 1024 };
     let mut rows = Vec::new();
-    for policy in PolicyKind::ALL_INA {
-        let mut cfg = ExperimentConfig::synthetic(policy, "dnn_a", 4, 8);
+    for policy in all_ina() {
+        let mut cfg = ExperimentConfig::synthetic(policy.clone(), "dnn_a", 4, 8);
         cfg.iterations = 1;
         cfg.seed = 9;
         for j in &mut cfg.jobs {
@@ -213,7 +214,7 @@ fn bench_end_to_end() -> Vec<EndToEnd> {
             m.wall_secs
         );
         rows.push(EndToEnd {
-            policy: policy.key(),
+            policy: policy.key().to_string(),
             model: "dnn_a",
             jobs: 4,
             workers: 8,
@@ -249,7 +250,7 @@ fn write_json(components: &[Component], e2e: &[EndToEnd]) -> std::io::Result<Str
     w.begin_arr(Some("end_to_end"));
     for r in e2e {
         w.begin_obj(None);
-        w.str_field("policy", r.policy);
+        w.str_field("policy", &r.policy);
         w.str_field("model", r.model);
         w.u64_field("jobs", r.jobs as u64);
         w.u64_field("workers", r.workers as u64);

@@ -15,7 +15,7 @@
 
 use std::collections::VecDeque;
 
-use crate::config::PolicyKind;
+use crate::switch::policy::{AdmissionMode, PolicyHandle};
 use crate::switch::region::{Region, RegionAllocator};
 use crate::JobId;
 
@@ -52,7 +52,7 @@ pub struct Reclamation {
 
 /// The coordinator's churn-mode admission state machine.
 pub struct AdmissionController {
-    policy: PolicyKind,
+    policy: PolicyHandle,
     /// Region size granted to each statically partitioned job (slots).
     region_slots: u32,
     alloc: RegionAllocator,
@@ -62,7 +62,7 @@ pub struct AdmissionController {
 }
 
 impl AdmissionController {
-    pub fn new(policy: PolicyKind, pool_slots: u32, region_slots: u32, n_jobs: usize) -> Self {
+    pub fn new(policy: PolicyHandle, pool_slots: u32, region_slots: u32, n_jobs: usize) -> Self {
         AdmissionController {
             policy,
             region_slots,
@@ -75,7 +75,7 @@ impl AdmissionController {
 
     /// Whether this policy carves static per-job regions.
     fn partitioned(&self) -> bool {
-        self.policy == PolicyKind::SwitchMl
+        self.policy.admission() == AdmissionMode::Partitioned
     }
 
     pub fn phase(&self, job: JobId) -> ChurnPhase {
@@ -150,17 +150,12 @@ impl AdmissionController {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::switch::policy::{atp, esa, hostps, straw_always, straw_coin, switchml};
 
     #[test]
     fn dynamic_policies_always_admit() {
-        for p in [
-            PolicyKind::Esa,
-            PolicyKind::Atp,
-            PolicyKind::StrawAlways,
-            PolicyKind::StrawCoin,
-            PolicyKind::HostPs,
-        ] {
-            let mut c = AdmissionController::new(p, 100, 40, 8);
+        for p in [esa(), atp(), straw_always(), straw_coin(), hostps()] {
+            let mut c = AdmissionController::new(p.clone(), 100, 40, 8);
             for j in 0..8 {
                 assert_eq!(c.on_arrival(j), Admission::Admit(None), "{p:?}");
             }
@@ -171,7 +166,7 @@ mod tests {
 
     #[test]
     fn partitioned_policy_queues_when_full_and_rebalances_fifo() {
-        let mut c = AdmissionController::new(PolicyKind::SwitchMl, 100, 40, 5);
+        let mut c = AdmissionController::new(switchml(), 100, 40, 5);
         assert_eq!(c.on_arrival(0), Admission::Admit(Some((0, 40))));
         assert_eq!(c.on_arrival(1), Admission::Admit(Some((40, 40))));
         assert_eq!(c.on_arrival(2), Admission::Queued, "20 slots left");
@@ -198,7 +193,7 @@ mod tests {
     fn one_completion_can_admit_multiple_waiters() {
         // one 80-slot tenant blocks two 40-slot waiters; its completion
         // admits both in one reclamation
-        let mut c = AdmissionController::new(PolicyKind::SwitchMl, 100, 80, 4);
+        let mut c = AdmissionController::new(switchml(), 100, 80, 4);
         assert!(matches!(c.on_arrival(0), Admission::Admit(Some(_))));
         c.region_slots = 40; // later jobs are smaller
         assert_eq!(c.on_arrival(1), Admission::Queued);
@@ -210,7 +205,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "holds no region")]
     fn double_completion_is_caught() {
-        let mut c = AdmissionController::new(PolicyKind::SwitchMl, 100, 40, 2);
+        let mut c = AdmissionController::new(switchml(), 100, 40, 2);
         c.on_arrival(0);
         c.on_completion(0);
         // phase debug_assert fires first in debug; the allocator's

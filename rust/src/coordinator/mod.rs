@@ -30,10 +30,10 @@ pub fn run_parallel(cfgs: Vec<ExperimentConfig>) -> Vec<Result<ExperimentMetrics
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::PolicyKind;
+    use crate::switch::policy::esa;
 
     fn tiny(seed: u64) -> ExperimentConfig {
-        let mut cfg = ExperimentConfig::synthetic(PolicyKind::Esa, "microbench", 1, 2);
+        let mut cfg = ExperimentConfig::synthetic(esa(), "microbench", 1, 2);
         cfg.iterations = 1;
         cfg.seed = seed;
         cfg.jobs[0].tensor_bytes = Some(64 * 1024);

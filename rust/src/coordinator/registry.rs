@@ -11,8 +11,9 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use crate::config::{PolicyKind, SwitchConfig};
+use crate::config::SwitchConfig;
 use crate::job::dnn::DnnProfile;
+use crate::switch::policy::{AdmissionMode, PolicyHandle};
 use crate::worker::priority::PriorityInputs;
 use crate::{JobId, SimTime};
 
@@ -42,7 +43,7 @@ pub struct JobInfo {
 
 /// The coordinator's registry.
 pub struct Registry {
-    policy: PolicyKind,
+    policy: PolicyHandle,
     pool_slots: usize,
     /// SwitchML: minimum useful region (must hold at least one window).
     min_region_slots: u32,
@@ -52,10 +53,10 @@ pub struct Registry {
 }
 
 impl Registry {
-    pub fn new(policy: PolicyKind, switch: &SwitchConfig, min_region_slots: u32) -> Registry {
+    pub fn new(policy: PolicyHandle, switch: &SwitchConfig, min_region_slots: u32) -> Registry {
         Registry {
+            pool_slots: switch.pool_slots(&policy),
             policy,
-            pool_slots: switch.pool_slots(policy),
             min_region_slots,
             jobs: BTreeMap::new(),
             next_id: 0,
@@ -79,16 +80,12 @@ impl Registry {
         }
         let id = self.next_id;
         self.next_id = self.next_id.checked_add(1).expect("job id overflow");
-        let state = match self.policy {
+        let state = match self.policy.admission() {
             // dynamic policies always admit — contention is handled on the
             // data plane itself
-            PolicyKind::Esa
-            | PolicyKind::Atp
-            | PolicyKind::StrawAlways
-            | PolicyKind::StrawCoin
-            | PolicyKind::HostPs => JobState::Running,
-            // SwitchML must carve a static region up front
-            PolicyKind::SwitchMl => {
+            AdmissionMode::Dynamic => JobState::Running,
+            // statically partitioned policies must carve a region up front
+            AdmissionMode::Partitioned => {
                 if self.slots_carved + self.min_region_slots <= self.pool_slots as u32 {
                     self.slots_carved += self.min_region_slots;
                     JobState::Running
@@ -97,7 +94,9 @@ impl Registry {
                 }
             }
         };
-        let region = if state == JobState::Running && self.policy == PolicyKind::SwitchMl {
+        let region = if state == JobState::Running
+            && self.policy.admission() == AdmissionMode::Partitioned
+        {
             Some((self.slots_carved - self.min_region_slots, self.min_region_slots))
         } else {
             None
@@ -162,10 +161,11 @@ impl Registry {
 mod tests {
     use super::*;
     use crate::job::dnn::dnn_a;
+    use crate::switch::policy::{esa, switchml};
 
     #[test]
     fn dynamic_policies_always_admit() {
-        let mut r = Registry::new(PolicyKind::Esa, &SwitchConfig::default(), 256);
+        let mut r = Registry::new(esa(), &SwitchConfig::default(), 256);
         for _ in 0..100 {
             let (_, s) = r.submit(dnn_a(), 8, 0).unwrap();
             assert_eq!(s, JobState::Running);
@@ -176,7 +176,7 @@ mod tests {
     #[test]
     fn switchml_admission_is_capacity_bounded() {
         let sw = SwitchConfig { memory_bytes: 280 * 1024, slot_meta_bytes: 24 }; // 1024 slots
-        let mut r = Registry::new(PolicyKind::SwitchMl, &sw, 256);
+        let mut r = Registry::new(switchml(), &sw, 256);
         let mut running = 0;
         let mut fallback = 0;
         for _ in 0..8 {
@@ -193,7 +193,7 @@ mod tests {
     #[test]
     fn finishing_switchml_job_frees_its_region() {
         let sw = SwitchConfig { memory_bytes: 280 * 1024, slot_meta_bytes: 24 };
-        let mut r = Registry::new(PolicyKind::SwitchMl, &sw, 512);
+        let mut r = Registry::new(switchml(), &sw, 512);
         let (a, _) = r.submit(dnn_a(), 8, 0).unwrap();
         let (_b, _) = r.submit(dnn_a(), 8, 0).unwrap();
         let (_, s3) = r.submit(dnn_a(), 8, 0).unwrap();
@@ -205,7 +205,7 @@ mod tests {
 
     #[test]
     fn iteration_reports_update_priority_inputs() {
-        let mut r = Registry::new(PolicyKind::Esa, &SwitchConfig::default(), 256);
+        let mut r = Registry::new(esa(), &SwitchConfig::default(), 256);
         let (id, _) = r.submit(dnn_a(), 8, 100).unwrap();
         r.report_iteration(id, 5_000, 1.7, Some(42));
         let j = r.get(id).unwrap();
@@ -216,7 +216,7 @@ mod tests {
 
     #[test]
     fn rejects_bad_worker_counts() {
-        let mut r = Registry::new(PolicyKind::Esa, &SwitchConfig::default(), 256);
+        let mut r = Registry::new(esa(), &SwitchConfig::default(), 256);
         assert!(r.submit(dnn_a(), 0, 0).is_err());
         assert!(r.submit(dnn_a(), 33, 0).is_err());
     }

@@ -31,7 +31,7 @@
 //! | [`config`]     | TOML-subset parser + experiment schema |
 //! | [`net`]        | discrete-event engine: links, star + two-tier topologies, loss injection |
 //! | [`packet`]     | ESA/ATP wire formats (§5.1) + the two-tier `RackPartial` |
-//! | [`switch`]     | aggregator pool + the Fig. 5 pipeline, per tier; one policy per system |
+//! | [`switch`]     | aggregator pool + the Fig. 5 pipeline, per tier; [`switch::policy`] is the behavioral `SchedulerPolicy` API + named registry every layer resolves policies through |
 //! | [`ps`]         | fallback PS: partial dictionary + reminder mechanism |
 //! | [`worker`]     | fragmentation, priority tagging (§5.4), windows, loss recovery (§5.3) |
 //! | [`job`]        | DNN A/B + testbed-profile job models, Poisson trace generation |

@@ -18,13 +18,14 @@
 
 use anyhow::{bail, Context, Result};
 
-use esa::config::{ExperimentConfig, PolicyKind};
+use esa::config::ExperimentConfig;
 use esa::job::trace::{generate, TraceConfig};
 use esa::runtime::Engine;
 use esa::sim::churn::{run_churn, ChurnSpec};
 use esa::sim::figures::{self, Scale};
 use esa::sim::sweep::{run_sweep, SweepConfig};
 use esa::sim::Simulation;
+use esa::switch::policy::PolicyRegistry;
 use esa::util::executor::default_threads;
 use esa::train::{Trainer, TrainerCfg};
 use esa::util::cli::Args;
@@ -75,7 +76,11 @@ fn print_help() {
          \x20 train    end-to-end training through the simulated data plane (needs `make artifacts`)\n\
          \x20 trace    emit a synthetic cluster job trace\n\
          \n\
-         see README.md for the full flag reference"
+         --policy accepts any registered scheduling policy: {}\n\
+         (parameterized: esa-k=<ticks> sets the preemption-age gate in ns)\n\
+         \n\
+         see README.md for the full flag reference",
+        PolicyRegistry::help_names()
     );
 }
 
@@ -83,7 +88,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let cfg = if let Some(path) = args.get("config") {
         ExperimentConfig::from_file(std::path::Path::new(path))?
     } else {
-        let policy = PolicyKind::parse(args.get_or("policy", "esa"))?;
+        let policy = PolicyRegistry::resolve(args.get_or("policy", "esa"))?;
         let model = args.get_or("model", "dnn_a").to_string();
         let n_jobs: usize = args.get_parsed_or("jobs", 4)?;
         let n_workers: usize = args.get_parsed_or("workers", 8)?;
@@ -101,7 +106,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
         cfg
     };
     let name = cfg.name.clone();
-    let policy = cfg.policy;
+    let policy = cfg.policy.clone();
     let bw = cfg.net.bandwidth_gbps;
     let mut sim = Simulation::new(cfg)?;
     let m = sim.run();
@@ -200,7 +205,7 @@ fn cmd_churn(args: &Args) -> Result<()> {
     if let Some(list) = args.get("policies") {
         spec.policies = list
             .split(',')
-            .map(|s| PolicyKind::parse(s.trim()))
+            .map(|s| PolicyRegistry::resolve(s.trim()))
             .collect::<Result<Vec<_>>>()?;
     }
     spec.n_jobs = args.get_parsed_or("jobs", spec.n_jobs)?;
@@ -284,7 +289,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = TrainerCfg {
         n_workers: args.get_parsed_or("workers", 4)?,
         steps: args.get_parsed_or("steps", 100)?,
-        policy: PolicyKind::parse(args.get_or("policy", "esa"))?,
+        policy: PolicyRegistry::resolve(args.get_or("policy", "esa"))?,
         seed: args.get_parsed_or("seed", 0)?,
         crosscheck_every: args.get_parsed_or("crosscheck-every", 10)?,
         log_every: args.get_parsed_or("log-every", 10)?,

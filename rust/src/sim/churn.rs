@@ -20,11 +20,11 @@
 //! bytes across runs, pinned by `tests/integration_churn.rs`.
 //!
 //! ```
-//! use esa::config::PolicyKind;
 //! use esa::sim::churn::{run_churn, ChurnSpec};
+//! use esa::switch::policy::esa;
 //!
 //! let mut spec = ChurnSpec::quick();
-//! spec.policies = vec![PolicyKind::Esa];
+//! spec.policies = vec![esa()];
 //! spec.n_jobs = 2;
 //! let report = run_churn(&spec).unwrap();
 //! assert_eq!(report.per_policy.len(), 1);
@@ -37,11 +37,12 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{ChurnKnobs, ExperimentConfig, PolicyKind};
+use crate::config::{ChurnKnobs, ExperimentConfig};
 use crate::coordinator::run_parallel;
 use crate::job::trace::{generate, TraceConfig, TraceEntry};
 use crate::sim::sweep::{filename_safe, ModelMix};
 use crate::sim::ExperimentMetrics;
+use crate::switch::policy::{atp, esa, switchml, PolicyHandle};
 use crate::util::json::JsonWriter;
 use crate::util::rng::Rng;
 use crate::util::stats::{render_table, Percentiles, Summary};
@@ -58,7 +59,7 @@ pub struct ChurnSpec {
     /// Artifact name: `CHURN_<name>.json`. Filename-safe.
     pub name: String,
     /// Policies to replay the identical trace under.
-    pub policies: Vec<PolicyKind>,
+    pub policies: Vec<PolicyHandle>,
     pub racks: usize,
     /// Arrivals in the trace.
     pub n_jobs: usize,
@@ -90,7 +91,7 @@ impl ChurnSpec {
         base.switch.memory_bytes = 256 * 1024;
         ChurnSpec {
             name: "quick".into(),
-            policies: vec![PolicyKind::Esa, PolicyKind::Atp, PolicyKind::SwitchMl],
+            policies: vec![esa(), atp(), switchml()],
             racks: 2,
             n_jobs: 8,
             rate_per_sec: 3000.0,
@@ -165,13 +166,13 @@ impl ChurnSpec {
 
     /// Materialize one policy's churn-mode experiment over the shared
     /// arrival trace.
-    pub fn experiment(&self, policy: PolicyKind) -> ExperimentConfig {
+    pub fn experiment(&self, policy: PolicyHandle) -> ExperimentConfig {
         self.experiment_over(policy, self.arrivals())
     }
 
     /// Same, over a trace the caller already generated — [`run_churn`]
     /// draws the trace once and replays it under every policy.
-    fn experiment_over(&self, policy: PolicyKind, arrivals: Vec<TraceEntry>) -> ExperimentConfig {
+    fn experiment_over(&self, policy: PolicyHandle, arrivals: Vec<TraceEntry>) -> ExperimentConfig {
         let mut cfg = self.base.clone();
         cfg.name = format!("churn:{}:{}", self.name, policy.key());
         cfg.policy = policy;
@@ -197,7 +198,7 @@ impl ChurnSpec {
 /// One policy's outcome over the shared trace.
 #[derive(Debug, Clone)]
 pub struct PolicyChurn {
-    pub policy: PolicyKind,
+    pub policy: PolicyHandle,
     pub metrics: ExperimentMetrics,
     /// Mean arrival→completion JCT (ms), queueing included.
     pub jct_ms_mean: f64,
@@ -217,7 +218,7 @@ pub struct PolicyChurn {
 }
 
 impl PolicyChurn {
-    fn from_metrics(policy: PolicyKind, metrics: ExperimentMetrics) -> Result<PolicyChurn> {
+    fn from_metrics(policy: PolicyHandle, metrics: ExperimentMetrics) -> Result<PolicyChurn> {
         let ch = metrics
             .churn
             .as_ref()
@@ -280,14 +281,14 @@ pub fn run_churn(spec: &ChurnSpec) -> Result<ChurnReport> {
     let cfgs: Vec<ExperimentConfig> = spec
         .policies
         .iter()
-        .map(|&p| spec.experiment_over(p, arrivals.clone()))
+        .map(|p| spec.experiment_over(p.clone(), arrivals.clone()))
         .collect();
     let results = run_parallel(cfgs);
     let mut per_policy = Vec::with_capacity(spec.policies.len());
-    for (&policy, result) in spec.policies.iter().zip(results) {
+    for (policy, result) in spec.policies.iter().zip(results) {
         let metrics =
             result.with_context(|| format!("churn replay under {}", policy.name()))?;
-        per_policy.push(PolicyChurn::from_metrics(policy, metrics)?);
+        per_policy.push(PolicyChurn::from_metrics(policy.clone(), metrics)?);
     }
     Ok(ChurnReport { spec: spec.clone(), arrivals, per_policy })
 }
@@ -295,7 +296,7 @@ pub fn run_churn(spec: &ChurnSpec) -> Result<ChurnReport> {
 impl ChurnReport {
     /// The ESA row, if the spec included it (gap baselines).
     fn esa(&self) -> Option<&PolicyChurn> {
-        self.per_policy.iter().find(|p| p.policy == PolicyKind::Esa)
+        self.per_policy.iter().find(|p| p.policy.key() == "esa")
     }
 
     /// JCT ratio of `p` over the ESA baseline (1.0 for ESA itself).
@@ -352,7 +353,7 @@ impl ChurnReport {
         };
         let mut parts = Vec::new();
         for p in &self.per_policy {
-            if p.policy == PolicyKind::Esa {
+            if p.policy.key() == "esa" {
                 continue;
             }
             match self.jct_gap_vs_esa(p) {
@@ -479,7 +480,7 @@ fn fmt_or_na(v: f64, decimals: usize) -> String {
 mod tests {
     use super::*;
 
-    fn tiny(policies: Vec<PolicyKind>) -> ChurnSpec {
+    fn tiny(policies: Vec<PolicyHandle>) -> ChurnSpec {
         let mut spec = ChurnSpec::quick();
         spec.name = "tiny".into();
         spec.policies = policies;
@@ -496,13 +497,13 @@ mod tests {
 
     #[test]
     fn arrivals_are_policy_independent_and_seed_deterministic() {
-        let spec = tiny(vec![PolicyKind::Esa]);
+        let spec = tiny(vec![esa()]);
         let a = spec.arrivals();
         let b = spec.arrivals();
         assert_eq!(a, b);
         // experiments for different policies share the identical job list
-        let esa = spec.experiment(PolicyKind::Esa);
-        let sml = spec.experiment(PolicyKind::SwitchMl);
+        let esa = spec.experiment(esa());
+        let sml = spec.experiment(switchml());
         assert_eq!(esa.jobs.len(), sml.jobs.len());
         for (x, y) in esa.jobs.iter().zip(&sml.jobs) {
             assert_eq!(x.start_ns, y.start_ns);
@@ -514,7 +515,7 @@ mod tests {
 
     #[test]
     fn tiny_churn_completes_with_timeline() {
-        let spec = tiny(vec![PolicyKind::Esa]);
+        let spec = tiny(vec![esa()]);
         let r = run_churn(&spec).unwrap();
         let p = &r.per_policy[0];
         assert_eq!(p.unfinished, 0, "all arrivals must finish");
@@ -528,7 +529,7 @@ mod tests {
 
     #[test]
     fn report_json_is_deterministic() {
-        let spec = tiny(vec![PolicyKind::Esa, PolicyKind::SwitchMl]);
+        let spec = tiny(vec![esa(), switchml()]);
         let a = run_churn(&spec).unwrap().to_json();
         let b = run_churn(&spec).unwrap().to_json();
         assert_eq!(a, b);
@@ -538,14 +539,14 @@ mod tests {
 
     #[test]
     fn bad_specs_are_pointed_errors() {
-        let mut s = tiny(vec![PolicyKind::Esa]);
+        let mut s = tiny(vec![esa()]);
         s.name = "../evil".into();
         assert!(s.validate().unwrap_err().to_string().contains("filename-safe"));
         assert!(tiny(vec![]).validate().is_err());
-        let mut s = tiny(vec![PolicyKind::Esa]);
+        let mut s = tiny(vec![esa()]);
         s.worker_choices = vec![40];
         assert!(s.validate().unwrap_err().to_string().contains("1..=32"));
-        let mut s = tiny(vec![PolicyKind::Esa]);
+        let mut s = tiny(vec![esa()]);
         s.knobs.sample_tick_ns = 0;
         assert!(s.validate().is_err());
     }

@@ -11,10 +11,11 @@
 
 use anyhow::Result;
 
-use crate::config::{ExperimentConfig, JobSpec, PolicyKind};
+use crate::config::{ExperimentConfig, JobSpec};
 use crate::coordinator::run_parallel;
 use crate::sim::sweep::{run_sweep, slug, ModelMix, SweepConfig, SweepReport};
 use crate::sim::ExperimentMetrics;
+use crate::switch::policy::{atp, esa, hostps, straw_always, straw_coin, switchml, PolicyHandle};
 use crate::util::executor::default_threads;
 use crate::util::stats::render_table;
 use crate::{MSEC, USEC};
@@ -53,7 +54,7 @@ impl Scale {
     }
 }
 
-fn base_cfg(scale: &Scale, policy: PolicyKind) -> ExperimentConfig {
+fn base_cfg(scale: &Scale, policy: PolicyHandle) -> ExperimentConfig {
     ExperimentConfig {
         policy,
         seed: scale.seed,
@@ -129,10 +130,10 @@ fn run_grid(cfgs: Vec<ExperimentConfig>) -> Result<Vec<ExperimentMetrics>> {
 /// Two jobs (ResNet50-like + VGG16-like), 4 workers each, 1 MB of INA
 /// memory (§7.1.2). TTA proxy = wall-span to finish the iteration budget.
 pub fn fig6b_multi_tenant(scale: &Scale) -> Result<Figure> {
-    let systems = [PolicyKind::Esa, PolicyKind::Atp, PolicyKind::HostPs];
+    let systems = [esa(), atp(), hostps()];
     let mut cfgs = Vec::new();
-    for &p in &systems {
-        let mut cfg = base_cfg(scale, p);
+    for p in &systems {
+        let mut cfg = base_cfg(scale, p.clone());
         cfg.switch.memory_bytes = 1024 * 1024; // testbed limit (§7.1.2)
         cfg.jobs = vec![
             job("resnet50", 4, Some(scale.scaled(24 * 1024 * 1024))),
@@ -183,15 +184,15 @@ pub fn fig6b_multi_tenant(scale: &Scale) -> Result<Figure> {
 /// swept. 4 workers per job, 1 MB INA memory, metric = aggregation
 /// throughput (parameter bytes per worker per second).
 pub fn fig7_microbench(scale: &Scale) -> Result<(Figure, Figure)> {
-    let systems = [PolicyKind::Esa, PolicyKind::Atp, PolicyKind::SwitchMl];
+    let systems = [esa(), atp(), switchml()];
     let sizes_mb = [1u64, 2, 4, 8, 16];
     let job_counts = [1usize, 2, 4, 6, 8];
 
     // (a) tensor sweep at 4 jobs
     let mut cfgs = Vec::new();
-    for &p in &systems {
+    for p in &systems {
         for &mb in &sizes_mb {
-            let mut cfg = base_cfg(scale, p);
+            let mut cfg = base_cfg(scale, p.clone());
             cfg.switch.memory_bytes = 1024 * 1024;
             cfg.jitter_max_ns = 50 * USEC; // microbench: no compute variance, NIC-level jitter only
             cfg.jobs = (0..4)
@@ -229,9 +230,9 @@ pub fn fig7_microbench(scale: &Scale) -> Result<(Figure, Figure)> {
 
     // (b) job sweep at 4 MB
     let mut cfgs = Vec::new();
-    for &p in &systems {
+    for p in &systems {
         for &n in &job_counts {
-            let mut cfg = base_cfg(scale, p);
+            let mut cfg = base_cfg(scale, p.clone());
             cfg.switch.memory_bytes = 1024 * 1024;
             cfg.jitter_max_ns = 50 * USEC;
             cfg.jobs = (0..n)
@@ -277,7 +278,7 @@ fn jct_sweep(
     xlabels: &[String],
     mixes: &[(&str, &[&str])],
 ) -> Result<Vec<(SweepReport, Figure)>> {
-    let systems = [PolicyKind::Esa, PolicyKind::Atp, PolicyKind::SwitchMl];
+    let systems = [esa(), atp(), switchml()];
     let npoints = jobs_axis.len().max(workers_axis.len());
     let mut out = Vec::new();
     for (mix_name, models) in mixes {
@@ -378,11 +379,11 @@ pub fn fig9_jct_vs_workers(scale: &Scale) -> Result<Vec<Figure>> {
 /// §7.3: 8 jobs × 8 workers; utilization = aggregation throughput over
 /// the line-rate upper bound, per DNN type.
 pub fn fig10_utilization(scale: &Scale) -> Result<Figure> {
-    let systems = [PolicyKind::Esa, PolicyKind::Atp, PolicyKind::SwitchMl];
+    let systems = [esa(), atp(), switchml()];
     let mut cfgs = Vec::new();
-    for &p in &systems {
+    for p in &systems {
         for model in ["dnn_a", "dnn_b"] {
-            let mut cfg = base_cfg(scale, p);
+            let mut cfg = base_cfg(scale, p.clone());
             let bytes = if model == "dnn_a" { 16 << 20 } else { 8 << 20 };
             cfg.jobs = (0..8).map(|_| job(model, 8, Some(scale.scaled(bytes)))).collect();
             cfgs.push(cfg);
@@ -430,16 +431,11 @@ pub fn fig10_utilization(scale: &Scale) -> Result<Figure> {
 /// §7.3: ESA vs the always-preempt / coin-flip strawmen vs ATP; 8 jobs ×
 /// 8 workers; all-A and 4A+4B mixes.
 pub fn fig11_priority_ablation(scale: &Scale) -> Result<Figure> {
-    let systems = [
-        PolicyKind::Atp,
-        PolicyKind::StrawAlways,
-        PolicyKind::StrawCoin,
-        PolicyKind::Esa,
-    ];
+    let systems = [atp(), straw_always(), straw_coin(), esa()];
     let mut cfgs = Vec::new();
-    for &p in &systems {
+    for p in &systems {
         for mix in [&["dnn_a"][..], &["dnn_a", "dnn_b"][..]] {
-            let mut cfg = base_cfg(scale, p);
+            let mut cfg = base_cfg(scale, p.clone());
             cfg.jobs = (0..8)
                 .map(|k| {
                     let model = mix[k % mix.len()];
@@ -493,7 +489,7 @@ pub fn fig11_priority_ablation(scale: &Scale) -> Result<Figure> {
 /// aggregation buys. `racks = 1` is the paper's single-switch star; the
 /// paper's per-switch ESA primitives compose across tiers unchanged.
 pub fn fig12_hierarchical_report(scale: &Scale) -> Result<(SweepReport, Figure)> {
-    let systems = [PolicyKind::Esa, PolicyKind::Atp, PolicyKind::SwitchMl];
+    let systems = [esa(), atp(), switchml()];
     let rack_counts = [1usize, 2, 4, 8];
     let sweep = SweepConfig {
         name: "fig12_hierarchical".into(),
@@ -526,7 +522,7 @@ pub fn fig12_hierarchical_report(scale: &Scale) -> Result<(SweepReport, Figure)>
     // gradient volume the workers pushed into the racks
     let esa_idx = systems
         .iter()
-        .position(|&p| p == PolicyKind::Esa)
+        .position(|p| p.key() == "esa")
         .expect("ESA is in the sweep");
     let esa_big = &report.cells[esa_idx * rack_counts.len() + rack_counts.len() - 1];
     let rack_grads = esa_big.rack_grad_pkts;

@@ -33,12 +33,13 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::config::{ExperimentConfig, PolicyKind};
+use crate::config::ExperimentConfig;
 use crate::coordinator::admission::{Admission, AdmissionController};
 use crate::job::{dnn::profile_by_name, JobModel};
 use crate::net::{Event, Net, Topology, SWITCH_NODE};
 use crate::packet::{Packet, PacketKind};
 use crate::ps::{Ps, SCAN_INTERVAL_NS, TIMER_SCAN};
+use crate::switch::policy::AdmissionMode;
 use crate::switch::region::Region;
 use crate::switch::{JobWiring, Switch, SwitchTier};
 use crate::util::rng::Rng;
@@ -185,7 +186,7 @@ impl Simulation {
         // node assignment
         let mut node_actor = vec![ActorRef::Switch; n_nodes];
         let mut next_node: NodeId = racks as NodeId;
-        let pool_slots = cfg.switch.pool_slots(cfg.policy);
+        let pool_slots = cfg.switch.pool_slots(&cfg.policy);
 
         // Churn mode: resolve the static-partition region size up front
         // (0 = auto, a quarter of the pool) so worker windows and the
@@ -294,8 +295,10 @@ impl Simulation {
         for (r, wiring) in rack_wirings.iter_mut().enumerate() {
             let rng = root.split(rng_stream::rack(r));
             let wiring = if churn_mode { placeholders() } else { std::mem::take(wiring) };
-            let mut sw = Switch::new(r as NodeId, cfg.policy, pool_slots, wiring, rng);
-            sw.set_age_gate(cfg.net.base_rtt_ns);
+            let mut sw = Switch::new(r as NodeId, cfg.policy.clone(), pool_slots, wiring, rng);
+            // the policy owns its downgrade age gate (base RTT unless it
+            // overrides — `esa-k`'s knob flows in right here)
+            sw.set_age_gate(cfg.policy.age_gate_ns(cfg.net.base_rtt_ns));
             if churn_mode {
                 sw.enable_churn(n_jobs);
             }
@@ -312,12 +315,12 @@ impl Simulation {
             };
             let mut sw = Switch::new(
                 SWITCH_NODE,
-                cfg.policy,
+                cfg.policy.clone(),
                 pool_slots,
                 wiring,
                 root.split(rng_stream::EDGE),
             );
-            sw.set_age_gate(cfg.net.base_rtt_ns);
+            sw.set_age_gate(cfg.policy.age_gate_ns(cfg.net.base_rtt_ns));
             if churn_mode {
                 sw.enable_churn(n_jobs);
             }
@@ -338,23 +341,19 @@ impl Simulation {
                 // switch has none yet; the fixed churn region size caps
                 // the window instead.
                 let region_cap = match churn_region_slots {
-                    Some(rs) if cfg.policy == PolicyKind::SwitchMl => Some(rs),
+                    Some(rs) if cfg.policy.admission() == AdmissionMode::Partitioned => Some(rs),
                     Some(_) => None,
                     None => switches[rack as usize].policy().region_len(j as JobId),
                 };
                 node_actor[node as usize] = ActorRef::Worker(workers.len() as u32);
-                let ps = if cfg.policy == PolicyKind::SwitchMl {
-                    None
-                } else {
-                    Some(ps_nodes[j])
-                };
+                let ps = if cfg.policy.uses_ps() { Some(ps_nodes[j]) } else { None };
                 workers.push(Worker::new(
                     WorkerCfg {
                         node,
                         switch: rack,
                         ps,
                         widx: w as u8,
-                        policy: cfg.policy,
+                        policy: cfg.policy.clone(),
                         window_bytes: cfg.window_bytes,
                         max_window_bytes: cfg.max_window_bytes,
                         jitter_max_ns: cfg.jitter_max_ns,
@@ -414,13 +413,17 @@ impl Simulation {
             }
             ChurnRuntime {
                 ctl: AdmissionController::new(
-                    cfg.policy,
+                    cfg.policy.clone(),
                     pool_slots as u32,
                     region_slots,
                     n_jobs,
                 ),
                 tick_ns: knobs.sample_tick_ns,
-                region_slots: if cfg.policy == PolicyKind::SwitchMl { region_slots } else { 0 },
+                region_slots: if cfg.policy.admission() == AdmissionMode::Partitioned {
+                    region_slots
+                } else {
+                    0
+                },
                 wirings: (0..n_jobs)
                     .map(|j| {
                         let per_rack: Vec<JobWiring> =
@@ -766,10 +769,11 @@ impl Simulation {
     /// # Examples
     ///
     /// ```
-    /// use esa::config::{ExperimentConfig, PolicyKind};
+    /// use esa::config::ExperimentConfig;
     /// use esa::sim::Simulation;
+    /// use esa::switch::policy::esa;
     ///
-    /// let mut cfg = ExperimentConfig::synthetic(PolicyKind::Esa, "microbench", 1, 2);
+    /// let mut cfg = ExperimentConfig::synthetic(esa(), "microbench", 1, 2);
     /// cfg.iterations = 1;
     /// for j in &mut cfg.jobs {
     ///     j.tensor_bytes = Some(64 * 1024);
@@ -871,9 +875,10 @@ impl Simulation {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ExperimentConfig, JobSpec, PolicyKind};
+    use crate::config::{ExperimentConfig, JobSpec};
+    use crate::switch::policy::{all_ina, atp, esa, PolicyHandle};
 
-    fn quick_cfg(policy: PolicyKind, model: &str, n_jobs: usize, n_workers: usize) -> ExperimentConfig {
+    fn quick_cfg(policy: PolicyHandle, model: &str, n_jobs: usize, n_workers: usize) -> ExperimentConfig {
         let mut cfg = ExperimentConfig::synthetic(policy, model, n_jobs, n_workers);
         cfg.iterations = 2;
         cfg.jitter_max_ns = 20 * crate::USEC;
@@ -887,7 +892,7 @@ mod tests {
 
     #[test]
     fn single_esa_job_completes() {
-        let m = Simulation::run_experiment(quick_cfg(PolicyKind::Esa, "microbench", 1, 4)).unwrap();
+        let m = Simulation::run_experiment(quick_cfg(esa(), "microbench", 1, 4)).unwrap();
         assert!(!m.truncated, "simulation must finish cleanly");
         assert_eq!(m.jobs.len(), 1);
         assert_eq!(m.jobs[0].iterations, 2);
@@ -896,14 +901,8 @@ mod tests {
 
     #[test]
     fn all_policies_complete_a_small_mix() {
-        for policy in [
-            PolicyKind::Esa,
-            PolicyKind::Atp,
-            PolicyKind::SwitchMl,
-            PolicyKind::StrawAlways,
-            PolicyKind::StrawCoin,
-        ] {
-            let m = Simulation::run_experiment(quick_cfg(policy, "microbench", 2, 2))
+        for policy in all_ina() {
+            let m = Simulation::run_experiment(quick_cfg(policy.clone(), "microbench", 2, 2))
                 .unwrap_or_else(|e| panic!("{policy:?}: {e}"));
             assert!(!m.truncated, "{policy:?} stalled");
             assert_eq!(m.jobs.len(), 2, "{policy:?}");
@@ -915,7 +914,7 @@ mod tests {
         // one job, no contention: JCT ≈ comm(16 MB at 100 Gbps, window
         // limited) + FP chain (2 × 0.32 ms). Sanity bound: above the
         // physical floor and within 3× of floor + compute.
-        let mut cfg = ExperimentConfig::synthetic(PolicyKind::Esa, "dnn_a", 1, 4);
+        let mut cfg = ExperimentConfig::synthetic(esa(), "dnn_a", 1, 4);
         cfg.iterations = 2;
         cfg.seed = 7;
         cfg.jitter_max_ns = 0;
@@ -929,8 +928,8 @@ mod tests {
 
     #[test]
     fn deterministic_across_runs() {
-        let a = Simulation::run_experiment(quick_cfg(PolicyKind::Esa, "dnn_a", 2, 4)).unwrap();
-        let b = Simulation::run_experiment(quick_cfg(PolicyKind::Esa, "dnn_a", 2, 4)).unwrap();
+        let a = Simulation::run_experiment(quick_cfg(esa(), "dnn_a", 2, 4)).unwrap();
+        let b = Simulation::run_experiment(quick_cfg(esa(), "dnn_a", 2, 4)).unwrap();
         assert_eq!(a.sim_ns, b.sim_ns);
         assert_eq!(a.events, b.events);
         assert_eq!(a.avg_jct_ms(), b.avg_jct_ms());
@@ -938,7 +937,7 @@ mod tests {
 
     #[test]
     fn loss_recovery_still_completes() {
-        let mut cfg = quick_cfg(PolicyKind::Esa, "microbench", 1, 4);
+        let mut cfg = quick_cfg(esa(), "microbench", 1, 4);
         cfg.net.loss_prob = 0.01;
         let m = Simulation::run_experiment(cfg).unwrap();
         assert!(!m.truncated, "loss must be recovered by the reminder machinery");
@@ -947,7 +946,7 @@ mod tests {
 
     #[test]
     fn atp_loss_recovery_completes() {
-        let mut cfg = quick_cfg(PolicyKind::Atp, "microbench", 1, 4);
+        let mut cfg = quick_cfg(atp(), "microbench", 1, 4);
         cfg.net.loss_prob = 0.01;
         let m = Simulation::run_experiment(cfg).unwrap();
         assert!(!m.truncated);
@@ -960,7 +959,7 @@ mod tests {
         // equal-priority microbenches preemption has nothing to exploit
         // and only adds partial-flush traffic — the paper's gains come
         // from the §5.4 priority structure, which dnn_a has.)
-        let mk = |p: PolicyKind| {
+        let mk = |p: PolicyHandle| {
             let mut cfg = ExperimentConfig::synthetic(p, "dnn_a", 4, 4);
             cfg.iterations = 2;
             cfg.seed = 11;
@@ -970,8 +969,8 @@ mod tests {
             }
             Simulation::run_experiment(cfg).unwrap()
         };
-        let esa = mk(PolicyKind::Esa);
-        let atp = mk(PolicyKind::Atp);
+        let esa = mk(esa());
+        let atp = mk(atp());
         assert!(!esa.truncated && !atp.truncated);
         assert!(
             esa.avg_jct_ms() <= atp.avg_jct_ms() * 1.10,
@@ -983,7 +982,7 @@ mod tests {
 
     #[test]
     fn job_spec_start_offsets_respected() {
-        let mut cfg = quick_cfg(PolicyKind::Esa, "microbench", 2, 2);
+        let mut cfg = quick_cfg(esa(), "microbench", 2, 2);
         cfg.start_spread_ns = 0;
         cfg.jobs[1].start_ns = 5 * crate::MSEC;
         let mut sim = Simulation::new(cfg).unwrap();

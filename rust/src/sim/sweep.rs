@@ -27,11 +27,11 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::config::{
-    parse_toml, ChurnKnobs, ExperimentConfig, JobSpec, NetworkConfig, PolicyKind, SwitchConfig,
-    TomlTable,
+    parse_toml, ChurnKnobs, ExperimentConfig, JobSpec, NetworkConfig, SwitchConfig, TomlTable,
 };
 use crate::job::trace::{generate, TraceConfig};
 use crate::sim::{ExperimentMetrics, Simulation};
+use crate::switch::policy::{all_ina, PolicyHandle, PolicyRegistry};
 use crate::util::executor::run_ordered;
 use crate::util::json::JsonWriter;
 use crate::util::rng::Rng;
@@ -79,7 +79,7 @@ pub struct TraceSpec {
 pub struct SweepConfig {
     /// Artifact name: `SWEEP_<name>.json` / `.csv`. Filename-safe.
     pub name: String,
-    pub policies: Vec<PolicyKind>,
+    pub policies: Vec<PolicyHandle>,
     pub racks: Vec<usize>,
     /// Workers per job (ignored in trace mode).
     pub workers: Vec<usize>,
@@ -101,9 +101,9 @@ pub struct SweepConfig {
 }
 
 /// The coordinates of one grid cell.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CellSpec {
-    pub policy: PolicyKind,
+    pub policy: PolicyHandle,
     pub racks: usize,
     /// 0 in trace mode (worker counts vary per job).
     pub workers: usize,
@@ -190,7 +190,7 @@ impl SweepConfig {
         let base = ExperimentConfig { jitter_max_ns: 20 * USEC, ..ExperimentConfig::default() };
         SweepConfig {
             name: "quick".into(),
-            policies: PolicyKind::ALL_INA.to_vec(),
+            policies: all_ina(),
             racks: vec![1, 4],
             workers: vec![4],
             jobs: vec![2],
@@ -227,10 +227,10 @@ impl SweepConfig {
         cfg.iterations = u32_key(t, "iterations", 3)?;
 
         cfg.policies = match t.str_list("axes.policies")? {
-            None => vec![PolicyKind::Esa],
+            None => vec![crate::switch::policy::esa()],
             Some(names) => names
                 .iter()
-                .map(|s| PolicyKind::parse(s).context("axes.policies"))
+                .map(|s| PolicyRegistry::resolve(s).context("axes.policies"))
                 .collect::<Result<Vec<_>>>()?,
         };
         fn usize_axis(t: &TomlTable, key: &str) -> Result<Option<Vec<usize>>> {
@@ -478,14 +478,14 @@ impl SweepConfig {
             None => (&self.workers, &self.jobs),
         };
         let mut cells = Vec::new();
-        for &policy in &self.policies {
+        for policy in &self.policies {
             for &racks in &self.racks {
                 for &w in workers {
                     for &j in jobs {
                         for &loss in &self.loss_probs {
                             for &tensor in &self.tensor_bytes {
                                 cells.push(CellSpec {
-                                    policy,
+                                    policy: policy.clone(),
                                     racks,
                                     workers: w,
                                     jobs: j,
@@ -505,7 +505,7 @@ impl SweepConfig {
     pub fn cell_experiment(&self, spec: &CellSpec, seed: u64) -> ExperimentConfig {
         let mut cfg = self.base.clone();
         cfg.name = format!("{}:{}:r{}:s{}", self.name, spec.policy.key(), spec.racks, seed);
-        cfg.policy = spec.policy;
+        cfg.policy = spec.policy.clone();
         cfg.racks = spec.racks;
         cfg.seed = seed;
         cfg.iterations = self.iterations;
@@ -651,7 +651,7 @@ pub fn run_sweep(cfg: &SweepConfig, threads: usize) -> Result<SweepReport> {
     let n_seeds = cfg.seeds.len();
     let mut results = Vec::with_capacity(cells.len());
     for (ci, chunk) in metrics.chunks(n_seeds).enumerate() {
-        let spec = cells[ci];
+        let spec = cells[ci].clone();
         let mut replicas = Vec::with_capacity(n_seeds);
         for (tci, seed, m) in chunk {
             debug_assert_eq!(*tci, ci);
@@ -889,11 +889,12 @@ impl SweepReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::switch::policy::{atp, esa};
 
     fn tiny() -> SweepConfig {
         let mut cfg = SweepConfig::quick();
         cfg.name = "tiny".into();
-        cfg.policies = vec![PolicyKind::Esa, PolicyKind::Atp];
+        cfg.policies = vec![esa(), atp()];
         cfg.racks = vec![1];
         cfg.workers = vec![2];
         cfg.jobs = vec![1];
@@ -908,11 +909,11 @@ mod tests {
         cfg.racks = vec![1, 4];
         let cells = cfg.expand();
         assert_eq!(cells.len(), 4);
-        assert_eq!(cells[0].policy, PolicyKind::Esa);
+        assert_eq!(cells[0].policy.key(), "esa");
         assert_eq!(cells[0].racks, 1);
-        assert_eq!(cells[1].policy, PolicyKind::Esa);
+        assert_eq!(cells[1].policy.key(), "esa");
         assert_eq!(cells[1].racks, 4);
-        assert_eq!(cells[2].policy, PolicyKind::Atp);
+        assert_eq!(cells[2].policy.key(), "atp");
         assert_eq!(cells[2].racks, 1);
     }
 
@@ -941,7 +942,7 @@ mod tests {
     #[test]
     fn multi_seed_aggregation_pools_jobs() {
         let mut cfg = tiny();
-        cfg.policies = vec![PolicyKind::Esa];
+        cfg.policies = vec![esa()];
         cfg.seeds = vec![1, 2, 3];
         let r = run_sweep(&cfg, 2).unwrap();
         assert_eq!(r.cells[0].replicas, 3);
@@ -953,7 +954,7 @@ mod tests {
     #[test]
     fn trace_mode_builds_poisson_jobs() {
         let mut cfg = tiny();
-        cfg.policies = vec![PolicyKind::Esa];
+        cfg.policies = vec![esa()];
         cfg.trace = Some(TraceSpec {
             n: 3,
             rate_per_sec: 500.0,
@@ -1037,7 +1038,7 @@ mod tests {
     #[test]
     fn churn_sweep_runs_end_to_end() {
         let mut cfg = tiny();
-        cfg.policies = vec![PolicyKind::Esa];
+        cfg.policies = vec![esa()];
         cfg.base.churn = Some(ChurnKnobs { sample_tick_ns: 50 * crate::USEC, region_slots: 0 });
         let r = run_sweep(&cfg, 2).unwrap();
         assert_eq!(r.cells[0].truncated, 0, "churn cell must complete");

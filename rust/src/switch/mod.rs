@@ -30,13 +30,12 @@ pub mod aggregator;
 pub mod policy;
 pub mod region;
 
-use crate::config::PolicyKind;
 use crate::packet::{Packet, PacketKind, UNSTAMPED};
 use crate::util::rng::Rng;
 use crate::{JobId, NodeId, SimTime};
 
 pub use aggregator::Aggregator;
-pub use policy::{CollisionOutcome, Policy};
+pub use policy::{CollisionOutcome, Policy, PolicyHandle, SchedulerPolicy};
 pub use region::RegionAllocator;
 
 /// Which level of the aggregation tree a switch sits at.
@@ -130,9 +129,9 @@ pub struct Switch {
 }
 
 impl Switch {
-    pub fn new(node: NodeId, kind: PolicyKind, pool_slots: usize, wiring: Vec<JobWiring>, rng: Rng) -> Switch {
-        let mut policy = Policy::new(kind);
-        if kind == PolicyKind::SwitchMl {
+    pub fn new(node: NodeId, policy: PolicyHandle, pool_slots: usize, wiring: Vec<JobWiring>, rng: Rng) -> Switch {
+        let mut policy = Policy::new(policy);
+        if policy.partitioned() {
             policy.set_static_partitions(wiring.len().max(1), pool_slots);
         }
         Switch {
@@ -262,8 +261,7 @@ impl Switch {
             pkt.kind,
             PacketKind::Gradient | PacketKind::RackPartial | PacketKind::ReminderToSwitch
         ) && (self.retired.get(pkt.job as usize).copied().unwrap_or(false)
-            || (self.policy.kind == PolicyKind::SwitchMl
-                && self.policy.region_len(pkt.job).is_none()))
+            || (self.policy.partitioned() && self.policy.region_len(pkt.job).is_none()))
         {
             self.stats.stale_drops += 1;
             return;
@@ -319,7 +317,7 @@ impl Switch {
         if matches!(self.tier, SwitchTier::Rack { .. }) {
             self.stats.rack_downlinks += 1;
         }
-        if self.policy.kind == PolicyKind::Atp {
+        if self.policy.holds_until_param() {
             let idx = self.slot_index(pkt.job, pkt.seq) as usize;
             let slot = &mut self.pool[idx];
             if slot.occupied && slot.job == pkt.job && slot.seq == pkt.seq {
@@ -333,7 +331,7 @@ impl Switch {
     /// deallocates the aggregator when the PS's parameter packet passes
     /// back through (§2.2 — the occupation covers the switch↔PS RTT).
     pub fn on_transit(&mut self, now: SimTime, pkt: &Packet) {
-        if self.policy.kind == PolicyKind::Atp && pkt.kind == PacketKind::Param {
+        if self.policy.holds_until_param() && pkt.kind == PacketKind::Param {
             let idx = self.slot_index(pkt.job, pkt.seq) as usize;
             let slot = &mut self.pool[idx];
             if slot.occupied && slot.job == pkt.job && slot.seq == pkt.seq {
@@ -389,7 +387,7 @@ impl Switch {
                 // retransmission hitting a held-complete slot means the
                 // result toward the PS may have been lost: re-emit it.
                 self.stats.duplicates += 1;
-                if self.policy.kind == PolicyKind::Atp {
+                if self.policy.result_via_ps() {
                     let (job, seq, bitmap, fan_in) = (slot.job, slot.seq, slot.bitmap, slot.fan_in);
                     let values = slot.value.clone();
                     let wiring = &self.wiring[job as usize];
@@ -429,7 +427,7 @@ impl Switch {
         match self.policy.on_collision(pkt.priority, slot.priority, &mut self.rng) {
             CollisionOutcome::PassThrough => {
                 self.stats.passthroughs += 1;
-                if self.policy.kind == PolicyKind::Esa && pkt.priority <= slot.priority {
+                if self.policy.downgrades() && pkt.priority <= slot.priority {
                     // an actual failed preemption attempt ages the occupant
                     self.stats.failed_preemptions += 1;
                 }
@@ -630,7 +628,7 @@ impl Switch {
             // packet comes back down; everyone else deallocates on the
             // spot — that early release is ESA's memory-efficiency win,
             // applied per tier.
-            let values = if self.policy.kind == PolicyKind::Atp {
+            let values = if self.policy.holds_until_param() {
                 self.pool[idx].value.clone()
             } else {
                 self.pool[idx].value.take()
@@ -652,14 +650,18 @@ impl Switch {
                 values,
                 sent_at: UNSTAMPED,
             });
-            if self.policy.kind != PolicyKind::Atp {
+            if !self.policy.holds_until_param() {
                 self.stats.busy_ns += self.pool[idx].deallocate(now);
             }
             return;
         }
-        if self.policy.kind == PolicyKind::Atp {
+        if self.policy.result_via_ps() {
             // result streams to the PS; slot held until param transit
-            let values = self.pool[idx].value.clone();
+            let values = if self.policy.holds_until_param() {
+                self.pool[idx].value.clone()
+            } else {
+                self.pool[idx].value.take()
+            };
             out.push(Packet {
                 kind: PacketKind::PartialToPs,
                 job,
@@ -677,6 +679,9 @@ impl Switch {
                 values,
                 sent_at: UNSTAMPED,
             });
+            if !self.policy.holds_until_param() {
+                self.stats.busy_ns += self.pool[idx].deallocate(now);
+            }
             return;
         }
         // ESA/SwitchML/strawmen: sub-RTT multicast straight to workers
@@ -707,6 +712,7 @@ impl Switch {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::switch::policy::{atp, esa, straw_always, switchml};
 
     fn wiring2() -> Vec<JobWiring> {
         vec![
@@ -721,13 +727,13 @@ mod tests {
         p
     }
 
-    fn mkswitch(kind: PolicyKind) -> Switch {
-        Switch::new(0, kind, 64, wiring2(), Rng::new(1))
+    fn mkswitch(policy: PolicyHandle) -> Switch {
+        Switch::new(0, policy, 64, wiring2(), Rng::new(1))
     }
 
     #[test]
     fn clean_aggregation_multicasts_result() {
-        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut sw = mkswitch(esa());
         let mut out = Vec::new();
         sw.handle(10, grad(0, 5, 0, 9, &sw), &mut out);
         assert!(out.is_empty());
@@ -743,7 +749,7 @@ mod tests {
 
     #[test]
     fn atp_result_goes_to_ps_and_slot_held_until_param_transit() {
-        let mut sw = mkswitch(PolicyKind::Atp);
+        let mut sw = mkswitch(atp());
         let mut out = Vec::new();
         sw.handle(10, grad(0, 5, 0, 0, &sw), &mut out);
         sw.handle(20, grad(0, 5, 1, 0, &sw), &mut out);
@@ -764,7 +770,7 @@ mod tests {
 
     #[test]
     fn esa_preemption_swaps_partial_out() {
-        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut sw = mkswitch(esa());
         let mut out = Vec::new();
         // job 0 low priority occupies
         sw.handle(10, grad(0, 5, 0, 3, &sw), &mut out);
@@ -801,7 +807,7 @@ mod tests {
 
     #[test]
     fn esa_failed_preemption_passes_through_and_downgrades() {
-        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut sw = mkswitch(esa());
         let mut out = Vec::new();
         sw.handle(10, grad(0, 5, 0, 100, &sw), &mut out);
         let idx = sw.slot_index(0, 5);
@@ -829,7 +835,7 @@ mod tests {
 
     #[test]
     fn equal_priority_does_not_preempt() {
-        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut sw = mkswitch(esa());
         let mut out = Vec::new();
         sw.handle(10, grad(0, 5, 0, 70, &sw), &mut out);
         let idx = sw.slot_index(0, 5);
@@ -846,7 +852,7 @@ mod tests {
 
     #[test]
     fn duplicate_gradient_filtered() {
-        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut sw = mkswitch(esa());
         let mut out = Vec::new();
         sw.handle(10, grad(0, 5, 0, 9, &sw), &mut out);
         sw.handle(20, grad(0, 5, 0, 9, &sw), &mut out);
@@ -857,7 +863,7 @@ mod tests {
 
     #[test]
     fn reminder_evicts_partial_via_swap() {
-        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut sw = mkswitch(esa());
         let mut out = Vec::new();
         sw.handle(10, grad(0, 5, 0, 9, &sw), &mut out);
         let rem = Packet::reminder(0, 5, 10, 0, true, 306);
@@ -872,7 +878,7 @@ mod tests {
 
     #[test]
     fn reminder_for_absent_task_is_noop() {
-        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut sw = mkswitch(esa());
         let mut out = Vec::new();
         sw.handle(50, Packet::reminder(0, 99, 10, 0, true, 306), &mut out);
         assert!(out.is_empty());
@@ -881,7 +887,7 @@ mod tests {
 
     #[test]
     fn values_flow_through_aggregation() {
-        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut sw = mkswitch(esa());
         let mut out = Vec::new();
         let mut p1 = grad(0, 5, 0, 9, &sw);
         p1.values = Some(vec![1, 2, 3].into_boxed_slice());
@@ -896,7 +902,7 @@ mod tests {
 
     #[test]
     fn straw_always_preempts_regardless_of_priority() {
-        let mut sw = mkswitch(PolicyKind::StrawAlways);
+        let mut sw = mkswitch(straw_always());
         let mut out = Vec::new();
         sw.handle(10, grad(0, 5, 0, 255, &sw), &mut out);
         let idx = sw.slot_index(0, 5);
@@ -912,7 +918,7 @@ mod tests {
 
     /// A rack switch serving workers 1,2 of job 0 (global fan-in 4) under
     /// edge node 9.
-    fn mkrack(kind: PolicyKind) -> Switch {
+    fn mkrack(policy: PolicyHandle) -> Switch {
         let wiring = vec![JobWiring {
             ps: 10,
             workers: vec![1, 2],
@@ -920,13 +926,13 @@ mod tests {
             fan_in_total: 4,
             packet_bytes: 306,
         }];
-        let mut sw = Switch::new(5, kind, 64, wiring, Rng::new(1));
+        let mut sw = Switch::new(5, policy, 64, wiring, Rng::new(1));
         sw.set_tier(SwitchTier::Rack { edge: 9 });
         sw
     }
 
     /// An edge switch folding racks 5 and 6 for job 0 (global fan-in 4).
-    fn mkedge(kind: PolicyKind) -> Switch {
+    fn mkedge(policy: PolicyHandle) -> Switch {
         let wiring = vec![JobWiring {
             ps: 10,
             workers: vec![5, 6],
@@ -934,14 +940,14 @@ mod tests {
             fan_in_total: 4,
             packet_bytes: 306,
         }];
-        let mut sw = Switch::new(0, kind, 64, wiring, Rng::new(1));
+        let mut sw = Switch::new(0, policy, 64, wiring, Rng::new(1));
         sw.set_tier(SwitchTier::Edge);
         sw
     }
 
     #[test]
     fn rack_completion_folds_upward_as_rack_partial() {
-        let mut sw = mkrack(PolicyKind::Esa);
+        let mut sw = mkrack(esa());
         let mut out = Vec::new();
         // headers stamp the GLOBAL fan-in (4); the rack completes on its
         // local fan-in of 2
@@ -965,7 +971,7 @@ mod tests {
 
     #[test]
     fn atp_rack_holds_slot_until_param_comes_down() {
-        let mut sw = mkrack(PolicyKind::Atp);
+        let mut sw = mkrack(atp());
         let mut out = Vec::new();
         let mut p0 = Packet::gradient(0, 3, 0, 1 << 0, 4, 0, 1, 5, 306);
         p0.agg_index = sw.slot_index(0, 3);
@@ -990,7 +996,7 @@ mod tests {
 
     #[test]
     fn edge_folds_rack_partials_on_global_fan_in() {
-        let mut sw = mkedge(PolicyKind::Esa);
+        let mut sw = mkedge(esa());
         let mut out = Vec::new();
         let mut a = Packet::gradient(0, 3, 0, 0b0011, 4, 9, 5, 0, 306);
         a.kind = PacketKind::RackPartial;
@@ -1011,7 +1017,7 @@ mod tests {
 
     #[test]
     fn rack_replicates_edge_result_to_local_workers() {
-        let mut sw = mkrack(PolicyKind::Esa);
+        let mut sw = mkrack(esa());
         let mut out = Vec::new();
         let mut res = Packet::gradient(0, 3, 0, 0b1111, 4, 0, 9, 5, 306);
         res.kind = PacketKind::Result;
@@ -1024,7 +1030,7 @@ mod tests {
 
     #[test]
     fn edge_reminder_fans_down_to_racks_and_flushes_local() {
-        let mut sw = mkedge(PolicyKind::Esa);
+        let mut sw = mkedge(esa());
         let mut out = Vec::new();
         let mut a = Packet::gradient(0, 3, 0, 0b0011, 4, 9, 5, 0, 306);
         a.kind = PacketKind::RackPartial;
@@ -1047,7 +1053,7 @@ mod tests {
             JobWiring { ps: 10, workers: vec![5, 6], fan_in: 4, fan_in_total: 4, packet_bytes: 306 },
             JobWiring { ps: 11, workers: vec![5, 6], fan_in: 4, fan_in_total: 4, packet_bytes: 306 },
         ];
-        let mut sw = Switch::new(0, PolicyKind::Esa, 64, wiring, Rng::new(1));
+        let mut sw = Switch::new(0, esa(), 64, wiring, Rng::new(1));
         sw.set_tier(SwitchTier::Edge);
         let mut out = Vec::new();
         let mut low = Packet::gradient(0, 5, 0, 0b0011, 4, 3, 5, 0, 306);
@@ -1072,7 +1078,7 @@ mod tests {
 
     #[test]
     fn end_of_job_flush_clears_only_that_jobs_slots() {
-        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut sw = mkswitch(esa());
         let mut out = Vec::new();
         sw.handle(10, grad(0, 5, 0, 9, &sw), &mut out);
         sw.handle(10, grad(0, 6, 0, 9, &sw), &mut out);
@@ -1086,7 +1092,7 @@ mod tests {
 
     #[test]
     fn switchml_straggler_of_revoked_region_is_dropped() {
-        let mut sw = Switch::new(0, PolicyKind::SwitchMl, 64, wiring2(), Rng::new(1));
+        let mut sw = Switch::new(0, switchml(), 64, wiring2(), Rng::new(1));
         sw.enable_churn(2);
         sw.grant_region(0, 0, 32);
         let mut out = Vec::new();
@@ -1108,7 +1114,7 @@ mod tests {
         // Dynamic policies keep their hash mapping after completion, so a
         // straggler would happily re-allocate — the retirement gate is
         // what keeps the one-shot end-of-job flush final.
-        let mut sw = mkswitch(PolicyKind::Esa);
+        let mut sw = mkswitch(esa());
         sw.enable_churn(2);
         let mut out = Vec::new();
         sw.handle(10, grad(0, 5, 0, 9, &sw), &mut out);
@@ -1129,7 +1135,7 @@ mod tests {
         let placeholder = vec![
             JobWiring { ps: 10, workers: vec![], fan_in: 0, fan_in_total: 0, packet_bytes: 306 },
         ];
-        let mut sw = Switch::new(0, PolicyKind::Esa, 16, placeholder, Rng::new(1));
+        let mut sw = Switch::new(0, esa(), 16, placeholder, Rng::new(1));
         sw.install_wiring(
             0,
             JobWiring { ps: 10, workers: vec![1, 2], fan_in: 2, fan_in_total: 2, packet_bytes: 306 },
@@ -1148,7 +1154,7 @@ mod tests {
     fn single_worker_job_completes_immediately() {
         let wiring =
             vec![JobWiring { ps: 10, workers: vec![1], fan_in: 1, fan_in_total: 1, packet_bytes: 306 }];
-        let mut sw = Switch::new(0, PolicyKind::Esa, 16, wiring, Rng::new(1));
+        let mut sw = Switch::new(0, esa(), 16, wiring, Rng::new(1));
         let mut out = Vec::new();
         let mut p = Packet::gradient(0, 0, 0, 1, 1, 5, 1, 0, 306);
         p.agg_index = sw.slot_index(0, 0);

@@ -1,0 +1,291 @@
+//! The six built-in scheduling policies, expressed through the
+//! [`SchedulerPolicy`] hooks.
+//!
+//! Each built-in is a zero-sized struct whose identity constants delegate
+//! to the [`PolicyKind`] parse artifact (the single table the paper's
+//! §7.1.1 packet formats live in), and whose behavioral hooks encode the
+//! handful of decisions that distinguish the systems — the shared
+//! pipeline in [`crate::switch`] is identical for all of them, mirroring
+//! the paper's claim that ESA is a small delta on ATP's switch program.
+
+use crate::config::PolicyKind;
+use crate::util::rng::Rng;
+use crate::JobId;
+
+use super::{AdmissionMode, CollisionOutcome, PolicyHandle, Recovery, Regions, SchedulerPolicy};
+
+/// ATP/SwitchML resend paths are destructive (they flush switch
+/// partials), so their loss suspicion threshold scales with the window
+/// instead of using the paper's dupACK = 3.
+fn windowed_threshold(cwnd: u32) -> u32 {
+    (cwnd / 8).max(8)
+}
+
+/// The paper's system: preemptive, priority-scheduled allocation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Esa;
+
+impl SchedulerPolicy for Esa {
+    fn key(&self) -> &str {
+        PolicyKind::Esa.key()
+    }
+
+    fn name(&self) -> &str {
+        PolicyKind::Esa.name()
+    }
+
+    /// §5.2: preempt iff strictly higher priority ("if the priority in
+    /// the aggregator is higher or equal, the preemption will fail").
+    fn on_collision(&self, incoming: u8, occupant: u8, _rng: &mut Rng) -> CollisionOutcome {
+        if incoming > occupant {
+            CollisionOutcome::Preempt
+        } else {
+            CollisionOutcome::PassThrough
+        }
+    }
+
+    fn downgrades(&self) -> bool {
+        true
+    }
+}
+
+/// ATP: dynamic FCFS allocation, collision falls back to the PS.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Atp;
+
+impl SchedulerPolicy for Atp {
+    fn key(&self) -> &str {
+        PolicyKind::Atp.key()
+    }
+
+    fn name(&self) -> &str {
+        PolicyKind::Atp.name()
+    }
+
+    /// Non-preemptive FCFS — the later arrival falls back to the PS.
+    fn on_collision(&self, _incoming: u8, _occupant: u8, _rng: &mut Rng) -> CollisionOutcome {
+        CollisionOutcome::PassThrough
+    }
+
+    fn result_via_ps(&self) -> bool {
+        PolicyKind::Atp.result_via_ps()
+    }
+
+    /// §2.2: the slot stays occupied until the parameter packet transits
+    /// back — the synchronized deallocation ESA's early release removes.
+    fn holds_until_param(&self) -> bool {
+        true
+    }
+
+    fn send_threshold(&self, cwnd: u32) -> u32 {
+        windowed_threshold(cwnd)
+    }
+
+    fn recovery(&self) -> Recovery {
+        Recovery::ResendToSwitch { mark_resend: true }
+    }
+}
+
+/// SwitchML: static per-job partitions, no PS fallback.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SwitchMl;
+
+impl SchedulerPolicy for SwitchMl {
+    fn key(&self) -> &str {
+        PolicyKind::SwitchMl.key()
+    }
+
+    fn name(&self) -> &str {
+        PolicyKind::SwitchMl.name()
+    }
+
+    fn lanes(&self) -> usize {
+        PolicyKind::SwitchMl.lanes()
+    }
+
+    fn packet_bytes(&self) -> u64 {
+        PolicyKind::SwitchMl.packet_bytes()
+    }
+
+    /// The shadow-pool design keeps two value copies per slot.
+    fn slot_copies(&self) -> u64 {
+        2
+    }
+
+    /// Self-clocked modular reuse inside the job's granted region.
+    fn slot_for(&self, regions: &Regions, job: JobId, seq: u32, _pool_slots: usize) -> u32 {
+        let (start, len) = regions.get(job);
+        debug_assert!(len > 0, "SwitchML traffic for job {job} with no granted region");
+        start + (seq % len)
+    }
+
+    /// Static partitions never collide across jobs and the worker window
+    /// prevents self-collision; if it happens (defensive), FCFS.
+    fn on_collision(&self, _incoming: u8, _occupant: u8, _rng: &mut Rng) -> CollisionOutcome {
+        CollisionOutcome::PassThrough
+    }
+
+    fn uses_ps(&self) -> bool {
+        false
+    }
+
+    fn send_threshold(&self, cwnd: u32) -> u32 {
+        windowed_threshold(cwnd)
+    }
+
+    fn recovery(&self) -> Recovery {
+        Recovery::ResendToSwitch { mark_resend: false }
+    }
+
+    fn admission(&self) -> AdmissionMode {
+        AdmissionMode::Partitioned
+    }
+}
+
+/// Fig. 11 strawman 1: always preempt on collision.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StrawAlways;
+
+impl SchedulerPolicy for StrawAlways {
+    fn key(&self) -> &str {
+        PolicyKind::StrawAlways.key()
+    }
+
+    fn name(&self) -> &str {
+        PolicyKind::StrawAlways.name()
+    }
+
+    fn on_collision(&self, _incoming: u8, _occupant: u8, _rng: &mut Rng) -> CollisionOutcome {
+        CollisionOutcome::Preempt
+    }
+}
+
+/// Fig. 11 strawman 2: preempt with probability 1/2 on collision.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StrawCoin;
+
+impl SchedulerPolicy for StrawCoin {
+    fn key(&self) -> &str {
+        PolicyKind::StrawCoin.key()
+    }
+
+    fn name(&self) -> &str {
+        PolicyKind::StrawCoin.name()
+    }
+
+    fn on_collision(&self, _incoming: u8, _occupant: u8, rng: &mut Rng) -> CollisionOutcome {
+        if rng.chance(0.5) {
+            CollisionOutcome::Preempt
+        } else {
+            CollisionOutcome::PassThrough
+        }
+    }
+}
+
+/// No INA at all: workers push straight to the PS (the vanilla BytePS
+/// baseline of §7.1).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HostPs;
+
+impl SchedulerPolicy for HostPs {
+    fn key(&self) -> &str {
+        PolicyKind::HostPs.key()
+    }
+
+    fn name(&self) -> &str {
+        PolicyKind::HostPs.name()
+    }
+
+    /// Never reaches the switch; defensive pass-through.
+    fn on_collision(&self, _incoming: u8, _occupant: u8, _rng: &mut Rng) -> CollisionOutcome {
+        CollisionOutcome::PassThrough
+    }
+
+    fn bypass_switch(&self) -> bool {
+        true
+    }
+}
+
+/// The paper's system, as a shareable handle.
+pub fn esa() -> PolicyHandle {
+    PolicyHandle::new(Esa)
+}
+
+/// ATP (Lam et al.): dynamic FCFS, PS completion path.
+pub fn atp() -> PolicyHandle {
+    PolicyHandle::new(Atp)
+}
+
+/// SwitchML (Sapio et al.): static partitions, no PS.
+pub fn switchml() -> PolicyHandle {
+    PolicyHandle::new(SwitchMl)
+}
+
+/// Fig. 11 strawman 1: always preempt.
+pub fn straw_always() -> PolicyHandle {
+    PolicyHandle::new(StrawAlways)
+}
+
+/// Fig. 11 strawman 2: coin-flip preemption.
+pub fn straw_coin() -> PolicyHandle {
+    PolicyHandle::new(StrawCoin)
+}
+
+/// The no-INA BytePS baseline.
+pub fn hostps() -> PolicyHandle {
+    PolicyHandle::new(HostPs)
+}
+
+/// The five INA systems (everything but the no-INA `hostps` baseline),
+/// in the canonical sweep/bench order.
+pub fn all_ina() -> Vec<PolicyHandle> {
+    vec![esa(), atp(), switchml(), straw_always(), straw_coin()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packet_formats_match_paper() {
+        assert_eq!(esa().packet_bytes(), 306);
+        assert_eq!(atp().packet_bytes(), 306);
+        assert_eq!(switchml().packet_bytes(), 180);
+        assert_eq!(esa().lanes(), 64);
+        assert_eq!(switchml().lanes(), 32);
+        assert_eq!(switchml().slot_copies(), 2);
+    }
+
+    #[test]
+    fn behavioral_deltas_match_the_systems() {
+        assert!(esa().downgrades() && !atp().downgrades());
+        assert!(atp().result_via_ps() && !esa().result_via_ps());
+        assert!(atp().holds_until_param());
+        assert_eq!(switchml().admission(), AdmissionMode::Partitioned);
+        assert_eq!(esa().admission(), AdmissionMode::Dynamic);
+        assert!(!switchml().uses_ps() && esa().uses_ps());
+        assert!(hostps().bypass_switch() && !esa().bypass_switch());
+        assert_eq!(esa().recovery(), Recovery::ReminderToPs);
+        assert_eq!(atp().recovery(), Recovery::ResendToSwitch { mark_resend: true });
+        assert_eq!(switchml().recovery(), Recovery::ResendToSwitch { mark_resend: false });
+    }
+
+    #[test]
+    fn send_thresholds_match_the_seed_behavior() {
+        // ESA & co. keep the paper's dupACK = 3; ATP/SwitchML scale with
+        // the window, floored at 8.
+        for p in [esa(), straw_always(), straw_coin(), hostps()] {
+            assert_eq!(p.send_threshold(256), crate::ps::DUPACK_THRESHOLD, "{p:?}");
+        }
+        assert_eq!(atp().send_threshold(256), 32);
+        assert_eq!(atp().send_threshold(16), 8);
+        assert_eq!(switchml().send_threshold(256), 32);
+    }
+
+    #[test]
+    fn all_ina_is_the_canonical_five() {
+        let ps = all_ina();
+        let keys: Vec<&str> = ps.iter().map(|p| p.key()).collect();
+        assert_eq!(keys, ["esa", "atp", "switchml", "straw1", "straw2"]);
+    }
+}

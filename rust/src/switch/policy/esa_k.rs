@@ -1,0 +1,141 @@
+//! `esa-k` — ESA with a configurable preemption-age threshold.
+//!
+//! The extension-point proof for the policy API: a seventh policy shipped
+//! purely through [`SchedulerPolicy`] + the registry, with zero edits in
+//! `switch/mod.rs`, `worker/mod.rs` or `sim/`.
+//!
+//! ESA's §5.4 anti-starvation aging is age-gated: a failed preemption
+//! only downgrades the occupant once it has held its slot longer than
+//! ~one base RTT (DESIGN.md §5 — unpaced halving preempt-thrashes under
+//! heavy contention). `esa-k` turns that hard-wired gate into a knob:
+//! `--policy esa-k=<ticks>` sets the gate to `<ticks>` nanoseconds of
+//! simulated time (bare `esa-k` uses [`DEFAULT_K_NS`], twice the default
+//! 10 µs base RTT). Small `k` ages occupants aggressively — short jobs
+//! steal slots sooner at the price of more partial-flush traffic; large
+//! `k` converges on pure §5.2 priority preemption with no aging.
+//!
+//! Because the key embeds the parameter (`esa-k=40000`), the knob is
+//! sweepable as a grid axis: `axes.policies = ["esa", "esa-k=5000",
+//! "esa-k=40000"]` runs one cell per setting, byte-deterministically.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+use crate::SimTime;
+
+use super::{CollisionOutcome, PolicyHandle, SchedulerPolicy};
+
+/// Age gate for a bare `esa-k` (ns): twice the default 10 µs base RTT.
+pub const DEFAULT_K_NS: SimTime = 20 * crate::USEC;
+
+/// ESA with a configurable preemption-age threshold (see module docs).
+#[derive(Debug, Clone)]
+pub struct EsaK {
+    /// Registry key, parameter included (`esa-k` or `esa-k=<ticks>`).
+    key: String,
+    /// The age gate in simulated ns.
+    k_ns: SimTime,
+}
+
+impl EsaK {
+    /// An `esa-k` with an explicit gate of `k_ns` simulated nanoseconds.
+    pub fn new(k_ns: SimTime) -> EsaK {
+        EsaK { key: format!("esa-k={k_ns}"), k_ns }
+    }
+
+    /// The default-gate variant a bare `--policy esa-k` resolves to.
+    pub fn default_gate() -> EsaK {
+        EsaK { key: "esa-k".to_string(), k_ns: DEFAULT_K_NS }
+    }
+
+    /// Registry factory: `param` is the text after `=` in
+    /// `esa-k=<ticks>`, if any.
+    pub fn from_param(param: Option<&str>) -> Result<PolicyHandle> {
+        match param {
+            None => Ok(PolicyHandle::new(EsaK::default_gate())),
+            Some(raw) => {
+                let k_ns: SimTime = match raw.parse() {
+                    Ok(v) if v > 0 => v,
+                    _ => bail!(
+                        "esa-k=<ticks>: `{raw}` is not a positive tick count \
+                         (ticks are simulated nanoseconds, e.g. esa-k=20000)"
+                    ),
+                };
+                Ok(PolicyHandle::new(EsaK::new(k_ns)))
+            }
+        }
+    }
+
+    /// The configured gate (ns).
+    pub fn k_ns(&self) -> SimTime {
+        self.k_ns
+    }
+}
+
+impl SchedulerPolicy for EsaK {
+    fn key(&self) -> &str {
+        &self.key
+    }
+
+    fn name(&self) -> &str {
+        "ESA-k"
+    }
+
+    /// Identical to ESA: preempt iff strictly higher priority (§5.2).
+    fn on_collision(&self, incoming: u8, occupant: u8, _rng: &mut Rng) -> CollisionOutcome {
+        if incoming > occupant {
+            CollisionOutcome::Preempt
+        } else {
+            CollisionOutcome::PassThrough
+        }
+    }
+
+    fn downgrades(&self) -> bool {
+        true
+    }
+
+    /// The whole point: the age gate is the policy's `k`, not the
+    /// driver's base-RTT default.
+    fn age_gate_ns(&self, _default_ns: SimTime) -> SimTime {
+        self.k_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_parses_and_embeds_in_the_key() {
+        let p = EsaK::from_param(Some("40000")).unwrap();
+        assert_eq!(p.key(), "esa-k=40000");
+        assert_eq!(p.age_gate_ns(10_000), 40_000);
+        let d = EsaK::from_param(None).unwrap();
+        assert_eq!(d.key(), "esa-k");
+        assert_eq!(d.age_gate_ns(10_000), DEFAULT_K_NS);
+    }
+
+    #[test]
+    fn bad_params_are_pointed_errors() {
+        for raw in ["", "0", "-5", "fast", "1.5"] {
+            let err = EsaK::from_param(Some(raw)).unwrap_err().to_string();
+            assert!(err.contains("esa-k=<ticks>"), "{raw}: {err}");
+        }
+    }
+
+    #[test]
+    fn behaves_like_esa_apart_from_the_gate() {
+        let p = EsaK::new(5_000);
+        let mut rng = Rng::new(1);
+        assert_eq!(p.on_collision(5, 4, &mut rng), CollisionOutcome::Preempt);
+        assert_eq!(p.on_collision(4, 4, &mut rng), CollisionOutcome::PassThrough);
+        assert!(p.downgrades());
+        assert_eq!(p.lanes(), 64);
+        assert_eq!(p.packet_bytes(), 306);
+        assert_eq!(
+            p.recovery(),
+            super::super::Recovery::ReminderToPs,
+            "worker side inherits ESA's defaults"
+        );
+    }
+}

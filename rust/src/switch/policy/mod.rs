@@ -1,0 +1,549 @@
+//! The first-class scheduling-policy API.
+//!
+//! The paper's central claim is that ESA is a *small behavioral delta* on
+//! ATP's switch program — preemptive allocation plus data-plane priority.
+//! This module makes that delta an explicit, extensible surface: every
+//! decision a scheduling policy makes anywhere in the stack is a hook on
+//! the [`SchedulerPolicy`] trait, and every layer (config parsing, the
+//! switch pipeline, workers, the coordinator's admission machinery, the
+//! sweep/churn/figure harnesses, the CLI) consumes policies exclusively
+//! through a [`PolicyHandle`] resolved from the string-keyed
+//! [`PolicyRegistry`].
+//!
+//! The hooks, decision by decision (DESIGN.md §12 maps each to the paper):
+//!
+//! | hook | decision | who consumes it |
+//! |------|----------|-----------------|
+//! | [`lanes`]/[`packet_bytes`]/[`slot_copies`] | wire format + SRAM cost per slot (§7.1.1) | `SwitchConfig::pool_slots`, workers |
+//! | [`slot_for`] | task → aggregator mapping (hash pool vs static region) | switch pipeline |
+//! | [`on_collision`] | occupied-slot outcome: pass through or preempt (§5.2) | switch pipeline |
+//! | [`downgrades`]/[`age_gate_ns`] | anti-starvation aging of occupants (§5.4) | switch pipeline |
+//! | [`result_via_ps`]/[`holds_until_param`] | completion path + ATP's hold-until-ACK (§2.2) | switch pipeline |
+//! | [`bypass_switch`]/[`uses_ps`] | PS-fallback mode (no-INA baseline, SwitchML's no-PS design) | driver, workers |
+//! | [`send_threshold`]/[`priority_stamp`]/[`recovery`] | worker-side loss suspicion, §5.4 tagging, §5.3 recovery | workers |
+//! | [`admission`] | dynamic shared pool vs statically carved regions | coordinator admission + `RegionAllocator` |
+//!
+//! The six built-ins (ESA, ATP, SwitchML, the two Fig. 11 strawmen, and
+//! the no-INA BytePS baseline) live in [`builtin`]; [`esa_k`] ships a
+//! seventh policy — ESA with a configurable preemption-age threshold —
+//! implemented purely through this API as the extension-point proof. The
+//! [`PolicyKind`] enum survives only as a parse artifact inside `config/`
+//! and these policy modules (a CI grep gate pins that boundary).
+//!
+//! [`lanes`]: SchedulerPolicy::lanes
+//! [`packet_bytes`]: SchedulerPolicy::packet_bytes
+//! [`slot_copies`]: SchedulerPolicy::slot_copies
+//! [`slot_for`]: SchedulerPolicy::slot_for
+//! [`on_collision`]: SchedulerPolicy::on_collision
+//! [`downgrades`]: SchedulerPolicy::downgrades
+//! [`age_gate_ns`]: SchedulerPolicy::age_gate_ns
+//! [`result_via_ps`]: SchedulerPolicy::result_via_ps
+//! [`holds_until_param`]: SchedulerPolicy::holds_until_param
+//! [`bypass_switch`]: SchedulerPolicy::bypass_switch
+//! [`uses_ps`]: SchedulerPolicy::uses_ps
+//! [`send_threshold`]: SchedulerPolicy::send_threshold
+//! [`priority_stamp`]: SchedulerPolicy::priority_stamp
+//! [`recovery`]: SchedulerPolicy::recovery
+//! [`admission`]: SchedulerPolicy::admission
+//! [`PolicyKind`]: crate::config::PolicyKind
+
+pub mod builtin;
+pub mod esa_k;
+pub mod registry;
+
+use std::fmt;
+use std::ops::Deref;
+use std::sync::Arc;
+
+use crate::packet::task_hash;
+use crate::util::rng::Rng;
+use crate::{JobId, SimTime};
+
+pub use builtin::{all_ina, atp, esa, hostps, straw_always, straw_coin, switchml};
+pub use esa_k::EsaK;
+pub use registry::PolicyRegistry;
+
+/// Outcome of a slot collision (occupant task != incoming task).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollisionOutcome {
+    /// Incoming packet passes through to its job's PS (FCFS loser).
+    PassThrough,
+    /// Incoming packet evicts the occupant (packet swapping) and seizes
+    /// the slot; the occupant's partial travels to its PS.
+    Preempt,
+}
+
+/// How the coordinator admits a job to switch memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Jobs always admit; contention resolves on the data plane itself
+    /// (ESA, ATP, the strawmen, the no-INA baseline).
+    Dynamic,
+    /// A contiguous aggregator region must be carved before the job can
+    /// run (SwitchML); arrivals queue when none fits.
+    Partitioned,
+}
+
+/// How a worker recovers a sequence stuck at its window base (§5.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Recovery {
+    /// Send a reminder to the fallback PS, which evicts the resident
+    /// partial and resolves the task there (ESA's cheap, paced path).
+    ReminderToPs,
+    /// Retransmit the gradient to the switch directly. With
+    /// `mark_resend`, the switch must not re-aggregate: it flushes any
+    /// matching partial to the PS and forwards the resend (ATP's
+    /// split-aggregation resolution); without it, the retransmission
+    /// self-clocks into the sender's own region (SwitchML).
+    ResendToSwitch {
+        /// Stamp the ATP `resend` header bit.
+        mark_resend: bool,
+    },
+}
+
+/// Every decision a scheduling policy makes, as one behavioral trait.
+///
+/// All hooks except identity ([`key`](Self::key)/[`name`](Self::name))
+/// and [`on_collision`](Self::on_collision) have defaults matching ESA's
+/// choices, so a minimal third-party policy only decides what happens
+/// when a gradient lands on an occupied aggregator. Implementations must
+/// be `Send + Sync` (sweeps run cells on a thread pool) and deterministic
+/// (all randomness must come from the `Rng` the hooks receive).
+pub trait SchedulerPolicy: Send + Sync + fmt::Debug {
+    /// Stable lowercase machine key — what `--policy` accepts, what every
+    /// JSON artifact records, and what the registry round-trips.
+    fn key(&self) -> &str;
+
+    /// Human display name for tables and summaries.
+    fn name(&self) -> &str;
+
+    // ---------------- packet format (§7.1.1) ----------------
+
+    /// Gradient lanes (f32/i32 values) carried per packet.
+    fn lanes(&self) -> usize {
+        64
+    }
+
+    /// Wire size of one gradient fragment packet in bytes.
+    fn packet_bytes(&self) -> u64 {
+        306
+    }
+
+    /// Aggregator value copies kept per slot. SwitchML keeps two (its
+    /// shadow-pool design for in-flight retransmission safety), halving
+    /// its slot count per SRAM byte.
+    fn slot_copies(&self) -> u64 {
+        1
+    }
+
+    // ---------------- switch data plane ----------------
+
+    /// The aggregator index for a task. Dynamic policies hash over the
+    /// shared pool; statically partitioned policies map into the job's
+    /// granted region (available through `regions`).
+    fn slot_for(&self, regions: &Regions, job: JobId, seq: u32, pool_slots: usize) -> u32 {
+        let _ = regions;
+        task_hash(job, seq) % pool_slots as u32
+    }
+
+    /// Decide a collision. `incoming`/`occupant` are 8-bit §5.4
+    /// priorities; `rng` is the switch's deterministic stream.
+    fn on_collision(&self, incoming: u8, occupant: u8, rng: &mut Rng) -> CollisionOutcome;
+
+    /// Whether a failed preemption ages the occupant's priority (ESA's
+    /// anti-starvation downgrade, §5.4).
+    fn downgrades(&self) -> bool {
+        false
+    }
+
+    /// Age an occupant only after it has held its slot this long
+    /// (DESIGN.md §5: unpaced halving preempt-thrashes). `default_ns` is
+    /// the driver's default — one base RTT. `esa-k` overrides this with
+    /// its configured threshold.
+    fn age_gate_ns(&self, default_ns: SimTime) -> SimTime {
+        default_ns
+    }
+
+    /// Whether completed aggregations leave via the PS (ATP) instead of
+    /// being multicast straight back to the workers.
+    fn result_via_ps(&self) -> bool {
+        false
+    }
+
+    /// Whether a completed slot is held until the PS's parameter packet
+    /// transits back through the switch (ATP's §2.2 occupation, the
+    /// synchronized deallocation ESA's early release removes).
+    ///
+    /// A policy returning `true` here MUST also return `true` from
+    /// [`result_via_ps`](Self::result_via_ps): the parameter packet that
+    /// releases the held slot only exists on the PS completion path.
+    /// Holding without it would leak every completed slot (the bound
+    /// [`Policy`] asserts the pairing at construction).
+    fn holds_until_param(&self) -> bool {
+        false
+    }
+
+    // ---------------- worker side ----------------
+
+    /// Gradients skip the switch entirely and go straight to the PS (the
+    /// vanilla BytePS baseline of §7.1).
+    fn bypass_switch(&self) -> bool {
+        false
+    }
+
+    /// Whether jobs get a fallback PS at all (SwitchML's design has
+    /// none — recovery self-clocks against switch bitmaps instead).
+    fn uses_ps(&self) -> bool {
+        true
+    }
+
+    /// Out-of-order completions tolerated on the window base before loss
+    /// recovery fires (§5.3 "dupACK"). ESA keeps the paper's 3 (reminder
+    /// recovery is cheap and paced); destructive resend paths scale the
+    /// suspicion threshold with the window.
+    fn send_threshold(&self, cwnd: u32) -> u32 {
+        let _ = cwnd;
+        crate::ps::DUPACK_THRESHOLD
+    }
+
+    /// Transform the §5.4 wire priority before it is stamped into the
+    /// gradient header. Identity for every built-in; a third-party policy
+    /// can flatten or re-band priorities here without touching the worker.
+    fn priority_stamp(&self, computed: u8) -> u8 {
+        computed
+    }
+
+    /// How a worker recovers a sequence stuck at its window base.
+    fn recovery(&self) -> Recovery {
+        Recovery::ReminderToPs
+    }
+
+    // ---------------- coordinator / admission ----------------
+
+    /// Dynamic shared pool or statically carved per-job regions — drives
+    /// the coordinator's admission machinery and the `RegionAllocator`.
+    fn admission(&self) -> AdmissionMode {
+        AdmissionMode::Dynamic
+    }
+}
+
+/// A cheap, cloneable, shareable handle to a [`SchedulerPolicy`].
+///
+/// This is the type that crosses layers: `ExperimentConfig::policy`,
+/// `WorkerCfg::policy`, sweep axes and churn specs all hold handles.
+/// Equality and hashing are by [`key`](SchedulerPolicy::key), so two
+/// independently resolved `"esa"` handles compare equal.
+#[derive(Clone)]
+pub struct PolicyHandle(Arc<dyn SchedulerPolicy>);
+
+impl PolicyHandle {
+    /// Wrap a policy implementation in a handle.
+    pub fn new(policy: impl SchedulerPolicy + 'static) -> PolicyHandle {
+        PolicyHandle(Arc::new(policy))
+    }
+
+    /// Wrap an already-shared policy.
+    pub fn from_arc(policy: Arc<dyn SchedulerPolicy>) -> PolicyHandle {
+        PolicyHandle(policy)
+    }
+}
+
+impl Deref for PolicyHandle {
+    type Target = dyn SchedulerPolicy;
+
+    fn deref(&self) -> &(dyn SchedulerPolicy + 'static) {
+        &*self.0
+    }
+}
+
+impl fmt::Debug for PolicyHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PolicyHandle({})", self.key())
+    }
+}
+
+impl PartialEq for PolicyHandle {
+    fn eq(&self, other: &PolicyHandle) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl Eq for PolicyHandle {}
+
+impl std::hash::Hash for PolicyHandle {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.key().hash(state);
+    }
+}
+
+/// Per-job `(start, len)` aggregator regions — the mutable, per-switch
+/// state behind statically partitioned policies. Owned by the bound
+/// [`Policy`] (one per switch) and passed read-only into
+/// [`SchedulerPolicy::slot_for`].
+#[derive(Debug, Clone, Default)]
+pub struct Regions(Vec<(u32, u32)>);
+
+impl Regions {
+    /// The region granted to `job`. Panics when `job` has no entry at
+    /// all (a statically partitioned switch always sizes the table to
+    /// its job count first).
+    pub fn get(&self, job: JobId) -> (u32, u32) {
+        self.0[job as usize]
+    }
+
+    /// Non-panicking region length; `None` when no region is granted.
+    pub fn len_of(&self, job: JobId) -> Option<u32> {
+        self.0
+            .get(job as usize)
+            .and_then(|&(_, len)| (len > 0).then_some(len))
+    }
+}
+
+/// One switch's bound policy instance: the shared behavioral spec plus
+/// the per-switch region state statically partitioned policies need.
+#[derive(Debug, Clone)]
+pub struct Policy {
+    spec: PolicyHandle,
+    regions: Regions,
+}
+
+impl Policy {
+    pub fn new(spec: PolicyHandle) -> Policy {
+        // Hook-coupling contract: a held-complete slot is only ever
+        // released by the PS's parameter packet transiting back, which
+        // exists only on the via-PS completion path. Holding without it
+        // would leak every completed slot until the time cap.
+        assert!(
+            !spec.holds_until_param() || spec.result_via_ps(),
+            "policy `{}`: holds_until_param() requires result_via_ps() — \
+             a held slot is only released by the PS parameter transit",
+            spec.key()
+        );
+        Policy { spec, regions: Regions::default() }
+    }
+
+    /// The behavioral spec this instance is bound to.
+    pub fn spec(&self) -> &PolicyHandle {
+        &self.spec
+    }
+
+    /// Whether this policy carves static per-job regions.
+    pub fn partitioned(&self) -> bool {
+        self.spec.admission() == AdmissionMode::Partitioned
+    }
+
+    /// SwitchML statically partitions the pool equally among jobs at
+    /// admission time (§7.1.1: "SwitchML jobs evenly share the memory").
+    /// Every region is clamped to the pool end, so an over-subscribed
+    /// pool (more jobs than slots) degrades to trailing zero-length
+    /// regions — whose traffic the switch drops — instead of handing out
+    /// overlapping regions past the pool. Configs that would leave a job
+    /// with zero real slots are rejected up front by
+    /// `ExperimentConfig::validate`.
+    pub fn set_static_partitions(&mut self, n_jobs: usize, pool_slots: usize) {
+        debug_assert!(self.partitioned());
+        assert!(n_jobs > 0);
+        let pool = pool_slots as u32;
+        let len = (pool_slots / n_jobs).max(1) as u32;
+        self.regions = Regions(
+            (0..n_jobs as u32)
+                .map(|j| {
+                    let start = (j * len).min(pool);
+                    (start, len.min(pool - start))
+                })
+                .collect(),
+        );
+    }
+
+    /// Switch to churn-mode region management (DESIGN.md §11): every job
+    /// starts with *no* region; the coordinator grants one at admission
+    /// ([`Self::set_region`]) and revokes it at completion
+    /// ([`Self::clear_region`]).
+    pub fn reset_regions(&mut self, n_jobs: usize) {
+        self.regions = Regions(vec![(0, 0); n_jobs]);
+    }
+
+    /// Grant a region to `job` (runtime admission).
+    pub fn set_region(&mut self, job: JobId, start: u32, len: u32) {
+        debug_assert!(len > 0, "granting an empty region");
+        self.regions.0[job as usize] = (start, len);
+    }
+
+    /// Revoke `job`'s region (end-of-job reclamation).
+    pub fn clear_region(&mut self, job: JobId) {
+        self.regions.0[job as usize] = (0, 0);
+    }
+
+    /// Per-job static region length (workers cap their window to it so the
+    /// self-clocked SwitchML slot reuse never collides). `None` when no
+    /// region is granted — under churn a job has no region until admitted.
+    pub fn region_len(&self, job: JobId) -> Option<u32> {
+        self.regions.len_of(job)
+    }
+
+    /// The aggregator index for a task.
+    #[inline]
+    pub fn slot_for(&self, job: JobId, seq: u32, pool_slots: usize) -> u32 {
+        self.spec.slot_for(&self.regions, job, seq, pool_slots)
+    }
+
+    /// Decide a collision. `incoming`/`occupant` are 8-bit priorities.
+    #[inline]
+    pub fn on_collision(&self, incoming: u8, occupant: u8, rng: &mut Rng) -> CollisionOutcome {
+        self.spec.on_collision(incoming, occupant, rng)
+    }
+
+    /// Whether a failed preemption downgrades the occupant's priority
+    /// (ESA's anti-starvation aging, §5.4).
+    #[inline]
+    pub fn downgrades(&self) -> bool {
+        self.spec.downgrades()
+    }
+
+    /// Whether completed aggregations leave via the PS.
+    #[inline]
+    pub fn result_via_ps(&self) -> bool {
+        self.spec.result_via_ps()
+    }
+
+    /// Whether a completed slot is held until the parameter transits.
+    #[inline]
+    pub fn holds_until_param(&self) -> bool {
+        self.spec.holds_until_param()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn esa_preempts_strictly_higher_only() {
+        let p = Policy::new(esa());
+        let mut rng = Rng::new(1);
+        assert_eq!(p.on_collision(5, 4, &mut rng), CollisionOutcome::Preempt);
+        assert_eq!(p.on_collision(4, 4, &mut rng), CollisionOutcome::PassThrough);
+        assert_eq!(p.on_collision(3, 4, &mut rng), CollisionOutcome::PassThrough);
+    }
+
+    #[test]
+    fn atp_never_preempts() {
+        let p = Policy::new(atp());
+        let mut rng = Rng::new(1);
+        assert_eq!(p.on_collision(255, 0, &mut rng), CollisionOutcome::PassThrough);
+        assert!(!p.downgrades());
+        assert!(p.result_via_ps() && p.holds_until_param());
+    }
+
+    #[test]
+    fn straw1_always_preempts() {
+        let p = Policy::new(straw_always());
+        let mut rng = Rng::new(1);
+        assert_eq!(p.on_collision(0, 255, &mut rng), CollisionOutcome::Preempt);
+    }
+
+    #[test]
+    fn straw2_is_a_fair_coin() {
+        let p = Policy::new(straw_coin());
+        let mut rng = Rng::new(2);
+        let preempts = (0..10_000)
+            .filter(|_| p.on_collision(0, 0, &mut rng) == CollisionOutcome::Preempt)
+            .count();
+        assert!((4500..5500).contains(&preempts), "{preempts}");
+    }
+
+    #[test]
+    fn hash_mapping_spreads_over_pool() {
+        let p = Policy::new(esa());
+        let mut seen = std::collections::HashSet::new();
+        for seq in 0..1000 {
+            seen.insert(p.slot_for(1, seq, 4096));
+        }
+        assert!(seen.len() > 800, "poor spread: {}", seen.len());
+        assert!(seen.iter().all(|&s| s < 4096));
+    }
+
+    #[test]
+    fn switchml_regions_are_disjoint_per_job() {
+        let mut p = Policy::new(switchml());
+        p.set_static_partitions(4, 4096);
+        assert_eq!(p.region_len(0), Some(1024));
+        for seq in 0..5000 {
+            let s0 = p.slot_for(0, seq, 4096);
+            let s3 = p.slot_for(3, seq, 4096);
+            assert!((0..1024).contains(&s0));
+            assert!((3072..4096).contains(&s3));
+        }
+    }
+
+    #[test]
+    fn oversubscribed_partitions_clamp_to_the_pool_end() {
+        // 10 jobs over a 4-slot pool: the old `(pool / n).max(1)` handed
+        // jobs 4..10 regions past the pool end; now they clamp to empty
+        // regions (whose traffic the switch drops) and the first 4 jobs
+        // keep disjoint single-slot regions inside the pool.
+        let mut p = Policy::new(switchml());
+        p.set_static_partitions(10, 4);
+        for j in 0..4 {
+            assert_eq!(p.region_len(j), Some(1));
+            assert!(p.slot_for(j, 123, 4) < 4, "job {j} must map inside the pool");
+        }
+        for j in 4..10 {
+            assert_eq!(p.region_len(j), None, "job {j} must get an empty region, not overlap");
+        }
+    }
+
+    #[test]
+    fn dynamic_regions_grant_and_revoke() {
+        let mut p = Policy::new(switchml());
+        p.reset_regions(3);
+        assert_eq!(p.region_len(1), None, "no region before admission");
+        p.set_region(1, 256, 128);
+        assert_eq!(p.region_len(1), Some(128));
+        assert_eq!(p.slot_for(1, 0, 4096), 256);
+        assert_eq!(p.slot_for(1, 130, 4096), 256 + 2);
+        p.clear_region(1);
+        assert_eq!(p.region_len(1), None, "revoked at completion");
+    }
+
+    #[test]
+    fn switchml_self_mapping_is_modular() {
+        let mut p = Policy::new(switchml());
+        p.set_static_partitions(2, 100);
+        assert_eq!(p.slot_for(1, 0, 100), 50);
+        assert_eq!(p.slot_for(1, 49, 100), 99);
+        assert_eq!(p.slot_for(1, 50, 100), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "holds_until_param() requires result_via_ps()")]
+    fn holding_without_the_ps_path_is_rejected_at_bind_time() {
+        #[derive(Debug)]
+        struct Leaky;
+        impl SchedulerPolicy for Leaky {
+            fn key(&self) -> &str {
+                "leaky"
+            }
+            fn name(&self) -> &str {
+                "Leaky"
+            }
+            fn on_collision(&self, _i: u8, _o: u8, _rng: &mut Rng) -> CollisionOutcome {
+                CollisionOutcome::PassThrough
+            }
+            // holds slots but never routes results via the PS: the Param
+            // packet that would release them can never exist
+            fn holds_until_param(&self) -> bool {
+                true
+            }
+        }
+        let _ = Policy::new(PolicyHandle::new(Leaky));
+    }
+
+    #[test]
+    fn handles_compare_by_key() {
+        assert_eq!(esa(), esa());
+        assert_ne!(esa(), atp());
+        assert_eq!(PolicyRegistry::resolve("esa").unwrap(), esa());
+        assert_eq!(format!("{:?}", esa()), "PolicyHandle(esa)");
+    }
+}

@@ -1,0 +1,271 @@
+//! The string-keyed policy registry — the single resolution point for
+//! `--policy` flags, experiment configs, sweep axes and churn specs.
+//!
+//! Names resolve case-insensitively; a `name=<param>` suffix is split off
+//! and handed to the policy's factory (only `esa-k` accepts one today).
+//! Unknown names fail with the full registered list, so CLI help and
+//! config errors never go stale as policies are added.
+
+use std::sync::{OnceLock, RwLock};
+
+use anyhow::{bail, Result};
+
+use super::{builtin, esa_k::EsaK, PolicyHandle};
+
+/// A policy constructor: receives the optional `=<param>` suffix.
+type Factory = Box<dyn Fn(Option<&str>) -> Result<PolicyHandle> + Send + Sync>;
+
+struct Entry {
+    /// Primary name — what [`PolicyRegistry::registered_names`] lists and
+    /// what the policy's `key()` round-trips through.
+    name: String,
+    /// Accepted alternative spellings (`switch_ml`, `byteps`, ...).
+    aliases: Vec<String>,
+    factory: Factory,
+}
+
+impl Entry {
+    fn matches(&self, base: &str) -> bool {
+        self.name == base || self.aliases.iter().any(|a| a == base)
+    }
+}
+
+/// String-keyed registry of [`SchedulerPolicy`] factories.
+///
+/// The six built-ins plus `esa-k` are pre-registered; third-party
+/// policies join at runtime via [`PolicyRegistry::register`]:
+///
+/// ```
+/// use esa::switch::policy::{CollisionOutcome, PolicyHandle, PolicyRegistry, SchedulerPolicy};
+/// use esa::util::rng::Rng;
+///
+/// /// A toy LIFO policy: the newest task always wins the slot.
+/// #[derive(Debug)]
+/// struct Lifo;
+///
+/// impl SchedulerPolicy for Lifo {
+///     fn key(&self) -> &str { "lifo" }
+///     fn name(&self) -> &str { "LIFO" }
+///     fn on_collision(&self, _in: u8, _occ: u8, _rng: &mut Rng) -> CollisionOutcome {
+///         CollisionOutcome::Preempt
+///     }
+/// }
+///
+/// PolicyRegistry::register("lifo", &[], |_| Ok(PolicyHandle::new(Lifo))).unwrap();
+///
+/// // The new policy now works everywhere a name does — configs, sweep
+/// // axes, the CLI — with zero changes outside this registration:
+/// let mut cfg = esa::config::ExperimentConfig::synthetic(
+///     PolicyRegistry::resolve("lifo").unwrap(), "microbench", 1, 2);
+/// cfg.iterations = 1;
+/// cfg.jobs[0].tensor_bytes = Some(64 * 1024);
+/// let metrics = esa::sim::Simulation::run_experiment(cfg).unwrap();
+/// assert!(!metrics.truncated);
+/// assert!(PolicyRegistry::registered_names().contains(&"lifo".to_string()));
+/// ```
+///
+/// [`SchedulerPolicy`]: super::SchedulerPolicy
+pub struct PolicyRegistry {
+    entries: Vec<Entry>,
+}
+
+fn no_param(name: &'static str, param: Option<&str>) -> Result<()> {
+    if let Some(p) = param {
+        bail!("policy `{name}` takes no parameter (got `{name}={p}`)");
+    }
+    Ok(())
+}
+
+impl PolicyRegistry {
+    /// A registry pre-loaded with the built-ins (registration order is
+    /// the canonical display order).
+    fn with_builtins() -> PolicyRegistry {
+        fn add(
+            entries: &mut Vec<Entry>,
+            name: &'static str,
+            aliases: &[&str],
+            make: fn() -> PolicyHandle,
+        ) {
+            entries.push(Entry {
+                name: name.to_string(),
+                aliases: aliases.iter().map(|s| s.to_string()).collect(),
+                factory: Box::new(move |param| {
+                    no_param(name, param)?;
+                    Ok(make())
+                }),
+            });
+        }
+        let mut r = PolicyRegistry { entries: Vec::new() };
+        add(&mut r.entries, "esa", &[], builtin::esa);
+        add(&mut r.entries, "atp", &[], builtin::atp);
+        add(&mut r.entries, "switchml", &["switch_ml"], builtin::switchml);
+        add(&mut r.entries, "straw1", &["straw_always"], builtin::straw_always);
+        add(&mut r.entries, "straw2", &["straw_coin"], builtin::straw_coin);
+        add(&mut r.entries, "hostps", &["byteps", "noina"], builtin::hostps);
+        r.entries.push(Entry {
+            name: "esa-k".to_string(),
+            aliases: vec!["esa_k".to_string()],
+            factory: Box::new(EsaK::from_param),
+        });
+        r
+    }
+
+    fn global() -> &'static RwLock<PolicyRegistry> {
+        static GLOBAL: OnceLock<RwLock<PolicyRegistry>> = OnceLock::new();
+        GLOBAL.get_or_init(|| RwLock::new(PolicyRegistry::with_builtins()))
+    }
+
+    /// Register a third-party policy under `name` (plus aliases). The
+    /// factory receives the optional `=<param>` suffix of the resolved
+    /// string. Fails if any name is already taken.
+    pub fn register(
+        name: &str,
+        aliases: &[&str],
+        factory: impl Fn(Option<&str>) -> Result<PolicyHandle> + Send + Sync + 'static,
+    ) -> Result<()> {
+        let name = name.trim().to_ascii_lowercase();
+        let aliases: Vec<String> = aliases.iter().map(|s| s.trim().to_ascii_lowercase()).collect();
+        for n in std::iter::once(&name).chain(aliases.iter()) {
+            if n.is_empty() || n.contains('=') {
+                bail!(
+                    "policy name `{n}` must be non-empty and `=`-free (the suffix is the \
+                     parameter, so such a name could never resolve)"
+                );
+            }
+        }
+        let mut g = Self::global().write().expect("policy registry poisoned");
+        for candidate in std::iter::once(&name).chain(aliases.iter()) {
+            if g.entries.iter().any(|e| e.matches(candidate)) {
+                bail!("policy name `{candidate}` is already registered");
+            }
+        }
+        g.entries.push(Entry { name, aliases, factory: Box::new(factory) });
+        Ok(())
+    }
+
+    /// Resolve a policy string (`esa`, `SwitchML`, `esa-k=40000`, ...)
+    /// into a handle. The *name* resolves case-insensitively; the
+    /// `=<param>` suffix is handed to the factory verbatim (a policy may
+    /// legitimately take a case-sensitive parameter). Unknown names list
+    /// everything registered.
+    pub fn resolve(s: &str) -> Result<PolicyHandle> {
+        let trimmed = s.trim();
+        let (base, param) = match trimmed.split_once('=') {
+            Some((b, p)) => (b, Some(p)),
+            None => (trimmed, None),
+        };
+        let base = base.to_ascii_lowercase();
+        let base = base.as_str();
+        let g = Self::global().read().expect("policy registry poisoned");
+        match g.entries.iter().find(|e| e.matches(base)) {
+            Some(e) => (e.factory)(param),
+            None => bail!(
+                "unknown policy `{s}` (registered: {})",
+                g.entries.iter().map(|e| e.name.as_str()).collect::<Vec<_>>().join(", ")
+            ),
+        }
+    }
+
+    /// Primary names in registration order — the CLI help text and
+    /// unknown-name errors are generated from this, never hardcoded.
+    pub fn registered_names() -> Vec<String> {
+        let g = Self::global().read().expect("policy registry poisoned");
+        g.entries.iter().map(|e| e.name.clone()).collect()
+    }
+
+    /// `esa|atp|...` — the one-line form for usage strings.
+    pub fn help_names() -> String {
+        Self::registered_names().join("|")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The satellite round-trip contract: every registered name resolves,
+    /// and the resolved policy's `key()` is that name again.
+    #[test]
+    fn every_registered_name_round_trips_through_resolve() {
+        let names = PolicyRegistry::registered_names();
+        assert!(names.len() >= 7, "built-ins + esa-k must be pre-registered: {names:?}");
+        for name in &names {
+            let p = PolicyRegistry::resolve(name)
+                .unwrap_or_else(|e| panic!("registered `{name}` failed to resolve: {e}"));
+            assert_eq!(p.key(), name, "key must round-trip through resolve");
+            assert!(!p.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn aliases_and_case_resolve_to_the_same_policy() {
+        for (alias, key) in [
+            ("switch_ml", "switchml"),
+            ("SwitchML", "switchml"),
+            ("straw_always", "straw1"),
+            ("straw_coin", "straw2"),
+            ("byteps", "hostps"),
+            ("noina", "hostps"),
+            ("ESA", "esa"),
+            ("esa_k", "esa-k"),
+        ] {
+            assert_eq!(PolicyRegistry::resolve(alias).unwrap().key(), key, "{alias}");
+        }
+    }
+
+    #[test]
+    fn parameterized_resolution_builds_esa_k() {
+        let p = PolicyRegistry::resolve("esa-k=40000").unwrap();
+        assert_eq!(p.key(), "esa-k=40000");
+        assert_eq!(p.age_gate_ns(10_000), 40_000);
+        // the parameterized key round-trips too (sweep cells rely on it)
+        assert_eq!(PolicyRegistry::resolve(p.key()).unwrap().key(), p.key());
+    }
+
+    #[test]
+    fn unknown_policy_error_lists_registered_names() {
+        let err = PolicyRegistry::resolve("bogus").unwrap_err().to_string();
+        assert!(err.contains("unknown policy `bogus`"), "{err}");
+        for name in ["esa", "atp", "switchml", "straw1", "straw2", "hostps", "esa-k"] {
+            assert!(err.contains(name), "error must list `{name}`: {err}");
+        }
+    }
+
+    #[test]
+    fn builtins_reject_parameters() {
+        let err = PolicyRegistry::resolve("esa=3").unwrap_err().to_string();
+        assert!(err.contains("takes no parameter"), "{err}");
+    }
+
+    #[test]
+    fn parameters_keep_their_case_even_though_names_do_not() {
+        // name resolution is case-insensitive; the factory must see the
+        // parameter verbatim (a third-party policy may take e.g. a path)
+        let err = PolicyRegistry::resolve("ESA-K=NotANumber").unwrap_err().to_string();
+        assert!(err.contains("NotANumber"), "param must not be case-mangled: {err}");
+    }
+
+    #[test]
+    fn bad_aliases_are_rejected_at_registration() {
+        for aliases in [&["my=policy"][..], &[""][..]] {
+            let err = PolicyRegistry::register("fresh-name", aliases, |_| {
+                Ok(super::builtin::esa())
+            })
+            .unwrap_err()
+            .to_string();
+            assert!(err.contains("`=`-free"), "{aliases:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn duplicate_registration_is_rejected() {
+        let err = PolicyRegistry::register("esa", &[], |_| Ok(super::builtin::esa()))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("already registered"), "{err}");
+        let err = PolicyRegistry::register("fresh=bad", &[], |_| Ok(super::builtin::esa()))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("`=`-free"), "{err}");
+    }
+}

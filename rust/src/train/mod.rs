@@ -21,9 +21,10 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{ExperimentConfig, PolicyKind};
+use crate::config::ExperimentConfig;
 use crate::runtime::{Engine, HostTensor, LoadedGraph};
 use crate::sim::Simulation;
+use crate::switch::policy::PolicyHandle;
 use crate::util::fixed;
 use crate::util::rng::Rng;
 
@@ -32,7 +33,7 @@ use crate::util::rng::Rng;
 pub struct TrainerCfg {
     pub n_workers: usize,
     pub steps: u32,
-    pub policy: PolicyKind,
+    pub policy: PolicyHandle,
     pub seed: u64,
     /// Validate against the AOT `aggregate` graph every this many steps
     /// (0 = never).
@@ -46,7 +47,7 @@ impl Default for TrainerCfg {
         TrainerCfg {
             n_workers: 4,
             steps: 50,
-            policy: PolicyKind::Esa,
+            policy: crate::switch::policy::esa(),
             seed: 0,
             crosscheck_every: 10,
             log_every: 10,
@@ -228,8 +229,12 @@ impl Trainer {
     fn simulate_aggregation(&self, step_idx: u32, qgrads: &[Vec<i32>]) -> Result<(Vec<i32>, u64)> {
         let lanes = self.cfg.policy.lanes();
         debug_assert_eq!(self.flat_len % lanes, 0);
-        let mut cfg =
-            ExperimentConfig::synthetic(self.cfg.policy, "microbench", 1, self.cfg.n_workers);
+        let mut cfg = ExperimentConfig::synthetic(
+            self.cfg.policy.clone(),
+            "microbench",
+            1,
+            self.cfg.n_workers,
+        );
         cfg.seed = self.cfg.seed ^ (step_idx as u64) << 8;
         cfg.iterations = 1;
         cfg.jobs[0].tensor_bytes = Some((self.flat_len * 4) as u64);
@@ -282,6 +287,6 @@ mod tests {
         let c = TrainerCfg::default();
         assert!(c.n_workers >= 1);
         assert!(c.steps > 0);
-        assert_eq!(c.policy, PolicyKind::Esa);
+        assert_eq!(c.policy.key(), "esa");
     }
 }

@@ -24,11 +24,11 @@ pub mod priority;
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::config::PolicyKind;
 use crate::job::JobModel;
 use crate::net::Net;
 use crate::packet::{Packet, PacketKind, UNSTAMPED};
 use crate::ps::{RttEstimator, RTO_MIN_NS};
+use crate::switch::policy::{PolicyHandle, Recovery};
 use crate::util::rng::Rng;
 use crate::worker::priority::{priority_for, PriorityInputs};
 use crate::{NodeId, SimTime, WorkerId};
@@ -66,7 +66,7 @@ pub struct WorkerCfg {
     /// The job's fallback PS; `None` for SwitchML (no PS in that design).
     pub ps: Option<NodeId>,
     pub widx: WorkerId,
-    pub policy: PolicyKind,
+    pub policy: PolicyHandle,
     pub window_bytes: u64,
     pub max_window_bytes: u64,
     pub jitter_max_ns: SimTime,
@@ -310,7 +310,10 @@ impl Worker {
             };
             let at = self.comm_start + self.model.plan.avail_offset[k] + part_jitter;
             self.avail.push(at);
-            self.prio.push(priority_for(&self.inputs, p.layer as u32 + 1));
+            // the policy gets the last word on the wire priority
+            // (identity for every built-in)
+            self.prio
+                .push(self.cfg.policy.priority_stamp(priority_for(&self.inputs, p.layer as u32 + 1)));
             net.timer(at, self.cfg.node, TK_AVAIL | k as u64);
         }
         self.arm_rto(net);
@@ -376,8 +379,8 @@ impl Worker {
         let entry = self.entry_of(rel);
         let seq = self.abs_seq(rel);
         // BytePS baseline: no INA — gradients go straight to the PS.
-        let dst = if self.cfg.policy == PolicyKind::HostPs {
-            self.cfg.ps.expect("HostPs requires a PS")
+        let dst = if self.cfg.policy.bypass_switch() {
+            self.cfg.ps.expect("a switch-bypassing policy requires a PS")
         } else {
             self.cfg.switch
         };
@@ -491,17 +494,13 @@ impl Worker {
             }
         } else {
             // Out-of-order completion is NORMAL under hash-based INA
-            // (tasks complete in arbitrary order). ESA's reminder recovery
-            // is cheap and paced, so it keeps the paper's dupACK=3; the
-            // ATP/SwitchML resend path is destructive (it flushes switch
-            // partials), so its suspicion threshold scales with the window.
+            // (tasks complete in arbitrary order). The policy owns the
+            // suspicion threshold: ESA's reminder recovery is cheap and
+            // paced, so it keeps the paper's dupACK=3; the ATP/SwitchML
+            // resend path is destructive (it flushes switch partials), so
+            // theirs scales with the window.
             self.dupack += 1;
-            let threshold = match self.cfg.policy {
-                PolicyKind::Esa | PolicyKind::HostPs | PolicyKind::StrawAlways | PolicyKind::StrawCoin => {
-                    crate::ps::DUPACK_THRESHOLD
-                }
-                _ => (self.cwnd / 8).max(8),
-            };
+            let threshold = self.cfg.policy.send_threshold(self.cwnd);
             if self.dupack >= threshold
                 && self.sent[self.base as usize]
                 && !self.completed[self.base as usize]
@@ -549,8 +548,15 @@ impl Worker {
         if rel >= self.frags() || self.completed[rel as usize] || !self.sent[rel as usize] {
             return;
         }
-        match (self.cfg.policy, self.cfg.ps) {
-            (PolicyKind::Atp, _) | (PolicyKind::SwitchMl, _) | (_, None) => {
+        // A reminder needs a PS to send it to; policies without one
+        // (SwitchML by design, or a PS-less wiring) retransmit to the
+        // switch instead.
+        let reminder_ps = match (self.cfg.policy.recovery(), self.cfg.ps) {
+            (Recovery::ReminderToPs, Some(ps)) => Some(ps),
+            _ => None,
+        };
+        match reminder_ps {
+            None => {
                 let seq = self.abs_seq(rel);
                 let entry = self.entry_of(rel);
                 let mut pkt = Packet::gradient(
@@ -567,11 +573,14 @@ impl Worker {
                 // ATP resend semantics: the switch must not re-aggregate a
                 // resend; it evicts any matching partial toward the PS and
                 // forwards the resend there, resolving split aggregations.
-                pkt.resend = self.cfg.policy == PolicyKind::Atp;
+                pkt.resend = matches!(
+                    self.cfg.policy.recovery(),
+                    Recovery::ResendToSwitch { mark_resend: true }
+                );
                 pkt.values = self.payload_slice(rel);
                 net.transmit(self.cfg.node, pkt);
             }
-            (_, Some(ps)) => {
+            Some(ps) => {
                 let seq = self.abs_seq(rel);
                 let rem = Packet::reminder(
                     self.model.id,
@@ -764,11 +773,12 @@ impl Worker {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{NetworkConfig, PolicyKind};
+    use crate::config::NetworkConfig;
     use crate::job::dnn::profile_by_name;
+    use crate::switch::policy::{atp, esa, switchml};
     use crate::net::{Event, Topology};
 
-    fn mkworld(policy: PolicyKind) -> (Net, Worker) {
+    fn mkworld(policy: PolicyHandle) -> (Net, Worker) {
         let net = Net::new(Topology::star(4), NetworkConfig::default(), Rng::new(1));
         let model = Arc::new(JobModel::new(
             0,
@@ -823,7 +833,7 @@ mod tests {
 
     #[test]
     fn start_sends_up_to_window() {
-        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        let (mut net, mut w) = mkworld(esa());
         w.start(&mut net);
         // microbench 4096B / 256B payload = 16 frags; window = 4 pkts
         let sends = drain_sends(&mut net);
@@ -837,7 +847,7 @@ mod tests {
 
     #[test]
     fn window_slides_on_expected_seq() {
-        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        let (mut net, mut w) = mkworld(esa());
         w.start(&mut net);
         drain_sends(&mut net);
         w.handle(&mut net, result_for(0, 1));
@@ -849,7 +859,7 @@ mod tests {
 
     #[test]
     fn out_of_order_results_do_not_slide_base() {
-        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        let (mut net, mut w) = mkworld(esa());
         w.start(&mut net);
         drain_sends(&mut net);
         w.handle(&mut net, result_for(1, 1));
@@ -863,7 +873,7 @@ mod tests {
 
     #[test]
     fn esa_dupack_3_sends_reminder_to_ps() {
-        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        let (mut net, mut w) = mkworld(esa());
         w.start(&mut net);
         drain_sends(&mut net);
         // ESA keeps the paper's dupACK threshold of 3 (reminder recovery
@@ -880,7 +890,7 @@ mod tests {
 
     #[test]
     fn atp_dupacks_retransmit_to_switch_with_resend_flag() {
-        let (mut net, mut w) = mkworld(PolicyKind::Atp);
+        let (mut net, mut w) = mkworld(atp());
         w.start(&mut net);
         drain_sends(&mut net);
         for s in 1..=9 {
@@ -896,7 +906,7 @@ mod tests {
 
     #[test]
     fn rto_fires_recovery_with_shallow_backoff() {
-        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        let (mut net, mut w) = mkworld(esa());
         w.start(&mut net);
         drain_sends(&mut net);
         let cwnd0 = w.cwnd;
@@ -921,7 +931,7 @@ mod tests {
 
     #[test]
     fn ecn_mark_halves_window_once_per_guard() {
-        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        let (mut net, mut w) = mkworld(esa());
         w.cwnd = 16;
         w.max_cwnd = 64;
         w.start(&mut net);
@@ -938,7 +948,7 @@ mod tests {
 
     #[test]
     fn nack_answers_with_cached_result_when_pulled() {
-        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        let (mut net, mut w) = mkworld(esa());
         w.start(&mut net);
         drain_sends(&mut net);
         w.handle(&mut net, result_for(0, 1));
@@ -969,7 +979,7 @@ mod tests {
 
     #[test]
     fn nack_retransmits_gradient_when_not_pulled() {
-        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        let (mut net, mut w) = mkworld(esa());
         w.start(&mut net);
         drain_sends(&mut net);
         let nack = Packet {
@@ -1000,7 +1010,7 @@ mod tests {
 
     #[test]
     fn iteration_completes_and_records_jct() {
-        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        let (mut net, mut w) = mkworld(esa());
         w.start(&mut net);
         drain_sends(&mut net);
         for s in 0..16 {
@@ -1016,7 +1026,7 @@ mod tests {
 
     #[test]
     fn stale_results_from_previous_iteration_ignored() {
-        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        let (mut net, mut w) = mkworld(esa());
         w.start(&mut net);
         drain_sends(&mut net);
         for s in 0..16 {
@@ -1032,7 +1042,7 @@ mod tests {
 
     #[test]
     fn train_mode_payload_flows_and_collects() {
-        let (mut net, mut w) = mkworld(PolicyKind::Esa);
+        let (mut net, mut w) = mkworld(esa());
         let frags = w.frags() as usize;
         let payload: Vec<i32> = (0..frags * 64).map(|i| i as i32).collect();
         w.set_payload(Arc::new(payload.clone()));
@@ -1067,7 +1077,7 @@ mod tests {
             switch: 0,
             ps: Some(3),
             widx: 0,
-            policy: PolicyKind::Esa,
+            policy: esa(),
             window_bytes: 60 * 1024,
             max_window_bytes: 240 * 1024,
             jitter_max_ns: 0,
@@ -1096,7 +1106,7 @@ mod tests {
             switch: 0,
             ps: None,
             widx: 0,
-            policy: PolicyKind::SwitchMl,
+            policy: switchml(),
             window_bytes: 60 * 1024,
             max_window_bytes: 240 * 1024,
             jitter_max_ns: 0,

@@ -12,8 +12,9 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use esa::config::{ExperimentConfig, PolicyKind};
+use esa::config::ExperimentConfig;
 use esa::sim::Simulation;
+use esa::switch::policy::esa;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
@@ -46,7 +47,7 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 fn steady_state_dispatch_allocates_approximately_never() {
     // Clean ESA run: no loss, no contention, timing-only payloads — the
     // common path (gradient → switch aggregate → result → worker).
-    let mut cfg = ExperimentConfig::synthetic(PolicyKind::Esa, "microbench", 1, 4);
+    let mut cfg = ExperimentConfig::synthetic(esa(), "microbench", 1, 4);
     cfg.iterations = 4;
     cfg.seed = 21;
     cfg.jitter_max_ns = 0;

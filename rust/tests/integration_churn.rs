@@ -5,8 +5,9 @@
 //! region reclamation (a leaked region would starve later admissions and
 //! leave arrivals unfinished).
 
-use esa::config::{ChurnKnobs, PolicyKind};
+use esa::config::ChurnKnobs;
 use esa::sim::churn::{run_churn, ChurnReport, ChurnSpec};
+use esa::switch::policy::{atp, esa, switchml};
 use esa::USEC;
 
 /// A contended scenario built so the static baseline's structural cost —
@@ -21,7 +22,7 @@ use esa::USEC;
 fn contended() -> ChurnSpec {
     let mut spec = ChurnSpec::quick();
     spec.name = "itest".into();
-    spec.policies = vec![PolicyKind::Esa, PolicyKind::Atp, PolicyKind::SwitchMl];
+    spec.policies = vec![esa(), atp(), switchml()];
     spec.racks = 2;
     spec.n_jobs = 6;
     spec.rate_per_sec = 50_000.0;
@@ -34,12 +35,12 @@ fn contended() -> ChurnSpec {
     spec
 }
 
-fn policy(report: &ChurnReport, p: PolicyKind) -> &esa::sim::churn::PolicyChurn {
+fn policy<'r>(report: &'r ChurnReport, key: &str) -> &'r esa::sim::churn::PolicyChurn {
     report
         .per_policy
         .iter()
-        .find(|x| x.policy == p)
-        .unwrap_or_else(|| panic!("{p:?} missing from report"))
+        .find(|x| x.policy.key() == key)
+        .unwrap_or_else(|| panic!("{key} missing from report"))
 }
 
 #[test]
@@ -67,7 +68,7 @@ fn churn_json_is_byte_deterministic_across_runs() {
 fn arrivals_interleave_across_racks() {
     let report = run_churn(&contended()).unwrap();
     for p in &report.per_policy {
-        if p.policy == PolicyKind::Esa {
+        if p.policy.key() == "esa" {
             // 2 racks + edge: every stage reported, both racks carried
             // gradient traffic (each job's 2 workers straddle the racks)
             assert_eq!(p.metrics.switches.len(), 3);
@@ -101,8 +102,8 @@ fn every_arrival_completes_so_no_region_leaks() {
 #[test]
 fn esa_reclaims_what_the_static_baseline_leaves_idle() {
     let report = run_churn(&contended()).unwrap();
-    let esa = policy(&report, PolicyKind::Esa);
-    let sml = policy(&report, PolicyKind::SwitchMl);
+    let esa = policy(&report, "esa");
+    let sml = policy(&report, "switchml");
 
     // ESA: a shared pool reserves nothing beyond live partials — freed
     // slots are instantly available to every running tenant.
@@ -149,8 +150,8 @@ fn esa_reclaims_what_the_static_baseline_leaves_idle() {
 #[test]
 fn jct_gap_under_churn_favors_esa_over_static_partitioning() {
     let report = run_churn(&contended()).unwrap();
-    let esa = policy(&report, PolicyKind::Esa);
-    let sml = policy(&report, PolicyKind::SwitchMl);
+    let esa = policy(&report, "esa");
+    let sml = policy(&report, "switchml");
     // Queued arrivals pay whole-job waits under the static baseline; ESA
     // admits immediately and resolves contention on the data plane.
     assert!(

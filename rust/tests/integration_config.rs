@@ -3,8 +3,9 @@
 
 use std::path::Path;
 
-use esa::config::{ExperimentConfig, PolicyKind};
+use esa::config::ExperimentConfig;
 use esa::sim::Simulation;
+use esa::switch::policy::PolicyRegistry;
 
 #[test]
 fn shipped_configs_parse_and_validate() {
@@ -20,7 +21,7 @@ fn shipped_configs_parse_and_validate() {
 #[test]
 fn fig8_point_matches_paper_parameters() {
     let cfg = ExperimentConfig::from_file(Path::new("configs/fig8_point.toml")).unwrap();
-    assert_eq!(cfg.policy, PolicyKind::Esa);
+    assert_eq!(cfg.policy.key(), "esa");
     assert_eq!(cfg.jobs.len(), 8);
     assert!(cfg.jobs.iter().all(|j| j.n_workers == 8 && j.model == "dnn_a"));
     assert_eq!(cfg.switch.memory_bytes, 5 * 1024 * 1024);
@@ -46,7 +47,7 @@ fn config_policy_override_through_table() {
     use esa::config::parse_toml;
     let t = parse_toml("policy = \"straw2\"\n[job.x]\nmodel = \"dnn_b\"\nworkers = 2").unwrap();
     let cfg = ExperimentConfig::from_table(&t).unwrap();
-    assert_eq!(cfg.policy, PolicyKind::StrawCoin);
+    assert_eq!(cfg.policy.key(), "straw2");
     assert_eq!(cfg.jobs[0].model, "dnn_b");
 }
 
@@ -56,6 +57,11 @@ fn bad_configs_are_rejected_with_context() {
     let t = parse_toml("policy = \"not-a-policy\"").unwrap();
     let err = ExperimentConfig::from_table(&t).unwrap_err().to_string();
     assert!(err.contains("not-a-policy"), "{err}");
+    // unknown-policy errors are generated from the registry, not a
+    // hardcoded list — every registered name must appear
+    for name in PolicyRegistry::registered_names() {
+        assert!(err.contains(&name), "error must list `{name}`: {err}");
+    }
 
     let t = parse_toml("[job.x]\nworkers = 99").unwrap();
     assert!(ExperimentConfig::from_table(&t).is_err(), "bitmap width limit");

@@ -3,11 +3,12 @@
 //! and end-to-end multi-rack simulations under every INA policy with
 //! per-switch stats reporting.
 
-use esa::config::{ExperimentConfig, PolicyKind};
+use esa::config::ExperimentConfig;
 use esa::net::{Topology, SWITCH_NODE};
 use esa::sim::Simulation;
+use esa::switch::policy::{all_ina, esa, hostps, PolicyHandle, PolicyRegistry};
 
-fn cfg(policy: PolicyKind, racks: usize, jobs: usize, workers: usize) -> ExperimentConfig {
+fn cfg(policy: PolicyHandle, racks: usize, jobs: usize, workers: usize) -> ExperimentConfig {
     let mut c = ExperimentConfig::synthetic(policy, "microbench", jobs, workers);
     c.racks = racks;
     c.iterations = 2;
@@ -92,16 +93,11 @@ fn star_equals_two_tier_with_one_rack() {
 
 #[test]
 fn two_tier_completes_under_every_ina_policy() {
-    for policy in [
-        PolicyKind::Esa,
-        PolicyKind::Atp,
-        PolicyKind::SwitchMl,
-        PolicyKind::StrawAlways,
-        PolicyKind::StrawCoin,
-        PolicyKind::HostPs,
-    ] {
+    let mut policies = all_ina();
+    policies.push(hostps());
+    for policy in policies {
         for racks in [2usize, 4] {
-            let m = Simulation::run_experiment(cfg(policy, racks, 2, 4))
+            let m = Simulation::run_experiment(cfg(policy.clone(), racks, 2, 4))
                 .unwrap_or_else(|e| panic!("{policy:?} racks={racks}: {e}"));
             assert!(!m.truncated, "{policy:?} racks={racks} stalled");
             assert_eq!(m.jobs.len(), 2, "{policy:?} racks={racks}");
@@ -114,7 +110,7 @@ fn two_tier_completes_under_every_ina_policy() {
 
 #[test]
 fn per_switch_stats_are_reported() {
-    let mut sim = Simulation::new(cfg(PolicyKind::Esa, 2, 2, 4)).unwrap();
+    let mut sim = Simulation::new(cfg(esa(), 2, 2, 4)).unwrap();
     let m = sim.run();
     assert!(!m.truncated);
     // edge + one entry per rack switch
@@ -159,7 +155,7 @@ fn racks_one_is_the_single_switch_star() {
     // (The rng stream order of the seed is additionally locked by the
     // deterministic-JCT tests in sim::tests and integration_sim.)
     assert_eq!(ExperimentConfig::default().racks, 1);
-    let m = Simulation::run_experiment(cfg(PolicyKind::Esa, 1, 2, 4)).unwrap();
+    let m = Simulation::run_experiment(cfg(esa(), 1, 2, 4)).unwrap();
     assert!(!m.truncated);
     assert_eq!(m.switches.len(), 1);
     assert_eq!(m.switches[0].tier, "root");
@@ -192,16 +188,10 @@ fn racks_one_is_the_single_switch_star() {
 /// class that samples switch randomness — see `sim::rng_stream`).
 #[test]
 fn golden_event_core_swap_is_bit_identical_for_all_policies() {
-    for policy in [
-        PolicyKind::Esa,
-        PolicyKind::Atp,
-        PolicyKind::SwitchMl,
-        PolicyKind::StrawAlways,
-        PolicyKind::StrawCoin,
-    ] {
+    for policy in all_ina() {
         for racks in [1usize, 4] {
             let run = || {
-                let mut sim = Simulation::new(cfg(policy, racks, 2, 4)).unwrap();
+                let mut sim = Simulation::new(cfg(policy.clone(), racks, 2, 4)).unwrap();
                 sim.net.queue.enable_shadow();
                 sim.run()
             };
@@ -230,7 +220,7 @@ fn golden_event_core_swap_is_bit_identical_for_all_policies() {
 /// The run must complete and replay exactly.
 #[test]
 fn rng_streams_stay_disjoint_at_128_workers() {
-    let mut c = ExperimentConfig::synthetic(PolicyKind::Esa, "microbench", 16, 8);
+    let mut c = ExperimentConfig::synthetic(esa(), "microbench", 16, 8);
     c.racks = 4;
     c.iterations = 1;
     c.seed = 33;
@@ -249,8 +239,8 @@ fn rng_streams_stay_disjoint_at_128_workers() {
 
 #[test]
 fn two_tier_is_deterministic_across_runs() {
-    let a = Simulation::run_experiment(cfg(PolicyKind::Esa, 3, 2, 6)).unwrap();
-    let b = Simulation::run_experiment(cfg(PolicyKind::Esa, 3, 2, 6)).unwrap();
+    let a = Simulation::run_experiment(cfg(esa(), 3, 2, 6)).unwrap();
+    let b = Simulation::run_experiment(cfg(esa(), 3, 2, 6)).unwrap();
     assert!(!a.truncated);
     assert_eq!(a.events, b.events);
     assert_eq!(a.sim_ns, b.sim_ns);
@@ -261,7 +251,7 @@ fn esa_preemption_operates_at_both_tiers_under_contention() {
     // structured layered jobs on a scarce pool force collisions; with 2
     // racks the collision machinery (preempt or passthrough) must engage
     // somewhere in the fabric and the run must still complete
-    let mut c = ExperimentConfig::synthetic(PolicyKind::Esa, "dnn_a", 4, 4);
+    let mut c = ExperimentConfig::synthetic(esa(), "dnn_a", 4, 4);
     c.racks = 2;
     c.iterations = 2;
     c.seed = 5;
@@ -283,7 +273,7 @@ fn esa_preemption_operates_at_both_tiers_under_contention() {
 fn two_tier_values_mode_aggregation_is_exact() {
     // real payloads through a 2-rack ESA fabric: the collected sums must
     // equal the wrapping reference — rack partial folding is lossless
-    let mut c = cfg(PolicyKind::Esa, 2, 1, 4);
+    let mut c = cfg(esa(), 2, 1, 4);
     c.iterations = 1;
     c.jobs[0].tensor_bytes = Some(64 * 1024);
     let mut sim = Simulation::new(c).unwrap();
@@ -307,7 +297,7 @@ fn two_tier_values_mode_aggregation_is_exact() {
 fn two_tier_recovers_from_loss() {
     // the reminder machinery composes across tiers: worker reminder → PS →
     // edge flush + fan-down → rack flushes → NACK selective retransmission
-    let mut c = cfg(PolicyKind::Esa, 2, 1, 4);
+    let mut c = cfg(esa(), 2, 1, 4);
     c.net.loss_prob = 0.005;
     let m = Simulation::run_experiment(c).unwrap();
     assert!(!m.truncated, "two-tier loss recovery must converge");
@@ -316,7 +306,7 @@ fn two_tier_recovers_from_loss() {
 
 #[test]
 fn atp_two_tier_recovers_from_loss() {
-    let mut c = cfg(PolicyKind::Atp, 2, 1, 4);
+    let mut c = cfg(PolicyRegistry::resolve("atp").unwrap(), 2, 1, 4);
     c.net.loss_prob = 0.005;
     let m = Simulation::run_experiment(c).unwrap();
     assert!(!m.truncated, "ATP resend semantics must survive the hierarchy");
@@ -325,7 +315,7 @@ fn atp_two_tier_recovers_from_loss() {
 #[test]
 fn more_racks_do_not_break_structured_jobs() {
     // dnn jobs with layers + priorities across a 4-rack fabric
-    let mut c = ExperimentConfig::synthetic(PolicyKind::Esa, "dnn_a", 2, 8);
+    let mut c = ExperimentConfig::synthetic(esa(), "dnn_a", 2, 8);
     c.racks = 4;
     c.iterations = 2;
     c.seed = 9;
@@ -336,4 +326,84 @@ fn more_racks_do_not_break_structured_jobs() {
     assert!(!m.truncated);
     assert_eq!(m.jobs.len(), 2);
     assert_eq!(m.switches.len(), 5, "edge + 4 racks");
+}
+
+// ---------------------------------------------------------------------
+// Policy-parity matrix: the trait redesign must be byte-invisible
+// ---------------------------------------------------------------------
+
+/// All six built-ins × racks {1, 4} through the `SchedulerPolicy` trait
+/// dispatch. Two legs per cell:
+///
+/// 1. the registry path (`PolicyRegistry::resolve("<key>")`) and the
+///    direct-constructor path must produce bit-identical metrics — policy
+///    identity is behavioral, not an enum branch;
+/// 2. each run replays exactly (the same determinism contract the
+///    pre-redesign goldens in this file and in `integration_sweep.rs` /
+///    `integration_churn.rs` pin — those suites run unchanged against the
+///    trait dispatch, which is the before/after golden parity).
+#[test]
+fn policy_parity_matrix_trait_dispatch_is_bit_identical() {
+    let mut policies = all_ina();
+    policies.push(hostps());
+    for policy in policies {
+        for racks in [1usize, 4] {
+            let direct = Simulation::run_experiment(cfg(policy.clone(), racks, 2, 4))
+                .unwrap_or_else(|e| panic!("{policy:?} racks={racks}: {e}"));
+            let resolved = PolicyRegistry::resolve(policy.key())
+                .unwrap_or_else(|e| panic!("{policy:?} must be registered: {e}"));
+            let via_registry =
+                Simulation::run_experiment(cfg(resolved, racks, 2, 4)).unwrap();
+            assert!(!direct.truncated, "{policy:?} racks={racks} stalled");
+            assert_eq!(direct.sim_ns, via_registry.sim_ns, "{policy:?} racks={racks}");
+            assert_eq!(direct.events, via_registry.events, "{policy:?} racks={racks}");
+            assert_eq!(
+                direct.avg_jct_ms().to_bits(),
+                via_registry.avg_jct_ms().to_bits(),
+                "{policy:?} racks={racks}: registry resolution must not change a single bit"
+            );
+            assert_eq!(
+                direct.avg_transit_ns.to_bits(),
+                via_registry.avg_transit_ns.to_bits(),
+                "{policy:?} racks={racks}"
+            );
+            let (a, b) = (&direct.switches, &via_registry.switches);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.stats.preemptions, y.stats.preemptions, "{policy:?} racks={racks}");
+                assert_eq!(x.stats.completions, y.stats.completions, "{policy:?} racks={racks}");
+                assert_eq!(x.stats.passthroughs, y.stats.passthroughs, "{policy:?} racks={racks}");
+            }
+        }
+    }
+}
+
+/// `esa-k` (the extension-point proof) composes with the fabric exactly
+/// like ESA: with the gate pinned to the driver default (base RTT =
+/// 10 µs), `esa-k=10000` is bit-identical to `esa`; with an effectively
+/// infinite gate, aging never fires and behavior may legitimately drift.
+#[test]
+fn esa_k_with_base_rtt_gate_matches_esa_bit_for_bit() {
+    for racks in [1usize, 4] {
+        let esa_run = Simulation::run_experiment(cfg(esa(), racks, 2, 4)).unwrap();
+        let k_run = Simulation::run_experiment(cfg(
+            PolicyRegistry::resolve("esa-k=10000").unwrap(),
+            racks,
+            2,
+            4,
+        ))
+        .unwrap();
+        assert!(!esa_run.truncated && !k_run.truncated);
+        assert_eq!(esa_run.sim_ns, k_run.sim_ns, "racks={racks}");
+        assert_eq!(esa_run.events, k_run.events, "racks={racks}");
+        assert_eq!(
+            esa_run.avg_jct_ms().to_bits(),
+            k_run.avg_jct_ms().to_bits(),
+            "racks={racks}: a 10 µs gate IS the ESA default"
+        );
+    }
+    // the bare default (20 µs) still completes end-to-end
+    let m = Simulation::run_experiment(cfg(PolicyRegistry::resolve("esa-k").unwrap(), 2, 2, 4))
+        .unwrap();
+    assert!(!m.truncated, "esa-k default gate stalled");
 }

@@ -5,10 +5,11 @@
 
 use std::sync::Arc;
 
-use esa::config::{ExperimentConfig, PolicyKind};
+use esa::config::ExperimentConfig;
 use esa::sim::Simulation;
+use esa::switch::policy::{atp, esa, hostps, PolicyHandle};
 
-fn cfg(policy: PolicyKind, loss: f64, jobs: usize, workers: usize) -> ExperimentConfig {
+fn cfg(policy: PolicyHandle, loss: f64, jobs: usize, workers: usize) -> ExperimentConfig {
     let mut c = ExperimentConfig::synthetic(policy, "microbench", jobs, workers);
     c.iterations = 2;
     c.seed = 1234;
@@ -21,7 +22,7 @@ fn cfg(policy: PolicyKind, loss: f64, jobs: usize, workers: usize) -> Experiment
 
 #[test]
 fn esa_recovers_from_light_loss() {
-    let m = Simulation::run_experiment(cfg(PolicyKind::Esa, 0.001, 2, 4)).unwrap();
+    let m = Simulation::run_experiment(cfg(esa(), 0.001, 2, 4)).unwrap();
     assert!(!m.truncated);
     assert_eq!(m.jobs.len(), 2);
 }
@@ -30,25 +31,25 @@ fn esa_recovers_from_light_loss() {
 fn esa_recovers_from_heavy_loss() {
     // 2% per hop is far beyond any DC reality — a stress test for the
     // reminder machinery (case 1/3/4 + NACK selective retransmission)
-    let m = Simulation::run_experiment(cfg(PolicyKind::Esa, 0.02, 1, 4)).unwrap();
+    let m = Simulation::run_experiment(cfg(esa(), 0.02, 1, 4)).unwrap();
     assert!(!m.truncated, "reminder machinery must converge under heavy loss");
 }
 
 #[test]
 fn atp_recovers_via_resend_semantics() {
-    let m = Simulation::run_experiment(cfg(PolicyKind::Atp, 0.005, 2, 4)).unwrap();
+    let m = Simulation::run_experiment(cfg(atp(), 0.005, 2, 4)).unwrap();
     assert!(!m.truncated);
 }
 
 #[test]
 fn hostps_recovers_via_ps_machinery() {
-    let m = Simulation::run_experiment(cfg(PolicyKind::HostPs, 0.005, 2, 4)).unwrap();
+    let m = Simulation::run_experiment(cfg(hostps(), 0.005, 2, 4)).unwrap();
     assert!(!m.truncated);
 }
 
 #[test]
 fn recovery_machinery_actually_fires() {
-    let mut c = cfg(PolicyKind::Esa, 0.01, 1, 4);
+    let mut c = cfg(esa(), 0.01, 1, 4);
     c.iterations = 1;
     let mut sim = Simulation::new(c).unwrap();
     let m = sim.run();
@@ -67,7 +68,7 @@ fn loss_preserves_exact_aggregation_values() {
     // The §5.3 headline: *all-case correctness*. Drop 1% of packets and
     // verify the aggregated values still match the wrapping reference
     // exactly — no double-counted retransmissions, no lost contributions.
-    let mut c = cfg(PolicyKind::Esa, 0.01, 1, 4);
+    let mut c = cfg(esa(), 0.01, 1, 4);
     c.iterations = 1;
     let mut sim = Simulation::new(c).unwrap();
     let frags = 256 * 1024 / 256;
@@ -93,7 +94,7 @@ fn loss_preserves_exact_aggregation_values() {
 
 #[test]
 fn atp_loss_preserves_exact_values_too() {
-    let mut c = cfg(PolicyKind::Atp, 0.01, 1, 4);
+    let mut c = cfg(atp(), 0.01, 1, 4);
     c.iterations = 1;
     let mut sim = Simulation::new(c).unwrap();
     let frags = 256 * 1024 / 256;
@@ -115,7 +116,7 @@ fn atp_loss_preserves_exact_values_too() {
 #[test]
 fn loss_with_contention_and_preemption_remains_exact() {
     // the hardest case: loss + preemption + partials merging at the PS
-    let mut c = cfg(PolicyKind::Esa, 0.005, 2, 4);
+    let mut c = cfg(esa(), 0.005, 2, 4);
     c.switch.memory_bytes = 32 * 1024; // ~117 slots → constant collisions
     c.iterations = 1;
     let mut sim = Simulation::new(c).unwrap();
@@ -146,7 +147,7 @@ fn loss_sweep_jct_degrades_gracefully() {
     // JCT should grow smoothly with loss, not cliff into timeouts
     let mut last = 0.0f64;
     for loss in [0.0, 0.001, 0.01] {
-        let m = Simulation::run_experiment(cfg(PolicyKind::Esa, loss, 1, 4)).unwrap();
+        let m = Simulation::run_experiment(cfg(esa(), loss, 1, 4)).unwrap();
         assert!(!m.truncated, "loss={loss}");
         let jct = m.avg_jct_ms();
         assert!(jct.is_finite());

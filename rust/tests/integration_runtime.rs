@@ -3,8 +3,8 @@
 //! clear message when artifacts are absent (CI runs `make test`, which
 //! builds them first).
 
-use esa::config::PolicyKind;
 use esa::runtime::{ArtifactDir, Engine, HostTensor};
+use esa::switch::policy::{atp, esa, hostps};
 use esa::train::{Trainer, TrainerCfg};
 use esa::util::fixed;
 
@@ -108,7 +108,7 @@ fn short_training_reduces_loss_and_crosschecks() {
     let cfg = TrainerCfg {
         n_workers: 2,
         steps: 8,
-        policy: PolicyKind::Esa,
+        policy: esa(),
         seed: 3,
         crosscheck_every: 4, // exercises the Pallas cross-check path
         log_every: 0,
@@ -143,8 +143,8 @@ fn fig6a_equivalence_ina_vs_plain_ps_training() {
         t.run().unwrap();
         t.params().to_vec()
     };
-    let esa = mk(PolicyKind::Esa);
-    let byteps = mk(PolicyKind::HostPs);
+    let esa = mk(esa());
+    let byteps = mk(hostps());
     assert_eq!(esa.len(), byteps.len());
     let diffs = esa.iter().zip(&byteps).filter(|(a, b)| a != b).count();
     assert_eq!(diffs, 0, "{diffs} params diverged between ESA and no-INA");
@@ -166,5 +166,5 @@ fn training_through_atp_matches_esa_numerically() {
         t.run().unwrap();
         t.params().to_vec()
     };
-    assert_eq!(mk(PolicyKind::Esa), mk(PolicyKind::Atp));
+    assert_eq!(mk(esa()), mk(atp()));
 }

@@ -1,10 +1,11 @@
 //! Integration: the simulation driver, metrics definitions and figure
 //! harnesses at reduced scale.
 
-use esa::config::{ExperimentConfig, PolicyKind};
+use esa::config::ExperimentConfig;
 use esa::coordinator::run_parallel;
 use esa::sim::figures::{self, Scale};
 use esa::sim::Simulation;
+use esa::switch::policy::{atp, esa, switchml};
 
 fn tiny() -> Scale {
     Scale { tensor: 0.02, iterations: 1, seed: 5 }
@@ -31,7 +32,7 @@ fn figure_harnesses_run_end_to_end_at_tiny_scale() {
 fn jct_definition_matches_paper_for_known_case() {
     // single job, no jitter, no contention: JCT must be at least the
     // serialization floor and all iterations near-identical
-    let mut cfg = ExperimentConfig::synthetic(PolicyKind::Esa, "dnn_a", 1, 2);
+    let mut cfg = ExperimentConfig::synthetic(esa(), "dnn_a", 1, 2);
     cfg.iterations = 3;
     cfg.jitter_max_ns = 0;
     cfg.start_spread_ns = 0;
@@ -65,9 +66,8 @@ fn utilization_is_bounded_and_ordered() {
         }
         Simulation::run_experiment(cfg).unwrap()
     };
-    for p in [PolicyKind::Esa, PolicyKind::Atp, PolicyKind::SwitchMl] {
-        let m = mk(p);
-        let u = m.avg_utilization(100.0);
+    for p in [esa(), atp(), switchml()] {
+        let u = mk(p.clone()).avg_utilization(100.0);
         assert!((0.0..=1.0).contains(&u), "{p:?}: {u}");
     }
 }
@@ -75,11 +75,8 @@ fn utilization_is_bounded_and_ordered() {
 #[test]
 fn parallel_runner_is_deterministic_vs_serial() {
     let mut cfgs = Vec::new();
-    for (i, p) in [PolicyKind::Esa, PolicyKind::Atp, PolicyKind::SwitchMl]
-        .iter()
-        .enumerate()
-    {
-        let mut c = ExperimentConfig::synthetic(*p, "microbench", 2, 2);
+    for (i, p) in [esa(), atp(), switchml()].into_iter().enumerate() {
+        let mut c = ExperimentConfig::synthetic(p, "microbench", 2, 2);
         c.iterations = 1;
         c.seed = 77 + i as u64;
         for j in &mut c.jobs {
@@ -102,7 +99,7 @@ fn parallel_runner_is_deterministic_vs_serial() {
 #[test]
 fn seed_changes_jitter_but_not_totals() {
     let mk = |seed| {
-        let mut c = ExperimentConfig::synthetic(PolicyKind::Esa, "microbench", 1, 4);
+        let mut c = ExperimentConfig::synthetic(esa(), "microbench", 1, 4);
         c.iterations = 1;
         c.seed = seed;
         c.jobs[0].tensor_bytes = Some(512 * 1024);
@@ -126,7 +123,7 @@ fn trace_driven_job_admission() {
 
     let mut rng = Rng::new(9);
     let trace = generate(&TraceConfig::default(), 50, &mut rng);
-    let mut reg = Registry::new(PolicyKind::Esa, &SwitchConfig::default(), 512);
+    let mut reg = Registry::new(esa(), &SwitchConfig::default(), 512);
     for e in &trace {
         let profile = profile_by_name(&e.model, None).unwrap();
         let (_, state) = reg.submit(profile, e.n_workers, e.arrival_ns).unwrap();

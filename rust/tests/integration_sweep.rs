@@ -3,7 +3,6 @@
 //! configs, and the committed golden snapshot for the CI quick grid
 //! (all five INA policies × racks {1, 4}).
 
-use esa::config::PolicyKind;
 use esa::sim::sweep::{run_sweep, SweepConfig};
 
 /// The determinism contract the CI sweep gate enforces end-to-end:
@@ -32,7 +31,7 @@ fn quick_sweep_covers_five_policies_and_both_fabrics_cleanly() {
     let esa_4racks = report
         .cells
         .iter()
-        .find(|c| c.spec.policy == PolicyKind::Esa && c.spec.racks == 4)
+        .find(|c| c.spec.policy.key() == "esa" && c.spec.racks == 4)
         .expect("ESA racks=4 cell");
     assert!(
         esa_4racks.edge_partial_pkts > 0.0,
@@ -104,4 +103,39 @@ fn quick_sweep_matches_committed_golden() {
         "quick sweep drifted from the blessed golden snapshot — if the change is \
          intentional, regenerate via `make bless` and commit"
     );
+}
+
+/// The `esa-k` axis rides the sweep grid like any other policy: cells are
+/// distinguished by the parameterized key, run cleanly, and the artifact
+/// bytes stay identical across thread counts (the same contract the CI
+/// bench-smoke esa-k step enforces end-to-end through the binary).
+#[test]
+fn esa_k_axis_is_byte_deterministic_across_thread_counts() {
+    let cfg = SweepConfig::parse_str(
+        r#"
+        name = "esa_k_axis"
+        iterations = 1
+        [axes]
+        policies = ["esa", "esa-k=5000", "esa-k=40000"]
+        workers = [4]
+        jobs = [2]
+        seeds = [42]
+        tensor_kb = [256]
+        [models]
+        names = ["microbench"]
+        "#,
+    )
+    .unwrap();
+    let a = run_sweep(&cfg, 1).unwrap();
+    let b = run_sweep(&cfg, 4).unwrap();
+    assert_eq!(a.to_json(), b.to_json(), "esa-k cells must not depend on thread count");
+    assert_eq!(a.cells.len(), 3);
+    for cell in &a.cells {
+        assert_eq!(cell.truncated, 0, "{} stalled", cell.spec.policy.key());
+        assert!(cell.jct_ms_mean > 0.0);
+    }
+    // the parameter is the cell identity: keys survive into the artifact
+    let json = a.to_json();
+    assert!(json.contains("\"esa-k=5000\""), "{json}");
+    assert!(json.contains("\"esa-k=40000\""), "{json}");
 }

@@ -2,11 +2,12 @@
 //! event fabric) across policies, asserting the paper's qualitative
 //! behaviours and cross-policy invariants.
 
-use esa::config::{ExperimentConfig, PolicyKind};
+use esa::config::ExperimentConfig;
 use esa::sim::Simulation;
+use esa::switch::policy::{all_ina, atp, esa, hostps, switchml, PolicyHandle};
 use esa::MSEC;
 
-fn cfg(policy: PolicyKind, model: &str, jobs: usize, workers: usize, tensor_kb: u64) -> ExperimentConfig {
+fn cfg(policy: PolicyHandle, model: &str, jobs: usize, workers: usize, tensor_kb: u64) -> ExperimentConfig {
     let mut c = ExperimentConfig::synthetic(policy, model, jobs, workers);
     c.iterations = 2;
     c.seed = 5;
@@ -18,15 +19,10 @@ fn cfg(policy: PolicyKind, model: &str, jobs: usize, workers: usize, tensor_kb: 
 
 #[test]
 fn every_policy_completes_structured_multi_tenant() {
-    for policy in [
-        PolicyKind::Esa,
-        PolicyKind::Atp,
-        PolicyKind::SwitchMl,
-        PolicyKind::StrawAlways,
-        PolicyKind::StrawCoin,
-        PolicyKind::HostPs,
-    ] {
-        let m = Simulation::run_experiment(cfg(policy, "dnn_a", 3, 4, 1024))
+    let mut policies = all_ina();
+    policies.push(hostps());
+    for policy in policies {
+        let m = Simulation::run_experiment(cfg(policy.clone(), "dnn_a", 3, 4, 1024))
             .unwrap_or_else(|e| panic!("{policy:?}: {e}"));
         assert!(!m.truncated, "{policy:?} stalled");
         assert_eq!(m.jobs.len(), 3, "{policy:?}");
@@ -39,13 +35,13 @@ fn every_policy_completes_structured_multi_tenant() {
 
 #[test]
 fn esa_preempts_and_atp_does_not() {
-    let mut esa_cfg = cfg(PolicyKind::Esa, "dnn_a", 4, 4, 2048);
+    let mut esa_cfg = cfg(esa(), "dnn_a", 4, 4, 2048);
     esa_cfg.switch.memory_bytes = 256 * 1024; // force contention
     let mut esa = Simulation::new(esa_cfg).unwrap();
     esa.run();
     assert!(esa.switch().stats.preemptions > 0, "contended ESA must preempt");
 
-    let mut atp_cfg = cfg(PolicyKind::Atp, "dnn_a", 4, 4, 2048);
+    let mut atp_cfg = cfg(atp(), "dnn_a", 4, 4, 2048);
     atp_cfg.switch.memory_bytes = 256 * 1024;
     let mut atp = Simulation::new(atp_cfg).unwrap();
     atp.run();
@@ -55,7 +51,7 @@ fn esa_preempts_and_atp_does_not() {
 
 #[test]
 fn switchml_never_touches_the_ps() {
-    let mut sim = Simulation::new(cfg(PolicyKind::SwitchMl, "dnn_a", 4, 4, 512)).unwrap();
+    let mut sim = Simulation::new(cfg(switchml(), "dnn_a", 4, 4, 512)).unwrap();
     sim.run();
     assert_eq!(sim.switch().stats.passthroughs, 0);
     assert_eq!(sim.switch().stats.preemptions, 0);
@@ -67,7 +63,7 @@ fn switchml_never_touches_the_ps() {
 
 #[test]
 fn hostps_never_touches_the_switch_aggregators() {
-    let mut sim = Simulation::new(cfg(PolicyKind::HostPs, "dnn_a", 2, 4, 512)).unwrap();
+    let mut sim = Simulation::new(cfg(hostps(), "dnn_a", 2, 4, 512)).unwrap();
     sim.run();
     assert_eq!(sim.switch().stats.grad_pkts, 0, "BytePS gradients bypass INA");
     assert_eq!(sim.switch().stats.completions, 0);
@@ -81,8 +77,8 @@ fn esa_beats_atp_under_contention_structured() {
         c.iterations = 2;
         Simulation::run_experiment(c).unwrap()
     };
-    let esa = run(PolicyKind::Esa);
-    let atp = run(PolicyKind::Atp);
+    let esa = run(esa());
+    let atp = run(atp());
     assert!(!esa.truncated && !atp.truncated);
     assert!(
         esa.avg_jct_ms() < atp.avg_jct_ms(),
@@ -96,8 +92,8 @@ fn esa_beats_atp_under_contention_structured() {
 fn ina_policies_beat_plain_ps_on_comm_heavy_jobs() {
     // the whole point of INA: traffic reduction → faster than host-PS
     let run = |p| Simulation::run_experiment(cfg(p, "dnn_a", 2, 8, 4096)).unwrap();
-    let esa = run(PolicyKind::Esa);
-    let byteps = run(PolicyKind::HostPs);
+    let esa = run(esa());
+    let byteps = run(hostps());
     assert!(
         esa.avg_jct_ms() < byteps.avg_jct_ms(),
         "ESA {:.3} vs BytePS {:.3}",
@@ -110,7 +106,7 @@ fn ina_policies_beat_plain_ps_on_comm_heavy_jobs() {
 fn values_mode_aggregation_is_exact_under_contention() {
     // real payloads through a contended ESA switch: the collected sums
     // must equal the wrapping reference regardless of preemptions
-    let mut c = cfg(PolicyKind::Esa, "microbench", 2, 4, 64);
+    let mut c = cfg(esa(), "microbench", 2, 4, 64);
     c.switch.memory_bytes = 64 * 1024; // tiny pool → preemption pressure
     c.iterations = 1;
     let mut sim = Simulation::new(c).unwrap();
@@ -152,8 +148,8 @@ fn priority_scheduling_helps_mixed_workloads() {
         }
         Simulation::run_experiment(c).unwrap()
     };
-    let esa = run(PolicyKind::Esa);
-    let atp = run(PolicyKind::Atp);
+    let esa = run(esa());
+    let atp = run(atp());
     assert!(!esa.truncated && !atp.truncated);
     // ESA must beat non-preemptive FCFS on the mixed workload (Fig. 11's
     // ATP column). NOTE: in this reproduction the always-preempt strawman
@@ -203,7 +199,7 @@ fn two_tier_topology_routes_host_to_host() {
 
 #[test]
 fn long_run_has_no_slot_leaks() {
-    let mut c = cfg(PolicyKind::Esa, "dnn_a", 4, 4, 1024);
+    let mut c = cfg(esa(), "dnn_a", 4, 4, 1024);
     c.switch.memory_bytes = 512 * 1024;
     c.iterations = 3;
     let mut sim = Simulation::new(c).unwrap();
@@ -225,7 +221,7 @@ fn long_run_has_no_slot_leaks() {
 
 #[test]
 fn max_sim_cap_reports_truncation() {
-    let mut c = cfg(PolicyKind::Esa, "dnn_a", 2, 4, 4096);
+    let mut c = cfg(esa(), "dnn_a", 2, 4, 4096);
     c.max_sim_ns = MSEC; // absurdly small
     let m = Simulation::run_experiment(c).unwrap();
     assert!(m.truncated);

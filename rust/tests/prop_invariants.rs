@@ -2,8 +2,8 @@
 //! is unavailable offline): deterministic seeded random-case sweeps with
 //! failing-seed reporting. On failure, re-run with the printed seed.
 
-use esa::config::PolicyKind;
 use esa::packet::{Packet, PacketKind};
+use esa::switch::policy::{atp, esa, straw_always, straw_coin, switchml, PolicyHandle};
 use esa::switch::{JobWiring, Switch};
 use esa::util::fixed;
 use esa::util::rng::Rng;
@@ -22,7 +22,7 @@ fn prop(name: &str, cases: u64, mut f: impl FnMut(&mut Rng)) {
 }
 
 /// Build a switch with random pool size and two jobs.
-fn random_switch(rng: &mut Rng, policy: PolicyKind) -> Switch {
+fn random_switch(rng: &mut Rng, policy: PolicyHandle) -> Switch {
     let pool = rng.uniform_u64(8, 128) as usize;
     let wiring = vec![
         JobWiring { ps: 100, workers: vec![1, 2, 3], fan_in: 3, fan_in_total: 3, packet_bytes: 306 },
@@ -58,14 +58,9 @@ fn random_gradient(rng: &mut Rng, sw: &Switch) -> Packet {
 /// partials, passthroughs) plus the lanes still resident in the pool.
 #[test]
 fn prop_switch_conserves_values() {
-    for policy in [
-        PolicyKind::Esa,
-        PolicyKind::Atp,
-        PolicyKind::StrawAlways,
-        PolicyKind::StrawCoin,
-    ] {
+    for policy in [esa(), atp(), straw_always(), straw_coin()] {
         prop(&format!("conservation/{policy:?}"), 40, |rng| {
-            let mut sw = random_switch(rng, policy);
+            let mut sw = random_switch(rng, policy.clone());
             let mut in_sum = [0i32; 4];
             let mut out_sum = [0i32; 4];
             let mut out = Vec::new();
@@ -126,7 +121,7 @@ fn prop_switch_conserves_values() {
 #[test]
 fn prop_switch_occupancy_consistent() {
     prop("occupancy", 60, |rng| {
-        let mut sw = random_switch(rng, PolicyKind::Esa);
+        let mut sw = random_switch(rng, esa());
         let mut out = Vec::new();
         let n = rng.uniform_u64(10, 500);
         for step in 0..n {
@@ -152,7 +147,7 @@ fn prop_switch_occupancy_consistent() {
 #[test]
 fn prop_reminders_are_precise() {
     prop("reminder-precision", 40, |rng| {
-        let mut sw = random_switch(rng, PolicyKind::Esa);
+        let mut sw = random_switch(rng, esa());
         let mut out = Vec::new();
         for step in 0..rng.uniform_u64(5, 100) {
             let pkt = random_gradient(rng, &sw);
@@ -255,16 +250,11 @@ fn prop_random_sims_terminate_and_replay() {
     use esa::config::ExperimentConfig;
     use esa::sim::Simulation;
     prop("sim-replay", 6, |rng| {
-        let policies = [
-            PolicyKind::Esa,
-            PolicyKind::Atp,
-            PolicyKind::SwitchMl,
-            PolicyKind::StrawCoin,
-        ];
-        let policy = policies[rng.next_below(4) as usize];
+        let policies = [esa(), atp(), switchml(), straw_coin()];
+        let policy = policies[rng.next_below(4) as usize].clone();
         let jobs = rng.uniform_u64(1, 3) as usize;
         let workers = rng.uniform_u64(2, 5) as usize;
-        let mut cfg = ExperimentConfig::synthetic(policy, "microbench", jobs, workers);
+        let mut cfg = ExperimentConfig::synthetic(policy.clone(), "microbench", jobs, workers);
         cfg.seed = rng.next_u64();
         cfg.iterations = 1;
         cfg.net.loss_prob = if rng.chance(0.3) { 0.002 } else { 0.0 };
