@@ -6,7 +6,7 @@ ARTIFACTS ?= artifacts
 PRESET ?= tiny
 WORKERS ?= 4
 
-.PHONY: build test bench bench-figures figures sweep churn bless artifacts clean-artifacts
+.PHONY: build test bench bench-figures figures sweep churn scenario bless artifacts clean-artifacts
 
 build:
 	cd rust && cargo build --release
@@ -29,12 +29,26 @@ CHURN_FLAGS ?=
 churn: build
 	cd rust && ./target/release/esa churn $(CHURN_FLAGS) --out-dir target/churn
 
-## Regenerate the committed golden sweep snapshot (run on real hardware,
-## then commit). The CI sweep gate diffs every build against this file.
-bless: build
-	cd rust && ESA_BENCH_QUICK=1 ./target/release/esa sweep --threads 1 --out-dir target/bless
-	cp rust/target/bless/SWEEP_quick.json rust/tests/golden/sweep_quick.json
-	@echo "blessed rust/tests/golden/sweep_quick.json — review and commit it"
+## Replay the default fault-injection scenario (straggler + link flap +
+## switch crash + tenant burst) under ESA/ATP/SwitchML with structured
+## event capture and a built-in replay check; SCENARIO_quick.json and the
+## per-policy .events.jsonl sidecars land in rust/target/scenarios/.
+## Point SCENARIO_CONFIG at a scenario TOML for a custom fault timeline,
+## or override flags via SCENARIO_FLAGS="--policies esa --seed 9 ...".
+SCENARIO_CONFIG ?=
+SCENARIO_FLAGS ?=
+scenario: build
+	cd rust && ./target/release/esa scenario \
+		$(if $(SCENARIO_CONFIG),--config $(abspath $(SCENARIO_CONFIG)),) \
+		$(SCENARIO_FLAGS) --verify --out-dir target/scenarios
+
+## Regenerate the committed golden snapshots in rust/tests/golden/ from a
+## live run, then commit the diff. Goes through the tests themselves
+## (ESA_BLESS=1 rewrites each snapshot with exactly the bytes the test
+## compares), so the blessed file can never disagree with the gate.
+bless:
+	cd rust && ESA_BLESS=1 cargo test -q --test integration_sweep quick_sweep_matches_committed_golden
+	@echo "blessed rust/tests/golden/ — review the diff and commit it"
 
 ## Regenerate every paper figure at quick scale (ESA_BENCH_QUICK=1).
 figures: build

@@ -10,4 +10,7 @@ pub mod parse;
 pub mod schema;
 
 pub use parse::{parse_toml, TomlTable, TomlValue};
-pub use schema::{ChurnKnobs, ExperimentConfig, JobSpec, NetworkConfig, PolicyKind, SwitchConfig};
+pub use schema::{
+    ChurnKnobs, ExperimentConfig, FaultKind, FaultSpec, JobSpec, NetworkConfig, PolicyKind,
+    SwitchConfig,
+};

@@ -203,6 +203,138 @@ impl ChurnKnobs {
     }
 }
 
+/// One injected fault's behavior (DESIGN.md §13). Times and durations are
+/// carried in ns; the TOML surface uses µs (`at_us`, `down_us`, `dur_us`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// Data-plane reboot: every tier's aggregator pool is wiped, the
+    /// region allocator resets, and displaced partitioned jobs re-run
+    /// admission (FIFO, displaced jobs ahead of waiting arrivals).
+    SwitchCrash,
+    /// Link `a <-> b` goes down for `down_ns`: unreliable packets are
+    /// lost (worker RTO recovers them), the reliable channel queues.
+    LinkFlap { a: u32, b: u32, down_ns: u64 },
+    /// Node `node`'s NIC serializes `mult`× slower for `dur_ns`.
+    Straggler { node: u32, mult: f64, dur_ns: u64 },
+    /// A tenant burst storm: `jobs` extra arrivals join the trace at the
+    /// fault time (materialized by the scenario engine's trace builder).
+    Burst { jobs: u32 },
+}
+
+/// One timed fault: `kind` fires at `at_ns` on the simulation clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    pub at_ns: u64,
+    pub kind: FaultKind,
+}
+
+impl FaultSpec {
+    /// Parse every `[fault.<name>]` section, sorted by firing time (ties
+    /// keep section order). Absent sections mean no faults.
+    ///
+    /// ```toml
+    /// [fault.crash]
+    /// at_us = 120.0
+    /// kind = "switch_crash"
+    /// [fault.flap]
+    /// at_us = 60.0
+    /// kind = "link_flap"
+    /// link = [1, 0]
+    /// down_us = 40.0
+    /// [fault.slow]
+    /// at_us = 30.0
+    /// kind = "straggler"
+    /// node = 2
+    /// mult = 4.0
+    /// dur_us = 150.0
+    /// [fault.storm]
+    /// at_us = 150.0
+    /// kind = "burst"
+    /// jobs = 2
+    /// ```
+    pub fn list_from_table(t: &TomlTable) -> Result<Vec<FaultSpec>> {
+        let mut faults = Vec::new();
+        for sec in t.section_names("fault") {
+            let base = format!("fault.{sec}");
+            let at_us = t
+                .get(&format!("{base}.at_us"))
+                .with_context(|| format!("fault.{sec}: missing at_us"))?
+                .as_float()
+                .with_context(|| format!("fault.{sec}.at_us must be a number"))?;
+            if at_us < 0.0 {
+                bail!("fault.{sec}.at_us must be non-negative, got {at_us}");
+            }
+            let at_ns = (at_us * USEC as f64) as u64;
+            let kind_str = t
+                .get(&format!("{base}.kind"))
+                .with_context(|| format!("fault.{sec}: missing kind"))?
+                .as_str()
+                .with_context(|| format!("fault.{sec}.kind must be a string"))?
+                .to_string();
+            let kind = match kind_str.as_str() {
+                "switch_crash" => FaultKind::SwitchCrash,
+                "link_flap" => {
+                    let link = t
+                        .int_list(&format!("{base}.link"))?
+                        .with_context(|| format!("fault.{sec}: link_flap needs link = [a, b]"))?;
+                    let [a, b] = link[..] else {
+                        bail!("fault.{sec}.link must be exactly [a, b], got {link:?}");
+                    };
+                    if a < 0 || b < 0 || a == b {
+                        bail!("fault.{sec}.link endpoints must be distinct non-negative nodes");
+                    }
+                    let down_us = t.float_or(&format!("{base}.down_us"), 0.0);
+                    if down_us <= 0.0 {
+                        bail!("fault.{sec}: link_flap needs a positive down_us");
+                    }
+                    FaultKind::LinkFlap {
+                        a: a as u32,
+                        b: b as u32,
+                        down_ns: (down_us * USEC as f64) as u64,
+                    }
+                }
+                "straggler" => {
+                    let node = t
+                        .get(&format!("{base}.node"))
+                        .with_context(|| format!("fault.{sec}: straggler needs node"))?
+                        .as_int()
+                        .with_context(|| format!("fault.{sec}.node must be an integer"))?;
+                    if node < 0 {
+                        bail!("fault.{sec}.node must be non-negative");
+                    }
+                    let mult = t.float_or(&format!("{base}.mult"), 0.0);
+                    if mult < 1.0 {
+                        bail!("fault.{sec}: straggler mult must be >= 1.0, got {mult}");
+                    }
+                    let dur_us = t.float_or(&format!("{base}.dur_us"), 0.0);
+                    if dur_us <= 0.0 {
+                        bail!("fault.{sec}: straggler needs a positive dur_us");
+                    }
+                    FaultKind::Straggler {
+                        node: node as u32,
+                        mult,
+                        dur_ns: (dur_us * USEC as f64) as u64,
+                    }
+                }
+                "burst" => {
+                    let jobs = t.int_or(&format!("{base}.jobs"), 0);
+                    if jobs <= 0 {
+                        bail!("fault.{sec}: burst needs jobs >= 1");
+                    }
+                    FaultKind::Burst { jobs: jobs as u32 }
+                }
+                other => bail!(
+                    "fault.{sec}: unknown kind `{other}` (expected switch_crash, link_flap, \
+                     straggler, or burst)"
+                ),
+            };
+            faults.push(FaultSpec { at_ns, kind });
+        }
+        faults.sort_by_key(|f| f.at_ns);
+        Ok(faults)
+    }
+}
+
 /// One training job in an experiment.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
@@ -255,6 +387,14 @@ pub struct ExperimentConfig {
     /// `start_ns` into runtime arrivals with admission, reclamation and
     /// the memory-utilization sampler (DESIGN.md §11).
     pub churn: Option<ChurnKnobs>,
+    /// Timed mid-run faults (DESIGN.md §13), sorted by firing time.
+    /// Empty (default) injects nothing.
+    pub faults: Vec<FaultSpec>,
+    /// Record the structured [`crate::sim::events::SimEvent`] log and
+    /// return its JSON-lines rendering in the run's metrics. Off by
+    /// default (batch/sweep/churn runs pay nothing); the scenario engine
+    /// turns it on.
+    pub capture_events: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -277,6 +417,8 @@ impl Default for ExperimentConfig {
             max_window_bytes: 1024 * 1024,
             max_sim_ns: 60 * crate::SEC,
             churn: None,
+            faults: Vec::new(),
+            capture_events: false,
         }
     }
 }
@@ -311,6 +453,8 @@ impl ExperimentConfig {
         cfg.max_sim_ns = (t.float_or("sim.max_sim_ms", 60_000.0) * MSEC as f64) as u64;
 
         cfg.churn = ChurnKnobs::from_table(t)?;
+        cfg.faults = FaultSpec::list_from_table(t)?;
+        cfg.capture_events = t.bool_or("sim.capture_events", false);
 
         for sec in t.section_names("job") {
             let base = format!("job.{sec}");
@@ -390,6 +534,40 @@ impl ExperimentConfig {
             }
             if j.iterations == Some(0) {
                 bail!("job {i}: iterations override must be >= 1");
+            }
+        }
+        // Fault endpoints must land on real nodes: racks, then workers
+        // job by job, then one PS per job (the sim's node layout).
+        let n_nodes =
+            (self.racks + self.jobs.iter().map(|j| j.n_workers).sum::<usize>() + self.jobs.len())
+                as u32;
+        for (i, f) in self.faults.iter().enumerate() {
+            match f.kind {
+                FaultKind::SwitchCrash => {}
+                FaultKind::LinkFlap { a, b, down_ns } => {
+                    if a >= n_nodes || b >= n_nodes {
+                        bail!("fault {i}: link [{a}, {b}] is outside the {n_nodes}-node fabric");
+                    }
+                    if down_ns == 0 {
+                        bail!("fault {i}: link_flap down time must be positive");
+                    }
+                }
+                FaultKind::Straggler { node, mult, dur_ns } => {
+                    if node >= n_nodes {
+                        bail!("fault {i}: node {node} is outside the {n_nodes}-node fabric");
+                    }
+                    if mult < 1.0 {
+                        bail!("fault {i}: straggler mult must be >= 1.0, got {mult}");
+                    }
+                    if dur_ns == 0 {
+                        bail!("fault {i}: straggler duration must be positive");
+                    }
+                }
+                FaultKind::Burst { jobs } => {
+                    if jobs == 0 {
+                        bail!("fault {i}: burst must add at least one job");
+                    }
+                }
             }
         }
         Ok(())
@@ -605,6 +783,90 @@ mod tests {
         let mut bad = ExperimentConfig::default();
         bad.churn = Some(ChurnKnobs { sample_tick_ns: 1000, region_slots: u32::MAX });
         assert!(bad.validate().unwrap_err().to_string().contains("pool"));
+    }
+
+    #[test]
+    fn fault_sections_parse_sorted_and_validate() {
+        let t = parse_toml(
+            r#"
+            [fault.crash]
+            at_us = 120.0
+            kind = "switch_crash"
+            [fault.slow]
+            at_us = 30.0
+            kind = "straggler"
+            node = 2
+            mult = 4.0
+            dur_us = 150.0
+            [fault.flap]
+            at_us = 60.0
+            kind = "link_flap"
+            link = [1, 0]
+            down_us = 40.0
+            [fault.storm]
+            at_us = 150.0
+            kind = "burst"
+            jobs = 2
+            [job.a]
+            model = "microbench"
+            workers = 4
+            "#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.faults.len(), 4);
+        // sorted by firing time regardless of section order
+        assert_eq!(
+            c.faults.iter().map(|f| f.at_ns).collect::<Vec<_>>(),
+            vec![30 * USEC, 60 * USEC, 120 * USEC, 150 * USEC]
+        );
+        assert_eq!(
+            c.faults[0].kind,
+            FaultKind::Straggler { node: 2, mult: 4.0, dur_ns: 150 * USEC }
+        );
+        assert_eq!(c.faults[1].kind, FaultKind::LinkFlap { a: 1, b: 0, down_ns: 40 * USEC });
+        assert_eq!(c.faults[2].kind, FaultKind::SwitchCrash);
+        assert_eq!(c.faults[3].kind, FaultKind::Burst { jobs: 2 });
+        // no fault sections: empty, events off by default
+        let t = parse_toml("[job.a]\nmodel = \"dnn_a\"\nworkers = 4").unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert!(c.faults.is_empty());
+        assert!(!c.capture_events);
+    }
+
+    #[test]
+    fn bad_fault_sections_are_pointed_errors() {
+        for (toml, needle) in [
+            ("[fault.x]\nkind = \"switch_crash\"", "missing at_us"),
+            ("[fault.x]\nat_us = 10.0", "missing kind"),
+            ("[fault.x]\nat_us = 10.0\nkind = \"meteor\"", "unknown kind"),
+            ("[fault.x]\nat_us = 10.0\nkind = \"link_flap\"\ndown_us = 5.0", "link = [a, b]"),
+            (
+                "[fault.x]\nat_us = 10.0\nkind = \"link_flap\"\nlink = [1, 1]\ndown_us = 5.0",
+                "distinct",
+            ),
+            (
+                "[fault.x]\nat_us = 10.0\nkind = \"link_flap\"\nlink = [1, 0]",
+                "positive down_us",
+            ),
+            (
+                "[fault.x]\nat_us = 10.0\nkind = \"straggler\"\nnode = 1\nmult = 0.5\ndur_us = 9.0",
+                ">= 1.0",
+            ),
+            ("[fault.x]\nat_us = 10.0\nkind = \"burst\"", "jobs >= 1"),
+        ] {
+            let t = parse_toml(toml).unwrap();
+            let err = FaultSpec::list_from_table(&t).unwrap_err();
+            assert!(format!("{err:#}").contains(needle), "{toml}: {err:#}");
+        }
+        // validation catches out-of-fabric endpoints
+        let mut c = ExperimentConfig::synthetic(esa(), "microbench", 1, 2);
+        c.faults = vec![FaultSpec {
+            at_ns: 10,
+            kind: FaultKind::Straggler { node: 99, mult: 2.0, dur_ns: 100 },
+        }];
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("outside"), "{err}");
     }
 
     #[test]

@@ -50,6 +50,20 @@ pub struct Reclamation {
     pub admitted: Vec<(JobId, Region)>,
 }
 
+/// Outcome of a switch crash/restart: every job whose region (or running
+/// state) the wipe displaced, plus the subset the fresh allocator could
+/// immediately re-admit, in job-id order with their new grants.
+#[derive(Debug, Clone, Default)]
+pub struct CrashRecovery {
+    /// Jobs that were `Running` when the switch crashed. Their pre-crash
+    /// grants are gone; each is either in `readmitted` or back in the
+    /// FIFO queue ahead of jobs that were already waiting.
+    pub displaced: Vec<JobId>,
+    /// Jobs granted fresh regions by the post-crash FIFO drain (displaced
+    /// jobs first, then previously queued arrivals if memory allows).
+    pub readmitted: Vec<(JobId, Region)>,
+}
+
 /// The coordinator's churn-mode admission state machine.
 pub struct AdmissionController {
     policy: PolicyHandle,
@@ -145,6 +159,43 @@ impl AdmissionController {
         }
         out
     }
+
+    /// A switch crash wiped the data plane. The allocator forgets every
+    /// grant ([`RegionAllocator::reset`] — pre-crash regions must never
+    /// be `reclaim`ed after this), running jobs are displaced, and the
+    /// admission queue is re-drained against the fresh pool. Displaced
+    /// jobs requeue *ahead* of arrivals that were already waiting (they
+    /// had been admitted once — restart recovery should not push them
+    /// behind newcomers), in job-id order among themselves.
+    ///
+    /// Dynamic policies hold no regions: the wipe costs them in-flight
+    /// aggregation state only, and every running job stays running.
+    pub fn on_crash(&mut self) -> CrashRecovery {
+        let mut out = CrashRecovery::default();
+        if !self.partitioned() {
+            return out;
+        }
+        self.alloc.reset();
+        out.displaced = (0..self.phase.len() as JobId)
+            .filter(|&j| self.phase[j as usize] == ChurnPhase::Running)
+            .collect();
+        for &j in out.displaced.iter().rev() {
+            self.phase[j as usize] = ChurnPhase::Queued;
+            self.queue.push_front(j);
+        }
+        self.peak_queue = self.peak_queue.max(self.queue.len() as u32);
+        while let Some(&head) = self.queue.front() {
+            match self.alloc.alloc(head, self.region_slots) {
+                Some(region) => {
+                    self.queue.pop_front();
+                    self.phase[head as usize] = ChurnPhase::Running;
+                    out.readmitted.push((head, region));
+                }
+                None => break,
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -200,6 +251,35 @@ mod tests {
         assert_eq!(c.on_arrival(2), Admission::Queued);
         let r = c.on_completion(0);
         assert_eq!(r.admitted.len(), 2, "both waiters fit in the freed region");
+    }
+
+    #[test]
+    fn crash_requeues_displaced_jobs_ahead_of_waiters_and_redrains() {
+        let mut c = AdmissionController::new(switchml(), 100, 40, 5);
+        assert!(matches!(c.on_arrival(0), Admission::Admit(Some(_))));
+        assert!(matches!(c.on_arrival(1), Admission::Admit(Some(_))));
+        assert_eq!(c.on_arrival(2), Admission::Queued);
+        let r = c.on_crash();
+        assert_eq!(r.displaced, vec![0, 1]);
+        // fresh 100-slot pool readmits the displaced pair (FIFO, job-id
+        // order) before the pre-crash waiter, which stays queued
+        assert_eq!(r.readmitted, vec![(0, (0, 40)), (1, (40, 40))]);
+        assert_eq!(c.phase(2), ChurnPhase::Queued);
+        assert_eq!(c.queue_len(), 1);
+        // the next completion admits the waiter exactly as usual
+        let r = c.on_completion(0);
+        assert_eq!(r.admitted, vec![(2, (0, 40))]);
+    }
+
+    #[test]
+    fn crash_is_a_noop_for_dynamic_policies() {
+        let mut c = AdmissionController::new(esa(), 100, 40, 3);
+        c.on_arrival(0);
+        c.on_arrival(1);
+        let r = c.on_crash();
+        assert!(r.displaced.is_empty() && r.readmitted.is_empty());
+        assert_eq!(c.phase(0), ChurnPhase::Running, "dynamic jobs keep running");
+        assert!(c.on_completion(0).freed.is_none());
     }
 
     #[test]

@@ -16,7 +16,7 @@ use crate::config::ExperimentConfig;
 use crate::sim::{ExperimentMetrics, Simulation};
 use crate::util::executor::{default_threads, run_ordered};
 
-pub use admission::{Admission, AdmissionController, ChurnPhase, Reclamation};
+pub use admission::{Admission, AdmissionController, ChurnPhase, CrashRecovery, Reclamation};
 pub use registry::{JobInfo, JobState, Registry};
 
 /// Run many independent experiments on a bounded worker pool, preserving

@@ -35,7 +35,7 @@
 //! | [`ps`]         | fallback PS: partial dictionary + reminder mechanism |
 //! | [`worker`]     | fragmentation, priority tagging (§5.4), windows, loss recovery (§5.3) |
 //! | [`job`]        | DNN A/B + testbed-profile job models, Poisson trace generation |
-//! | [`sim`]        | experiment driver, JCT/throughput/utilization metrics, parallel scenario sweeps, online job churn |
+//! | [`sim`]        | experiment driver, JCT/throughput/utilization metrics, parallel scenario sweeps, online job churn, fault-injection scenarios + structured event tracing |
 //! | [`runtime`]    | PJRT loader for `artifacts/*.hlo.txt` |
 //! | [`train`]      | end-to-end trainer: real gradients through the simulated switch |
 //! | [`coordinator`]| control plane: job registry, runtime admission/reclamation, priority inputs, experiment launch |

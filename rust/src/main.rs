@@ -10,6 +10,8 @@
 //! esa churn    [--policies esa,atp,switchml] [--jobs 8] [--rate 3000]
 //!              [--racks 2] [--workers 4,8] [--seed 42] [--memory-mb N]
 //!              [--tick-us 100] [--region-slots 0] [--name X] [--out-dir DIR]
+//! esa scenario [--config s.toml] [--policies esa,atp,switchml] [--seed 7]
+//!              [--threads N] [--name X] [--out-dir DIR] [--verify]
 //! esa figures  [fig6b fig7 fig8 fig9 fig10 fig11 fig12 | all] [--quick]
 //! esa train    [--steps 100] [--workers 4] [--policy esa] [--seed 0]
 //!              [--csv out.csv]
@@ -22,7 +24,9 @@ use esa::config::ExperimentConfig;
 use esa::job::trace::{generate, TraceConfig};
 use esa::runtime::Engine;
 use esa::sim::churn::{run_churn, ChurnSpec};
+use esa::sim::events::diff_logs;
 use esa::sim::figures::{self, Scale};
+use esa::sim::scenario::{run_scenario, ScenarioSpec};
 use esa::sim::sweep::{run_sweep, SweepConfig};
 use esa::sim::Simulation;
 use esa::switch::policy::PolicyRegistry;
@@ -45,6 +49,7 @@ fn main() {
         Some("sim") => cmd_sim(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("churn") => cmd_churn(&args),
+        Some("scenario") => cmd_scenario(&args),
         Some("figures") => cmd_figures(&args),
         Some("train") => cmd_train(&args),
         Some("trace") => cmd_trace(&args),
@@ -72,6 +77,9 @@ fn print_help() {
          \x20 sweep    expand a scenario grid and run it on all cores (SWEEP_<name>.json + .csv)\n\
          \x20 churn    replay one Poisson job-arrival trace under several policies with runtime\n\
          \x20          admission + reclamation; writes the utilization timeline (CHURN_<name>.json)\n\
+         \x20 scenario replay a scripted fault timeline (switch crash/restart, link flaps,\n\
+         \x20          stragglers, burst storms) over a churn workload with structured event\n\
+         \x20          capture; writes SCENARIO_<name>.json + per-policy .events.jsonl\n\
          \x20 figures  regenerate the paper's evaluation figures (fig6b..fig12 | all)\n\
          \x20 train    end-to-end training through the simulated data plane (needs `make artifacts`)\n\
          \x20 trace    emit a synthetic cluster job trace\n\
@@ -238,6 +246,68 @@ fn cmd_churn(args: &Args) -> Result<()> {
     println!("{}", report.gap_summary());
     let path = report.write(&out_dir)?;
     println!("wall {:.2} s | wrote {}", t0.elapsed().as_secs_f64(), path.display());
+    Ok(())
+}
+
+/// `esa scenario`: replay a scripted fault timeline (switch
+/// crash/restart, link flap, straggler, burst storm) over a churn
+/// workload under every listed policy with structured event capture, and
+/// write the byte-deterministic `SCENARIO_<name>.json` plus one
+/// `.events.jsonl` sidecar per policy. `--verify` re-runs the whole
+/// scenario and fails unless the artifact and every event log are
+/// byte-identical — the replay oracle, runnable from the CLI.
+fn cmd_scenario(args: &Args) -> Result<()> {
+    let mut spec = if let Some(path) = args.get("config") {
+        ScenarioSpec::from_file(std::path::Path::new(path))?
+    } else {
+        ScenarioSpec::quick()
+    };
+    if let Some(name) = args.get("name") {
+        spec.name = name.to_string();
+    }
+    if let Some(list) = args.get("policies") {
+        spec.policies = list
+            .split(',')
+            .map(|s| PolicyRegistry::resolve(s.trim()))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    spec.seed = args.get_parsed_or("seed", spec.seed)?;
+    spec.validate()?;
+    let threads: usize = args.get_parsed_or("threads", default_threads())?;
+    let out_dir = std::path::PathBuf::from(args.get_or("out-dir", "."));
+    println!(
+        "scenario {}: {} arrivals + {} faults over {} rack(s), {} policies",
+        spec.name,
+        spec.n_jobs,
+        spec.faults.len(),
+        spec.racks,
+        spec.policies.len()
+    );
+    let t0 = std::time::Instant::now();
+    let report = run_scenario(&spec, threads)?;
+    if args.has_flag("verify") {
+        let replay = run_scenario(&spec, threads)?;
+        if replay.to_json() != report.to_json() {
+            bail!("verify: SCENARIO_{} JSON diverged between runs", spec.name);
+        }
+        for (a, b) in report.per_policy.iter().zip(&replay.per_policy) {
+            if let Some((line, x, y)) = diff_logs(&a.event_log, &b.event_log) {
+                bail!(
+                    "verify: {} event log diverged at line {line}: `{x}` vs `{y}`",
+                    a.policy().name()
+                );
+            }
+        }
+        println!("verify: replay is byte-identical (JSON + event logs)");
+    }
+    print!("{}", report.summary_table());
+    let (json_path, log_paths) = report.write(&out_dir)?;
+    println!(
+        "wall {:.2} s | wrote {} + {} event log(s)",
+        t0.elapsed().as_secs_f64(),
+        json_path.display(),
+        log_paths.len()
+    );
     Ok(())
 }
 

@@ -47,6 +47,10 @@ pub struct NetStats {
     pub param_pkts: u64,
     pub reminder_pkts: u64,
     pub retransmit_pkts: u64,
+    /// Unreliable packets lost to an injected link-outage fault (a subset
+    /// of `dropped` — random loss and fault loss are tallied separately so
+    /// scenario reports can attribute recovery traffic).
+    pub fault_drops: u64,
 }
 
 impl NetStats {
@@ -79,12 +83,21 @@ pub struct Net {
     /// the packet (DCTCP-style; ATP's congestion signal).
     ecn_threshold_ns: SimTime,
     loss_rng: Rng,
+    /// Fault injection: per directed link, the time until which the link
+    /// is down (0 = healthy). Set by the scenario engine's link-flap
+    /// faults; both directions of a flapped link carry the same deadline.
+    link_down_until: Vec<SimTime>,
+    /// Fault injection: per node, an egress/ingress serialization
+    /// multiplier (1.0 = healthy). A straggler's slow NIC stretches the
+    /// tx time of every packet crossing its attached links.
+    slowdown: Vec<f64>,
     pub stats: NetStats,
 }
 
 impl Net {
     pub fn new(topo: Topology, cfg: NetworkConfig, loss_rng: Rng) -> Net {
         let links = topo.n_links();
+        let nodes = topo.n_nodes();
         Net {
             queue: EventQueue::new(),
             topo,
@@ -93,6 +106,8 @@ impl Net {
             cfg,
             busy_until: vec![0; links],
             loss_rng,
+            link_down_until: vec![0; links],
+            slowdown: vec![1.0; nodes],
             stats: NetStats::default(),
         }
     }
@@ -114,8 +129,27 @@ impl Net {
         let next = self.topo.next_hop(from, pkt.dst);
         let link = self.topo.link_id(from, next);
         let now = self.queue.now();
-        let tx = self.cfg.tx_ns(pkt.wire_bytes as u64);
-        let depart = self.busy_until[link].max(now) + tx;
+        // Straggler fault: a slow NIC on either endpoint stretches this
+        // hop's serialization time (the multiplier models a degraded
+        // link-negotiation rate, so both directions of the node's links
+        // are affected symmetrically).
+        let mult = self.slowdown[from as usize].max(self.slowdown[next as usize]);
+        let mut tx = self.cfg.tx_ns(pkt.wire_bytes as u64);
+        if mult > 1.0 {
+            tx = (tx as f64 * mult) as SimTime;
+        }
+        // Link-flap fault: while the link is down, unreliable packets are
+        // lost outright (recovered by the worker RTO path); the reliable
+        // channel abstracts TCP, which retries across the outage — its
+        // packets queue behind the flap instead of deadlocking the run.
+        let down_until = self.link_down_until[link];
+        if now < down_until && !pkt.reliable {
+            self.stats.count(&pkt);
+            self.stats.dropped += 1;
+            self.stats.fault_drops += 1;
+            return;
+        }
+        let depart = self.busy_until[link].max(now).max(down_until) + tx;
         self.busy_until[link] = depart;
         // DCTCP-style ECN: mark when the hop's queueing delay is high
         if depart.saturating_sub(now + tx) > self.ecn_threshold_ns {
@@ -167,6 +201,33 @@ impl Net {
     pub fn egress_free_at(&self, from: NodeId, dst: NodeId) -> SimTime {
         let next = self.topo.next_hop(from, dst);
         self.busy_until[self.topo.link_id(from, next)]
+    }
+
+    // ----------------------------------------------------------------
+    // fault injection (scenario engine — DESIGN.md §13)
+    // ----------------------------------------------------------------
+
+    /// Take the link `a <-> b` down (both directions) until `until`.
+    /// While down, unreliable packets entering the link are lost and the
+    /// reliable channel queues behind the outage. Flaps do not stack:
+    /// a later call simply overwrites the deadline.
+    pub fn set_link_down_until(&mut self, a: NodeId, b: NodeId, until: SimTime) {
+        let ab = self.topo.link_id(a, b);
+        let ba = self.topo.link_id(b, a);
+        self.link_down_until[ab] = until;
+        self.link_down_until[ba] = until;
+    }
+
+    /// Whether the directed link `a -> b` is down at time `t`.
+    pub fn link_down_at(&self, a: NodeId, b: NodeId, t: SimTime) -> bool {
+        t < self.link_down_until[self.topo.link_id(a, b)]
+    }
+
+    /// Set a node's straggler multiplier (1.0 = healthy). Every packet
+    /// crossing one of the node's links serializes `mult`× slower.
+    pub fn set_slowdown(&mut self, node: NodeId, mult: f64) {
+        debug_assert!(mult >= 1.0, "slowdown multiplier below 1.0");
+        self.slowdown[node as usize] = mult;
     }
 }
 
@@ -288,6 +349,52 @@ mod tests {
         assert_eq!(net.stats.gradient_pkts, 1);
         assert_eq!(net.stats.reminder_pkts, 1);
         assert_eq!(net.stats.bytes_sent, 612);
+    }
+
+    #[test]
+    fn link_flap_drops_unreliable_and_queues_reliable() {
+        let mut net = mknet(0.0);
+        net.set_link_down_until(1, 0, 100_000);
+        assert!(net.link_down_at(1, 0, 50_000));
+        assert!(net.link_down_at(0, 1, 50_000), "flap takes both directions down");
+        assert!(!net.link_down_at(1, 0, 100_000), "deadline is exclusive");
+        // unreliable: lost at the fault, attributed to fault_drops
+        net.transmit(1, grad(1, 0));
+        assert!(net.queue.is_empty());
+        assert_eq!(net.stats.dropped, 1);
+        assert_eq!(net.stats.fault_drops, 1);
+        // reliable (TCP stand-in): queues behind the outage
+        let mut rel = grad(1, 0);
+        rel.reliable = true;
+        net.transmit(1, rel);
+        let (t, _) = net.queue.pop().unwrap();
+        assert_eq!(t, 100_000 + 25 + 2500, "departs when the link comes back");
+        // other links are unaffected
+        net.transmit(2, grad(2, 0));
+        let (t, _) = net.queue.pop().unwrap();
+        assert_eq!(t, 25 + 2500);
+    }
+
+    #[test]
+    fn straggler_multiplier_stretches_serialization_both_ways() {
+        let mut net = mknet(0.0);
+        net.set_slowdown(1, 4.0);
+        net.transmit(1, grad(1, 0)); // slow node egress
+        let (t, _) = net.queue.pop().unwrap();
+        assert_eq!(t, 4 * 25 + 2500, "tx stretched 4x, propagation unchanged");
+        net.transmit(2, grad(2, 0)); // healthy pair: unaffected
+        let (t2, _) = net.queue.pop().unwrap();
+        assert_eq!(t2, 25 + 2500);
+        // ingress toward the slow node is slowed too
+        net.transmit(0, grad(0, 1));
+        let (t3, _) = net.queue.pop().unwrap();
+        assert_eq!(t3, 4 * 25 + 2500);
+        // recovery restores line rate (queues behind the slow first send:
+        // busy_until[1->0] = 100, then 25ns at full speed)
+        net.set_slowdown(1, 1.0);
+        net.transmit(1, grad(1, 0));
+        let (t4, _) = net.queue.pop().unwrap();
+        assert_eq!(t4, 100 + 25 + 2500);
     }
 
     #[test]

@@ -218,7 +218,12 @@ pub struct PolicyChurn {
 }
 
 impl PolicyChurn {
-    fn from_metrics(policy: PolicyHandle, metrics: ExperimentMetrics) -> Result<PolicyChurn> {
+    /// Shared with the scenario engine, which reports the same
+    /// JCT-under-churn headline per policy.
+    pub(crate) fn from_metrics(
+        policy: PolicyHandle,
+        metrics: ExperimentMetrics,
+    ) -> Result<PolicyChurn> {
         let ch = metrics
             .churn
             .as_ref()

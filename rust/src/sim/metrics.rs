@@ -222,6 +222,10 @@ pub struct ExperimentMetrics {
     pub truncated: bool,
     /// Churn-mode timeline + lifecycle records (`None` for batch runs).
     pub churn: Option<ChurnMetrics>,
+    /// Structured event log as JSON-lines (`sim.capture_events` runs
+    /// only): one compact object per scheduler transition, rendered
+    /// byte-deterministically (DESIGN.md §13).
+    pub event_log: Option<String>,
 }
 
 impl ExperimentMetrics {
@@ -328,6 +332,7 @@ mod tests {
             wall_secs: 0.5,
             truncated: false,
             churn: None,
+            event_log: None,
         };
         assert!((em.avg_jct_ms() - 3.0).abs() < 1e-9);
         assert_eq!(em.events_per_sec(), 2000.0);

@@ -24,8 +24,10 @@
 //! timeline that [`churn`] renders as `CHURN_<name>.json`.
 
 pub mod churn;
+pub mod events;
 pub mod figures;
 pub mod metrics;
+pub mod scenario;
 pub mod sweep;
 
 use std::sync::Arc;
@@ -33,8 +35,9 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, FaultKind};
 use crate::coordinator::admission::{Admission, AdmissionController};
+use crate::sim::events::{EventLog, SimEvent};
 use crate::job::{dnn::profile_by_name, JobModel};
 use crate::net::{Event, Net, Topology, SWITCH_NODE};
 use crate::packet::{Packet, PacketKind};
@@ -110,6 +113,12 @@ const OUT_BUF_CAP: usize = 64;
 /// target worker nodes, so the values need not be globally unique.
 const TK_CHURN_ADMIT: u64 = 10 << 32;
 const TK_CHURN_SAMPLE: u64 = 11 << 32;
+/// A scheduled fault fires (`cfg.faults` index in the low bits). Unlike
+/// the churn keys these are valid in batch mode too — faults can be
+/// injected into any run.
+const TK_FAULT: u64 = 12 << 32;
+/// A timed fault recovers (link back up, straggler back to line rate).
+const TK_FAULT_END: u64 = 13 << 32;
 const TK_CHURN_MASK: u64 = 0xffff_ffff_0000_0000;
 
 /// Timeline bound: when a churn run outlives `tick × cap`, the sampler
@@ -165,6 +174,9 @@ pub struct Simulation {
     /// Online-churn runtime (`cfg.churn` set): runtime admission,
     /// reclamation and the utilization sampler. `None` for batch runs.
     churn: Option<ChurnRuntime>,
+    /// Structured event log (`cfg.capture_events`): scheduler transitions
+    /// and fault/recovery events in event-loop order (DESIGN.md §13).
+    events: Option<EventLog>,
     truncated: bool,
 }
 
@@ -402,6 +414,13 @@ impl Simulation {
             }
         }
 
+        // Schedule the fault timeline (DESIGN.md §13): each fault is a
+        // switch-node timer carrying its `cfg.faults` index; timed faults
+        // schedule their own recovery timer when they fire.
+        for (i, f) in cfg.faults.iter().enumerate() {
+            net.timer(f.at_ns, SWITCH_NODE, TK_FAULT | i as u64);
+        }
+
         let churn = cfg.churn.as_ref().map(|knobs| {
             net.timer(0, SWITCH_NODE, TK_CHURN_SAMPLE);
             let region_slots = churn_region_slots.expect("resolved above");
@@ -442,6 +461,7 @@ impl Simulation {
             }
         });
 
+        let capture_events = cfg.capture_events;
         Ok(Simulation {
             cfg,
             net,
@@ -455,6 +475,7 @@ impl Simulation {
             out_buf: Vec::with_capacity(OUT_BUF_CAP),
             recirc_buf: Vec::new(),
             churn,
+            events: capture_events.then(EventLog::new),
             truncated: false,
         })
     }
@@ -528,13 +549,44 @@ impl Simulation {
                     }
                     _ => false,
                 };
-            if use_edge {
-                self.edge
-                    .as_mut()
-                    .expect("use_edge implies edge")
-                    .handle(now, pending, &mut out);
-            } else {
-                self.switches[node as usize].handle(now, pending, &mut out);
+            // Event capture rides on the per-switch counters: diff them
+            // around `handle` so slot-level transitions (preemption,
+            // downgrade, stale drop) reach the log without threading an
+            // emitter through the data plane. The logged job is the
+            // challenger's — the packet that provoked the transition.
+            let watching = self.events.is_some();
+            let pkt_job = pending.job;
+            let (d_preempt, d_downgrade, d_stale) = {
+                let sw = if use_edge {
+                    self.edge.as_mut().expect("use_edge implies edge")
+                } else {
+                    &mut self.switches[node as usize]
+                };
+                let before = watching.then(|| {
+                    (
+                        sw.stats.preemptions,
+                        sw.stats.failed_preemptions,
+                        sw.stats.stale_drops,
+                    )
+                });
+                sw.handle(now, pending, &mut out);
+                match before {
+                    Some((p, f, s)) => (
+                        sw.stats.preemptions - p,
+                        sw.stats.failed_preemptions - f,
+                        sw.stats.stale_drops - s,
+                    ),
+                    None => (0, 0, 0),
+                }
+            };
+            for _ in 0..d_preempt {
+                self.emit(SimEvent::Preempted { t: now, node, job: pkt_job });
+            }
+            for _ in 0..d_downgrade {
+                self.emit(SimEvent::Downgraded { t: now, node, job: pkt_job });
+            }
+            for _ in 0..d_stale {
+                self.emit(SimEvent::StaleDropped { t: now, node, job: pkt_job });
             }
             for o in out.drain(..) {
                 if o.dst == node {
@@ -587,9 +639,8 @@ impl Simulation {
                         ps.on_scan(t, out);
                     });
                 }
-                // Switch-node timers belong to the churn coordinator
-                // (arrivals + the utilization sampler); batch runs never
-                // schedule any.
+                // Switch-node timers: the fault timeline (any mode) plus
+                // the churn coordinator's arrivals and utilization sampler.
                 ActorRef::Switch => self.on_switch_timer(now, key),
             },
         }
@@ -625,17 +676,114 @@ impl Simulation {
     // online job churn (DESIGN.md §11)
     // ----------------------------------------------------------------
 
-    /// Dispatch a switch-node timer: a job arrival or a sampler tick.
+    /// Dispatch a switch-node timer: a fault firing/recovering (valid in
+    /// any mode), a job arrival, or a sampler tick (churn mode only).
     fn on_switch_timer(&mut self, now: SimTime, key: u64) {
+        let idx = (key & 0xffff_ffff) as usize;
+        match key & TK_CHURN_MASK {
+            TK_FAULT => return self.apply_fault(now, idx),
+            TK_FAULT_END => return self.end_fault(now, idx),
+            _ => {}
+        }
         if self.churn.is_none() {
             debug_assert!(false, "switch timer {key:#x} outside churn mode");
             return;
         }
         match key & TK_CHURN_MASK {
-            TK_CHURN_ADMIT => self.churn_arrival(now, (key & 0xffff_ffff) as usize),
+            TK_CHURN_ADMIT => self.churn_arrival(now, idx),
             TK_CHURN_SAMPLE => self.churn_sample(now),
             other => debug_assert!(false, "unknown switch timer {other:#x}"),
         }
+    }
+
+    // ----------------------------------------------------------------
+    // fault injection (DESIGN.md §13)
+    // ----------------------------------------------------------------
+
+    /// Append to the structured event log, if this run captures one.
+    #[inline]
+    fn emit(&mut self, ev: SimEvent) {
+        if let Some(log) = self.events.as_mut() {
+            log.push(ev);
+        }
+    }
+
+    /// A scheduled fault fires.
+    fn apply_fault(&mut self, now: SimTime, idx: usize) {
+        match self.cfg.faults[idx].kind.clone() {
+            FaultKind::SwitchCrash => self.fault_switch_crash(now),
+            FaultKind::LinkFlap { a, b, down_ns } => {
+                let until = now + down_ns;
+                self.net.set_link_down_until(a, b, until);
+                self.emit(SimEvent::LinkDown { t: now, a, b, until });
+                self.net.timer(until, SWITCH_NODE, TK_FAULT_END | idx as u64);
+            }
+            FaultKind::Straggler { node, mult, dur_ns } => {
+                self.net.set_slowdown(node, mult);
+                self.emit(SimEvent::StragglerStart { t: now, node, mult });
+                self.net.timer(now + dur_ns, SWITCH_NODE, TK_FAULT_END | idx as u64);
+            }
+            // Burst arrivals are materialized into `cfg.jobs` by the
+            // scenario trace builder (workers/PSes must exist at
+            // construction); the fault itself is a log marker.
+            FaultKind::Burst { jobs } => self.emit(SimEvent::BurstStarted { t: now, jobs }),
+        }
+    }
+
+    /// A timed fault recovers.
+    fn end_fault(&mut self, now: SimTime, idx: usize) {
+        match self.cfg.faults[idx].kind.clone() {
+            FaultKind::LinkFlap { a, b, .. } => self.emit(SimEvent::LinkUp { t: now, a, b }),
+            FaultKind::Straggler { node, .. } => {
+                self.net.set_slowdown(node, 1.0);
+                self.emit(SimEvent::StragglerEnd { t: now, node });
+            }
+            _ => debug_assert!(false, "recovery timer for an instantaneous fault"),
+        }
+    }
+
+    /// Switch crash/restart: wipe every pipeline stage's aggregator pool
+    /// (the fabric shares one control plane, and regions are symmetric
+    /// across tiers — a data-plane reboot loses them all), then run
+    /// control-plane recovery. Under churn the admission controller's
+    /// allocator resets and displaced partitioned jobs re-run admission
+    /// FIFO (ahead of arrivals that were still waiting); jobs left queued
+    /// lose their regions, so their in-flight straggler packets hit the
+    /// churn guard and drop as `stale_drops` until re-admission. Dynamic
+    /// policies lose only resident partials, which workers re-send via
+    /// the normal RTO path.
+    fn fault_switch_crash(&mut self, now: SimTime) {
+        for r in 0..self.switches.len() {
+            let wiped = self.switches[r].crash_wipe(now);
+            let node = self.switches[r].node;
+            self.emit(SimEvent::SwitchCrashed { t: now, node, wiped });
+        }
+        if self.edge.is_some() {
+            let wiped = self.edge.as_mut().expect("checked").crash_wipe(now);
+            self.emit(SimEvent::SwitchCrashed { t: now, node: SWITCH_NODE, wiped });
+        }
+        let Some(mut ch) = self.churn.take() else {
+            return; // batch run: data-plane loss only, nothing to re-admit
+        };
+        let rec = ch.ctl.on_crash();
+        for &job in &rec.displaced {
+            for sw in &mut self.switches {
+                sw.revoke_region(job);
+            }
+            if let Some(edge) = self.edge.as_mut() {
+                edge.revoke_region(job);
+            }
+            self.emit(SimEvent::RegionRevoked { t: now, job });
+        }
+        self.emit(SimEvent::SwitchRestarted {
+            t: now,
+            displaced: rec.displaced.len() as u32,
+            readmitted: rec.readmitted.len() as u32,
+        });
+        for (job, region) in rec.readmitted {
+            self.churn_admit(now, &mut ch, job as usize, Some(region));
+        }
+        self.churn = Some(ch);
     }
 
     /// A job arrived: ask the coordinator; admit now or leave it queued
@@ -643,8 +791,10 @@ impl Simulation {
     fn churn_arrival(&mut self, now: SimTime, j: usize) {
         let mut ch = self.churn.take().expect("arrival without churn state");
         ch.arrived_at[j] = Some(now);
-        if let Admission::Admit(region) = ch.ctl.on_arrival(j as JobId) {
-            self.churn_admit(now, &mut ch, j, region);
+        self.emit(SimEvent::JobArrived { t: now, job: j as JobId });
+        match ch.ctl.on_arrival(j as JobId) {
+            Admission::Admit(region) => self.churn_admit(now, &mut ch, j, region),
+            Admission::Queued => self.emit(SimEvent::JobQueued { t: now, job: j as JobId }),
         }
         self.churn = Some(ch);
     }
@@ -659,8 +809,13 @@ impl Simulation {
         j: usize,
         region: Option<Region>,
     ) {
-        ch.admitted_at[j] = Some(now);
+        // Crash re-admission re-enters here; keep the original admission
+        // timestamp so queued-wait metrics measure first admission only.
+        if ch.admitted_at[j].is_none() {
+            ch.admitted_at[j] = Some(now);
+        }
         let job = j as JobId;
+        self.emit(SimEvent::JobAdmitted { t: now, job, region });
         let (rack_w, edge_w) = &ch.wirings[j];
         for (r, sw) in self.switches.iter_mut().enumerate() {
             sw.install_wiring(job, rack_w[r].clone());
@@ -701,6 +856,7 @@ impl Simulation {
     fn churn_job_complete(&mut self, now: SimTime, ch: &mut ChurnRuntime, j: usize) {
         ch.completed_at[j] = Some(now);
         let job = j as JobId;
+        self.emit(SimEvent::JobCompleted { t: now, job });
         for sw in &mut self.switches {
             sw.retire_job(job);
             sw.flush_job(now, job);
@@ -717,6 +873,7 @@ impl Simulation {
             if let Some(edge) = self.edge.as_mut() {
                 edge.revoke_region(job);
             }
+            self.emit(SimEvent::RegionRevoked { t: now, job });
         }
         for (qjob, region) in outcome.admitted {
             self.churn_admit(now, ch, qjob as usize, Some(region));
@@ -862,6 +1019,7 @@ impl Simulation {
             wall_secs,
             truncated: self.truncated,
             churn,
+            event_log: self.events.as_ref().map(|log| log.to_jsonl()),
         }
     }
 

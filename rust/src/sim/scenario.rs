@@ -1,0 +1,726 @@
+//! The declarative fault-injection scenario engine behind `esa scenario`.
+//!
+//! A churn run shows how policies behave when the job mix changes; a
+//! **scenario** additionally scripts what goes *wrong* while it changes.
+//! A [`ScenarioSpec`] is a churn workload plus a fault timeline
+//! ([`FaultSpec`], parsed from `[fault.<name>]` TOML sections): switch
+//! crash/restarts that wipe the aggregator pools and re-run admission,
+//! link flaps that silently eat unreliable packets, straggler workers
+//! whose NICs serialize slower, and tenant burst storms that spike the
+//! arrival trace. [`run_scenario`] replays the identical trace + fault
+//! timeline under every listed policy with structured event capture
+//! enabled, so each run yields a byte-deterministic JSON-lines event log
+//! (see [`crate::sim::events`]).
+//!
+//! Determinism is the engine's contract and its test oracle: the same
+//! spec produces byte-identical `SCENARIO_<name>.json` artifacts and
+//! event logs on every run and every thread count, and a captured log
+//! diffs empty ([`crate::sim::events::diff_logs`]) against its replay.
+//!
+//! ```
+//! use esa::sim::scenario::{run_scenario, ScenarioSpec};
+//! use esa::switch::policy::esa;
+//!
+//! let mut spec = ScenarioSpec::quick();
+//! spec.policies = vec![esa()];
+//! let report = run_scenario(&spec, 2).unwrap();
+//! let p = &report.per_policy[0];
+//! assert!(p.event_log.contains("\"kind\":\"switch_crashed\""));
+//! assert_eq!(run_scenario(&spec, 1).unwrap().to_json(), report.to_json());
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{parse_toml, ChurnKnobs, ExperimentConfig, FaultKind, FaultSpec, TomlTable};
+use crate::job::trace::{generate, TraceConfig, TraceEntry};
+use crate::sim::churn::PolicyChurn;
+use crate::sim::sweep::{filename_safe, ModelMix};
+use crate::sim::Simulation;
+use crate::switch::policy::{atp, esa, switchml, PolicyHandle, PolicyRegistry};
+use crate::util::executor::run_ordered;
+use crate::util::json::JsonWriter;
+use crate::util::rng::Rng;
+use crate::util::stats::render_table;
+use crate::USEC;
+
+/// Decouples the scenario arrival stream from the churn engine's
+/// (`churn::CHURN_TRACE_SALT`) and the sweep engine's
+/// (`sweep::TRACE_STREAM_SALT`) — same seed, independent traces.
+const SCENARIO_TRACE_SALT: u64 = 0x5cea_0a11_0f17_ab1e;
+
+/// Burst storms arrive this much faster than the base Poisson rate.
+const BURST_RATE_MULT: f64 = 20.0;
+
+/// One fault scenario: a seeded churn workload plus a scripted fault
+/// timeline, replayed under every listed policy with event capture on.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    /// Artifact name: `SCENARIO_<name>.json`. Filename-safe.
+    pub name: String,
+    /// Policies to replay the identical trace + faults under.
+    pub policies: Vec<PolicyHandle>,
+    pub racks: usize,
+    /// Base arrivals in the trace (burst faults append more).
+    pub n_jobs: usize,
+    /// Mean arrival rate (jobs per simulated second).
+    pub rate_per_sec: f64,
+    /// Worker-count choices (uniform per arrival).
+    pub worker_choices: Vec<usize>,
+    /// Iteration-count range (uniform, inclusive).
+    pub iter_range: (u32, u32),
+    /// Model mix (weights drive the arrival draw).
+    pub models: Vec<ModelMix>,
+    /// Trace + simulation seed (one seed, every policy).
+    pub seed: u64,
+    /// Sampler tick + static region size.
+    pub knobs: ChurnKnobs,
+    /// The scripted fault timeline, sorted by firing time.
+    pub faults: Vec<FaultSpec>,
+    /// Template for everything else (switch memory, net, jitter, caps).
+    pub base: ExperimentConfig,
+}
+
+impl ScenarioSpec {
+    /// A fast default: a scarce 256 KB pool under a dense arrival burst,
+    /// with one of each fault class scripted early enough to land mid-run.
+    pub fn quick() -> ScenarioSpec {
+        let mut base = ExperimentConfig {
+            jitter_max_ns: 20 * USEC,
+            start_spread_ns: 0,
+            ..ExperimentConfig::default()
+        };
+        base.switch.memory_bytes = 256 * 1024;
+        ScenarioSpec {
+            name: "quick".into(),
+            policies: vec![esa(), atp(), switchml()],
+            racks: 2,
+            n_jobs: 5,
+            rate_per_sec: 40_000.0,
+            worker_choices: vec![4],
+            iter_range: (2, 2),
+            models: vec![ModelMix {
+                name: "microbench".into(),
+                tensor_bytes: Some(64 * 1024),
+                weight: 1.0,
+            }],
+            seed: 7,
+            knobs: ChurnKnobs { sample_tick_ns: 20 * USEC, region_slots: 0 },
+            faults: vec![
+                FaultSpec {
+                    at_ns: 20 * USEC,
+                    kind: FaultKind::Straggler { node: 2, mult: 4.0, dur_ns: 150 * USEC },
+                },
+                FaultSpec {
+                    at_ns: 40 * USEC,
+                    kind: FaultKind::LinkFlap { a: 1, b: 0, down_ns: 40 * USEC },
+                },
+                FaultSpec { at_ns: 80 * USEC, kind: FaultKind::SwitchCrash },
+                FaultSpec { at_ns: 100 * USEC, kind: FaultKind::Burst { jobs: 2 } },
+            ],
+            base,
+        }
+    }
+
+    /// Load from a TOML-subset scenario file (see README § `esa scenario`).
+    pub fn from_file(path: &Path) -> Result<ScenarioSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario config {}", path.display()))?;
+        Self::parse_str(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Parse a scenario document from text.
+    pub fn parse_str(text: &str) -> Result<ScenarioSpec> {
+        let t = parse_toml(text)?;
+        Self::from_table(&t)
+    }
+
+    /// Build from a parsed table: workload knobs under `[scenario]`, the
+    /// fault timeline under `[fault.<name>]` sections.
+    ///
+    /// ```toml
+    /// [scenario]
+    /// name = "crashy"
+    /// jobs = 6
+    /// rate_per_sec = 30000.0
+    /// policies = ["esa", "switchml"]
+    ///
+    /// [fault.crash]
+    /// at_us = 120.0
+    /// kind = "switch_crash"
+    /// ```
+    pub fn from_table(t: &TomlTable) -> Result<ScenarioSpec> {
+        let mut spec = ScenarioSpec::quick();
+        spec.name = t.str_or("scenario.name", "quick");
+        if let Some(names) = t.str_list("scenario.policies")? {
+            spec.policies = names
+                .iter()
+                .map(|s| PolicyRegistry::resolve(s).context("scenario.policies"))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        spec.racks = nonneg(t, "scenario.racks", spec.racks as i64)? as usize;
+        spec.n_jobs = nonneg(t, "scenario.jobs", spec.n_jobs as i64)? as usize;
+        spec.rate_per_sec = t.float_or("scenario.rate_per_sec", spec.rate_per_sec);
+        spec.seed = nonneg(t, "scenario.seed", spec.seed as i64)?;
+        if let Some(ws) = t.int_list("scenario.workers")? {
+            spec.worker_choices = ws
+                .into_iter()
+                .map(|w| {
+                    usize::try_from(w)
+                        .map_err(|_| anyhow::anyhow!("scenario.workers: {w} must be non-negative"))
+                })
+                .collect::<Result<Vec<usize>>>()?;
+        }
+        if let Some(ir) = t.int_list("scenario.iters")? {
+            let [lo, hi] = ir.as_slice() else {
+                bail!("scenario.iters must be a [min, max] pair, got {} entries", ir.len());
+            };
+            if *lo < 0 || *hi < 0 {
+                bail!("scenario.iters must be non-negative");
+            }
+            spec.iter_range = (*lo as u32, *hi as u32);
+        }
+        let kb = t.int_or("scenario.tensor_kb", 64);
+        if kb <= 0 {
+            bail!("scenario.tensor_kb must be positive, got {kb}");
+        }
+        spec.models[0].tensor_bytes = Some(kb as u64 * 1024);
+        let mem_kb = t.int_or("scenario.memory_kb", 256);
+        if mem_kb <= 0 {
+            bail!("scenario.memory_kb must be positive, got {mem_kb}");
+        }
+        spec.base.switch.memory_bytes = mem_kb as u64 * 1024;
+        let tick_us = t.float_or("scenario.tick_us", 20.0);
+        if tick_us <= 0.0 {
+            bail!("scenario.tick_us must be positive, got {tick_us}");
+        }
+        spec.knobs.sample_tick_ns = (tick_us * USEC as f64) as u64;
+        let rs = nonneg(t, "scenario.region_slots", 0)?;
+        spec.knobs.region_slots = u32::try_from(rs)
+            .map_err(|_| anyhow::anyhow!("scenario.region_slots: {rs} is too large"))?;
+        spec.faults = FaultSpec::list_from_table(t)?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !filename_safe(&self.name) {
+            bail!(
+                "scenario name `{}` must be filename-safe ([A-Za-z0-9_-], non-empty) — it names \
+                 SCENARIO_<name>.json",
+                self.name
+            );
+        }
+        if self.policies.is_empty() {
+            bail!("scenario needs at least one policy");
+        }
+        if self.n_jobs == 0 {
+            bail!("scenario needs at least one arrival");
+        }
+        if self.rate_per_sec <= 0.0 {
+            bail!("rate_per_sec must be positive");
+        }
+        if self.worker_choices.is_empty() {
+            bail!("worker_choices must list at least one worker count");
+        }
+        for &w in &self.worker_choices {
+            if w == 0 || w > 32 {
+                bail!("worker_choices: {w} is outside 1..=32");
+            }
+        }
+        if self.iter_range.0 == 0 || self.iter_range.0 > self.iter_range.1 {
+            bail!(
+                "iteration range [{}, {}] must satisfy 1 <= min <= max",
+                self.iter_range.0,
+                self.iter_range.1
+            );
+        }
+        if self.models.is_empty() {
+            bail!("scenario needs at least one model in the mix");
+        }
+        if self.knobs.sample_tick_ns == 0 {
+            bail!("sample tick must be positive");
+        }
+        if self.racks == 0 || self.racks > 64 {
+            bail!("racks must be in 1..=64");
+        }
+        // Fault endpoints are checked against the materialized fabric
+        // (racks + workers + PSes, bursts included) by the experiment's
+        // own validation — run it once so a bad `[fault.*]` section fails
+        // here with a pointed error instead of inside the thread pool.
+        self.experiment(self.policies[0].clone())
+            .validate()
+            .context("scenario fault timeline vs the materialized fabric")?;
+        Ok(())
+    }
+
+    /// The arrival trace: the base Poisson draw plus, per burst fault, a
+    /// storm of extra arrivals spiking at `BURST_RATE_MULT`× the base
+    /// rate from the fault time. Identical for every policy.
+    pub fn arrivals(&self) -> Vec<TraceEntry> {
+        let tc = TraceConfig {
+            rate_per_sec: self.rate_per_sec,
+            mix: self.models.iter().map(|m| (m.name.clone(), m.weight)).collect(),
+            worker_choices: self.worker_choices.clone(),
+            iter_range: self.iter_range,
+        };
+        let mut rng = Rng::new(self.seed ^ SCENARIO_TRACE_SALT);
+        let mut out = generate(&tc, self.n_jobs, &mut rng);
+        let burst_tc =
+            TraceConfig { rate_per_sec: self.rate_per_sec * BURST_RATE_MULT, ..tc };
+        for f in &self.faults {
+            if let FaultKind::Burst { jobs } = f.kind {
+                for mut e in generate(&burst_tc, jobs as usize, &mut rng) {
+                    e.arrival_ns += f.at_ns;
+                    out.push(e);
+                }
+            }
+        }
+        out
+    }
+
+    /// Materialize one policy's experiment: churn mode over the shared
+    /// trace, the fault timeline installed, event capture on.
+    pub fn experiment(&self, policy: PolicyHandle) -> ExperimentConfig {
+        self.experiment_over(policy, self.arrivals())
+    }
+
+    fn experiment_over(&self, policy: PolicyHandle, arrivals: Vec<TraceEntry>) -> ExperimentConfig {
+        let mut cfg = self.base.clone();
+        cfg.name = format!("scenario:{}:{}", self.name, policy.key());
+        cfg.policy = policy;
+        cfg.racks = self.racks;
+        cfg.seed = self.seed;
+        cfg.start_spread_ns = 0; // arrivals are the trace's, exactly
+        cfg.churn = Some(self.knobs.clone());
+        cfg.faults = self.faults.clone();
+        cfg.capture_events = true;
+        cfg.jobs = arrivals
+            .into_iter()
+            .map(|e| {
+                let tensor = self
+                    .models
+                    .iter()
+                    .find(|m| m.name == e.model)
+                    .and_then(|m| m.tensor_bytes);
+                e.into_job_spec(tensor)
+            })
+            .collect();
+        cfg
+    }
+}
+
+/// Positive-or-default integer key with a pointed error on negatives.
+fn nonneg(t: &TomlTable, key: &str, default: i64) -> Result<u64> {
+    let x = t.int_or(key, default);
+    u64::try_from(x).map_err(|_| anyhow::anyhow!("{key}: {x} must be non-negative"))
+}
+
+/// One policy's outcome over the shared trace + fault timeline.
+#[derive(Debug, Clone)]
+pub struct PolicyScenario {
+    /// The churn headline (JCT under churn, queue waits, utilization).
+    pub churn: PolicyChurn,
+    /// The captured event log (JSON-lines, byte-deterministic).
+    pub event_log: String,
+    /// FNV-1a 64-bit digest of the log bytes (hex).
+    pub event_digest: String,
+}
+
+impl PolicyScenario {
+    pub fn policy(&self) -> &PolicyHandle {
+        &self.churn.policy
+    }
+
+    /// Log lines (= events captured).
+    pub fn event_lines(&self) -> usize {
+        self.event_log.lines().count()
+    }
+
+    /// Per-kind event histogram, sorted by kind name — stable, so it can
+    /// be embedded in the byte-deterministic artifact.
+    pub fn event_kinds(&self) -> Vec<(String, u64)> {
+        let mut counts: Vec<(String, u64)> = Vec::new();
+        for line in self.event_log.lines() {
+            let Some(kind) = line
+                .split_once("\"kind\":\"")
+                .and_then(|(_, rest)| rest.split_once('"'))
+                .map(|(k, _)| k)
+            else {
+                continue;
+            };
+            match counts.iter_mut().find(|(k, _)| k == kind) {
+                Some((_, n)) => *n += 1,
+                None => counts.push((kind.to_string(), 1)),
+            }
+        }
+        counts.sort();
+        counts
+    }
+
+    /// Total stale-packet drops across every pipeline stage (crashed or
+    /// completed tenants' stragglers refused re-occupancy).
+    pub fn stale_drops(&self) -> u64 {
+        self.churn.metrics.switches.iter().map(|s| s.stats.stale_drops).sum()
+    }
+
+    /// Total live slots wiped by switch-crash faults across all stages.
+    pub fn crash_wiped(&self) -> u64 {
+        self.churn.metrics.switches.iter().map(|s| s.stats.crash_wiped).sum()
+    }
+}
+
+/// A completed scenario: the spec, the shared arrival trace, and one
+/// [`PolicyScenario`] per policy in spec order.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub spec: ScenarioSpec,
+    pub arrivals: Vec<TraceEntry>,
+    pub per_policy: Vec<PolicyScenario>,
+}
+
+/// Replay the spec's trace + fault timeline under every listed policy on
+/// up to `threads` workers. Results are input-ordered and byte-identical
+/// across runs and thread counts.
+pub fn run_scenario(spec: &ScenarioSpec, threads: usize) -> Result<ScenarioReport> {
+    spec.validate()?;
+    let arrivals = spec.arrivals();
+    let cfgs: Vec<ExperimentConfig> = spec
+        .policies
+        .iter()
+        .map(|p| spec.experiment_over(p.clone(), arrivals.clone()))
+        .collect();
+    let results = run_ordered(threads, cfgs, |_, cfg| Simulation::run_experiment(cfg));
+    let mut per_policy = Vec::with_capacity(spec.policies.len());
+    for (policy, result) in spec.policies.iter().zip(results) {
+        let metrics =
+            result.with_context(|| format!("scenario replay under {}", policy.name()))?;
+        let event_log = metrics
+            .event_log
+            .clone()
+            .with_context(|| format!("{}: capture_events produced no log", policy.name()))?;
+        let event_digest = format!("{:016x}", fnv1a64(event_log.as_bytes()));
+        per_policy.push(PolicyScenario {
+            churn: PolicyChurn::from_metrics(policy.clone(), metrics)?,
+            event_log,
+            event_digest,
+        });
+    }
+    Ok(ScenarioReport { spec: spec.clone(), arrivals, per_policy })
+}
+
+impl ScenarioReport {
+    /// Human summary for the CLI.
+    pub fn summary_table(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .per_policy
+            .iter()
+            .map(|p| {
+                vec![
+                    p.policy().name().to_string(),
+                    fmt_or_na(p.churn.jct_ms_mean, 3),
+                    fmt_or_na(p.churn.queued_us_mean, 1),
+                    p.churn.peak_queue.to_string(),
+                    p.churn.unfinished.to_string(),
+                    p.crash_wiped().to_string(),
+                    p.stale_drops().to_string(),
+                    p.event_lines().to_string(),
+                    p.event_digest.clone(),
+                ]
+            })
+            .collect();
+        render_table(
+            &[
+                "policy",
+                "JCT mean (ms)",
+                "queued (us)",
+                "peakQ",
+                "unfin",
+                "wiped",
+                "stale",
+                "events",
+                "log digest",
+            ],
+            &rows,
+        )
+    }
+
+    /// The byte-deterministic `SCENARIO_<name>.json` document: the spec
+    /// header, the fault timeline, the shared arrivals, and per-policy
+    /// headline metrics with the event log's line count, per-kind
+    /// histogram and digest. The logs themselves go to `.events.jsonl`
+    /// sidecars ([`Self::write`]).
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_obj(None);
+        w.str_field("schema", "esa-scenario/1");
+        w.str_field("provenance", "simulated");
+        w.str_field("name", &self.spec.name);
+        w.u64_field("seed", self.spec.seed);
+        w.u64_field("racks", self.spec.racks as u64);
+        w.f64_field("rate_per_sec", self.spec.rate_per_sec, 3);
+        w.begin_arr(Some("faults"));
+        for f in &self.spec.faults {
+            w.begin_obj(None);
+            w.f64_field("at_us", f.at_ns as f64 / 1e3, 3);
+            match f.kind {
+                FaultKind::SwitchCrash => w.str_field("kind", "switch_crash"),
+                FaultKind::LinkFlap { a, b, down_ns } => {
+                    w.str_field("kind", "link_flap");
+                    w.u64_field("a", a as u64);
+                    w.u64_field("b", b as u64);
+                    w.f64_field("down_us", down_ns as f64 / 1e3, 3);
+                }
+                FaultKind::Straggler { node, mult, dur_ns } => {
+                    w.str_field("kind", "straggler");
+                    w.u64_field("node", node as u64);
+                    w.f64_field("mult", mult, 3);
+                    w.f64_field("dur_us", dur_ns as f64 / 1e3, 3);
+                }
+                FaultKind::Burst { jobs } => {
+                    w.str_field("kind", "burst");
+                    w.u64_field("jobs", jobs as u64);
+                }
+            }
+            w.end_obj();
+        }
+        w.end_arr();
+        w.begin_arr(Some("arrivals"));
+        for (j, e) in self.arrivals.iter().enumerate() {
+            w.begin_obj(None);
+            w.u64_field("job", j as u64);
+            w.f64_field("t_us", e.arrival_ns as f64 / 1e3, 3);
+            w.str_field("model", &e.model);
+            w.u64_field("workers", e.n_workers as u64);
+            w.u64_field("iterations", e.iterations as u64);
+            w.end_obj();
+        }
+        w.end_arr();
+        w.begin_arr(Some("policies"));
+        for p in &self.per_policy {
+            let ch = p.churn.metrics.churn.as_ref().expect("churn metrics verified at build");
+            w.begin_obj(None);
+            w.str_field("policy", p.policy().key());
+            w.u64_field("pool_slots_per_stage", ch.pool_slots_per_stage as u64);
+            w.u64_field("stages", ch.stages as u64);
+            w.u64_field("region_slots", ch.region_slots as u64);
+            w.f64_field_or_null("jct_ms_mean", p.churn.jct_ms_mean, 6);
+            w.f64_field_or_null("jct_ms_p95", p.churn.jct_ms_p95, 6);
+            w.f64_field_or_null("queued_us_mean", p.churn.queued_us_mean, 3);
+            w.u64_field("peak_queue", p.churn.peak_queue as u64);
+            w.u64_field("unfinished", p.churn.unfinished as u64);
+            w.u64_field("crash_wiped", p.crash_wiped());
+            w.u64_field("stale_drops", p.stale_drops());
+            w.u64_field("event_lines", p.event_lines() as u64);
+            w.str_field("event_digest", &p.event_digest);
+            w.begin_obj(Some("event_kinds"));
+            for (kind, n) in p.event_kinds() {
+                w.u64_field(&kind, n);
+            }
+            w.end_obj();
+            w.begin_arr(Some("jobs"));
+            for j in &ch.jobs {
+                w.begin_obj(None);
+                w.u64_field("job", j.job as u64);
+                opt_time_us(&mut w, "arrived_us", j.arrived_ns);
+                opt_time_us(&mut w, "admitted_us", j.admitted_ns);
+                opt_time_us(&mut w, "completed_us", j.completed_ns);
+                w.end_obj();
+            }
+            w.end_arr();
+            w.end_obj();
+        }
+        w.end_arr();
+        w.end_obj();
+        w.finish()
+    }
+
+    /// Write `SCENARIO_<name>.json` plus one
+    /// `SCENARIO_<name>.<policy>.events.jsonl` sidecar per policy under
+    /// `dir`; returns the artifact path and the sidecar paths.
+    pub fn write(&self, dir: &Path) -> Result<(PathBuf, Vec<PathBuf>)> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating scenario output dir {}", dir.display()))?;
+        let json_path = dir.join(format!("SCENARIO_{}.json", self.spec.name));
+        std::fs::write(&json_path, self.to_json())
+            .with_context(|| format!("writing {}", json_path.display()))?;
+        let mut log_paths = Vec::with_capacity(self.per_policy.len());
+        for p in &self.per_policy {
+            let path = dir.join(format!(
+                "SCENARIO_{}.{}.events.jsonl",
+                self.spec.name,
+                p.policy().key()
+            ));
+            std::fs::write(&path, &p.event_log)
+                .with_context(|| format!("writing {}", path.display()))?;
+            log_paths.push(path);
+        }
+        Ok((json_path, log_paths))
+    }
+}
+
+fn opt_time_us(w: &mut JsonWriter, key: &str, v: Option<crate::SimTime>) {
+    match v {
+        Some(ns) => w.f64_field(key, ns as f64 / 1e3, 3),
+        None => w.null_field(key),
+    }
+}
+
+fn fmt_or_na(v: f64, decimals: usize) -> String {
+    if v.is_finite() {
+        format!("{v:.decimals$}")
+    } else {
+        "n/a".into()
+    }
+}
+
+/// FNV-1a 64-bit — a stable, dependency-free log fingerprint.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::events::diff_logs;
+
+    fn tiny(policies: Vec<PolicyHandle>) -> ScenarioSpec {
+        let mut spec = ScenarioSpec::quick();
+        spec.name = "tiny".into();
+        spec.policies = policies;
+        spec.n_jobs = 4;
+        spec.worker_choices = vec![2];
+        spec
+    }
+
+    #[test]
+    fn quick_spec_validates() {
+        ScenarioSpec::quick().validate().unwrap();
+    }
+
+    #[test]
+    fn burst_faults_extend_the_shared_trace() {
+        let spec = tiny(vec![esa()]);
+        let arrivals = spec.arrivals();
+        // quick() scripts one burst of 2 on top of the 4 base arrivals
+        assert_eq!(arrivals.len(), spec.n_jobs + 2);
+        let burst_at = spec
+            .faults
+            .iter()
+            .find_map(|f| matches!(f.kind, FaultKind::Burst { .. }).then_some(f.at_ns))
+            .unwrap();
+        for e in &arrivals[spec.n_jobs..] {
+            assert!(e.arrival_ns >= burst_at, "storm arrivals start at the fault");
+        }
+        assert_eq!(arrivals, spec.arrivals(), "trace draw is deterministic");
+    }
+
+    #[test]
+    fn scenario_emits_every_scripted_fault_class() {
+        let spec = tiny(vec![esa()]);
+        let r = run_scenario(&spec, 1).unwrap();
+        let log = &r.per_policy[0].event_log;
+        for kind in [
+            "straggler_start",
+            "straggler_end",
+            "link_down",
+            "link_up",
+            "switch_crashed",
+            "switch_restarted",
+            "burst_started",
+            "job_arrived",
+            "job_admitted",
+            "job_completed",
+        ] {
+            assert!(
+                log.contains(&format!("\"kind\":\"{kind}\"")),
+                "missing {kind} in:\n{log}"
+            );
+        }
+        assert_eq!(r.per_policy[0].churn.unfinished, 0, "every arrival still completes");
+    }
+
+    #[test]
+    fn partitioned_policy_queues_and_recovers_across_the_crash() {
+        let spec = tiny(vec![switchml()]);
+        let r = run_scenario(&spec, 1).unwrap();
+        let p = &r.per_policy[0];
+        assert!(p.event_log.contains("\"kind\":\"switch_restarted\""));
+        assert_eq!(p.churn.unfinished, 0, "displaced jobs must re-admit and finish");
+    }
+
+    #[test]
+    fn report_is_byte_deterministic_across_runs_and_threads() {
+        let spec = tiny(vec![esa(), switchml()]);
+        let a = run_scenario(&spec, 1).unwrap();
+        let b = run_scenario(&spec, 8).unwrap();
+        assert_eq!(a.to_json(), b.to_json());
+        for (x, y) in a.per_policy.iter().zip(&b.per_policy) {
+            assert_eq!(diff_logs(&x.event_log, &y.event_log), None);
+            assert_eq!(x.event_digest, y.event_digest);
+        }
+    }
+
+    #[test]
+    fn toml_round_trip_carries_faults_and_knobs() {
+        let spec = ScenarioSpec::parse_str(
+            r#"
+            [scenario]
+            name = "crashy"
+            jobs = 3
+            seed = 9
+            rate_per_sec = 25000.0
+            workers = [2]
+            iters = [1, 2]
+            tensor_kb = 32
+            memory_kb = 128
+            tick_us = 50.0
+            policies = ["esa", "atp"]
+
+            [fault.crash]
+            at_us = 80.0
+            kind = "switch_crash"
+
+            [fault.slow]
+            at_us = 10.0
+            kind = "straggler"
+            node = 2
+            mult = 3.0
+            dur_us = 90.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.name, "crashy");
+        assert_eq!(spec.n_jobs, 3);
+        assert_eq!(spec.seed, 9);
+        assert_eq!(spec.policies.len(), 2);
+        assert_eq!(spec.iter_range, (1, 2));
+        assert_eq!(spec.models[0].tensor_bytes, Some(32 * 1024));
+        assert_eq!(spec.base.switch.memory_bytes, 128 * 1024);
+        assert_eq!(spec.knobs.sample_tick_ns, 50 * USEC);
+        // sorted by firing time: straggler first
+        assert!(matches!(spec.faults[0].kind, FaultKind::Straggler { .. }));
+        assert!(matches!(spec.faults[1].kind, FaultKind::SwitchCrash));
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn bad_specs_are_pointed_errors() {
+        let mut s = tiny(vec![esa()]);
+        s.name = "../evil".into();
+        assert!(s.validate().unwrap_err().to_string().contains("filename-safe"));
+        assert!(tiny(vec![]).validate().is_err());
+        let mut s = tiny(vec![esa()]);
+        s.faults.push(FaultSpec {
+            at_ns: 0,
+            kind: FaultKind::Straggler { node: 9999, mult: 2.0, dur_ns: 1 },
+        });
+        let err = format!("{:#}", s.validate().unwrap_err());
+        assert!(err.contains("outside"), "fabric-bounds error, got: {err}");
+    }
+}

@@ -98,6 +98,10 @@ pub struct SwitchStats {
     /// Stale slots cleared by the end-of-job control-plane flush (churn
     /// mode only — see DESIGN.md §11 and the §8 known-delta it closes).
     pub eoj_flushed: u64,
+    /// Slots lost to an injected switch crash (fault scenarios only —
+    /// DESIGN.md §13). Unlike `eoj_flushed` these carried live partials;
+    /// workers re-send them after the restart via the normal RTO path.
+    pub crash_wiped: u64,
     /// Slot-addressed packets dropped because their job holds no live
     /// region (churn mode: stragglers of a completed, revoked tenant).
     pub stale_drops: u64,
@@ -239,6 +243,25 @@ impl Switch {
         }
         self.stats.eoj_flushed += freed as u64;
         freed
+    }
+
+    /// Crash/restart fault: wipe the whole aggregator pool, returning how
+    /// many occupied slots were lost. Models a data-plane reboot — SRAM is
+    /// gone, but the control plane (wiring, regions, retirement flags)
+    /// survives in the controller and is re-pushed by the fault driver.
+    /// In-flight partials that were resident are simply lost; workers
+    /// recover them through the normal RTO/retransmission path.
+    pub fn crash_wipe(&mut self, now: SimTime) -> u32 {
+        let mut wiped = 0u32;
+        for slot in &mut self.pool {
+            if slot.occupied {
+                slot.value = None;
+                self.stats.busy_ns += slot.deallocate(now);
+                wiped += 1;
+            }
+        }
+        self.stats.crash_wiped += wiped as u64;
+        wiped
     }
 
     /// Slot index for a task under the active policy.
@@ -1088,6 +1111,23 @@ mod tests {
         assert_eq!(sw.occupied_slots(), 1, "job 1 untouched");
         assert_eq!(sw.stats.eoj_flushed, 2);
         assert_eq!(sw.flush_job(60, 0), 0, "idempotent: nothing left to flush");
+    }
+
+    #[test]
+    fn crash_wipe_clears_every_job_and_is_idempotent() {
+        let mut sw = mkswitch(esa());
+        let mut out = Vec::new();
+        sw.handle(10, grad(0, 5, 0, 9, &sw), &mut out);
+        sw.handle(10, grad(0, 6, 0, 9, &sw), &mut out);
+        sw.handle(10, grad(1, 3, 0, 9, &sw), &mut out);
+        assert_eq!(sw.occupied_slots(), 3);
+        assert_eq!(sw.crash_wipe(50), 3, "every resident partial is lost");
+        assert_eq!(sw.occupied_slots(), 0);
+        assert_eq!(sw.stats.crash_wiped, 3);
+        assert_eq!(sw.crash_wipe(60), 0, "second wipe finds nothing");
+        // the switch keeps working after the restart: wiring survived
+        sw.handle(70, grad(1, 4, 0, 9, &sw), &mut out);
+        assert_eq!(sw.occupied_slots(), 1);
     }
 
     #[test]

@@ -98,6 +98,17 @@ impl RegionAllocator {
         Some((start, len))
     }
 
+    /// Crash-wipe: forget every grant and restore the single free extent
+    /// a fresh allocator starts with. A switch restart loses its SRAM
+    /// wholesale; the control plane must re-grant from scratch rather
+    /// than reclaim job by job — after a reset, [`RegionAllocator::reclaim`]
+    /// of a pre-crash grant is an error (the exactly-once contract holds
+    /// across the crash boundary).
+    pub fn reset(&mut self) {
+        self.grants.clear();
+        self.free = if self.pool_slots > 0 { vec![(0, self.pool_slots)] } else { Vec::new() };
+    }
+
     /// Return `job`'s region to the free list, coalescing neighbours.
     /// Errors if the job holds no region — the exactly-once contract: a
     /// double reclamation would silently inflate the pool.
@@ -196,6 +207,21 @@ mod tests {
         assert_eq!(a.grant_of(1), Some((0, 20)));
         a.reclaim(1).unwrap();
         assert_eq!(a.grant_of(1), None);
+    }
+
+    #[test]
+    fn reset_wipes_grants_and_restores_one_free_extent() {
+        let mut a = RegionAllocator::new(80);
+        a.alloc(0, 20).unwrap();
+        a.alloc(1, 20).unwrap();
+        a.reset();
+        assert_eq!(a.free_slots(), 80);
+        assert_eq!(a.reserved_slots(), 0);
+        assert_eq!(a.grant_of(0), None);
+        // pre-crash grants are gone: reclaiming one is an error, and the
+        // whole pool is a single extent again
+        assert!(a.reclaim(0).is_err());
+        assert_eq!(a.alloc(2, 80), Some((0, 80)));
     }
 
     #[test]

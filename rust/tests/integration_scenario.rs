@@ -1,0 +1,234 @@
+//! Fault-scenario integration tests (DESIGN.md §13): admission edge
+//! cases under injected faults, checked through the structured event log
+//! rather than ad-hoc counters.
+//!
+//! The workload mirrors `integration_churn.rs`'s contended setup — a
+//! whole-pool static region (936 slots out of a 256 KB pool) so SwitchML
+//! serializes tenants through the FIFO admission queue — and scripts a
+//! switch crash while that queue is populated. The captured JSON-lines
+//! event log is then *replayed* as data: admission order, region
+//! grant/revoke pairing, and byte-stability across runs and thread
+//! counts are all asserted from the log itself.
+
+use esa::config::{ChurnKnobs, FaultKind, FaultSpec};
+use esa::packet::Packet;
+use esa::sim::events::diff_logs;
+use esa::sim::scenario::{run_scenario, PolicyScenario, ScenarioReport, ScenarioSpec};
+use esa::switch::policy::{atp, esa, switchml, PolicyHandle};
+use esa::switch::{JobWiring, Switch};
+use esa::util::rng::Rng;
+use esa::USEC;
+
+/// A contended scenario: six 64 KB jobs arriving at 50k/s into a 256 KB
+/// pool with a whole-pool region (single tenant at a time for SwitchML,
+/// so a FIFO queue exists), and a switch crash scripted mid-queue.
+fn contended(policies: Vec<PolicyHandle>) -> ScenarioSpec {
+    let mut spec = ScenarioSpec::quick();
+    spec.name = "itest".into();
+    spec.policies = policies;
+    spec.n_jobs = 6;
+    spec.rate_per_sec = 50_000.0;
+    spec.seed = 2026;
+    spec.knobs = ChurnKnobs { sample_tick_ns: 10 * USEC, region_slots: 936 };
+    spec.faults = vec![FaultSpec { at_ns: 60 * USEC, kind: FaultKind::SwitchCrash }];
+    spec
+}
+
+fn policy<'a>(report: &'a ScenarioReport, key: &str) -> &'a PolicyScenario {
+    report
+        .per_policy
+        .iter()
+        .find(|p| p.policy().key() == key)
+        .unwrap_or_else(|| panic!("policy {key} missing from report"))
+}
+
+/// The `kind` tag of one JSON-lines event.
+fn kind(line: &str) -> &str {
+    line.split_once("\"kind\":\"")
+        .and_then(|(_, rest)| rest.split_once('"'))
+        .map(|(k, _)| k)
+        .unwrap_or_else(|| panic!("no kind in event line: {line}"))
+}
+
+/// An unsigned integer field of one JSON-lines event.
+fn num(line: &str, key: &str) -> u64 {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat).unwrap_or_else(|| panic!("no {key} in event line: {line}"));
+    let digits: String =
+        line[at + pat.len()..].chars().take_while(char::is_ascii_digit).collect();
+    digits.parse().unwrap_or_else(|_| panic!("bad {key} in event line: {line}"))
+}
+
+/// The `"region":[start,len]` pair, or `None` for `"region":null`.
+fn region(line: &str) -> Option<(u64, u64)> {
+    let at = line.find("\"region\":[")?;
+    let body = line[at + "\"region\":[".len()..].split_once(']')?.0;
+    let (s, l) = body.split_once(',')?;
+    Some((s.parse().ok()?, l.parse().ok()?))
+}
+
+#[test]
+fn fifo_admission_order_is_preserved_across_the_switch_restart() {
+    let report = run_scenario(&contended(vec![switchml()]), 1).unwrap();
+    let p = policy(&report, "switchml");
+    let ch = p.churn.metrics.churn.as_ref().expect("churn mode metrics");
+    assert_eq!(
+        ch.region_slots, ch.pool_slots_per_stage,
+        "whole-pool region premise: one tenant at a time"
+    );
+    assert!(p.churn.peak_queue >= 1, "contended trace must form a queue");
+    assert!(
+        p.event_log.contains("\"kind\":\"job_queued\""),
+        "queueing must show up in the event log"
+    );
+
+    // Replay the log: with a single-tenant region the *first* admission
+    // of each job must happen in exact arrival order, and the crash's
+    // re-admissions (second admissions of displaced jobs) must not
+    // perturb that order.
+    let mut arrival_order = Vec::new();
+    let mut first_admit_order = Vec::new();
+    let mut total_admits = 0u64;
+    for line in p.event_log.lines() {
+        match kind(line) {
+            "job_arrived" => arrival_order.push(num(line, "job")),
+            "job_admitted" => {
+                total_admits += 1;
+                let j = num(line, "job");
+                if !first_admit_order.contains(&j) {
+                    first_admit_order.push(j);
+                }
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(first_admit_order, arrival_order, "FIFO order broken across the restart");
+
+    let restart = p
+        .event_log
+        .lines()
+        .find(|l| kind(l) == "switch_restarted")
+        .expect("the scripted crash must fire mid-run");
+    let displaced = num(restart, "displaced");
+    let readmitted = num(restart, "readmitted");
+    assert_eq!(
+        readmitted, displaced,
+        "a whole-pool displaced tenant always re-fits the wiped allocator"
+    );
+    assert_eq!(
+        total_admits,
+        arrival_order.len() as u64 + readmitted,
+        "admissions = one per arrival + one re-admission per displaced job"
+    );
+    assert_eq!(p.churn.unfinished, 0, "every job must complete despite the crash");
+}
+
+#[test]
+fn event_log_replay_shows_no_double_grants_and_disjoint_regions() {
+    let report = run_scenario(&contended(vec![switchml()]), 1).unwrap();
+    let p = policy(&report, "switchml");
+    // Replay grant/revoke pairing from the log: a job never holds two
+    // live grants (revoke + re-admit is the only regrant path), live
+    // regions never overlap, and the run ends with the pool fully
+    // returned.
+    let mut live: Vec<(u64, (u64, u64))> = Vec::new();
+    let mut grants = 0u64;
+    for line in p.event_log.lines() {
+        match kind(line) {
+            "job_admitted" => {
+                let Some((start, len)) = region(line) else { continue };
+                grants += 1;
+                let j = num(line, "job");
+                assert!(
+                    live.iter().all(|&(held, _)| held != j),
+                    "double grant: job {j} re-admitted while its region is live: {line}"
+                );
+                for &(other, (s, l)) in &live {
+                    assert!(
+                        start + len <= s || s + l <= start,
+                        "grant [{start},{len}) for job {j} overlaps job {other}'s [{s},{l})"
+                    );
+                }
+                live.push((j, (start, len)));
+            }
+            "region_revoked" => {
+                let j = num(line, "job");
+                let at = live
+                    .iter()
+                    .position(|&(held, _)| held == j)
+                    .unwrap_or_else(|| panic!("revoke without a live grant: {line}"));
+                live.remove(at);
+            }
+            _ => {}
+        }
+    }
+    assert!(
+        grants >= report.arrivals.len() as u64,
+        "every arrival must receive at least one region grant, got {grants}"
+    );
+    assert!(live.is_empty(), "grants still live at end of run: {live:?}");
+}
+
+#[test]
+fn stale_stragglers_into_a_wiped_revoked_region_drop() {
+    // Unit-level mirror of the crash path's worst case: a displaced
+    // tenant whose region is *not* re-granted (it lost the post-crash
+    // re-admission) still has packets in flight, slot-addressed into the
+    // wiped pool. They must drop — re-occupying would resurrect exactly
+    // the stale partials the crash wipe reclaimed.
+    let wiring = vec![
+        JobWiring { ps: 10, workers: vec![1, 2], fan_in: 2, fan_in_total: 2, packet_bytes: 306 },
+        JobWiring { ps: 11, workers: vec![3, 4], fan_in: 2, fan_in_total: 2, packet_bytes: 306 },
+    ];
+    let mut sw = Switch::new(0, switchml(), 64, wiring, Rng::new(1));
+    sw.enable_churn(2);
+    sw.grant_region(0, 0, 32);
+    let slot = sw.slot_index(0, 5); // addressed under the pre-crash grant
+    let mut out = Vec::new();
+    let mut p = Packet::gradient(0, 5, 0, 1, 2, 0, 1, 0, 306);
+    p.agg_index = slot;
+    sw.handle(10, p, &mut out);
+    assert_eq!(sw.occupied_slots(), 1, "worker 0's partial is resident pre-crash");
+
+    // the crash wipes the live partial exactly once, then the control
+    // plane revokes the displaced tenant's region
+    assert_eq!(sw.crash_wipe(20), 1);
+    assert_eq!(sw.crash_wipe(21), 0, "wipe accounting is exactly-once");
+    sw.revoke_region(0);
+
+    // worker 1's straggler retransmit lands in the wiped, unowned region
+    let mut late = Packet::gradient(0, 5, 1, 2, 2, 0, 2, 0, 306);
+    late.agg_index = slot;
+    sw.handle(30, late, &mut out);
+    assert_eq!(sw.stats.stale_drops, 1, "stale straggler must drop, not re-occupy");
+    assert_eq!(sw.occupied_slots(), 0);
+    assert!(out.is_empty(), "a dropped straggler must not emit packets");
+}
+
+#[test]
+fn scenario_artifacts_and_event_logs_are_byte_stable_across_runs_and_threads() {
+    let spec = contended(vec![esa(), atp(), switchml()]);
+    let first = run_scenario(&spec, 1).unwrap();
+    let replay = run_scenario(&spec, 8).unwrap();
+    assert_eq!(first.to_json(), replay.to_json(), "artifact bytes must not depend on threads");
+    for (a, b) in first.per_policy.iter().zip(&replay.per_policy) {
+        assert_eq!(
+            diff_logs(&a.event_log, &b.event_log),
+            None,
+            "{}: captured log must diff empty against its replay",
+            a.policy().name()
+        );
+        assert_eq!(a.event_digest, b.event_digest);
+        assert_eq!(a.churn.unfinished, 0, "{}: crash must not strand jobs", a.policy().name());
+    }
+
+    // File round-trip: written artifacts carry the identical bytes.
+    let dir = std::env::temp_dir().join(format!("esa-scenario-itest-{}", std::process::id()));
+    let (json_path, log_paths) = first.write(&dir).unwrap();
+    assert_eq!(std::fs::read_to_string(&json_path).unwrap(), first.to_json());
+    assert_eq!(log_paths.len(), first.per_policy.len());
+    for (path, p) in log_paths.iter().zip(&first.per_policy) {
+        assert_eq!(&std::fs::read_to_string(path).unwrap(), &p.event_log);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -82,26 +82,51 @@ fn missing_config_file_is_a_pointed_error() {
 }
 
 /// The golden gate: the committed snapshot pins the quick grid's bytes.
-/// A `provenance: placeholder` snapshot (no blessed numbers yet — the
-/// build environment never ran on real hardware) skips the comparison
-/// with a loud message; `make bless` regenerates and flips it to
-/// `simulated`, after which any drift fails here and in CI.
+///
+/// Self-blessing harness (`make bless` documents the flow):
+/// - `ESA_BLESS=1 cargo test` rewrites the snapshot from a live run and
+///   passes — the one sanctioned way to accept intentional drift.
+/// - A missing snapshot FAILS (it is a committed artifact, not optional).
+/// - A seed `"placeholder"` snapshot (the repo bootstrapped without
+///   blessed bytes) is replaced in place by the live bytes and the test
+///   passes with a loud "commit the result" — the debt self-heals on the
+///   first real test run instead of skipping forever.
+/// - Otherwise: strict byte comparison; any drift fails here and in the
+///   CI sweep gate.
 #[test]
 fn quick_sweep_matches_committed_golden() {
-    let golden = include_str!("golden/sweep_quick.json");
-    if golden.contains("\"provenance\": \"placeholder\"") {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/sweep_quick.json");
+    let fresh = run_sweep(&SweepConfig::quick(), 2).unwrap().to_json();
+    assert!(
+        fresh.contains("\"provenance\":\"simulated\""),
+        "fresh sweep bytes must be self-describing"
+    );
+    if std::env::var_os("ESA_BLESS").is_some() {
+        std::fs::write(&path, &fresh).unwrap();
+        eprintln!("blessed {} ({} bytes) — review and commit it", path.display(), fresh.len());
+        return;
+    }
+    let golden = match std::fs::read_to_string(&path) {
+        Ok(s) => s,
+        Err(e) => panic!(
+            "golden snapshot {} is missing ({e}) — run `make bless` and commit the result",
+            path.display()
+        ),
+    };
+    if golden.contains("\"placeholder\"") {
+        std::fs::write(&path, &fresh).unwrap();
         eprintln!(
-            "tests/golden/sweep_quick.json is an unblessed placeholder — run `make bless` \
-             on real hardware and commit the result; skipping the byte comparison"
+            "{} was an unblessed placeholder — regenerated it from a live quick-grid run; \
+             review and commit the result",
+            path.display()
         );
         return;
     }
-    let fresh = run_sweep(&SweepConfig::quick(), 2).unwrap().to_json();
     assert_eq!(
-        fresh,
-        golden,
+        fresh, golden,
         "quick sweep drifted from the blessed golden snapshot — if the change is \
-         intentional, regenerate via `make bless` and commit"
+         intentional, regenerate via `make bless` (ESA_BLESS=1) and commit"
     );
 }
 

@@ -243,6 +243,116 @@ fn prop_event_queue_total_order() {
     });
 }
 
+/// RegionAllocator never hands out overlapping regions: at every step of
+/// a random grant/revoke interleaving, live grants are pairwise disjoint,
+/// stay inside the pool, and the free/reserved accounting adds up.
+#[test]
+fn prop_region_grants_never_overlap() {
+    use esa::switch::region::RegionAllocator;
+    prop("region-no-overlap", 80, |rng| {
+        let pool = rng.uniform_u64(16, 256) as u32;
+        let n_jobs = rng.uniform_u64(2, 12) as u16;
+        let mut a = RegionAllocator::new(pool);
+        for _ in 0..rng.uniform_u64(20, 200) {
+            let job = rng.next_below(n_jobs as u64) as u16;
+            match a.grant_of(job) {
+                Some(_) if rng.chance(0.5) => {
+                    a.reclaim(job).expect("live grant must reclaim");
+                }
+                Some(_) => {}
+                None => {
+                    let len = rng.uniform_u64(1, (pool as u64 / 2).max(1)) as u32;
+                    a.alloc(job, len); // None (no fit) is fine
+                }
+            }
+            let grants: Vec<_> = (0..n_jobs).filter_map(|j| a.grant_of(j)).collect();
+            for (i, &(s1, l1)) in grants.iter().enumerate() {
+                assert!(s1 + l1 <= pool, "grant ({s1},{l1}) escapes the {pool}-slot pool");
+                for &(s2, l2) in &grants[i + 1..] {
+                    assert!(
+                        s1 + l1 <= s2 || s2 + l2 <= s1,
+                        "overlapping grants ({s1},{l1}) / ({s2},{l2})"
+                    );
+                }
+            }
+            assert_eq!(a.free_slots() + a.reserved_slots(), pool, "accounting drift");
+        }
+    });
+}
+
+/// After fully revoking any random grant sequence, coalescing must have
+/// rebuilt the single pool-spanning free extent: one max-size alloc fits.
+#[test]
+fn prop_region_full_revocation_coalesces_to_one_extent() {
+    use esa::switch::region::RegionAllocator;
+    prop("region-coalesce", 80, |rng| {
+        let pool = rng.uniform_u64(16, 256) as u32;
+        let n_jobs = rng.uniform_u64(2, 12) as u16;
+        let mut a = RegionAllocator::new(pool);
+        for _ in 0..rng.uniform_u64(10, 100) {
+            let job = rng.next_below(n_jobs as u64) as u16;
+            if a.grant_of(job).is_some() {
+                a.reclaim(job).unwrap();
+            } else {
+                let len = rng.uniform_u64(1, (pool as u64 / 3).max(1)) as u32;
+                a.alloc(job, len);
+            }
+        }
+        // revoke everything still live, in random order
+        let mut live: Vec<u16> = (0..n_jobs).filter(|&j| a.grant_of(j).is_some()).collect();
+        rng.shuffle(&mut live);
+        for job in live {
+            a.reclaim(job).unwrap();
+        }
+        assert_eq!(a.free_slots(), pool);
+        assert_eq!(
+            a.alloc(0, pool),
+            Some((0, pool)),
+            "free list must coalesce back to one pool-spanning extent"
+        );
+    });
+}
+
+/// Reclamation is exactly-once even when a crash fault resets the pool
+/// mid-sequence: post-reset reclaims of pre-crash grants are errors, and
+/// the wiped pool serves fresh grants from a clean slate.
+#[test]
+fn prop_region_reclaim_exactly_once_across_crash_reset() {
+    use esa::switch::region::RegionAllocator;
+    prop("region-crash-reset", 80, |rng| {
+        let pool = rng.uniform_u64(16, 128) as u32;
+        let n_jobs = rng.uniform_u64(2, 8) as u16;
+        let mut a = RegionAllocator::new(pool);
+        let mut live = vec![false; n_jobs as usize];
+        for _ in 0..rng.uniform_u64(20, 150) {
+            let job = rng.next_below(n_jobs as u64) as u16;
+            if rng.chance(0.1) {
+                // crash: the wipe displaces every live grant at once
+                a.reset();
+                live.iter_mut().for_each(|l| *l = false);
+                assert_eq!(a.free_slots(), pool, "reset must restore the whole pool");
+                continue;
+            }
+            if live[job as usize] {
+                a.reclaim(job).expect("first reclaim of a live grant");
+                live[job as usize] = false;
+                assert!(
+                    a.reclaim(job).is_err(),
+                    "second reclaim must fail, not inflate the pool"
+                );
+            } else {
+                // exactly-once across the crash boundary: a job whose
+                // grant was wiped cannot be reclaimed either
+                assert!(a.reclaim(job).is_err(), "reclaim without a live grant");
+                if a.alloc(job, rng.uniform_u64(1, (pool as u64 / 2).max(1)) as u32).is_some() {
+                    live[job as usize] = true;
+                }
+            }
+            assert_eq!(a.free_slots() + a.reserved_slots(), pool, "accounting drift");
+        }
+    });
+}
+
 /// Random mixed-policy simulations always terminate cleanly and
 /// deterministically (same seed twice ⇒ identical event counts).
 #[test]
