@@ -6,13 +6,21 @@ ARTIFACTS ?= artifacts
 PRESET ?= tiny
 WORKERS ?= 4
 
-.PHONY: build test bench bench-figures figures sweep churn scenario bless artifacts clean-artifacts
+.PHONY: build test lint bench bench-figures figures sweep churn scenario bless artifacts clean-artifacts
 
 build:
 	cd rust && cargo build --release
 
 test:
 	cd rust && cargo test -q
+
+## The static gate (DESIGN.md §14): esa-lint enforces the determinism /
+## architecture / hot-path invariants (writes rust/target/LINT.json),
+## then clippy covers the whole workspace at deny-warnings, mirroring
+## the CI lint-gate lane.
+lint:
+	cd rust && cargo run --release -q -p esa-lint -- --root .
+	cd rust && cargo clippy --workspace --all-targets -- -D warnings
 
 ## Run a scenario sweep on all cores. Default: the built-in quick grid
 ## (5 INA policies x racks {1,4}); point SWEEP_CONFIG at a sweep TOML for

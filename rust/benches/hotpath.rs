@@ -295,6 +295,7 @@ fn main() {
         Ok(path) => println!("\nwrote {path}"),
         Err(e) => {
             eprintln!("failed to write BENCH_hotpath.json: {e}");
+            // esa-lint: allow(process-exit, reason="bench binary's own I/O-failure exit; not library code")
             std::process::exit(1);
         }
     }

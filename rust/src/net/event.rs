@@ -69,6 +69,7 @@ impl PacketSlab {
 
     /// Store `pkt`, returning its slot index.
     #[inline]
+    // esa-lint: no_alloc
     pub fn insert(&mut self, pkt: Packet) -> u32 {
         match self.free.pop() {
             Some(i) => {
@@ -85,6 +86,7 @@ impl PacketSlab {
 
     /// Take the packet out of `slot`, freeing it for reuse.
     #[inline]
+    // esa-lint: no_alloc
     pub fn remove(&mut self, slot: u32) -> Packet {
         let pkt = self.slots[slot as usize].take().expect("empty slab slot");
         self.free.push(slot);
@@ -222,6 +224,7 @@ impl EventQueue {
     /// so a misbehaving actor is visible in `ExperimentMetrics` rather
     /// than silently reordering history.
     #[inline]
+    // esa-lint: no_alloc
     pub fn schedule(&mut self, at: SimTime, event: Event) {
         debug_assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
         let at = if at < self.now {
@@ -252,6 +255,7 @@ impl EventQueue {
 
     /// Pop the earliest event, advancing `now`.
     #[inline]
+    // esa-lint: no_alloc
     pub fn pop(&mut self) -> Option<(SimTime, Event)> {
         let len = self.heap.len();
         if len == 0 {
@@ -285,6 +289,7 @@ impl EventQueue {
     /// Hole-insertion sift toward the root (entries are `Copy`: one read,
     /// k parent moves, one write — no swaps).
     #[inline]
+    // esa-lint: no_alloc
     fn sift_up(&mut self, mut pos: usize) {
         let e = self.heap[pos];
         while pos > 0 {
@@ -300,6 +305,7 @@ impl EventQueue {
     }
 
     #[inline]
+    // esa-lint: no_alloc
     fn sift_down(&mut self, mut pos: usize) {
         let e = self.heap[pos];
         let len = self.heap.len();

@@ -179,7 +179,7 @@ mod tests {
     #[test]
     fn star_link_ids_unique() {
         let t = Topology::star(3);
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for a in 0..4u32 {
             for b in 0..4u32 {
                 if a != b {

@@ -16,7 +16,7 @@
 //! workers (selective retransmission), who answer with a retransmit — or
 //! with a cached result if they already pulled the parameter (case 2).
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 
 use crate::packet::{Packet, PacketKind, UNSTAMPED};
 use crate::util::fixed::agg_add_slice;
@@ -104,7 +104,7 @@ struct JobState {
     entries: BTreeMap<u32, Entry>,
     /// Bounded cache of completed results: seq -> values (None in timing
     /// mode). Serves duplicate pulls and the case-2 re-multicast.
-    completed: HashMap<u32, Option<Box<[i32]>>>,
+    completed: BTreeMap<u32, Option<Box<[i32]>>>,
     completed_order: std::collections::VecDeque<u32>,
     rtt: RttEstimator,
     /// Highest completed-or-entered seq (dupACK reference point).
@@ -169,7 +169,7 @@ impl Ps {
                 packet_bytes,
                 reliable_params,
                 entries: BTreeMap::new(),
-                completed: HashMap::new(),
+                completed: BTreeMap::new(),
                 completed_order: std::collections::VecDeque::new(),
                 rtt: RttEstimator::default(),
                 max_seen_seq: 0,

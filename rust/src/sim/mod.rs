@@ -519,6 +519,7 @@ impl Simulation {
     /// at the edge; `Param`/reminder traffic from hosts targets the edge
     /// while self-emitted (`src == 0`) downlink copies target rack 0 — and
     /// zero-hop recirculations between the stages run in-process.
+    // esa-lint: no_alloc
     fn deliver_at_switch(&mut self, now: crate::SimTime, node: NodeId, pkt: Packet) {
         if pkt.dst != node {
             // transit: observe (ATP dealloc on param), then forward
@@ -650,6 +651,7 @@ impl Simulation {
     /// Run one PS callback under the shared buffer discipline: borrow the
     /// persistent out-buffer, re-arm the scan timer if needed, transmit
     /// everything emitted, and restore the buffer with capacity intact.
+    // esa-lint: no_alloc
     fn dispatch_ps<F>(&mut self, i: u32, now: crate::SimTime, f: F)
     where
         F: FnOnce(&mut Ps, crate::SimTime, &mut Vec<Packet>),
@@ -941,6 +943,7 @@ impl Simulation {
     /// assert_eq!(metrics.switches.len(), 1, "a star reports one root switch");
     /// ```
     pub fn run(&mut self) -> ExperimentMetrics {
+        // esa-lint: allow(wall-clock, reason="wall_secs is operator-facing progress output; it never enters a byte-diffed artifact")
         let wall = Instant::now();
         loop {
             if self.all_done() {
@@ -1154,8 +1157,8 @@ mod tests {
         // (the edge's) and workers 100+ reused 200+r (the rack
         // switches'). Pin the namespaces apart for any plausible fleet so
         // stream independence never rests on split-call order.
-        use std::collections::HashSet;
-        let mut seen = HashSet::new();
+        use std::collections::BTreeSet;
+        let mut seen = BTreeSet::new();
         assert!(seen.insert(super::rng_stream::NET));
         assert!(seen.insert(super::rng_stream::START));
         assert!(seen.insert(super::rng_stream::EDGE));

@@ -340,6 +340,7 @@ impl PolicyScenario {
     /// Per-kind event histogram, sorted by kind name — stable, so it can
     /// be embedded in the byte-deterministic artifact.
     pub fn event_kinds(&self) -> Vec<(String, u64)> {
+        // esa-lint: allow-scope(artifact-serializer, reason="parses the json-lines event log; emits no JSON itself")
         let mut counts: Vec<(String, u64)> = Vec::new();
         for line in self.event_log.lines() {
             let Some(kind) = line

@@ -455,7 +455,7 @@ mod tests {
     #[test]
     fn hash_mapping_spreads_over_pool() {
         let p = Policy::new(esa());
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for seq in 0..1000 {
             seen.insert(p.slot_for(1, seq, 4096));
         }

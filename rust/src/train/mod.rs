@@ -107,6 +107,7 @@ impl Trainer {
         if params.len() != flat_len {
             bail!("init params {} != flat_len {}", params.len(), flat_len);
         }
+        // esa-lint: allow(rng-stream, reason="data-shuffle stream derived from cfg.seed; training sits outside the sim actor namespaces")
         let data_rng = Rng::new(cfg.seed ^ 0xda7a);
         Ok(Trainer {
             cfg,

@@ -1,0 +1,5 @@
+//! Negative fixture: a justified allow-scope covers a JSON-lines fn.
+pub fn to_line(t: u64) -> String {
+    // esa-lint: allow-scope(artifact-serializer, reason="JSON-lines schema: one fixed format per kind")
+    format!("{{\"t\":{t}}}")
+}

@@ -1,0 +1,4 @@
+//! Negative fixture: util/json.rs is the one sanctioned serializer.
+pub fn cell_json(policy: &str, util: f64) -> String {
+    format!("{{\"policy\":\"{policy}\",\"util\":{util}}}")
+}

@@ -1,0 +1,4 @@
+//! Positive fixture: a hand-rolled JSON fragment in an artifact path.
+pub fn cell_json(policy: &str, util: f64) -> String {
+    format!("{{\"policy\":\"{policy}\",\"util\":{util}}}")
+}

@@ -1,0 +1,9 @@
+//! Negative fixture: well-formed allows suppress and get recorded.
+// esa-lint: allow(nondet-collection, reason="membership probe only; never iterated")
+use std::collections::HashSet;
+
+pub fn probe(xs: &[u32]) -> bool {
+    // esa-lint: allow(nondet-collection, reason="membership probe only; never iterated")
+    let set: HashSet<u32> = xs.iter().copied().collect();
+    set.contains(&7)
+}

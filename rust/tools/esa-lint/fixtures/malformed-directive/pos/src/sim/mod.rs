@@ -1,0 +1,3 @@
+//! Positive fixture: an allow without its mandatory justification.
+// esa-lint: allow(wall-clock)
+pub fn noted() {}

@@ -1,0 +1,6 @@
+//! Negative fixture: pushing into a caller-owned buffer is the
+//! sanctioned hot-path shape (amortized, capacity-pinned).
+// esa-lint: no_alloc
+pub fn hot_path(buf: &mut Vec<u32>) {
+    buf.push(7);
+}

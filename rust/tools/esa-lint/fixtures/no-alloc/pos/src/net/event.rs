@@ -1,0 +1,6 @@
+//! Positive fixture: a marked hot-path fn that allocates.
+// esa-lint: no_alloc
+pub fn hot_path() -> usize {
+    let scratch: Vec<u32> = Vec::new();
+    scratch.len()
+}

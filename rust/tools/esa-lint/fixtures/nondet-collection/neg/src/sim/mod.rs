@@ -1,0 +1,7 @@
+//! Negative fixture: ordered collections are always fine.
+use std::collections::BTreeMap;
+
+pub fn slot_counts() -> usize {
+    let m: BTreeMap<u32, u32> = BTreeMap::new();
+    m.len()
+}

@@ -1,0 +1,7 @@
+//! Positive fixture: hash-ordered collections in a sim path.
+use std::collections::HashMap;
+
+pub fn slot_counts() -> usize {
+    let m: HashMap<u32, u32> = HashMap::new();
+    m.len()
+}

@@ -1,0 +1,4 @@
+//! Negative fixture: config/ is where the parse artifact lives.
+pub fn is_esa(kind: &PolicyKind) -> bool {
+    matches!(kind, PolicyKind::Esa)
+}

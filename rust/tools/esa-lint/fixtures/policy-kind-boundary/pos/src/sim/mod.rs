@@ -1,0 +1,5 @@
+//! Positive fixture: the acceptance-criteria boundary probe — a
+//! `PolicyKind::` match creeping back outside config/ + switch/policy/.
+pub fn is_esa(kind: &PolicyKind) -> bool {
+    matches!(kind, PolicyKind::Esa)
+}

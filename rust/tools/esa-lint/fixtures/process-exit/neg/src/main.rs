@@ -1,0 +1,4 @@
+//! Negative fixture: main.rs owns the process boundary.
+fn main() {
+    std::process::exit(0);
+}

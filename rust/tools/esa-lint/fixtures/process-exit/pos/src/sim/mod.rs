@@ -1,0 +1,4 @@
+//! Positive fixture: library code must return errors, not exit.
+pub fn bail() {
+    std::process::exit(2);
+}

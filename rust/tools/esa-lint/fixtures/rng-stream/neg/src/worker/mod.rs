@@ -1,0 +1,9 @@
+//! Negative fixture: fixed-seed RNGs are the idiom inside tests.
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn deterministic_jitter() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        assert_eq!(rng.next_u64(), rng.next_u64());
+    }
+}

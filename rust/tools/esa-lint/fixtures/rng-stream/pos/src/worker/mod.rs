@@ -1,0 +1,5 @@
+//! Positive fixture: ad-hoc RNG construction in live actor code.
+pub fn jitter(seed: u64) -> u64 {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    rng.next_u64()
+}

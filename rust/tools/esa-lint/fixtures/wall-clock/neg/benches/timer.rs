@@ -1,0 +1,5 @@
+//! Negative fixture: benches measure wall time by definition.
+fn main() {
+    let t0 = std::time::Instant::now();
+    println!("{:?}", t0.elapsed());
+}

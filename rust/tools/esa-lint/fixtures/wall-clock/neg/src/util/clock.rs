@@ -1,0 +1,4 @@
+//! Negative fixture: util/ owns the wall-clock boundary.
+pub fn stamp_ns() -> u128 {
+    std::time::Instant::now().elapsed().as_nanos()
+}

@@ -1,0 +1,4 @@
+//! Positive fixture: wall time in the simulation tree.
+pub fn stamp_ns() -> u128 {
+    std::time::Instant::now().elapsed().as_nanos()
+}

@@ -1,0 +1,502 @@
+//! A minimal, self-contained Rust lexer.
+//!
+//! The lint rules (see [`crate::rules`]) are token-pattern rules: "the
+//! path `Instant::now` appears", "the identifier `HashMap` appears", "a
+//! string literal contains a hand-rolled JSON fragment". None of them
+//! need types, name resolution, or even a full AST — they need a token
+//! stream that is *exact* about the three things a grep can never be
+//! exact about:
+//!
+//! 1. **comments vs code** — `// PolicyKind::Esa` in prose must not fire;
+//! 2. **string contents vs code** — `"HashMap"` in a test assertion must
+//!    not fire, while a string literal *is* the subject of the
+//!    artifact-serializer rule;
+//! 3. **test vs non-test code** — several rules exempt `#[cfg(test)]`
+//!    regions, where fixed-seed `Rng::new` construction is the idiom.
+//!
+//! So the lexer handles the full literal grammar (cooked/raw/byte
+//! strings, char literals vs lifetimes, nested block comments) and then
+//! marks `#[cfg(test)]` / `#[test]` item regions by brace matching. It
+//! deliberately does *not* build an AST: the repo has no syn/proc-macro2
+//! (offline-first, no registry), and the invariants below are all
+//! expressible as token sequences.
+
+/// Token classification — just enough for the rules to tell identifiers,
+/// punctuation, and literals apart.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`HashMap`, `fn`, `mod`, ...).
+    Ident,
+    /// Single punctuation character (`:`, `!`, `{`, ...).
+    Punct,
+    /// String literal; `text` holds the (lightly unescaped) content.
+    Str,
+    /// Numeric or char literal; content is irrelevant to every rule.
+    Num,
+    /// Lifetime (`'a`); kept distinct so it never merges with idents.
+    Life,
+}
+
+/// One lexed token with its source line (1-based).
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    /// True when the token sits inside a `#[cfg(test)]` / `#[test]`
+    /// region (set by the post-pass in [`lex`]).
+    pub in_test: bool,
+}
+
+/// One line comment (`//...`); block comments are discarded. The text
+/// excludes the leading `//`, so doc comments (`///`, `//!`) arrive with
+/// a leading `/` or `!` and can never parse as an `esa-lint:` directive.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// A fully lexed source file.
+#[derive(Debug, Default)]
+pub struct LexFile {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+/// Lex `src` into tokens + line comments and mark test regions.
+pub fn lex(src: &str) -> LexFile {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut out = LexFile::default();
+    let mut line: u32 = 1;
+    let mut i = 0usize;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (also covers /// and //! doc comments)
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && cs[j] != '\n' {
+                j += 1;
+            }
+            out.comments.push(Comment { line, text: cs[start..j].iter().collect() });
+            i = j;
+            continue;
+        }
+        // block comment, nested per the Rust grammar
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let mut depth = 1u32;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if cs[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if cs[j] == '/' && j + 1 < n && cs[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if cs[j] == '*' && j + 1 < n && cs[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // raw strings: r"..." / r#"..."# (b-prefixed variants below)
+        if c == 'r' {
+            if let Some((start, hashes)) = raw_string_start(&cs, i + 1) {
+                let tok_line = line;
+                let (text, next) = raw_string(&cs, start, hashes, &mut line);
+                out.toks.push(Tok { kind: TokKind::Str, text, line: tok_line, in_test: false });
+                i = next;
+                continue;
+            }
+        }
+        // byte strings / byte chars: b"...", br"...", b'x'
+        if c == 'b' && i + 1 < n {
+            if cs[i + 1] == '"' {
+                let tok_line = line;
+                let (text, next) = cooked_string(&cs, i + 2, &mut line);
+                out.toks.push(Tok { kind: TokKind::Str, text, line: tok_line, in_test: false });
+                i = next;
+                continue;
+            }
+            if cs[i + 1] == 'r' {
+                if let Some((start, hashes)) = raw_string_start(&cs, i + 2) {
+                    let tok_line = line;
+                    let (text, next) = raw_string(&cs, start, hashes, &mut line);
+                    out.toks.push(Tok { kind: TokKind::Str, text, line: tok_line, in_test: false });
+                    i = next;
+                    continue;
+                }
+            }
+            if cs[i + 1] == '\'' {
+                let tok_line = line;
+                let next = char_literal(&cs, i + 2, &mut line);
+                out.toks.push(Tok {
+                    kind: TokKind::Num,
+                    text: String::new(),
+                    line: tok_line,
+                    in_test: false,
+                });
+                i = next;
+                continue;
+            }
+        }
+        if c == '"' {
+            let tok_line = line;
+            let (text, next) = cooked_string(&cs, i + 1, &mut line);
+            out.toks.push(Tok { kind: TokKind::Str, text, line: tok_line, in_test: false });
+            i = next;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            let is_lifetime = i + 1 < n
+                && (cs[i + 1].is_alphabetic() || cs[i + 1] == '_')
+                && !(i + 2 < n && cs[i + 2] == '\'');
+            if is_lifetime {
+                let mut j = i + 1;
+                while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                    j += 1;
+                }
+                let text: String = cs[i + 1..j].iter().collect();
+                out.toks.push(Tok { kind: TokKind::Life, text, line, in_test: false });
+                i = j;
+                continue;
+            }
+            let tok_line = line;
+            let next = char_literal(&cs, i + 1, &mut line);
+            out.toks.push(Tok {
+                kind: TokKind::Num,
+                text: String::new(),
+                line: tok_line,
+                in_test: false,
+            });
+            i = next;
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            let text: String = cs[i..j].iter().collect();
+            out.toks.push(Tok { kind: TokKind::Ident, text, line, in_test: false });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            let mut seen_dot = false;
+            while j < n {
+                let ch = cs[j];
+                if ch.is_ascii_alphanumeric() || ch == '_' {
+                    j += 1;
+                } else if ch == '.' && !seen_dot && j + 1 < n && cs[j + 1].is_ascii_digit() {
+                    seen_dot = true;
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            let text: String = cs[i..j].iter().collect();
+            out.toks.push(Tok { kind: TokKind::Num, text, line, in_test: false });
+            i = j;
+            continue;
+        }
+        out.toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line, in_test: false });
+        i += 1;
+    }
+    mark_test_regions(&mut out.toks);
+    out
+}
+
+/// If the chars at `j` (just past `r` / `br`) open a raw string
+/// (`#`* then `"`), return (index of first content char, hash count).
+fn raw_string_start(cs: &[char], mut j: usize) -> Option<(usize, usize)> {
+    let mut hashes = 0usize;
+    while j < cs.len() && cs[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < cs.len() && cs[j] == '"' {
+        Some((j + 1, hashes))
+    } else {
+        None
+    }
+}
+
+/// Scan a raw string body; returns (content, index past the closer).
+fn raw_string(cs: &[char], mut j: usize, hashes: usize, line: &mut u32) -> (String, usize) {
+    let mut s = String::new();
+    let n = cs.len();
+    while j < n {
+        if cs[j] == '"' {
+            let mut k = 0usize;
+            while k < hashes && j + 1 + k < n && cs[j + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                return (s, j + 1 + hashes);
+            }
+        }
+        if cs[j] == '\n' {
+            *line += 1;
+        }
+        s.push(cs[j]);
+        j += 1;
+    }
+    (s, j)
+}
+
+/// Scan a cooked string body from just past the opening quote; resolves
+/// the escapes that matter for substring rules (`\"` -> `"`) and returns
+/// (content, index past the closing quote).
+fn cooked_string(cs: &[char], mut j: usize, line: &mut u32) -> (String, usize) {
+    let mut s = String::new();
+    let n = cs.len();
+    while j < n {
+        match cs[j] {
+            '\\' if j + 1 < n => {
+                match cs[j + 1] {
+                    'n' => s.push('\n'),
+                    't' => s.push('\t'),
+                    'r' => s.push('\r'),
+                    '"' => s.push('"'),
+                    '\\' => s.push('\\'),
+                    '\n' => *line += 1, // line-continuation escape
+                    e => {
+                        s.push('\\');
+                        s.push(e);
+                    }
+                }
+                j += 2;
+            }
+            '"' => return (s, j + 1),
+            ch => {
+                if ch == '\n' {
+                    *line += 1;
+                }
+                s.push(ch);
+                j += 1;
+            }
+        }
+    }
+    (s, j)
+}
+
+/// Scan a char literal body from just past the opening quote; returns
+/// the index past the closing quote.
+fn char_literal(cs: &[char], mut j: usize, line: &mut u32) -> usize {
+    let n = cs.len();
+    while j < n {
+        match cs[j] {
+            '\\' if j + 1 < n => j += 2,
+            '\'' => return j + 1,
+            ch => {
+                if ch == '\n' {
+                    *line += 1;
+                }
+                j += 1;
+            }
+        }
+    }
+    j
+}
+
+/// Mark every token belonging to a `#[cfg(test)]` or `#[test]` item.
+///
+/// After the attribute's `]`, the item's extent is the first `{` ... its
+/// matching `}` (mod/fn/impl bodies), or everything up to the first `;`
+/// for brace-less items (`use`, `const`, `mod foo;`). `cfg(not(test))`
+/// and friends are conservatively *not* marked.
+fn mark_test_regions(toks: &mut [Tok]) {
+    let mut i = 0usize;
+    while i < toks.len() {
+        let opens_attr = toks[i].kind == TokKind::Punct
+            && toks[i].text == "#"
+            && i + 1 < toks.len()
+            && toks[i + 1].kind == TokKind::Punct
+            && toks[i + 1].text == "[";
+        if !opens_attr {
+            i += 1;
+            continue;
+        }
+        // collect the attribute's identifiers up to the matching `]`
+        let mut depth = 0i32;
+        let mut j = i + 1;
+        let mut idents: Vec<String> = Vec::new();
+        while j < toks.len() {
+            if toks[j].kind == TokKind::Punct && toks[j].text == "[" {
+                depth += 1;
+            } else if toks[j].kind == TokKind::Punct && toks[j].text == "]" {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if toks[j].kind == TokKind::Ident {
+                idents.push(toks[j].text.clone());
+            }
+            j += 1;
+        }
+        let is_test_attr = (idents.len() == 1 && idents[0] == "test")
+            || (idents.first().is_some_and(|s| s == "cfg")
+                && idents.iter().any(|s| s == "test")
+                && !idents.iter().any(|s| s == "not"));
+        if !is_test_attr {
+            i = j + 1;
+            continue;
+        }
+        // item extent: first `{`..matching `}`, or up to the first `;`
+        let mut k = j + 1;
+        let mut end = toks.len().saturating_sub(1);
+        while k < toks.len() {
+            if toks[k].kind == TokKind::Punct && toks[k].text == ";" {
+                end = k;
+                break;
+            }
+            if toks[k].kind == TokKind::Punct && toks[k].text == "{" {
+                end = matching_brace(toks, k);
+                break;
+            }
+            k += 1;
+        }
+        for t in toks[i..=end].iter_mut() {
+            t.in_test = true;
+        }
+        i = j + 1;
+    }
+}
+
+/// Index of the `}` matching the `{` at `open` (last token if unbalanced).
+pub fn matching_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = open;
+    while j < toks.len() {
+        if toks[j].kind == TokKind::Punct {
+            if toks[j].text == "{" {
+                depth += 1;
+            } else if toks[j].text == "}" {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+        }
+        j += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// All `{`/`}` pairs in the file as (open line, close line), for
+/// enclosing-scope resolution of `allow-scope` directives.
+pub fn brace_pairs(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut stack: Vec<u32> = Vec::new();
+    let mut pairs: Vec<(u32, u32)> = Vec::new();
+    for t in toks {
+        if t.kind != TokKind::Punct {
+            continue;
+        }
+        if t.text == "{" {
+            stack.push(t.line);
+        } else if t.text == "}" {
+            if let Some(open) = stack.pop() {
+                pairs.push((open, t.line));
+            }
+        }
+    }
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_do_not_leak_idents() {
+        let src = "// HashMap in prose\nlet s = \"HashMap\"; /* HashMap /* nested */ */ let x = 1;";
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "s", "let", "x"]);
+    }
+
+    #[test]
+    fn string_escapes_resolve_for_substring_rules() {
+        let f = lex("let s = \"{{\\\"t\\\":{t}}}\";");
+        let lit = f.toks.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert!(lit.text.contains("{\""), "{:?}", lit.text);
+        assert!(lit.text.contains("\":"), "{:?}", lit.text);
+    }
+
+    #[test]
+    fn raw_strings_and_hashes() {
+        let f = lex("let s = r#\"a \"quoted\" b\"#; let t = r\"plain\";");
+        let lits: Vec<_> = f.toks.iter().filter(|t| t.kind == TokKind::Str).collect();
+        assert_eq!(lits.len(), 2);
+        assert_eq!(lits[0].text, "a \"quoted\" b");
+        assert_eq!(lits[1].text, "plain");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let f = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let lives: Vec<_> = f.toks.iter().filter(|t| t.kind == TokKind::Life).collect();
+        assert_eq!(lives.len(), 2);
+        assert!(f.toks.iter().any(|t| t.kind == TokKind::Num));
+    }
+
+    #[test]
+    fn cfg_test_mod_is_marked_and_rest_is_not() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn helper() {}\n}\nfn tail() {}";
+        let f = lex(src);
+        let helper = f.toks.iter().find(|t| t.text == "helper").unwrap();
+        assert!(helper.in_test);
+        let live = f.toks.iter().find(|t| t.text == "live").unwrap();
+        let tail = f.toks.iter().find(|t| t.text == "tail").unwrap();
+        assert!(!live.in_test && !tail.in_test);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_marked() {
+        let f = lex("#[cfg(not(test))]\nfn shipping() {}");
+        let t = f.toks.iter().find(|t| t.text == "shipping").unwrap();
+        assert!(!t.in_test);
+    }
+
+    #[test]
+    fn braceless_cfg_test_items_mark_to_semicolon() {
+        let f = lex("#[cfg(test)]\nuse foo::bar;\nfn live() {}");
+        let bar = f.toks.iter().find(|t| t.text == "bar").unwrap();
+        assert!(bar.in_test);
+        let live = f.toks.iter().find(|t| t.text == "live").unwrap();
+        assert!(!live.in_test);
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_strings() {
+        let f = lex("let s = \"a\nb\";\nlet x = 1;");
+        let x = f.toks.iter().find(|t| t.text == "x").unwrap();
+        assert_eq!(x.line, 3);
+    }
+}

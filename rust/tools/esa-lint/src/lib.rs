@@ -1,0 +1,206 @@
+//! esa-lint — the repo's static determinism & architecture gate.
+//!
+//! Walks `<root>/src`, `<root>/tests`, and `<root>/benches`, lexes every
+//! `.rs` file (see [`lexer`]), applies the rule catalog (see [`rules`]),
+//! and renders a byte-deterministic `LINT.json` plus human diagnostics.
+//! `tools/` is deliberately outside the scanned tree: the linter's own
+//! lexer fixtures would otherwise trip the rules they exist to test.
+//!
+//! Determinism of the report itself is part of the contract: findings
+//! are sorted by (path, line, rule, msg), paths are root-relative with
+//! forward slashes on every platform, and the JSON goes through the same
+//! [`esa::util::json::JsonWriter`] as every CI-diffed artifact — so the
+//! lint gate can `cmp` two runs exactly like the sweep and scenario
+//! gates do.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use esa::util::json::JsonWriter;
+
+use crate::rules::{AllowedFinding, Finding, Severity, RULES};
+
+/// The result of linting one tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Unallowed findings, sorted by (path, line, rule, msg).
+    pub findings: Vec<Finding>,
+    /// Suppressed findings with their mandatory justifications.
+    pub allowed: Vec<AllowedFinding>,
+    /// Number of files scanned (`.rs` sources + golden snapshots).
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warning).count()
+    }
+}
+
+/// Lint the tree rooted at `root` (the `rust/` directory of the repo, or
+/// a fixture mini-tree). Missing subdirectories are simply skipped so
+/// fixtures can model only the slice a rule needs.
+pub fn run(root: &Path) -> Result<Report, String> {
+    let mut report = Report::default();
+    for dir in ["src", "tests", "benches"] {
+        let mut files = Vec::new();
+        collect_rs(&root.join(dir), &mut files)?;
+        files.sort();
+        for path in files {
+            let rel = rel_path(root, &path);
+            let src = fs::read_to_string(&path)
+                .map_err(|e| format!("reading {}: {e}", path.display()))?;
+            rules::check_file(&rel, &src, &mut report.findings, &mut report.allowed);
+            report.files_scanned += 1;
+        }
+    }
+    for path in golden_files(root)? {
+        let rel = rel_path(root, &path);
+        let contents = fs::read_to_string(&path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        rules::check_golden(&rel, &contents, &mut report.findings);
+        report.files_scanned += 1;
+    }
+    report.findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule, a.msg.as_str())
+            .cmp(&(b.path.as_str(), b.line, b.rule, b.msg.as_str()))
+    });
+    report.allowed.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+    Ok(report)
+}
+
+/// `"placeholder"` when any committed golden snapshot still carries the
+/// unblessed marker, `"blessed"` otherwise. This is the single source
+/// the CI sweep gate consults (it used to be an inline grep).
+pub fn golden_status(root: &Path) -> Result<&'static str, String> {
+    for path in golden_files(root)? {
+        let contents = fs::read_to_string(&path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        if contents.contains("\"placeholder\"") {
+            return Ok("placeholder");
+        }
+    }
+    Ok("blessed")
+}
+
+fn golden_files(root: &Path) -> Result<Vec<PathBuf>, String> {
+    let dir = root.join("tests").join("golden");
+    let mut out = Vec::new();
+    if !dir.is_dir() {
+        return Ok(out);
+    }
+    let entries = fs::read_dir(&dir).map_err(|e| format!("reading {}: {e}", dir.display()))?;
+    for entry in entries {
+        let path = entry.map_err(|e| format!("reading {}: {e}", dir.display()))?.path();
+        if path.extension().is_some_and(|e| e == "json") {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Recursively collect `.rs` files; sorted later for determinism.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let entries = fs::read_dir(dir).map_err(|e| format!("reading {}: {e}", dir.display()))?;
+    for entry in entries {
+        let path = entry.map_err(|e| format!("reading {}: {e}", dir.display()))?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Root-relative path with forward slashes on every platform, so
+/// LINT.json bytes never depend on the host's separator.
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let parts: Vec<&str> = rel
+        .components()
+        .filter_map(|c| c.as_os_str().to_str())
+        .collect();
+    parts.join("/")
+}
+
+/// Render the machine-readable report (the `LINT.json` bytes).
+pub fn to_json(report: &Report) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_obj(None);
+    w.str_field("schema", "esa-lint/1");
+    w.begin_arr(Some("rules"));
+    for r in RULES {
+        w.begin_obj(None);
+        w.str_field("name", r.name);
+        w.str_field("severity", r.severity.as_str());
+        w.str_field("summary", r.summary);
+        w.end_obj();
+    }
+    w.end_arr();
+    w.begin_arr(Some("findings"));
+    for f in &report.findings {
+        w.begin_obj(None);
+        w.str_field("rule", f.rule);
+        w.str_field("severity", f.severity.as_str());
+        w.str_field("path", &f.path);
+        w.u64_field("line", u64::from(f.line));
+        w.str_field("msg", &f.msg);
+        w.end_obj();
+    }
+    w.end_arr();
+    w.begin_arr(Some("allowed"));
+    for a in &report.allowed {
+        w.begin_obj(None);
+        w.str_field("rule", a.rule);
+        w.str_field("path", &a.path);
+        w.u64_field("line", u64::from(a.line));
+        w.str_field("reason", &a.reason);
+        w.end_obj();
+    }
+    w.end_arr();
+    w.begin_obj(Some("summary"));
+    w.u64_field("files_scanned", report.files_scanned as u64);
+    w.u64_field("errors", report.errors() as u64);
+    w.u64_field("warnings", report.warnings() as u64);
+    w.u64_field("allowed", report.allowed.len() as u64);
+    w.end_obj();
+    w.end_obj();
+    w.finish()
+}
+
+/// Render the human diagnostics (same order as the JSON).
+pub fn render_human(report: &Report) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        out.push_str(&format!(
+            "{}[{}] {}:{}: {}\n",
+            f.severity.as_str(),
+            f.rule,
+            f.path,
+            f.line,
+            f.msg
+        ));
+    }
+    out.push_str(&format!(
+        "esa-lint: {} files, {} errors, {} warnings, {} allowed\n",
+        report.files_scanned,
+        report.errors(),
+        report.warnings(),
+        report.allowed.len()
+    ));
+    out
+}

@@ -1,0 +1,113 @@
+//! `esa-lint` CLI — see DESIGN.md §14 and `make lint`.
+//!
+//! ```text
+//! esa-lint [--root <dir>] [--json <path>] [--quiet]
+//! esa-lint --list-rules
+//! esa-lint golden-status [--root <dir>]
+//! ```
+//!
+//! Exit codes: 0 = clean (warnings allowed), 1 = error findings,
+//! 2 = usage or I/O failure. `golden-status` prints `placeholder` or
+//! `blessed` on stdout; the CI sweep gate branches on that word instead
+//! of an inline grep.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> &'static str {
+    "usage: esa-lint [--root <dir>] [--json <path>] [--quiet]\n\
+     \x20      esa-lint --list-rules\n\
+     \x20      esa-lint golden-status [--root <dir>]\n\
+     \n\
+     Lints <root>/{src,tests,benches} against the repo invariants\n\
+     (DESIGN.md §14) and writes <root>/target/LINT.json (or --json).\n\
+     <root> defaults to `.` when it holds src/lib.rs, else `rust/`."
+}
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut json: Option<PathBuf> = None;
+    let mut quiet = false;
+    let mut list_rules = false;
+    let mut status_only = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = Some(PathBuf::from(v)),
+                None => return fail("--root needs a directory"),
+            },
+            "--json" => match args.next() {
+                Some(v) => json = Some(PathBuf::from(v)),
+                None => return fail("--json needs a path"),
+            },
+            "--quiet" => quiet = true,
+            "--list-rules" => list_rules = true,
+            "golden-status" => status_only = true,
+            "--help" | "-h" | "help" => {
+                println!("{}", usage());
+                return ExitCode::SUCCESS;
+            }
+            other => return fail(&format!("unknown argument `{other}`\n{}", usage())),
+        }
+    }
+
+    if list_rules {
+        for r in esa_lint::rules::RULES {
+            println!("{:<22} {:<8} {}", r.name, r.severity.as_str(), r.summary);
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    let root = match root {
+        Some(r) => r,
+        None => {
+            if PathBuf::from("src/lib.rs").is_file() {
+                PathBuf::from(".")
+            } else if PathBuf::from("rust/src/lib.rs").is_file() {
+                PathBuf::from("rust")
+            } else {
+                return fail("cannot locate the rust tree; pass --root");
+            }
+        }
+    };
+
+    if status_only {
+        match esa_lint::golden_status(&root) {
+            Ok(status) => {
+                println!("{status}");
+                return ExitCode::SUCCESS;
+            }
+            Err(e) => return fail(&e),
+        }
+    }
+
+    let report = match esa_lint::run(&root) {
+        Ok(r) => r,
+        Err(e) => return fail(&e),
+    };
+
+    let json_path = json.unwrap_or_else(|| root.join("target").join("LINT.json"));
+    if let Some(parent) = json_path.parent() {
+        if let Err(e) = std::fs::create_dir_all(parent) {
+            return fail(&format!("creating {}: {e}", parent.display()));
+        }
+    }
+    if let Err(e) = std::fs::write(&json_path, esa_lint::to_json(&report)) {
+        return fail(&format!("writing {}: {e}", json_path.display()));
+    }
+
+    if !quiet || report.errors() > 0 {
+        print!("{}", esa_lint::render_human(&report));
+    }
+    if report.errors() > 0 {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+fn fail(msg: &str) -> ExitCode {
+    eprintln!("esa-lint: {msg}");
+    ExitCode::from(2)
+}

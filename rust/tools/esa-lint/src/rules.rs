@@ -1,0 +1,559 @@
+//! The rule catalog and per-file checking engine (DESIGN.md §14).
+//!
+//! Every rule is named, individually allowlistable, and maps to a repo
+//! guarantee that used to live in prose or a CI grep:
+//!
+//! | rule | guarantee |
+//! |------|-----------|
+//! | `nondet-collection` | artifacts are byte-deterministic: no hash-order iteration anywhere in the sim/artifact tree |
+//! | `wall-clock` | sim results depend only on `(config, seed)`: no wall time outside `util/` (benches exempt — wall time *is* their measurement) |
+//! | `rng-stream` | actor noise comes from the namespaced `sim::rng_stream` splits, never ad-hoc `Rng::new` (non-test code) |
+//! | `policy-kind-boundary` | `PolicyKind` stays a parse artifact confined to `config/` + `switch/policy/` (replaces the PR 5 CI grep) |
+//! | `process-exit` | `std::process::exit` only in `main.rs`, so library code stays embeddable |
+//! | `artifact-serializer` | hand-rolled JSON fragments outside `util::json::JsonWriter` need a justification |
+//! | `no-alloc` | fns marked `// esa-lint: no_alloc` (the PR 2 dispatch path) stay free of `Vec::new`/`vec!`/`format!`/`Box::new`/`String::new`/`.clone()`/`.to_*()` |
+//! | `golden-placeholder` | (warning) committed golden snapshots must not stay unblessed placeholders |
+//! | `malformed-directive` | every `esa-lint:` comment parses and carries a non-empty `reason` |
+//!
+//! Suppression grammar (checked by `malformed-directive`):
+//!
+//! ```text
+//! // esa-lint: allow(<rule>, reason="why this occurrence is sound")
+//! // esa-lint: allow-scope(<rule>, reason="...")   covers to the end of the enclosing block
+//! // esa-lint: no_alloc                            marks the next fn for the no-alloc rule
+//! ```
+//!
+//! A plain `allow` covers findings on its own line and the line below;
+//! `allow-scope` covers from its line to the closing brace of the block
+//! it sits in. Reasons are mandatory — an allow without one is itself a
+//! finding.
+
+use crate::lexer::{brace_pairs, lex, matching_brace, Tok, TokKind};
+
+/// Finding severity; only errors fail the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// Static description of one rule, for `--list-rules` and LINT.json.
+pub struct RuleInfo {
+    pub name: &'static str,
+    pub severity: Severity,
+    pub summary: &'static str,
+}
+
+/// The catalog. Order here is the presentation order; findings are
+/// sorted by (path, line, rule) regardless.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        name: "nondet-collection",
+        severity: Severity::Error,
+        summary: "HashMap/HashSet iteration order is nondeterministic; use BTreeMap/BTreeSet \
+                  or sort before iterating",
+    },
+    RuleInfo {
+        name: "wall-clock",
+        severity: Severity::Error,
+        summary: "SystemTime/Instant::now/thread_rng/rand::random outside util/ breaks \
+                  (config, seed) determinism (benches exempt: wall time is their measurement)",
+    },
+    RuleInfo {
+        name: "rng-stream",
+        severity: Severity::Error,
+        summary: "non-test RNG construction must go through the namespaced sim::rng_stream \
+                  splits, not ad-hoc Rng::new (benches exempt: local fixture streams)",
+    },
+    RuleInfo {
+        name: "policy-kind-boundary",
+        severity: Severity::Error,
+        summary: "PolicyKind:: is a parse artifact confined to src/config/ and \
+                  src/switch/policy/; use the SchedulerPolicy trait hooks",
+    },
+    RuleInfo {
+        name: "process-exit",
+        severity: Severity::Error,
+        summary: "std::process::exit only in src/main.rs; library code returns errors",
+    },
+    RuleInfo {
+        name: "artifact-serializer",
+        severity: Severity::Error,
+        summary: "hand-rolled JSON fragment outside util::json::JsonWriter; artifacts must \
+                  use the shared byte-stable writer",
+    },
+    RuleInfo {
+        name: "no-alloc",
+        severity: Severity::Error,
+        summary: "fn marked `esa-lint: no_alloc` allocates (Vec::new/vec!/format!/Box::new/\
+                  String::new/.clone()/.to_*())",
+    },
+    RuleInfo {
+        name: "golden-placeholder",
+        severity: Severity::Warning,
+        summary: "committed golden snapshot is an unblessed placeholder; run `make bless` \
+                  and commit the result",
+    },
+    RuleInfo {
+        name: "malformed-directive",
+        severity: Severity::Error,
+        summary: "esa-lint directive does not parse, names an unknown rule, or lacks a \
+                  non-empty reason",
+    },
+];
+
+/// One reported violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub severity: Severity,
+    /// Root-relative, forward-slash path.
+    pub path: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+/// One suppressed violation, kept for the audit trail in LINT.json.
+#[derive(Debug, Clone)]
+pub struct AllowedFinding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: u32,
+    pub reason: String,
+}
+
+/// A parsed `esa-lint:` comment.
+enum Directive {
+    Allow { rule: String, reason: String, line: u32, end_line: u32 },
+    NoAlloc { line: u32 },
+}
+
+fn rule_info(name: &str) -> Option<&'static RuleInfo> {
+    RULES.iter().find(|r| r.name == name)
+}
+
+fn finding(rule: &'static str, path: &str, line: u32, msg: String) -> Finding {
+    let severity = rule_info(rule).expect("finding for unknown rule").severity;
+    Finding { rule, severity, path: path.to_string(), line, msg }
+}
+
+/// Lint one `.rs` file. `rel` is the root-relative forward-slash path;
+/// files under `tests/` are treated as test code wholesale.
+pub fn check_file(
+    rel: &str,
+    src: &str,
+    findings: &mut Vec<Finding>,
+    allowed: &mut Vec<AllowedFinding>,
+) {
+    let file = lex(src);
+    let toks = &file.toks;
+    let in_tests_dir = rel.starts_with("tests/");
+    let pairs = brace_pairs(toks);
+
+    // -- directives ---------------------------------------------------
+    let mut directives: Vec<Directive> = Vec::new();
+    for c in &file.comments {
+        let text = c.text.trim();
+        let Some(body) = text.strip_prefix("esa-lint:") else {
+            continue;
+        };
+        match parse_directive(body.trim(), c.line, &pairs) {
+            Ok(d) => directives.push(d),
+            Err(msg) => findings.push(finding("malformed-directive", rel, c.line, msg)),
+        }
+    }
+
+    // -- raw (pre-allow) findings ------------------------------------
+    let mut raw: Vec<Finding> = Vec::new();
+    scan_tokens(rel, toks, in_tests_dir, &mut raw);
+    scan_no_alloc(rel, toks, &directives, &mut raw, findings);
+
+    // -- apply allows -------------------------------------------------
+    'next: for f in raw {
+        for d in &directives {
+            let Directive::Allow { rule, reason, line, end_line } = d else {
+                continue;
+            };
+            let covers = if *end_line == *line {
+                *line == f.line || *line + 1 == f.line
+            } else {
+                *line <= f.line && f.line <= *end_line
+            };
+            if covers && rule.as_str() == f.rule {
+                allowed.push(AllowedFinding {
+                    rule: f.rule,
+                    path: f.path.clone(),
+                    line: f.line,
+                    reason: reason.clone(),
+                });
+                continue 'next;
+            }
+        }
+        findings.push(f);
+    }
+}
+
+/// Parse one directive body (after `esa-lint:`).
+fn parse_directive(body: &str, line: u32, pairs: &[(u32, u32)]) -> Result<Directive, String> {
+    if body == "no_alloc" {
+        return Ok(Directive::NoAlloc { line });
+    }
+    let (scoped, rest) = if let Some(r) = body.strip_prefix("allow-scope(") {
+        (true, r)
+    } else if let Some(r) = body.strip_prefix("allow(") {
+        (false, r)
+    } else {
+        return Err(format!(
+            "unrecognized directive `{body}`; expected allow(<rule>, reason=\"...\"), \
+             allow-scope(<rule>, reason=\"...\"), or no_alloc"
+        ));
+    };
+    let Some(inner) = rest.strip_suffix(')') else {
+        return Err("allow directive must end with `)`".to_string());
+    };
+    let Some((rule, tail)) = inner.split_once(',') else {
+        return Err("allow directive needs a reason: allow(<rule>, reason=\"...\")".to_string());
+    };
+    let rule = rule.trim();
+    if rule_info(rule).is_none() {
+        let names: Vec<&str> = RULES.iter().map(|r| r.name).collect();
+        return Err(format!("unknown rule `{rule}`; known rules: {}", names.join(", ")));
+    }
+    let reason = tail
+        .trim()
+        .strip_prefix("reason=\"")
+        .and_then(|t| t.strip_suffix('"'))
+        .ok_or_else(|| "allow reason must be written as reason=\"...\"".to_string())?;
+    if reason.trim().is_empty() {
+        return Err("allow reason must not be empty".to_string());
+    }
+    let end_line = if scoped { enclosing_scope_end(pairs, line) } else { line };
+    Ok(Directive::Allow {
+        rule: rule.to_string(),
+        reason: reason.to_string(),
+        line,
+        end_line,
+    })
+}
+
+/// Last line of the innermost brace block containing `line` (file end
+/// when the directive sits at the top level).
+fn enclosing_scope_end(pairs: &[(u32, u32)], line: u32) -> u32 {
+    pairs
+        .iter()
+        .filter(|(open, close)| *open <= line && line <= *close)
+        .max_by_key(|(open, _)| *open)
+        .map(|(_, close)| *close)
+        .unwrap_or(u32::MAX)
+}
+
+/// True when `toks[i..]` matches `pat`: alphabetic entries match
+/// identifiers exactly, everything else matches punctuation.
+fn matches_seq(toks: &[Tok], i: usize, pat: &[&str]) -> bool {
+    if i + pat.len() > toks.len() {
+        return false;
+    }
+    pat.iter().enumerate().all(|(k, p)| {
+        let t = &toks[i + k];
+        let want_ident = p.chars().next().is_some_and(|c| c.is_alphabetic() || c == '_');
+        let kind_ok = if want_ident { t.kind == TokKind::Ident } else { t.kind == TokKind::Punct };
+        kind_ok && t.text == *p
+    })
+}
+
+/// The token-pattern rules (everything except no-alloc and the golden
+/// scan, which have their own passes).
+fn scan_tokens(rel: &str, toks: &[Tok], in_tests_dir: bool, out: &mut Vec<Finding>) {
+    let in_util = rel.starts_with("src/util/");
+    let in_bench = rel.starts_with("benches/");
+    let policy_dirs = rel.starts_with("src/config/") || rel.starts_with("src/switch/policy/");
+    for (i, t) in toks.iter().enumerate() {
+        let test = t.in_test || in_tests_dir;
+        if t.kind == TokKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+            out.push(finding(
+                "nondet-collection",
+                rel,
+                t.line,
+                format!("{} iterates in nondeterministic hash order", t.text),
+            ));
+        }
+        if !in_util && !in_bench {
+            let hit = if t.kind == TokKind::Ident && t.text == "SystemTime" {
+                Some("SystemTime")
+            } else if matches_seq(toks, i, &["Instant", ":", ":", "now"]) {
+                Some("Instant::now")
+            } else if t.kind == TokKind::Ident && t.text == "thread_rng" {
+                Some("thread_rng")
+            } else if matches_seq(toks, i, &["rand", ":", ":", "random"]) {
+                Some("rand::random")
+            } else {
+                None
+            };
+            if let Some(what) = hit {
+                out.push(finding(
+                    "wall-clock",
+                    rel,
+                    t.line,
+                    format!("{what} makes results depend on wall time, not (config, seed)"),
+                ));
+            }
+        }
+        if !in_util
+            && !in_bench
+            && !rel.starts_with("src/sim/")
+            && !test
+            && matches_seq(toks, i, &["Rng", ":", ":", "new"])
+        {
+            out.push(finding(
+                "rng-stream",
+                rel,
+                t.line,
+                "ad-hoc Rng::new risks correlated streams; split from the sim::rng_stream \
+                 namespaces instead"
+                    .to_string(),
+            ));
+        }
+        if !policy_dirs && matches_seq(toks, i, &["PolicyKind", ":", ":"]) {
+            out.push(finding(
+                "policy-kind-boundary",
+                rel,
+                t.line,
+                "PolicyKind:: outside src/config/ and src/switch/policy/; use the \
+                 SchedulerPolicy trait hooks"
+                    .to_string(),
+            ));
+        }
+        if rel != "src/main.rs" && matches_seq(toks, i, &["process", ":", ":", "exit"]) {
+            out.push(finding(
+                "process-exit",
+                rel,
+                t.line,
+                "std::process::exit outside src/main.rs".to_string(),
+            ));
+        }
+        if rel != "src/util/json.rs"
+            && !test
+            && t.kind == TokKind::Str
+            && (t.text.contains("{\"") || t.text.contains("\":"))
+        {
+            out.push(finding(
+                "artifact-serializer",
+                rel,
+                t.line,
+                "string literal carries a hand-rolled JSON fragment; serialize through \
+                 util::json::JsonWriter"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// Allocation tokens forbidden inside `no_alloc`-marked fns, with the
+/// message fragment naming the offender.
+const NO_ALLOC_PATTERNS: &[(&[&str], &str)] = &[
+    (&["Vec", ":", ":", "new"], "Vec::new"),
+    (&["vec", "!"], "vec!"),
+    (&["format", "!"], "format!"),
+    (&["Box", ":", ":", "new"], "Box::new"),
+    (&["String", ":", ":", "new"], "String::new"),
+    (&["String", ":", ":", "from"], "String::from"),
+    (&[".", "to_string"], ".to_string()"),
+    (&[".", "to_vec"], ".to_vec()"),
+    (&[".", "to_owned"], ".to_owned()"),
+    (&[".", "clone"], ".clone()"),
+];
+
+/// Resolve `no_alloc` markers to fn-body token ranges and scan them.
+fn scan_no_alloc(
+    rel: &str,
+    toks: &[Tok],
+    directives: &[Directive],
+    raw: &mut Vec<Finding>,
+    findings: &mut Vec<Finding>,
+) {
+    for d in directives {
+        let Directive::NoAlloc { line } = d else {
+            continue;
+        };
+        // the marker governs the next `fn` item at or below it
+        let Some(fn_idx) = toks
+            .iter()
+            .position(|t| t.kind == TokKind::Ident && t.text == "fn" && t.line >= *line)
+        else {
+            findings.push(finding(
+                "malformed-directive",
+                rel,
+                *line,
+                "no_alloc marker is not followed by a fn".to_string(),
+            ));
+            continue;
+        };
+        let Some(open_rel) = toks[fn_idx..]
+            .iter()
+            .position(|t| t.kind == TokKind::Punct && t.text == "{")
+        else {
+            findings.push(finding(
+                "malformed-directive",
+                rel,
+                *line,
+                "no_alloc-marked fn has no body".to_string(),
+            ));
+            continue;
+        };
+        let open = fn_idx + open_rel;
+        let close = matching_brace(toks, open);
+        for i in open..=close {
+            for (pat, name) in NO_ALLOC_PATTERNS {
+                if matches_seq(toks, i, pat) {
+                    raw.push(finding(
+                        "no-alloc",
+                        rel,
+                        toks[i].line,
+                        format!("{name} allocates inside a `esa-lint: no_alloc` fn"),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// Scan one committed golden snapshot (`tests/golden/*.json`) for the
+/// unblessed-placeholder marker the sweep gate self-heals from.
+pub fn check_golden(rel: &str, contents: &str, findings: &mut Vec<Finding>) {
+    for (idx, l) in contents.lines().enumerate() {
+        if l.contains("\"placeholder\"") {
+            findings.push(finding(
+                "golden-placeholder",
+                rel,
+                idx as u32 + 1,
+                "unblessed placeholder snapshot; regenerate via `make bless` and commit"
+                    .to_string(),
+            ));
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(rel: &str, src: &str) -> (Vec<Finding>, Vec<AllowedFinding>) {
+        let mut f = Vec::new();
+        let mut a = Vec::new();
+        check_file(rel, src, &mut f, &mut a);
+        (f, a)
+    }
+
+    #[test]
+    fn hashmap_fires_and_btreemap_does_not() {
+        let (f, _) = run("src/ps/mod.rs", "use std::collections::HashMap;\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "nondet-collection");
+        let (f, _) = run("src/ps/mod.rs", "use std::collections::BTreeMap;\n");
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn wall_clock_exempts_util_and_benches() {
+        let src = "fn f() { let t = std::time::Instant::now(); }\n";
+        assert_eq!(run("src/sim/mod.rs", src).0.len(), 1);
+        assert!(run("src/util/clock.rs", src).0.is_empty());
+        assert!(run("benches/hotpath.rs", src).0.is_empty());
+    }
+
+    #[test]
+    fn rng_new_in_tests_is_fine() {
+        let live = "fn f() { let r = Rng::new(7); }\n";
+        let test = "#[cfg(test)]\nmod tests {\n    fn f() { let r = Rng::new(7); }\n}\n";
+        assert_eq!(run("src/worker/mod.rs", live).0.len(), 1);
+        assert!(run("src/worker/mod.rs", test).0.is_empty());
+        assert!(run("tests/integration_sim.rs", live).0.is_empty());
+        assert!(run("src/sim/mod.rs", live).0.is_empty());
+        assert!(run("benches/hotpath.rs", live).0.is_empty());
+    }
+
+    #[test]
+    fn policy_kind_boundary_matches_ci_grep_semantics() {
+        let src = "fn f(k: PolicyKind) -> bool { matches!(k, PolicyKind::Esa) }\n";
+        assert_eq!(run("src/sim/mod.rs", src).0.len(), 1);
+        assert!(run("src/config/mod.rs", src).0.is_empty());
+        assert!(run("src/switch/policy/builtin.rs", src).0.is_empty());
+    }
+
+    #[test]
+    fn allow_on_preceding_line_suppresses_and_records() {
+        let src = "// esa-lint: allow(nondet-collection, reason=\"membership only\")\n\
+                   use std::collections::HashSet;\n";
+        let (f, a) = run("src/net/topology.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].reason, "membership only");
+    }
+
+    #[test]
+    fn allow_scope_covers_enclosing_block_only() {
+        let src = concat!(
+            "fn f() {\n",
+            "    // esa-lint: allow-scope(artifact-serializer, reason=\"json-lines schema\")\n",
+            "    let a = \"{\\\"t\\\":1}\";\n",
+            "}\n",
+            "fn g() { let b = \"{\\\"t\\\":2}\"; }\n",
+        );
+        let (f, a) = run("src/sim/events.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 5);
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn allow_without_reason_is_malformed() {
+        let src = "// esa-lint: allow(wall-clock)\nfn f() {}\n";
+        let (f, _) = run("src/sim/mod.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "malformed-directive");
+    }
+
+    #[test]
+    fn unknown_rule_in_allow_is_malformed() {
+        let src = "// esa-lint: allow(bogus-rule, reason=\"x\")\nfn f() {}\n";
+        let (f, _) = run("src/sim/mod.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "malformed-directive");
+    }
+
+    #[test]
+    fn no_alloc_marker_flags_allocation() {
+        let src = concat!(
+            "// esa-lint: no_alloc\n",
+            "fn hot() { let v: Vec<u32> = Vec::new(); }\n",
+            "fn cold() { let v: Vec<u32> = Vec::new(); }\n",
+        );
+        let (f, _) = run("src/net/event.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "no-alloc");
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn golden_placeholder_is_a_warning() {
+        let mut f = Vec::new();
+        check_golden(
+            "tests/golden/sweep_quick.json",
+            "{\n  \"provenance\": \"placeholder\"\n}\n",
+            &mut f,
+        );
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].severity, Severity::Warning);
+        assert_eq!(f[0].line, 2);
+    }
+}

@@ -1,0 +1,170 @@
+//! The lint gate's own gate (ISSUE 7 satellite): every fixture triggers
+//! exactly its rule, the repaired real tree lints clean, and the report
+//! bytes are deterministic so CI can `cmp` LINT.json across runs.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn fixtures() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures")
+}
+
+fn repo_rust_root() -> PathBuf {
+    // tools/esa-lint -> tools -> rust/
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("..")
+        .canonicalize()
+        .expect("rust/ tree exists two levels up from the lint crate")
+}
+
+fn rule_dirs() -> Vec<PathBuf> {
+    let mut dirs: Vec<PathBuf> = std::fs::read_dir(fixtures())
+        .expect("fixtures/ directory is committed")
+        .map(|e| e.expect("readable fixture entry").path())
+        .filter(|p| p.is_dir())
+        .collect();
+    dirs.sort();
+    dirs
+}
+
+/// One positive + one negative case per rule: `<rule>/pos` must produce
+/// at least one finding, every one of them for exactly that rule, and
+/// `<rule>/neg` must lint clean.
+#[test]
+fn every_fixture_triggers_exactly_its_rule() {
+    let dirs = rule_dirs();
+    assert_eq!(
+        dirs.len(),
+        esa_lint::rules::RULES.len(),
+        "fixture corpus and rule catalog diverged"
+    );
+    for dir in dirs {
+        let rule = dir.file_name().unwrap().to_str().unwrap().to_string();
+        assert!(
+            esa_lint::rules::RULES.iter().any(|r| r.name == rule),
+            "fixture dir `{rule}` names no known rule"
+        );
+        let pos = esa_lint::run(&dir.join("pos")).expect("pos fixture lints");
+        assert!(!pos.findings.is_empty(), "fixture {rule}/pos produced no findings");
+        for f in &pos.findings {
+            assert_eq!(f.rule, rule.as_str(), "fixture {rule}/pos tripped foreign rule: {f:?}");
+        }
+        let neg = esa_lint::run(&dir.join("neg")).expect("neg fixture lints");
+        assert!(
+            neg.findings.is_empty(),
+            "fixture {rule}/neg must lint clean, got {:?}",
+            neg.findings
+        );
+    }
+}
+
+/// The suppression grammar records its mandatory justifications: the
+/// malformed-directive negative fixture resolves two allows.
+#[test]
+fn allows_are_recorded_with_reasons() {
+    let neg = esa_lint::run(&fixtures().join("malformed-directive").join("neg")).unwrap();
+    assert_eq!(neg.allowed.len(), 2, "{:?}", neg.allowed);
+    for a in &neg.allowed {
+        assert_eq!(a.rule, "nondet-collection");
+        assert!(!a.reason.is_empty());
+    }
+}
+
+/// Tree-is-clean integration test: the real `rust/src` + `tests` +
+/// `benches` tree carries zero unallowed error findings, and the audit
+/// trail holds the justified allows this PR introduced.
+#[test]
+fn real_tree_is_clean() {
+    let report = esa_lint::run(&repo_rust_root()).expect("real tree lints");
+    assert_eq!(
+        report.errors(),
+        0,
+        "real tree has unallowed findings:\n{}",
+        esa_lint::render_human(&report)
+    );
+    assert!(
+        report.allowed.len() >= 6,
+        "expected the PR 7 allow annotations in the audit trail, got {:?}",
+        report.allowed
+    );
+    assert!(report.files_scanned > 50, "scan shrank: {}", report.files_scanned);
+}
+
+/// LINT.json is byte-deterministic across runs (CI `cmp`s two
+/// invocations, like the sweep and scenario gates).
+#[test]
+fn report_bytes_are_deterministic() {
+    let root = repo_rust_root();
+    let report = esa_lint::run(&root).unwrap();
+    let a = esa_lint::to_json(&report);
+    let b = esa_lint::to_json(&esa_lint::run(&root).unwrap());
+    assert_eq!(a, b);
+    assert!(a.starts_with("{\n  \"schema\": \"esa-lint/1\","), "{}", &a[..60.min(a.len())]);
+    let finding_paths = report.findings.iter().map(|f| &f.path);
+    let allowed_paths = report.allowed.iter().map(|a| &a.path);
+    for path in finding_paths.chain(allowed_paths) {
+        assert!(!path.contains('\\'), "platform separator leaked into report path {path}");
+    }
+}
+
+/// The binary's exit-code contract, per fixture: nonzero on every
+/// error-rule violation (including the acceptance-criteria boundary
+/// probe that reintroduces `PolicyKind::` outside the allowed dirs),
+/// zero on the warning-severity golden-placeholder fixture (warnings
+/// report without failing), and zero on the repaired real tree.
+#[test]
+fn cli_exits_nonzero_on_each_violation_and_zero_on_clean_tree() {
+    let bin = env!("CARGO_BIN_EXE_esa-lint");
+    let scratch = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../target/esa-lint-selftest");
+    std::fs::create_dir_all(&scratch).unwrap();
+
+    for dir in rule_dirs() {
+        let rule = dir.file_name().unwrap().to_str().unwrap().to_string();
+        let severity = esa_lint::rules::RULES
+            .iter()
+            .find(|r| r.name == rule)
+            .expect("fixture dir names a known rule")
+            .severity;
+        let out = Command::new(bin)
+            .arg("--root")
+            .arg(dir.join("pos"))
+            .arg("--json")
+            .arg(scratch.join("pos.json"))
+            .output()
+            .expect("esa-lint binary runs");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        match severity {
+            esa_lint::rules::Severity::Error => {
+                assert!(!out.status.success(), "{rule}/pos must fail the lint:\n{stdout}");
+            }
+            esa_lint::rules::Severity::Warning => {
+                assert!(out.status.success(), "{rule}/pos is warning-severity:\n{stdout}");
+            }
+        }
+        assert!(stdout.contains(&rule), "diagnostic must name the rule {rule}: {stdout}");
+    }
+
+    let out = Command::new(bin)
+        .arg("--root")
+        .arg(repo_rust_root())
+        .arg("--json")
+        .arg(scratch.join("tree.json"))
+        .output()
+        .expect("esa-lint binary runs");
+    assert!(
+        out.status.success(),
+        "repaired tree must lint clean:\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+}
+
+/// `golden-status` mirrors the old CI grep: `placeholder` for the seeded
+/// fixture, `blessed` once provenance is real.
+#[test]
+fn golden_status_words() {
+    let pos = esa_lint::golden_status(&fixtures().join("golden-placeholder").join("pos")).unwrap();
+    assert_eq!(pos, "placeholder");
+    let neg = esa_lint::golden_status(&fixtures().join("golden-placeholder").join("neg")).unwrap();
+    assert_eq!(neg, "blessed");
+}
