@@ -9,6 +9,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use super::parse::{parse_toml, TomlTable};
+use crate::net::congestion::{fixed_window, CcHandle, CcRegistry};
 use crate::switch::policy::{AdmissionMode, PolicyHandle, PolicyRegistry};
 use crate::{MSEC, USEC};
 
@@ -87,6 +88,44 @@ impl PolicyKind {
     }
 }
 
+/// The built-in congestion controllers, as a **parse artifact**: the
+/// identity table the built-in `CcAlgorithm` implementations in
+/// `net/congestion/` delegate to. Everything outside `config/` and
+/// `net/congestion/` consumes controllers through [`CcHandle`] and the
+/// behavioral [`CongestionController`] trait — the `cc-kind-boundary`
+/// lint rule keeps `CcKind::` matches from leaking back across that
+/// boundary, exactly like `policy-kind-boundary` does for [`PolicyKind`].
+///
+/// [`CongestionController`]: crate::net::congestion::CongestionController
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CcKind {
+    /// The pre-congestion worker window arithmetic, parity-pinned so the
+    /// default config reproduces the golden suites bit-for-bit.
+    FixedWindow,
+    /// RFC 9002 §7.3.x NewReno (slow start, halving on recovery entry,
+    /// one reduction per recovery period, ECN-CE treated as loss).
+    NewReno,
+}
+
+impl CcKind {
+    /// Human display name for tables and summaries.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CcKind::FixedWindow => "Fixed Window",
+            CcKind::NewReno => "NewReno",
+        }
+    }
+
+    /// Stable lowercase machine key — the canonical registry name, used
+    /// wherever the controller is serialized (sweep artifacts).
+    pub fn key(&self) -> &'static str {
+        match self {
+            CcKind::FixedWindow => "fixed-window",
+            CcKind::NewReno => "newreno",
+        }
+    }
+}
+
 /// Network substrate parameters.
 #[derive(Debug, Clone)]
 pub struct NetworkConfig {
@@ -96,6 +135,14 @@ pub struct NetworkConfig {
     pub base_rtt_ns: u64,
     /// i.i.d. packet loss probability per hop.
     pub loss_prob: f64,
+    /// Finite per-port egress queue capacity in KiB; `0` (default) keeps
+    /// the pre-contention unbounded-buffer model. When armed, unreliable
+    /// packets arriving over a full queue are tail-dropped.
+    pub queue_kb: u64,
+    /// Explicit ECN marking threshold (ns of queueing delay); `0`
+    /// (default) derives the legacy `2 × base_rtt` threshold. The TOML
+    /// surface is `net.ecn_threshold_us`.
+    pub ecn_threshold_ns: u64,
 }
 
 impl Default for NetworkConfig {
@@ -104,6 +151,8 @@ impl Default for NetworkConfig {
             bandwidth_gbps: 100.0,
             base_rtt_ns: 10 * USEC,
             loss_prob: 0.0,
+            queue_kb: 0,
+            ecn_threshold_ns: 0,
         }
     }
 }
@@ -200,6 +249,113 @@ impl ChurnKnobs {
             }
         };
         Ok(Some(ChurnKnobs { sample_tick_ns, region_slots }))
+    }
+}
+
+/// Background cross-traffic knobs (DESIGN.md §15). When present on an
+/// [`ExperimentConfig`], Poisson on/off flows occupy link time alongside
+/// the training traffic: each flow alternates exponentially distributed
+/// OFF and ON periods, and during ON injects fixed-size bursts paced so
+/// the flow consumes `intensity` of the line rate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CrossTraffic {
+    /// Fraction of line rate a flow consumes while ON, in `(0, 1]`.
+    pub intensity: f64,
+    /// Bytes per injected burst.
+    pub burst_bytes: u64,
+    /// Mean ON-period duration (ns); TOML surface is `mean_on_us`.
+    pub mean_on_ns: u64,
+    /// Mean OFF-period duration (ns); TOML surface is `mean_off_us`.
+    pub mean_off_ns: u64,
+    /// Directed links `(a, b)` the flows pin; empty (default) pins one
+    /// flow per host uplink (`host -> its rack switch`), the incast-prone
+    /// direction.
+    pub links: Vec<(u32, u32)>,
+}
+
+impl Default for CrossTraffic {
+    fn default() -> Self {
+        CrossTraffic {
+            intensity: 0.5,
+            burst_bytes: 8 * 1024,
+            mean_on_ns: 50 * USEC,
+            mean_off_ns: 50 * USEC,
+            links: Vec::new(),
+        }
+    }
+}
+
+impl CrossTraffic {
+    /// Parse the optional `[cross_traffic]` section: any `cross_traffic.*`
+    /// key (or the bare header) engages cross-traffic with defaults
+    /// filling the rest; no section, no background flows. Shared by
+    /// experiment configs and sweep configs, like [`ChurnKnobs`].
+    pub fn from_table(t: &TomlTable) -> Result<Option<CrossTraffic>> {
+        if !t.keys().any(|k| k == "cross_traffic" || k.starts_with("cross_traffic.")) {
+            return Ok(None);
+        }
+        let d = CrossTraffic::default();
+        let intensity = match t.get("cross_traffic.intensity") {
+            None => d.intensity,
+            Some(v) => {
+                let x = v.as_float().context("cross_traffic.intensity must be a number")?;
+                if !(x > 0.0 && x <= 1.0) {
+                    bail!("cross_traffic.intensity must be in (0, 1], got {x}");
+                }
+                x
+            }
+        };
+        let burst_bytes = match t.get("cross_traffic.burst_bytes") {
+            None => d.burst_bytes,
+            Some(v) => {
+                let x = v.as_int().context("cross_traffic.burst_bytes must be an integer")?;
+                if x <= 0 {
+                    bail!("cross_traffic.burst_bytes must be positive, got {x}");
+                }
+                x as u64
+            }
+        };
+        let period = |key: &str, default_ns: u64| -> Result<u64> {
+            match t.get(&format!("cross_traffic.{key}")) {
+                None => Ok(default_ns),
+                Some(v) => {
+                    let us = v
+                        .as_float()
+                        .with_context(|| format!("cross_traffic.{key} must be a number"))?;
+                    if us <= 0.0 {
+                        bail!("cross_traffic.{key} must be positive, got {us}");
+                    }
+                    Ok((us * USEC as f64) as u64)
+                }
+            }
+        };
+        let mean_on_ns = period("mean_on_us", d.mean_on_ns)?;
+        let mean_off_ns = period("mean_off_us", d.mean_off_ns)?;
+        let links = match t.int_list("cross_traffic.links")? {
+            None => Vec::new(),
+            Some(flat) => {
+                if flat.len() % 2 != 0 {
+                    bail!(
+                        "cross_traffic.links must be a flat [a1, b1, a2, b2, ...] list of \
+                         directed link endpoints, got {} values",
+                        flat.len()
+                    );
+                }
+                flat.chunks(2)
+                    .map(|pair| {
+                        let (a, b) = (pair[0], pair[1]);
+                        if a < 0 || b < 0 || a == b {
+                            bail!(
+                                "cross_traffic.links: endpoints must be distinct non-negative \
+                                 nodes, got [{a}, {b}]"
+                            );
+                        }
+                        Ok((a as u32, b as u32))
+                    })
+                    .collect::<Result<Vec<_>>>()?
+            }
+        };
+        Ok(Some(CrossTraffic { intensity, burst_bytes, mean_on_ns, mean_off_ns, links }))
     }
 }
 
@@ -359,6 +515,10 @@ pub struct ExperimentConfig {
     /// The scheduling policy, resolved through the
     /// [`PolicyRegistry`] (`policy = "<name>"` in TOML).
     pub policy: PolicyHandle,
+    /// The worker-side congestion controller, resolved through the
+    /// [`CcRegistry`] (`cc = "<name>"` in TOML; default `fixed-window`,
+    /// the parity-pinned legacy behavior).
+    pub cc: CcHandle,
     pub net: NetworkConfig,
     pub switch: SwitchConfig,
     /// First-level (rack) switches in the fabric. `1` (default) is the
@@ -390,6 +550,10 @@ pub struct ExperimentConfig {
     /// Timed mid-run faults (DESIGN.md §13), sorted by firing time.
     /// Empty (default) injects nothing.
     pub faults: Vec<FaultSpec>,
+    /// Background cross-traffic flows (DESIGN.md §15): `None` (default)
+    /// runs the fabric with training traffic only; `Some` pins Poisson
+    /// on/off flows to links.
+    pub cross_traffic: Option<CrossTraffic>,
     /// Record the structured [`crate::sim::events::SimEvent`] log and
     /// return its JSON-lines rendering in the run's metrics. Off by
     /// default (batch/sweep/churn runs pay nothing); the scenario engine
@@ -403,6 +567,7 @@ impl Default for ExperimentConfig {
             name: "experiment".into(),
             seed: 1,
             policy: crate::switch::policy::esa(),
+            cc: fixed_window(),
             net: NetworkConfig::default(),
             switch: SwitchConfig::default(),
             racks: 1,
@@ -418,6 +583,7 @@ impl Default for ExperimentConfig {
             max_sim_ns: 60 * crate::SEC,
             churn: None,
             faults: Vec::new(),
+            cross_traffic: None,
             capture_events: false,
         }
     }
@@ -438,11 +604,14 @@ impl ExperimentConfig {
             name: t.str_or("name", "experiment"),
             seed: t.int_or("seed", 1) as u64,
             policy: PolicyRegistry::resolve(&t.str_or("policy", "esa"))?,
+            cc: CcRegistry::resolve(&t.str_or("cc", "fixed-window"))?,
             ..ExperimentConfig::default()
         };
         cfg.net.bandwidth_gbps = t.float_or("net.bandwidth_gbps", cfg.net.bandwidth_gbps);
         cfg.net.base_rtt_ns = (t.float_or("net.base_rtt_us", 10.0) * USEC as f64) as u64;
         cfg.net.loss_prob = t.float_or("net.loss_prob", 0.0);
+        cfg.net.queue_kb = t.int_or("net.queue_kb", 0) as u64;
+        cfg.net.ecn_threshold_ns = (t.float_or("net.ecn_threshold_us", 0.0) * USEC as f64) as u64;
         cfg.switch.memory_bytes = t.int_or("switch.memory_bytes", cfg.switch.memory_bytes as i64) as u64;
         cfg.racks = t.int_or("sim.racks", cfg.racks as i64) as usize;
         cfg.iterations = t.int_or("sim.iterations", cfg.iterations as i64) as u32;
@@ -454,6 +623,7 @@ impl ExperimentConfig {
 
         cfg.churn = ChurnKnobs::from_table(t)?;
         cfg.faults = FaultSpec::list_from_table(t)?;
+        cfg.cross_traffic = CrossTraffic::from_table(t)?;
         cfg.capture_events = t.bool_or("sim.capture_events", false);
 
         for sec in t.section_names("job") {
@@ -536,11 +706,33 @@ impl ExperimentConfig {
                 bail!("job {i}: iterations override must be >= 1");
             }
         }
-        // Fault endpoints must land on real nodes: racks, then workers
-        // job by job, then one PS per job (the sim's node layout).
+        // Fault and cross-traffic endpoints must land on real nodes:
+        // racks, then workers job by job, then one PS per job (the sim's
+        // node layout).
         let n_nodes =
             (self.racks + self.jobs.iter().map(|j| j.n_workers).sum::<usize>() + self.jobs.len())
                 as u32;
+        if let Some(ct) = &self.cross_traffic {
+            if !(ct.intensity > 0.0 && ct.intensity <= 1.0) {
+                bail!("cross_traffic.intensity must be in (0, 1], got {}", ct.intensity);
+            }
+            if ct.burst_bytes == 0 {
+                bail!("cross_traffic.burst_bytes must be positive");
+            }
+            if ct.mean_on_ns == 0 || ct.mean_off_ns == 0 {
+                bail!("cross_traffic on/off periods must be positive");
+            }
+            for &(a, b) in &ct.links {
+                if a >= n_nodes || b >= n_nodes {
+                    bail!(
+                        "cross_traffic link [{a}, {b}] is outside the {n_nodes}-node fabric"
+                    );
+                }
+                if a == b {
+                    bail!("cross_traffic link endpoints must be distinct, got [{a}, {b}]");
+                }
+            }
+        }
         for (i, f) in self.faults.iter().enumerate() {
             match f.kind {
                 FaultKind::SwitchCrash => {}
@@ -783,6 +975,105 @@ mod tests {
         let mut bad = ExperimentConfig::default();
         bad.churn = Some(ChurnKnobs { sample_tick_ns: 1000, region_slots: u32::MAX });
         assert!(bad.validate().unwrap_err().to_string().contains("pool"));
+    }
+
+    #[test]
+    fn cc_kind_keys_round_trip_through_the_registry() {
+        for c in [CcKind::FixedWindow, CcKind::NewReno] {
+            let h = CcRegistry::resolve(c.key()).unwrap();
+            assert_eq!(h.key(), c.key(), "{c:?}");
+            assert_eq!(h.name(), c.name(), "{c:?}");
+        }
+        // the default experiment runs the parity-pinned legacy window
+        assert_eq!(ExperimentConfig::default().cc.key(), "fixed-window");
+    }
+
+    #[test]
+    fn cc_and_net_contention_knobs_parse() {
+        let t = parse_toml(
+            r#"
+            cc = "NewReno"
+            [net]
+            queue_kb = 64
+            ecn_threshold_us = 5.0
+            [job.a]
+            model = "microbench"
+            workers = 4
+            "#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.cc.key(), "newreno");
+        assert_eq!(c.net.queue_kb, 64);
+        assert_eq!(c.net.ecn_threshold_ns, 5 * USEC);
+        // absent knobs keep the parity defaults
+        let t = parse_toml("[job.a]\nmodel = \"dnn_a\"\nworkers = 4").unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.cc.key(), "fixed-window");
+        assert_eq!(c.net.queue_kb, 0);
+        assert_eq!(c.net.ecn_threshold_ns, 0);
+        // unknown controllers are pointed errors listing the registry
+        let t = parse_toml("cc = \"bogus\"\n[job.a]\nmodel = \"dnn_a\"\nworkers = 4").unwrap();
+        let err = ExperimentConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("unknown congestion controller"), "{err}");
+    }
+
+    #[test]
+    fn cross_traffic_section_parses_and_validates() {
+        let t = parse_toml(
+            r#"
+            [cross_traffic]
+            intensity = 0.8
+            burst_bytes = 4096
+            mean_on_us = 30.0
+            mean_off_us = 70.0
+            links = [1, 0, 2, 0]
+            [job.a]
+            model = "microbench"
+            workers = 4
+            "#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        let ct = c.cross_traffic.as_ref().unwrap();
+        assert_eq!(ct.intensity, 0.8);
+        assert_eq!(ct.burst_bytes, 4096);
+        assert_eq!(ct.mean_on_ns, 30 * USEC);
+        assert_eq!(ct.mean_off_ns, 70 * USEC);
+        assert_eq!(ct.links, vec![(1, 0), (2, 0)]);
+
+        // absent section: no background flows
+        let t = parse_toml("[job.a]\nmodel = \"dnn_a\"\nworkers = 4").unwrap();
+        assert!(ExperimentConfig::from_table(&t).unwrap().cross_traffic.is_none());
+
+        // a bare header engages the defaults (all-host-uplinks flows)
+        let t = parse_toml("[cross_traffic]\n[job.a]\nmodel = \"dnn_a\"\nworkers = 4").unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        let ct = c.cross_traffic.as_ref().unwrap();
+        assert_eq!(ct.intensity, 0.5);
+        assert!(ct.links.is_empty());
+
+        // mistyped / out-of-range knobs are pointed errors
+        for (toml, needle) in [
+            ("[cross_traffic]\nintensity = 1.5", "(0, 1]"),
+            ("[cross_traffic]\nintensity = 0.0", "(0, 1]"),
+            ("[cross_traffic]\nintensity = \"hot\"", "must be a number"),
+            ("[cross_traffic]\nburst_bytes = 0", "positive"),
+            ("[cross_traffic]\nmean_on_us = -3.0", "positive"),
+            ("[cross_traffic]\nlinks = [1, 0, 2]", "flat"),
+            ("[cross_traffic]\nlinks = [1, 1]", "distinct"),
+        ] {
+            let t = parse_toml(toml).unwrap();
+            let err = CrossTraffic::from_table(&t).unwrap_err();
+            assert!(format!("{err:#}").contains(needle), "{toml}: {err:#}");
+        }
+
+        // validation catches out-of-fabric endpoints
+        let mut c = ExperimentConfig::synthetic(esa(), "microbench", 1, 2);
+        c.cross_traffic =
+            Some(CrossTraffic { links: vec![(99, 0)], ..CrossTraffic::default() });
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("outside"), "{err}");
     }
 
     #[test]

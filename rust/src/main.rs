@@ -4,7 +4,8 @@
 //! ```text
 //! esa sim      [--config f.toml] [--policy esa] [--model dnn_a] [--jobs 8]
 //!              [--workers 8] [--iterations 3] [--seed 1] [--loss 0.0]
-//!              [--memory-mb 5] [--tensor-mb N] [--racks 1]
+//!              [--memory-mb 5] [--tensor-mb N] [--racks 1] [--cc fixed-window]
+//!              [--queue-kb 0]
 //! esa sweep    [--config sweep.toml] [--threads N] [--out-dir DIR]
 //!              [--name X] [--seeds 1,2,3]
 //! esa churn    [--policies esa,atp,switchml] [--jobs 8] [--rate 3000]
@@ -22,6 +23,7 @@ use anyhow::{bail, Context, Result};
 
 use esa::config::ExperimentConfig;
 use esa::job::trace::{generate, TraceConfig};
+use esa::net::congestion::CcRegistry;
 use esa::runtime::Engine;
 use esa::sim::churn::{run_churn, ChurnSpec};
 use esa::sim::events::diff_logs;
@@ -86,14 +88,16 @@ fn print_help() {
          \n\
          --policy accepts any registered scheduling policy: {}\n\
          (parameterized: esa-k=<ticks> sets the preemption-age gate in ns)\n\
+         --cc accepts any registered congestion controller: {}\n\
          \n\
          see README.md for the full flag reference",
-        PolicyRegistry::help_names()
+        PolicyRegistry::help_names(),
+        CcRegistry::help_names()
     );
 }
 
 fn cmd_sim(args: &Args) -> Result<()> {
-    let cfg = if let Some(path) = args.get("config") {
+    let mut cfg = if let Some(path) = args.get("config") {
         ExperimentConfig::from_file(std::path::Path::new(path))?
     } else {
         let policy = PolicyRegistry::resolve(args.get_or("policy", "esa"))?;
@@ -113,8 +117,16 @@ fn cmd_sim(args: &Args) -> Result<()> {
         }
         cfg
     };
+    // congestion knobs override either source (file or synthetic)
+    if let Some(cc) = args.get("cc") {
+        cfg.cc = CcRegistry::resolve(cc)?;
+    }
+    if let Some(kb) = args.get_parsed::<u64>("queue-kb")? {
+        cfg.net.queue_kb = kb;
+    }
     let name = cfg.name.clone();
     let policy = cfg.policy.clone();
+    let cc = cfg.cc.clone();
     let bw = cfg.net.bandwidth_gbps;
     let mut sim = Simulation::new(cfg)?;
     let m = sim.run();
@@ -148,6 +160,15 @@ fn cmd_sim(args: &Args) -> Result<()> {
         m.avg_transit_ns / 1e3,
         if m.truncated { " | TRUNCATED" } else { "" }
     );
+    if m.ecn_marked > 0 || m.dropped > 0 {
+        println!(
+            "congestion: {} ECN marks | {} drops ({} tail-drops) under {}",
+            m.ecn_marked,
+            m.dropped,
+            m.tail_drops,
+            cc.key()
+        );
+    }
     // data-plane counters for the deep-dive view, one line per switch
     for sw in &m.switches {
         let st = &sw.stats;

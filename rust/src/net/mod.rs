@@ -6,11 +6,21 @@
 //! a packet departs at `max(now, busy_until) + tx_time(bytes)` (which also
 //! becomes the link's new `busy_until` — FIFO), and arrives `hop_latency`
 //! later. Hop latency is `base_rtt / 4` so a host→switch→host→switch→host
-//! round trip equals the configured base RTT. Buffers are unbounded;
-//! loss is injected probabilistically rather than by tail drop (the
-//! paper's simulation setup does the same — a lossless DC fabric with a
-//! small random-loss knob for the recovery experiments).
+//! round trip equals the configured base RTT.
+//!
+//! Contention (ISSUE 8): egress buffers default to unbounded with loss
+//! injected probabilistically (the paper's simulation setup — a lossless
+//! DC fabric with a small random-loss knob), but `net.queue_kb` arms a
+//! finite per-port egress queue: a packet arriving when the link's
+//! backlog already exceeds the queue's serialization horizon is
+//! tail-dropped, and queueing delay beyond the (configurable) ECN
+//! threshold marks ECN-CE. Transit time is therefore queueing +
+//! serialization + propagation. Background `[cross_traffic]` flows
+//! occupy link time through [`Net::inject_cross_traffic`] without
+//! generating deliveries, and workers react through the pluggable
+//! [`congestion`] controllers.
 
+pub mod congestion;
 pub mod event;
 pub mod topology;
 
@@ -51,6 +61,17 @@ pub struct NetStats {
     /// of `dropped` — random loss and fault loss are tallied separately so
     /// scenario reports can attribute recovery traffic).
     pub fault_drops: u64,
+    /// Unreliable packets lost to a full egress queue (`net.queue_kb`
+    /// armed; a subset of `dropped`, tallied separately from random and
+    /// fault loss so congestion sweeps can attribute their drops).
+    pub tail_drops: u64,
+    /// Peak per-packet queueing delay observed on any link (ns) — the
+    /// fabric's queue-depth high-water mark in time units.
+    pub max_queue_ns: u64,
+    /// Background cross-traffic bursts injected ([`Net::inject_cross_traffic`]).
+    pub xtraffic_bursts: u64,
+    /// Background cross-traffic volume injected (bytes).
+    pub xtraffic_bytes: u64,
 }
 
 impl NetStats {
@@ -80,8 +101,13 @@ pub struct Net {
     busy_until: Vec<SimTime>,
     hop_latency: SimTime,
     /// ECN marking threshold: queueing delay on a hop beyond this marks
-    /// the packet (DCTCP-style; ATP's congestion signal).
+    /// the packet (DCTCP-style; ATP's congestion signal). Defaults to
+    /// `2 × base_rtt`; `net.ecn_threshold_us` overrides it.
     ecn_threshold_ns: SimTime,
+    /// Finite egress queue capacity expressed as a serialization horizon
+    /// (ns of backlog = `tx_ns(queue_kb × 1024)`); 0 = unbounded (the
+    /// pre-contention model, and the parity-pinned default).
+    queue_cap_ns: SimTime,
     loss_rng: Rng,
     /// Fault injection: per directed link, the time until which the link
     /// is down (0 = healthy). Set by the scenario engine's link-flap
@@ -102,7 +128,12 @@ impl Net {
             queue: EventQueue::new(),
             topo,
             hop_latency: (cfg.base_rtt_ns / 4).max(1),
-            ecn_threshold_ns: 2 * cfg.base_rtt_ns,
+            ecn_threshold_ns: if cfg.ecn_threshold_ns > 0 {
+                cfg.ecn_threshold_ns
+            } else {
+                2 * cfg.base_rtt_ns
+            },
+            queue_cap_ns: if cfg.queue_kb > 0 { cfg.tx_ns(cfg.queue_kb * 1024) } else { 0 },
             cfg,
             busy_until: vec![0; links],
             loss_rng,
@@ -149,10 +180,25 @@ impl Net {
             self.stats.fault_drops += 1;
             return;
         }
+        // Finite egress queue (`net.queue_kb`): an unreliable packet that
+        // arrives when the link's backlog already exceeds the queue's
+        // serialization horizon is tail-dropped — it consumes no link
+        // time. The reliable channel abstracts TCP and queues through.
+        if self.queue_cap_ns > 0
+            && !pkt.reliable
+            && self.busy_until[link].max(now) - now > self.queue_cap_ns
+        {
+            self.stats.count(&pkt);
+            self.stats.dropped += 1;
+            self.stats.tail_drops += 1;
+            return;
+        }
         let depart = self.busy_until[link].max(now).max(down_until) + tx;
         self.busy_until[link] = depart;
         // DCTCP-style ECN: mark when the hop's queueing delay is high
-        if depart.saturating_sub(now + tx) > self.ecn_threshold_ns {
+        let queue_ns = depart.saturating_sub(now + tx);
+        self.stats.max_queue_ns = self.stats.max_queue_ns.max(queue_ns);
+        if queue_ns > self.ecn_threshold_ns {
             pkt.ecn = true;
             self.stats.ecn_marked += 1;
         }
@@ -203,6 +249,28 @@ impl Net {
         self.busy_until[self.topo.link_id(from, next)]
     }
 
+    /// Occupy the directed link `a -> b` with a `bytes`-sized background
+    /// cross-traffic burst: it serializes FIFO behind whatever is queued,
+    /// consuming link time without generating a delivery. When the
+    /// finite egress queue is armed and already over capacity the burst
+    /// is discarded (an open-loop source cannot grow the buffer without
+    /// bound). Returns the burst's line-rate serialization time, which
+    /// the cross-traffic source uses to pace itself.
+    pub fn inject_cross_traffic(&mut self, a: NodeId, b: NodeId, bytes: u64) -> SimTime {
+        debug_assert_eq!(self.topo.next_hop(a, b), b, "cross-traffic flows pin adjacent links");
+        let link = self.topo.link_id(a, b);
+        let now = self.queue.now();
+        let tx = self.cfg.tx_ns(bytes);
+        if self.queue_cap_ns > 0 && self.busy_until[link].max(now) - now > self.queue_cap_ns {
+            return tx;
+        }
+        let depart = self.busy_until[link].max(now).max(self.link_down_until[link]) + tx;
+        self.busy_until[link] = depart;
+        self.stats.xtraffic_bursts += 1;
+        self.stats.xtraffic_bytes += bytes;
+        tx
+    }
+
     // ----------------------------------------------------------------
     // fault injection (scenario engine — DESIGN.md §13)
     // ----------------------------------------------------------------
@@ -243,6 +311,19 @@ mod tests {
             bandwidth_gbps: 100.0,
             base_rtt_ns: 10_000,
             loss_prob: loss,
+            queue_kb: 0,
+            ecn_threshold_ns: 0,
+        };
+        Net::new(Topology::star(4), cfg, Rng::new(7))
+    }
+
+    fn mknet_queued(queue_kb: u64, ecn_threshold_ns: u64) -> Net {
+        let cfg = NetworkConfig {
+            bandwidth_gbps: 100.0,
+            base_rtt_ns: 10_000,
+            loss_prob: 0.0,
+            queue_kb,
+            ecn_threshold_ns,
         };
         Net::new(Topology::star(4), cfg, Rng::new(7))
     }
@@ -395,6 +476,78 @@ mod tests {
         net.transmit(1, grad(1, 0));
         let (t4, _) = net.queue.pop().unwrap();
         assert_eq!(t4, 100 + 25 + 2500);
+    }
+
+    #[test]
+    fn tail_drop_engages_when_backlog_exceeds_queue_capacity() {
+        // queue_kb = 1 → cap = tx(1024B @100G) = ceil(8192/100) = 82 ns.
+        // Each 306B gradient serializes in 25 ns, so at t=0 the backlog
+        // after k accepted sends is 25k ns: sends 1-4 queue (backlog 0,
+        // 25, 50, 75), the 5th sees backlog 100 > 82 and tail-drops.
+        let mut net = mknet_queued(1, 0);
+        for _ in 0..5 {
+            net.transmit(1, grad(1, 0));
+        }
+        assert_eq!(net.queue.len(), 4, "four packets fit the queue");
+        assert_eq!(net.stats.dropped, 1);
+        assert_eq!(net.stats.tail_drops, 1);
+        assert_eq!(net.stats.fault_drops, 0, "tail loss is not fault loss");
+        assert_eq!(net.stats.max_queue_ns, 75, "peak backlog seen by an accepted packet");
+    }
+
+    #[test]
+    fn reliable_packets_queue_through_a_full_buffer() {
+        let mut net = mknet_queued(1, 0);
+        for _ in 0..5 {
+            net.transmit(1, grad(1, 0));
+        }
+        assert_eq!(net.stats.tail_drops, 1);
+        let mut rel = grad(1, 0);
+        rel.reliable = true;
+        net.transmit(1, rel); // TCP stand-in: never tail-dropped
+        assert_eq!(net.queue.len(), 5);
+        assert_eq!(net.stats.tail_drops, 1);
+    }
+
+    #[test]
+    fn ecn_threshold_knob_overrides_the_rtt_derived_default() {
+        // Explicit 10 ns threshold: the second packet (backlog 25 ns)
+        // gets marked; under the default (2×RTT = 20 µs) it would not.
+        let mut net = mknet_queued(0, 10);
+        net.transmit(1, grad(1, 0));
+        net.transmit(1, grad(1, 0));
+        assert_eq!(net.stats.ecn_marked, 1);
+        let mut auto = mknet(0.0);
+        auto.transmit(1, grad(1, 0));
+        auto.transmit(1, grad(1, 0));
+        assert_eq!(auto.stats.ecn_marked, 0, "25 ns backlog is far below 2×RTT");
+    }
+
+    #[test]
+    fn cross_traffic_occupies_the_link_fifo() {
+        let mut net = mknet(0.0);
+        let tx = net.inject_cross_traffic(1, 0, 1024);
+        assert_eq!(tx, 82, "ceil(1024·8 / 100 Gbps)");
+        assert_eq!(net.stats.xtraffic_bursts, 1);
+        assert_eq!(net.stats.xtraffic_bytes, 1024);
+        net.transmit(1, grad(1, 0));
+        let (t, _) = net.queue.pop().unwrap();
+        assert_eq!(t, 82 + 25 + 2500, "gradient serializes behind the burst");
+        // the reverse direction is untouched
+        net.transmit(0, grad(0, 1));
+        let (t2, _) = net.queue.pop().unwrap();
+        assert_eq!(t2, 25 + 2500);
+    }
+
+    #[test]
+    fn cross_traffic_respects_the_queue_cap() {
+        let mut net = mknet_queued(1, 0); // cap = 82 ns of backlog
+        net.inject_cross_traffic(1, 0, 1024); // backlog 82 (≤ cap)
+        net.inject_cross_traffic(1, 0, 1024); // backlog 164 > 82 next time
+        assert_eq!(net.stats.xtraffic_bursts, 2);
+        net.inject_cross_traffic(1, 0, 1024); // over cap: discarded
+        assert_eq!(net.stats.xtraffic_bursts, 2, "open-loop source cannot overrun the buffer");
+        assert_eq!(net.stats.xtraffic_bytes, 2048);
     }
 
     #[test]

@@ -153,6 +153,15 @@ impl Topology {
         from as usize * self.n_nodes + to as usize
     }
 
+    /// Every host's uplink as a `(host, attached switch)` pair, in node
+    /// order — the default pin set for background cross-traffic, which
+    /// contends with gradient pushes on exactly these egress FIFOs.
+    pub fn host_uplinks(&self) -> impl Iterator<Item = (NodeId, NodeId)> + '_ {
+        (0..self.n_nodes as NodeId)
+            .filter(|&n| !self.is_switch(n))
+            .map(|n| (n, self.parent_of(n)))
+    }
+
     pub fn n_links(&self) -> usize {
         self.n_nodes * self.n_nodes
     }
@@ -186,6 +195,20 @@ mod tests {
                     assert!(seen.insert(t.link_id(a, b)));
                 }
             }
+        }
+    }
+
+    #[test]
+    fn host_uplinks_cover_every_host_once() {
+        let t = Topology::star(3);
+        let ups: Vec<_> = t.host_uplinks().collect();
+        assert_eq!(ups, vec![(1, 0), (2, 0), (3, 0)]);
+        let t = Topology::two_tier(2, 4);
+        let ups: Vec<_> = t.host_uplinks().collect();
+        assert_eq!(ups, vec![(2, 0), (3, 1), (4, 0), (5, 1)]);
+        // each uplink is a real one-hop route
+        for &(h, p) in &ups {
+            assert_eq!(t.next_hop(h, p), p);
         }
     }
 

@@ -216,6 +216,13 @@ pub struct ExperimentMetrics {
     /// all delivered packets — the fabric-level congestion observable
     /// (depends on the stamp-once `sent_at` discipline).
     pub avg_transit_ns: f64,
+    /// Packets ECN-marked in an egress queue (DESIGN.md §15).
+    pub ecn_marked: u64,
+    /// Total packets lost in the fabric (random loss + tail drops).
+    pub dropped: u64,
+    /// Unreliable packets tail-dropped at a full egress queue; a subset
+    /// of `dropped` — nonzero only with a finite `net.queue_kb`.
+    pub tail_drops: u64,
     /// Wall-clock seconds the simulation took (perf accounting).
     pub wall_secs: f64,
     /// True if the run hit `max_sim_ns` before all jobs finished.
@@ -329,6 +336,9 @@ mod tests {
             events: 1000,
             past_schedules: 0,
             avg_transit_ns: 0.0,
+            ecn_marked: 0,
+            dropped: 0,
+            tail_drops: 0,
             wall_secs: 0.5,
             truncated: false,
             churn: None,

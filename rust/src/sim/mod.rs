@@ -74,6 +74,10 @@ mod rng_stream {
     const RACK0: u64 = 2;
     /// Job start spread.
     pub const START: u64 = 3;
+    /// Background cross-traffic sources. Split LAST and only when
+    /// `[cross_traffic]` is configured, so runs without it replay the
+    /// seed's stream draws exactly (`Rng::split` mutates the root).
+    pub const XTRAFFIC: u64 = 4;
     /// Workers: `WORKER_BASE + global index` (the seed's assignment).
     const WORKER_BASE: u64 = 100;
     /// Rack switches `r >= 1`: `RACK_BASE + r`, far above any worker.
@@ -119,6 +123,9 @@ const TK_CHURN_SAMPLE: u64 = 11 << 32;
 const TK_FAULT: u64 = 12 << 32;
 /// A timed fault recovers (link back up, straggler back to line rate).
 const TK_FAULT_END: u64 = 13 << 32;
+/// A background cross-traffic source ticks (`xflows` index in the low
+/// bits). Like the fault keys, valid in any mode.
+const TK_XTRAFFIC: u64 = 14 << 32;
 const TK_CHURN_MASK: u64 = 0xffff_ffff_0000_0000;
 
 /// Timeline bound: when a churn run outlives `tick × cap`, the sampler
@@ -151,6 +158,17 @@ struct ChurnRuntime {
     samples: Vec<UtilSample>,
 }
 
+/// One pinned background cross-traffic source (DESIGN.md §15): a Poisson
+/// on/off flow occupying the `from -> to` link's egress FIFO. Bursts are
+/// open-loop — they consume serialization time but carry no protocol.
+struct XFlow {
+    from: NodeId,
+    to: NodeId,
+    /// End of the current ON period; a tick at `now >= on_until` is an
+    /// OFF source drawing its next off+on cycle.
+    on_until: SimTime,
+}
+
 /// A fully wired simulated experiment.
 pub struct Simulation {
     pub cfg: ExperimentConfig,
@@ -177,6 +195,10 @@ pub struct Simulation {
     /// Structured event log (`cfg.capture_events`): scheduler transitions
     /// and fault/recovery events in event-loop order (DESIGN.md §13).
     events: Option<EventLog>,
+    /// Background cross-traffic sources (`cfg.cross_traffic` set).
+    xflows: Vec<XFlow>,
+    /// Their dedicated RNG stream; `None` when cross-traffic is off.
+    xt_rng: Option<Rng>,
     truncated: bool,
 }
 
@@ -366,6 +388,7 @@ impl Simulation {
                         ps,
                         widx: w as u8,
                         policy: cfg.policy.clone(),
+                        cc: cfg.cc.clone(),
                         window_bytes: cfg.window_bytes,
                         max_window_bytes: cfg.max_window_bytes,
                         jitter_max_ns: cfg.jitter_max_ns,
@@ -461,6 +484,31 @@ impl Simulation {
             }
         });
 
+        // Background cross-traffic (DESIGN.md §15): resolve the pinned
+        // links — explicit `links` pairs or, by default, every host
+        // uplink — and arm one tick timer per flow. The RNG stream is
+        // split LAST and only when enabled: `Rng::split` mutates the
+        // root, so an unconditional split would perturb every stream of
+        // every existing golden run.
+        let mut xflows = Vec::new();
+        let mut xt_rng = None;
+        if let Some(ct) = &cfg.cross_traffic {
+            let pairs: Vec<(NodeId, NodeId)> = if ct.links.is_empty() {
+                net.topo.host_uplinks().collect()
+            } else {
+                ct.links.iter().map(|&(a, b)| (a as NodeId, b as NodeId)).collect()
+            };
+            for (i, &(from, to)) in pairs.iter().enumerate() {
+                anyhow::ensure!(
+                    net.topo.next_hop(from, to) == to,
+                    "cross-traffic flow {i}: nodes {from} and {to} share no link"
+                );
+                net.timer(0, SWITCH_NODE, TK_XTRAFFIC | i as u64);
+                xflows.push(XFlow { from, to, on_until: 0 });
+            }
+            xt_rng = Some(root.split(rng_stream::XTRAFFIC));
+        }
+
         let capture_events = cfg.capture_events;
         Ok(Simulation {
             cfg,
@@ -476,6 +524,8 @@ impl Simulation {
             recirc_buf: Vec::new(),
             churn,
             events: capture_events.then(EventLog::new),
+            xflows,
+            xt_rng,
             truncated: false,
         })
     }
@@ -685,6 +735,7 @@ impl Simulation {
         match key & TK_CHURN_MASK {
             TK_FAULT => return self.apply_fault(now, idx),
             TK_FAULT_END => return self.end_fault(now, idx),
+            TK_XTRAFFIC => return self.xtraffic_tick(now, idx),
             _ => {}
         }
         if self.churn.is_none() {
@@ -695,6 +746,42 @@ impl Simulation {
             TK_CHURN_ADMIT => self.churn_arrival(now, idx),
             TK_CHURN_SAMPLE => self.churn_sample(now),
             other => debug_assert!(false, "unknown switch timer {other:#x}"),
+        }
+    }
+
+    // ----------------------------------------------------------------
+    // background cross-traffic (DESIGN.md §15)
+    // ----------------------------------------------------------------
+
+    /// One cross-traffic source tick. An OFF source draws its next
+    /// off+on cycle (exponential, mean `mean_off_ns`/`mean_on_ns`) and
+    /// sleeps through the OFF period; an ON source injects one burst
+    /// into its link's egress FIFO and paces the next tick so the
+    /// long-run duty cycle matches `intensity` (gap = tx / intensity).
+    /// Re-arming follows the sampler's protocol: only while other events
+    /// are pending, so an open-loop source can never keep a finished or
+    /// stalled run alive by itself.
+    fn xtraffic_tick(&mut self, now: SimTime, f: usize) {
+        let (burst, mean_on, mean_off, intensity) = {
+            let ct = self.cfg.cross_traffic.as_ref().expect("xtraffic tick without config");
+            (ct.burst_bytes, ct.mean_on_ns, ct.mean_off_ns, ct.intensity)
+        };
+        let (from, to, on_until) = {
+            let fl = &self.xflows[f];
+            (fl.from, fl.to, fl.on_until)
+        };
+        let next = if now >= on_until {
+            let rng = self.xt_rng.as_mut().expect("xtraffic tick without rng");
+            let off = (rng.exponential(1.0 / mean_off as f64) as SimTime).max(1);
+            let on = (rng.exponential(1.0 / mean_on as f64) as SimTime).max(1);
+            self.xflows[f].on_until = now + off + on;
+            now + off
+        } else {
+            let tx = self.net.inject_cross_traffic(from, to, burst);
+            now + ((tx as f64 / intensity) as SimTime).max(1)
+        };
+        if !self.all_done() && !self.net.queue.is_empty() {
+            self.net.timer(next, SWITCH_NODE, TK_XTRAFFIC | f as u64);
         }
     }
 
@@ -1019,6 +1106,9 @@ impl Simulation {
             events: self.net.queue.processed(),
             past_schedules: self.net.queue.past_schedules(),
             avg_transit_ns: self.net.avg_transit_ns(),
+            ecn_marked: self.net.stats.ecn_marked,
+            dropped: self.net.stats.dropped,
+            tail_drops: self.net.stats.tail_drops,
             wall_secs,
             truncated: self.truncated,
             churn,
@@ -1142,6 +1232,37 @@ mod tests {
     }
 
     #[test]
+    fn cross_traffic_engages_the_contention_model_deterministically() {
+        use crate::config::CrossTraffic;
+        let mk = || {
+            let mut cfg = quick_cfg(esa(), "microbench", 1, 4);
+            cfg.net.queue_kb = 4;
+            cfg.cross_traffic = Some(CrossTraffic { intensity: 0.8, ..CrossTraffic::default() });
+            Simulation::run_experiment(cfg).unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        assert!(!a.truncated, "cross-traffic must not stall the protocol");
+        assert!(
+            a.ecn_marked > 0 || a.tail_drops > 0,
+            "near-saturating background load must queue or drop something"
+        );
+        assert_eq!(a.sim_ns, b.sim_ns, "cross-traffic draws must be deterministic");
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.tail_drops, b.tail_drops);
+    }
+
+    #[test]
+    fn cross_traffic_rejects_non_adjacent_pinned_links() {
+        use crate::config::CrossTraffic;
+        let mut cfg = quick_cfg(esa(), "microbench", 1, 4);
+        // nodes 1 and 2 are both hosts in a star — no shared link
+        cfg.cross_traffic = Some(CrossTraffic { links: vec![(1, 2)], ..CrossTraffic::default() });
+        let err = Simulation::new(cfg).unwrap_err().to_string();
+        assert!(err.contains("share no link"), "{err}");
+    }
+
+    #[test]
     fn job_spec_start_offsets_respected() {
         let mut cfg = quick_cfg(esa(), "microbench", 2, 2);
         cfg.start_spread_ns = 0;
@@ -1161,6 +1282,7 @@ mod tests {
         let mut seen = BTreeSet::new();
         assert!(seen.insert(super::rng_stream::NET));
         assert!(seen.insert(super::rng_stream::START));
+        assert!(seen.insert(super::rng_stream::XTRAFFIC));
         assert!(seen.insert(super::rng_stream::EDGE));
         for r in 0..64 {
             assert!(seen.insert(super::rng_stream::rack(r)), "rack {r} label collides");

@@ -20,16 +20,22 @@
 //! excluded from the artifacts.
 //!
 //! Grid expansion order (outer to inner): policy, racks, workers, jobs,
-//! loss_prob, tensor_bytes. Seeds vary fastest, *within* a cell.
+//! loss_prob, tensor_bytes, cc, xtraffic_intensity. Seeds vary fastest,
+//! *within* a cell. The two congestion axes (and their per-cell counters)
+//! only appear in the artifacts when a sweep engages the contention model
+//! — a plain grid's JSON/CSV bytes are unchanged from before they existed
+//! (the golden snapshot pins this).
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::{
-    parse_toml, ChurnKnobs, ExperimentConfig, JobSpec, NetworkConfig, SwitchConfig, TomlTable,
+    parse_toml, ChurnKnobs, CrossTraffic, ExperimentConfig, JobSpec, NetworkConfig, SwitchConfig,
+    TomlTable,
 };
 use crate::job::trace::{generate, TraceConfig};
+use crate::net::congestion::{fixed_window, CcHandle, CcRegistry};
 use crate::sim::{ExperimentMetrics, Simulation};
 use crate::switch::policy::{all_ina, PolicyHandle, PolicyRegistry};
 use crate::util::executor::run_ordered;
@@ -90,6 +96,11 @@ pub struct SweepConfig {
     pub loss_probs: Vec<f64>,
     /// Tensor override axis; `None` entries defer to the per-model value.
     pub tensor_bytes: Vec<Option<u64>>,
+    /// Congestion-controller axis (`axes.cc`, registry keys).
+    pub cc: Vec<CcHandle>,
+    /// Cross-traffic intensity axis (`axes.xtraffic_intensity`, target
+    /// duty cycle in [0, 1]); `0.0` disables cross-traffic for the cell.
+    pub xtraffic_intensity: Vec<f64>,
     /// Model mix, cycled over a cell's jobs (trace mode: arrival mix).
     pub models: Vec<ModelMix>,
     /// Measured iterations per job.
@@ -110,6 +121,9 @@ pub struct CellSpec {
     pub jobs: usize,
     pub loss_prob: f64,
     pub tensor_bytes: Option<u64>,
+    pub cc: CcHandle,
+    /// Cross-traffic intensity for this cell (0.0 = none).
+    pub xtraffic: f64,
 }
 
 /// One cell's replica-aggregated outcome.
@@ -138,6 +152,12 @@ pub struct CellResult {
     pub rack_grad_pkts: f64,
     /// Mean rack partials reaching the edge (0 for single-switch stars).
     pub edge_partial_pkts: f64,
+    /// ECN marks, summed across replicas (contention model only).
+    pub ecn_marked: u64,
+    /// Packets lost in the fabric, summed across replicas.
+    pub dropped: u64,
+    /// Tail drops at full egress queues, summed across replicas.
+    pub tail_drops: u64,
 }
 
 /// A completed sweep: the config that produced it plus one result per
@@ -197,11 +217,26 @@ impl SweepConfig {
             seeds: vec![42],
             loss_probs: vec![0.0],
             tensor_bytes: vec![Some(256 * 1024)],
+            cc: vec![fixed_window()],
+            xtraffic_intensity: vec![0.0],
             models: vec![ModelMix::plain("microbench")],
             iterations: 2,
             base,
             trace: None,
         }
+    }
+
+    /// True when any knob engages the contention model: a non-default
+    /// congestion axis, cross-traffic anywhere, or finite-queue/ECN
+    /// settings in the base net. Gates the congestion columns of the
+    /// artifacts so plain grids keep their pre-contention bytes.
+    pub fn congestion_engaged(&self) -> bool {
+        self.cc.len() != 1
+            || self.cc.iter().any(|h| h.key() != "fixed-window")
+            || self.xtraffic_intensity.iter().any(|&x| x > 0.0)
+            || self.base.cross_traffic.is_some()
+            || self.base.net.queue_kb > 0
+            || self.base.net.ecn_threshold_ns > 0
     }
 
     /// Load from a TOML-subset sweep file (see README § `esa sweep`).
@@ -263,6 +298,13 @@ impl SweepConfig {
                 .collect::<Result<Vec<u64>>>()?,
         };
         cfg.loss_probs = t.float_list("axes.loss_prob")?.unwrap_or_else(|| vec![0.0]);
+        cfg.cc = match t.str_list("axes.cc")? {
+            None => vec![fixed_window()],
+            Some(names) => names
+                .iter()
+                .map(|s| CcRegistry::resolve(s).context("axes.cc"))
+                .collect::<Result<Vec<_>>>()?,
+        };
         cfg.tensor_bytes = match t.int_list("axes.tensor_kb")? {
             None => vec![None],
             Some(v) => v
@@ -329,6 +371,8 @@ impl SweepConfig {
                 bandwidth_gbps: t.float_or("base.bandwidth_gbps", 100.0),
                 base_rtt_ns: (t.float_or("base.base_rtt_us", 10.0) * USEC as f64) as u64,
                 loss_prob: 0.0,
+                queue_kb: t.int_or("base.queue_kb", 0) as u64,
+                ecn_threshold_ns: (t.float_or("base.ecn_threshold_us", 0.0) * USEC as f64) as u64,
             },
             jitter_max_ns: (t.float_or("base.jitter_max_us", 300.0) * USEC as f64) as u64,
             start_spread_ns: (t.float_or("base.start_spread_us", 1000.0) * USEC as f64) as u64,
@@ -346,6 +390,18 @@ impl SweepConfig {
         // arrival-to-completion JCT, queueing delay and utilization
         // timeline live in `esa churn`'s CHURN_<name>.json.
         cfg.base.churn = ChurnKnobs::from_table(t)?;
+
+        // A [cross_traffic] section supplies the flow template (burst
+        // size, on/off means, pinned links); the xtraffic_intensity axis
+        // varies its duty cycle per cell. With a section but no explicit
+        // axis, the axis defaults to the section's own intensity; with
+        // neither, cross-traffic stays off and the artifacts keep their
+        // pre-contention shape.
+        cfg.base.cross_traffic = CrossTraffic::from_table(t)?;
+        cfg.xtraffic_intensity = match t.float_list("axes.xtraffic_intensity")? {
+            Some(v) => v,
+            None => vec![cfg.base.cross_traffic.as_ref().map_or(0.0, |ct| ct.intensity)],
+        };
 
         // any trace.* key engages trace mode — a [trace] section missing
         // `n` must be an error, never a silent fall-back to the fixed grid
@@ -400,8 +456,15 @@ impl SweepConfig {
             || self.jobs.is_empty()
             || self.loss_probs.is_empty()
             || self.tensor_bytes.is_empty()
+            || self.cc.is_empty()
+            || self.xtraffic_intensity.is_empty()
         {
             bail!("every sweep axis must list at least one value");
+        }
+        for &x in &self.xtraffic_intensity {
+            if !(0.0..=1.0).contains(&x) {
+                bail!("axes.xtraffic_intensity: {x} is outside [0, 1] (0 = no cross-traffic)");
+            }
         }
         for &r in &self.racks {
             if r == 0 || r > 64 {
@@ -484,14 +547,20 @@ impl SweepConfig {
                     for &j in jobs {
                         for &loss in &self.loss_probs {
                             for &tensor in &self.tensor_bytes {
-                                cells.push(CellSpec {
-                                    policy: policy.clone(),
-                                    racks,
-                                    workers: w,
-                                    jobs: j,
-                                    loss_prob: loss,
-                                    tensor_bytes: tensor,
-                                });
+                                for cc in &self.cc {
+                                    for &xt in &self.xtraffic_intensity {
+                                        cells.push(CellSpec {
+                                            policy: policy.clone(),
+                                            racks,
+                                            workers: w,
+                                            jobs: j,
+                                            loss_prob: loss,
+                                            tensor_bytes: tensor,
+                                            cc: cc.clone(),
+                                            xtraffic: xt,
+                                        });
+                                    }
+                                }
                             }
                         }
                     }
@@ -506,10 +575,20 @@ impl SweepConfig {
         let mut cfg = self.base.clone();
         cfg.name = format!("{}:{}:r{}:s{}", self.name, spec.policy.key(), spec.racks, seed);
         cfg.policy = spec.policy.clone();
+        cfg.cc = spec.cc.clone();
         cfg.racks = spec.racks;
         cfg.seed = seed;
         cfg.iterations = self.iterations;
         cfg.net.loss_prob = spec.loss_prob;
+        // the intensity axis overrides the [cross_traffic] template's
+        // duty cycle; 0 switches the source off for this cell
+        cfg.cross_traffic = if spec.xtraffic > 0.0 {
+            let mut ct = self.base.cross_traffic.clone().unwrap_or_default();
+            ct.intensity = spec.xtraffic;
+            Some(ct)
+        } else {
+            None
+        };
         cfg.jobs = match &self.trace {
             Some(tr) => {
                 let tc = TraceConfig {
@@ -555,6 +634,9 @@ fn aggregate(spec: CellSpec, bandwidth_gbps: f64, replicas: &[ExperimentMetrics]
     let mut events = 0u64;
     let mut past_schedules = 0u64;
     let mut truncated = 0usize;
+    let mut ecn_marked = 0u64;
+    let mut dropped = 0u64;
+    let mut tail_drops = 0u64;
     for m in replicas {
         for j in &m.jobs {
             let v = j.avg_jct_ns();
@@ -582,6 +664,9 @@ fn aggregate(spec: CellSpec, bandwidth_gbps: f64, replicas: &[ExperimentMetrics]
         events += m.events;
         past_schedules += m.past_schedules;
         truncated += m.truncated as usize;
+        ecn_marked += m.ecn_marked;
+        dropped += m.dropped;
+        tail_drops += m.tail_drops;
     }
     let ci95 = if jct.count() >= 2 {
         1.96 * jct.stddev() / (jct.count() as f64).sqrt()
@@ -602,6 +687,9 @@ fn aggregate(spec: CellSpec, bandwidth_gbps: f64, replicas: &[ExperimentMetrics]
         truncated,
         rack_grad_pkts: rack_grads.mean(),
         edge_partial_pkts: edge_partials.mean(),
+        ecn_marked,
+        dropped,
+        tail_drops,
     }
 }
 
@@ -722,6 +810,19 @@ impl SweepReport {
             }
         }
         w.end_arr();
+        let congestion = c.congestion_engaged();
+        if congestion {
+            w.begin_arr(Some("cc"));
+            for h in &c.cc {
+                w.str_item(h.key());
+            }
+            w.end_arr();
+            w.begin_arr(Some("xtraffic_intensity"));
+            for &x in &c.xtraffic_intensity {
+                w.f64_item(x, 3);
+            }
+            w.end_arr();
+        }
         w.end_obj();
         w.begin_arr(Some("models"));
         for m in &c.models {
@@ -764,6 +865,10 @@ impl SweepReport {
                 Some(b) => w.u64_field("tensor_bytes", b),
                 None => w.null_field("tensor_bytes"),
             }
+            if congestion {
+                w.str_field("cc", s.cc.key());
+                w.f64_field("xtraffic_intensity", s.xtraffic, 3);
+            }
             w.u64_field("replicas", cell.replicas as u64);
             w.f64_field_or_null("jct_ms_mean", cell.jct_ms_mean, 6);
             w.f64_field_or_null("jct_ms_p50", cell.jct_ms_p50, 6);
@@ -776,6 +881,11 @@ impl SweepReport {
             w.u64_field("truncated", cell.truncated as u64);
             w.f64_field_or_null("rack_grad_pkts", cell.rack_grad_pkts, 1);
             w.f64_field_or_null("edge_partial_pkts", cell.edge_partial_pkts, 1);
+            if congestion {
+                w.u64_field("ecn_marked", cell.ecn_marked);
+                w.u64_field("dropped", cell.dropped);
+                w.u64_field("tail_drops", cell.tail_drops);
+            }
             w.end_obj();
         }
         w.end_arr();
@@ -1043,6 +1153,96 @@ mod tests {
         let r = run_sweep(&cfg, 2).unwrap();
         assert_eq!(r.cells[0].truncated, 0, "churn cell must complete");
         assert!(r.cells[0].jct_ms_mean > 0.0);
+    }
+
+    #[test]
+    fn plain_grids_keep_their_pre_contention_artifact_shape() {
+        let cfg = SweepConfig::quick();
+        assert!(!cfg.congestion_engaged(), "the golden grid must stay congestion-free");
+        let report = SweepReport { config: cfg, cells: Vec::new() };
+        let json = report.to_json();
+        assert!(!json.contains("\"cc\""), "{json}");
+        assert!(!json.contains("xtraffic"), "{json}");
+    }
+
+    #[test]
+    fn congestion_axes_parse_and_expand_innermost() {
+        let cfg = SweepConfig::parse_str(
+            r#"
+            name = "incast"
+            [axes]
+            policies = ["esa"]
+            workers = [8]
+            jobs = [1]
+            cc = ["fixed-window", "newreno"]
+            xtraffic_intensity = [0.0, 0.6]
+            [models]
+            names = ["microbench"]
+            [base]
+            queue_kb = 16
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.congestion_engaged());
+        let cells = cfg.expand();
+        assert_eq!(cells.len(), 4, "cc x intensity are real grid axes");
+        // innermost: intensity varies fastest, then cc
+        assert_eq!(cells[0].cc.key(), "fixed-window");
+        assert_eq!(cells[0].xtraffic, 0.0);
+        assert_eq!(cells[1].xtraffic, 0.6);
+        assert_eq!(cells[2].cc.key(), "newreno");
+        let exp = cfg.cell_experiment(&cells[3], 1);
+        assert_eq!(exp.cc.key(), "newreno");
+        assert_eq!(exp.net.queue_kb, 16);
+        assert!((exp.cross_traffic.as_ref().unwrap().intensity - 0.6).abs() < 1e-12);
+        let off = cfg.cell_experiment(&cells[2], 1);
+        assert!(off.cross_traffic.is_none(), "intensity 0 switches the source off");
+    }
+
+    #[test]
+    fn cross_traffic_section_defaults_the_intensity_axis() {
+        let cfg = SweepConfig::parse_str(
+            r#"
+            name = "bg"
+            [axes]
+            policies = ["esa"]
+            [cross_traffic]
+            intensity = 0.4
+            burst_bytes = 16384
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.xtraffic_intensity, vec![0.4]);
+        assert!(cfg.congestion_engaged());
+        let cells = cfg.expand();
+        let exp = cfg.cell_experiment(&cells[0], 1);
+        let ct = exp.cross_traffic.as_ref().unwrap();
+        assert_eq!(ct.burst_bytes, 16384, "template fields ride along");
+    }
+
+    #[test]
+    fn congestion_cells_emit_their_counters() {
+        let mut cfg = tiny();
+        cfg.policies = vec![esa()];
+        cfg.cc = vec![fixed_window(), crate::net::congestion::newreno()];
+        cfg.base.net.queue_kb = 8;
+        let r = run_sweep(&cfg, 2).unwrap();
+        assert_eq!(r.cells.len(), 2);
+        let json = r.to_json();
+        assert!(json.contains("\"cc\": \"newreno\""), "{json}");
+        assert!(json.contains("\"tail_drops\""), "{json}");
+        // byte-determinism holds with the congestion model engaged
+        assert_eq!(json, run_sweep(&cfg, 1).unwrap().to_json());
+    }
+
+    #[test]
+    fn bad_congestion_axes_are_pointed_errors() {
+        let err = SweepConfig::parse_str("[axes]\ncc = [\"bogus\"]").unwrap_err().to_string();
+        assert!(err.contains("axes.cc"), "{err}");
+        let err = SweepConfig::parse_str("[axes]\nxtraffic_intensity = [1.5]")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("xtraffic_intensity"), "{err}");
     }
 
     #[test]

@@ -25,6 +25,7 @@ use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::job::JobModel;
+use crate::net::congestion::{CcHandle, CongestionController};
 use crate::net::Net;
 use crate::packet::{Packet, PacketKind, UNSTAMPED};
 use crate::ps::{RttEstimator, RTO_MIN_NS};
@@ -67,6 +68,10 @@ pub struct WorkerCfg {
     pub ps: Option<NodeId>,
     pub widx: WorkerId,
     pub policy: PolicyHandle,
+    /// The congestion-control algorithm; per-worker state is built from
+    /// this handle at construction (`fixed-window` reproduces the legacy
+    /// window arithmetic bit-for-bit).
+    pub cc: CcHandle,
     pub window_bytes: u64,
     pub max_window_bytes: u64,
     pub jitter_max_ns: SimTime,
@@ -107,12 +112,8 @@ pub struct Worker {
     rto_backoff: u32,
     base_progress_at: SimTime,
 
-    // --- congestion window (slow start + ECN AIMD per ATP) ---
-    cwnd: u32,
-    max_cwnd: u32,
-    ssthresh: u32,
-    round_mark: u32,
-    last_ecn_cut: SimTime,
+    // --- congestion control (pluggable; DESIGN.md §15) ---
+    cc: Box<dyn CongestionController>,
 
     // --- pull cache (case 2) ---
     cache: VecDeque<(u32, Option<Box<[i32]>>)>,
@@ -151,6 +152,7 @@ impl Worker {
             cwnd = cwnd.min(cap);
             max_cwnd = max_cwnd.min(cap);
         }
+        let cc = cfg.cc.build(cwnd, max_cwnd);
         let theoretical_iter = model.bytes_per_iter() as f64 * 8.0 / 100.0
             + model.profile.total_comp_ns() as f64;
         let lanes = cfg.policy.lanes();
@@ -180,11 +182,7 @@ impl Worker {
             rto_epoch: 0,
             rto_backoff: 1,
             base_progress_at: 0,
-            cwnd,
-            max_cwnd,
-            ssthresh: max_cwnd,
-            round_mark: 0,
-            last_ecn_cut: 0,
+            cc,
             cache: VecDeque::new(),
             cache_cap: (max_cwnd as usize * 2).max(512),
             payload: None,
@@ -212,7 +210,7 @@ impl Worker {
     }
 
     pub fn cwnd(&self) -> u32 {
-        self.cwnd
+        self.cc.cwnd()
     }
 
     /// One-line state dump for stall diagnosis.
@@ -225,7 +223,7 @@ impl Worker {
             self.next_send,
             self.n_completed,
             self.frags(),
-            self.cwnd,
+            self.cc.cwnd(),
             self.sent.get(self.base as usize).copied().unwrap_or(false),
             self.completed.get(self.base as usize).copied().unwrap_or(false),
         )
@@ -273,7 +271,7 @@ impl Worker {
         self.dupack = 0;
         self.rto_backoff = 1;
         self.base_progress_at = self.comm_start;
-        self.round_mark = self.cwnd;
+        self.cc.on_iteration_start();
         self.sent.fill(false);
         self.completed.fill(false);
         for (l, r) in self.layer_remaining.iter_mut().enumerate() {
@@ -363,7 +361,7 @@ impl Worker {
                 self.next_send += 1;
                 continue;
             }
-            if rel >= self.base + self.cwnd {
+            if !self.cc.can_send(self.base, rel) {
                 break; // window closed; completions reopen it
             }
             let entry = self.entry_of(rel);
@@ -421,15 +419,13 @@ impl Worker {
 
     fn on_result(&mut self, net: &mut Net, pkt: Packet) {
         let now = net.now();
-        // ECN AIMD: one multiplicative decrease per RTT on a marked result
+        // Congestion signal: the controller reacts to the ECN-CE mark
+        // (fixed-window: one multiplicative decrease per RTT guard;
+        // newreno: once per recovery period). The guard is RTT-derived
+        // here because only the worker owns the estimator.
         if pkt.ecn {
             let guard = self.rtt.rto(crate::USEC * 20).min(200 * crate::USEC);
-            if now.saturating_sub(self.last_ecn_cut) > guard {
-                self.last_ecn_cut = now;
-                self.ssthresh = (self.cwnd / 2).max(8);
-                self.cwnd = self.ssthresh.min(self.max_cwnd);
-                self.round_mark = self.base + self.cwnd;
-            }
+            self.cc.on_ecn(now, self.base, guard);
         }
         let base_seq = self.model.seq_base(self.iter);
         if self.phase != Phase::Communicating
@@ -482,16 +478,7 @@ impl Worker {
             self.dupack = 0;
             self.rto_backoff = 1;
             self.base_progress_at = now;
-            if self.base >= self.round_mark {
-                // slow start to ssthresh, then additive increase per round
-                self.cwnd = if self.cwnd < self.ssthresh {
-                    (self.cwnd * 2).min(self.ssthresh)
-                } else {
-                    self.cwnd + 1
-                }
-                .min(self.max_cwnd);
-                self.round_mark = self.base + self.cwnd;
-            }
+            self.cc.on_ack(now, self.base);
         } else {
             // Out-of-order completion is NORMAL under hash-based INA
             // (tasks complete in arbitrary order). The policy owns the
@@ -500,12 +487,13 @@ impl Worker {
             // resend path is destructive (it flushes switch partials), so
             // theirs scales with the window.
             self.dupack += 1;
-            let threshold = self.cfg.policy.send_threshold(self.cwnd);
+            let threshold = self.cfg.policy.send_threshold(self.cc.cwnd());
             if self.dupack >= threshold
                 && self.sent[self.base as usize]
                 && !self.completed[self.base as usize]
             {
                 self.dupack = 0;
+                self.cc.on_loss(now, self.base);
                 self.recover_base(net);
             }
         }
@@ -535,7 +523,8 @@ impl Worker {
         self.last_recover_at = now;
         let mut recovered = 0;
         let mut rel = self.base;
-        while recovered < Self::RECOVERY_BATCH && rel < self.frags() && rel < self.base + self.cwnd {
+        while recovered < Self::RECOVERY_BATCH && rel < self.frags() && self.cc.can_send(self.base, rel)
+        {
             if self.sent[rel as usize] && !self.completed[rel as usize] {
                 self.recover_one(net, rel);
                 recovered += 1;
@@ -714,11 +703,13 @@ impl Worker {
                     && self.sent[idx]
                     && !self.completed[idx];
                 if stalled {
-                    // Loss recovery WITHOUT multiplicative decrease: random
-                    // loss is not congestion — ECN marks own the congestion
-                    // signal (modern DC-transport separation). Backoff stays
+                    // The controller decides whether a timeout cuts the
+                    // window: fixed-window treats random loss as noise (ECN
+                    // marks own the congestion signal — modern DC-transport
+                    // separation), newreno halves per RFC 9002. Backoff stays
                     // shallow so clustered losses clear quickly.
                     self.rto_backoff = (self.rto_backoff * 2).min(4);
+                    self.cc.on_loss(net.now(), self.base);
                     self.recover_base(net);
                 }
                 self.arm_rto(net);
@@ -775,10 +766,15 @@ mod tests {
     use super::*;
     use crate::config::NetworkConfig;
     use crate::job::dnn::profile_by_name;
+    use crate::net::congestion::fixed_window;
     use crate::switch::policy::{atp, esa, switchml};
     use crate::net::{Event, Topology};
 
     fn mkworld(policy: PolicyHandle) -> (Net, Worker) {
+        mkworld_windowed(policy, 4 * 306, 16 * 306)
+    }
+
+    fn mkworld_windowed(policy: PolicyHandle, window: u64, max_window: u64) -> (Net, Worker) {
         let net = Net::new(Topology::star(4), NetworkConfig::default(), Rng::new(1));
         let model = Arc::new(JobModel::new(
             0,
@@ -793,8 +789,9 @@ mod tests {
             ps: Some(3),
             widx: 0,
             policy,
-            window_bytes: 4 * 306,
-            max_window_bytes: 16 * 306,
+            cc: fixed_window(),
+            window_bytes: window,
+            max_window_bytes: max_window,
             jitter_max_ns: 0,
             region_cap: None,
         };
@@ -909,7 +906,7 @@ mod tests {
         let (mut net, mut w) = mkworld(esa());
         w.start(&mut net);
         drain_sends(&mut net);
-        let cwnd0 = w.cwnd;
+        let cwnd0 = w.cwnd();
         // deliver nothing; pump the RTO timer chain three times
         for _ in 0..3 {
             let rto = w.rtt.rto(RTO_MIN_NS) * w.rto_backoff as u64;
@@ -925,25 +922,23 @@ mod tests {
             }
         }
         // loss recovery is decoupled from congestion control: window intact
-        assert_eq!(w.cwnd, cwnd0, "no multiplicative decrease on RTO");
+        assert_eq!(w.cwnd(), cwnd0, "no multiplicative decrease on RTO");
         assert!(w.rto_backoff > 1 && w.rto_backoff <= 4, "shallow backoff");
     }
 
     #[test]
     fn ecn_mark_halves_window_once_per_guard() {
-        let (mut net, mut w) = mkworld(esa());
-        w.cwnd = 16;
-        w.max_cwnd = 64;
+        let (mut net, mut w) = mkworld_windowed(esa(), 16 * 306, 64 * 306);
         w.start(&mut net);
         drain_sends(&mut net);
         let mut r = result_for(1, 1);
         r.ecn = true;
         w.handle(&mut net, r);
-        assert_eq!(w.cwnd, 8, "ECN mark halves the window");
+        assert_eq!(w.cwnd(), 8, "ECN mark halves the window");
         let mut r2 = result_for(2, 1);
         r2.ecn = true;
         w.handle(&mut net, r2);
-        assert_eq!(w.cwnd, 8, "second mark within the guard window is ignored");
+        assert_eq!(w.cwnd(), 8, "second mark within the guard window is ignored");
     }
 
     #[test]
@@ -1078,6 +1073,7 @@ mod tests {
             ps: Some(3),
             widx: 0,
             policy: esa(),
+            cc: fixed_window(),
             window_bytes: 60 * 1024,
             max_window_bytes: 240 * 1024,
             jitter_max_ns: 0,
@@ -1107,6 +1103,7 @@ mod tests {
             ps: None,
             widx: 0,
             policy: switchml(),
+            cc: fixed_window(),
             window_bytes: 60 * 1024,
             max_window_bytes: 240 * 1024,
             jitter_max_ns: 0,

@@ -1,0 +1,5 @@
+//! Negative fixture: config/ is where the parse artifact lives, and
+//! net/congestion/ consumes it when wiring the registry.
+pub fn is_newreno(kind: &CcKind) -> bool {
+    matches!(kind, CcKind::NewReno)
+}

@@ -1,0 +1,5 @@
+//! Positive fixture: the acceptance-criteria boundary probe — a
+//! `CcKind::` match creeping back outside config/ + net/congestion/.
+pub fn is_newreno(kind: &CcKind) -> bool {
+    matches!(kind, CcKind::NewReno)
+}

@@ -9,6 +9,7 @@
 //! | `wall-clock` | sim results depend only on `(config, seed)`: no wall time outside `util/` (benches exempt — wall time *is* their measurement) |
 //! | `rng-stream` | actor noise comes from the namespaced `sim::rng_stream` splits, never ad-hoc `Rng::new` (non-test code) |
 //! | `policy-kind-boundary` | `PolicyKind` stays a parse artifact confined to `config/` + `switch/policy/` (replaces the PR 5 CI grep) |
+//! | `cc-kind-boundary` | `CcKind` stays a parse artifact confined to `config/` + `net/congestion/`; data-plane code goes through the `CongestionController` trait |
 //! | `process-exit` | `std::process::exit` only in `main.rs`, so library code stays embeddable |
 //! | `artifact-serializer` | hand-rolled JSON fragments outside `util::json::JsonWriter` need a justification |
 //! | `no-alloc` | fns marked `// esa-lint: no_alloc` (the PR 2 dispatch path) stay free of `Vec::new`/`vec!`/`format!`/`Box::new`/`String::new`/`.clone()`/`.to_*()` |
@@ -79,6 +80,12 @@ pub const RULES: &[RuleInfo] = &[
         severity: Severity::Error,
         summary: "PolicyKind:: is a parse artifact confined to src/config/ and \
                   src/switch/policy/; use the SchedulerPolicy trait hooks",
+    },
+    RuleInfo {
+        name: "cc-kind-boundary",
+        severity: Severity::Error,
+        summary: "CcKind:: is a parse artifact confined to src/config/ and \
+                  src/net/congestion/; use the CongestionController trait hooks",
     },
     RuleInfo {
         name: "process-exit",
@@ -276,6 +283,7 @@ fn scan_tokens(rel: &str, toks: &[Tok], in_tests_dir: bool, out: &mut Vec<Findin
     let in_util = rel.starts_with("src/util/");
     let in_bench = rel.starts_with("benches/");
     let policy_dirs = rel.starts_with("src/config/") || rel.starts_with("src/switch/policy/");
+    let cc_dirs = rel.starts_with("src/config/") || rel.starts_with("src/net/congestion/");
     for (i, t) in toks.iter().enumerate() {
         let test = t.in_test || in_tests_dir;
         if t.kind == TokKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
@@ -329,6 +337,16 @@ fn scan_tokens(rel: &str, toks: &[Tok], in_tests_dir: bool, out: &mut Vec<Findin
                 t.line,
                 "PolicyKind:: outside src/config/ and src/switch/policy/; use the \
                  SchedulerPolicy trait hooks"
+                    .to_string(),
+            ));
+        }
+        if !cc_dirs && matches_seq(toks, i, &["CcKind", ":", ":"]) {
+            out.push(finding(
+                "cc-kind-boundary",
+                rel,
+                t.line,
+                "CcKind:: outside src/config/ and src/net/congestion/; use the \
+                 CongestionController trait hooks"
                     .to_string(),
             ));
         }
@@ -488,6 +506,15 @@ mod tests {
         assert_eq!(run("src/sim/mod.rs", src).0.len(), 1);
         assert!(run("src/config/mod.rs", src).0.is_empty());
         assert!(run("src/switch/policy/builtin.rs", src).0.is_empty());
+    }
+
+    #[test]
+    fn cc_kind_boundary_confines_the_parse_artifact() {
+        let src = "fn f(k: CcKind) -> bool { matches!(k, CcKind::NewReno) }\n";
+        assert_eq!(run("src/sim/mod.rs", src).0.len(), 1);
+        assert_eq!(run("src/worker/mod.rs", src).0[0].rule, "cc-kind-boundary");
+        assert!(run("src/config/schema.rs", src).0.is_empty());
+        assert!(run("src/net/congestion/mod.rs", src).0.is_empty());
     }
 
     #[test]
