@@ -6,7 +6,7 @@ ARTIFACTS ?= artifacts
 PRESET ?= tiny
 WORKERS ?= 4
 
-.PHONY: build test lint bench bench-figures figures sweep churn scenario bless artifacts clean-artifacts
+.PHONY: build test lint bench bench-figures figures sweep fec churn scenario bless artifacts clean-artifacts
 
 build:
 	cd rust && cargo build --release
@@ -29,6 +29,14 @@ SWEEP_CONFIG ?=
 sweep: build
 	cd rust && ESA_BENCH_QUICK=1 ./target/release/esa sweep \
 		$(if $(SWEEP_CONFIG),--config $(abspath $(SWEEP_CONFIG)),) --out-dir target/sweeps
+
+## Run the committed FEC-vs-retransmit demo grid (DESIGN.md §16): a lossy
+## fabric swept over axes.fec_b, so SWEEP_fec.json holds the
+## erasure-coded-recovery JCT curve next to the retransmit baseline.
+## Artifacts land in rust/target/fec-demo/.
+fec: build
+	cd rust && ./target/release/esa sweep \
+		--config configs/fec_demo.toml --out-dir target/fec-demo
 
 ## Replay the default Poisson job-churn scenario (runtime admission +
 ## reclamation) under ESA/ATP/SwitchML; CHURN_quick.json lands in

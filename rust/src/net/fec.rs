@@ -1,0 +1,209 @@
+//! Systematic Reed-Solomon share codec for the `esa-fec` recovery mode
+//! (DESIGN.md §16).
+//!
+//! A recovered payload of `n` bytes is split into `b` data shards of
+//! `share_len(n, b)` bytes (the last zero-padded) and encoded into
+//! `2b - 1` shares such that **any** `b` of them reconstruct the payload
+//! exactly — Fragmentos' share arithmetic (SNIPPETS.md Snippet 2), so a
+//! lost share costs nothing until fewer than `b` arrive.
+//!
+//! Scheme: per byte position `k`, the data polynomial `P` of degree
+//! `< b` over GF(2^8) is defined by `P(i) = shard_i[k]` for `i in 0..b`.
+//! Share `j` is the evaluation `P(j)` for `j in 0..2b-2` — shares
+//! `0..b-1` *are* the data shards (systematic by construction), shares
+//! `b..2b-2` are parity. Reconstruction from shares at distinct points
+//! `x_0..x_{b-1}` is Lagrange interpolation back to the points `0..b-1`;
+//! a point that was received is copied, not interpolated. `b <= 8`, so
+//! at most 15 shares and all evaluation points are distinct in GF(256).
+//!
+//! The hot encode/reconstruct loops are `esa-lint: no_alloc` (`_into`
+//! variants on caller buffers, Lagrange rows on stack arrays); the
+//! allocating conveniences below them are for tests and callers off the
+//! dispatch path. All GF arithmetic lives in [`crate::util::gf256`] —
+//! the `fec-boundary` lint rule keeps it confined there and here.
+
+use crate::util::gf256;
+
+/// Largest supported shard count (15 shares; `esa-fec=<b>` validates).
+pub const MAX_B: usize = 8;
+
+/// Number of shares `encode_into` produces: `2b - 1`.
+#[inline]
+pub fn n_shares(b: usize) -> usize {
+    2 * b - 1
+}
+
+/// Bytes per share for an `n`-byte payload split `b` ways (last shard
+/// zero-padded).
+#[inline]
+pub fn share_len(n: usize, b: usize) -> usize {
+    n.div_ceil(b)
+}
+
+/// One Lagrange interpolation row: weights `w[i]` such that
+/// `P(t) = Σ_i w[i] · P(xs[i])` for any polynomial of degree `< xs.len()`.
+/// The evaluation points in `xs` must be distinct and must not contain `t`.
+#[inline]
+fn lagrange_row(xs: &[u8], t: u8, w: &mut [u8; MAX_B]) {
+    for (i, &xi) in xs.iter().enumerate() {
+        let mut num = 1u8;
+        let mut den = 1u8;
+        for (m, &xm) in xs.iter().enumerate() {
+            if m != i {
+                num = gf256::mul(num, t ^ xm);
+                den = gf256::mul(den, xi ^ xm);
+            }
+        }
+        w[i] = gf256::div(num, den);
+    }
+}
+
+/// Encode `data` into `2b - 1` shares of `share_len(data.len(), b)`
+/// bytes each, laid out consecutively in `out` (share `j` occupies
+/// `out[j*sl..(j+1)*sl]`). `out.len()` must be exactly
+/// `n_shares(b) * share_len(data.len(), b)`.
+// esa-lint: no_alloc
+pub fn encode_into(data: &[u8], b: usize, out: &mut [u8]) {
+    assert!(b >= 1 && b <= MAX_B, "fec shard count b={b} outside 1..={MAX_B}");
+    let sl = share_len(data.len(), b);
+    assert_eq!(out.len(), n_shares(b) * sl, "encode output buffer size mismatch");
+    // systematic prefix: shares 0..b-1 are the (zero-padded) data shards
+    for i in 0..b {
+        for k in 0..sl {
+            out[i * sl + k] = data.get(i * sl + k).copied().unwrap_or(0);
+        }
+    }
+    // parity shares b..2b-2: evaluate P at the points b..2b-2
+    let xs: [u8; MAX_B] = [0, 1, 2, 3, 4, 5, 6, 7];
+    let mut w = [0u8; MAX_B];
+    for j in b..n_shares(b) {
+        lagrange_row(&xs[..b], j as u8, &mut w);
+        for k in 0..sl {
+            let mut v = 0u8;
+            for (i, &wi) in w.iter().enumerate().take(b) {
+                v ^= gf256::mul(wi, out[i * sl + k]);
+            }
+            out[j * sl + k] = v;
+        }
+    }
+}
+
+/// Reconstruct the `b * sl`-byte padded payload into `out` from `b`
+/// shares: `idxs` holds their distinct share indices (`< 2b - 1`) and
+/// `shares` their bytes, laid out consecutively in `idxs` order
+/// (`shares[i*sl..(i+1)*sl]` is the share at point `idxs[i]`). The
+/// caller truncates `out` back to the original payload length.
+// esa-lint: no_alloc
+pub fn reconstruct_into(b: usize, idxs: &[u8], shares: &[u8], sl: usize, out: &mut [u8]) {
+    assert!(b >= 1 && b <= MAX_B, "fec shard count b={b} outside 1..={MAX_B}");
+    assert_eq!(idxs.len(), b, "reconstruction needs exactly b share indices");
+    assert_eq!(shares.len(), b * sl, "share buffer size mismatch");
+    assert_eq!(out.len(), b * sl, "reconstruction output buffer size mismatch");
+    debug_assert!(
+        (0..b).all(|i| (0..i).all(|m| idxs[i] != idxs[m])),
+        "share indices must be distinct"
+    );
+    let mut w = [0u8; MAX_B];
+    for t in 0..b {
+        // received data shards copy straight through
+        if let Some(i) = idxs.iter().position(|&x| x as usize == t) {
+            out[t * sl..(t + 1) * sl].copy_from_slice(&shares[i * sl..(i + 1) * sl]);
+            continue;
+        }
+        lagrange_row(idxs, t as u8, &mut w);
+        for k in 0..sl {
+            let mut v = 0u8;
+            for (i, &wi) in w.iter().enumerate().take(b) {
+                v ^= gf256::mul(wi, shares[i * sl + k]);
+            }
+            out[t * sl + k] = v;
+        }
+    }
+}
+
+/// Allocating convenience: encode into a fresh flat buffer.
+pub fn encode(data: &[u8], b: usize) -> Vec<u8> {
+    let mut out = vec![0u8; n_shares(b) * share_len(data.len(), b)];
+    encode_into(data, b, &mut out);
+    out
+}
+
+/// Allocating convenience: reconstruct and truncate to `n` bytes.
+pub fn reconstruct(b: usize, idxs: &[u8], shares: &[u8], sl: usize, n: usize) -> Vec<u8> {
+    let mut out = vec![0u8; b * sl];
+    reconstruct_into(b, idxs, shares, sl, &mut out);
+    out.truncate(n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pinned_encode_vector_matches_the_reference() {
+        // python reference: encode([1..7], b=3) with poly 0x11d
+        let shares = encode(&[1, 2, 3, 4, 5, 6, 7], 3);
+        assert_eq!(
+            shares,
+            vec![1, 2, 3, 4, 5, 6, 7, 0, 0, 2, 7, 5, 61, 54, 33],
+            "systematic prefix + pinned parity bytes"
+        );
+    }
+
+    #[test]
+    fn systematic_prefix_is_the_payload() {
+        let data: Vec<u8> = (0..40).map(|i| (i * 7 + 3) as u8).collect();
+        for b in 1..=MAX_B {
+            let sl = share_len(data.len(), b);
+            let shares = encode(&data, b);
+            for (k, &d) in data.iter().enumerate() {
+                assert_eq!(shares[k], d, "b={b}: data bytes must appear verbatim");
+            }
+            assert_eq!(shares.len(), n_shares(b) * sl);
+        }
+    }
+
+    #[test]
+    fn data_shards_reconstruct_without_interpolation() {
+        let data: Vec<u8> = (0..33).map(|i| (i * 13 + 1) as u8).collect();
+        for b in 1..=MAX_B {
+            let sl = share_len(data.len(), b);
+            let shares = encode(&data, b);
+            let idxs: Vec<u8> = (0..b as u8).collect();
+            let got = reconstruct(b, &idxs, &shares[..b * sl], sl, data.len());
+            assert_eq!(got, data, "b={b}");
+        }
+    }
+
+    #[test]
+    fn parity_only_reconstruction_round_trips() {
+        // lose ALL data shards; the b-1 parity shares + the last data
+        // shard (for odd counts) or any other mix must still work. Here:
+        // b=4, use shares {3, 4, 5, 6} (one data + three parity).
+        let data: Vec<u8> = (0..100).map(|i| (i * 31 + 7) as u8).collect();
+        let b = 4;
+        let sl = share_len(data.len(), b);
+        let shares = encode(&data, b);
+        let idxs = [3u8, 4, 5, 6];
+        let mut subset = Vec::new();
+        for &i in &idxs {
+            subset.extend_from_slice(&shares[i as usize * sl..(i as usize + 1) * sl]);
+        }
+        assert_eq!(reconstruct(b, &idxs, &subset, sl, data.len()), data);
+    }
+
+    #[test]
+    fn b_one_is_the_identity_codec() {
+        let data = [9u8, 8, 7];
+        let shares = encode(&data, 1);
+        assert_eq!(shares, data, "2·1-1 = 1 share: the payload itself");
+        assert_eq!(reconstruct(1, &[0], &shares, 3, 3), data);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside 1..=")]
+    fn oversized_b_panics() {
+        let _ = encode(&[1, 2, 3], MAX_B + 1);
+    }
+}

@@ -22,6 +22,7 @@
 
 pub mod congestion;
 pub mod event;
+pub mod fec;
 pub mod topology;
 
 use crate::config::NetworkConfig;
@@ -57,6 +58,8 @@ pub struct NetStats {
     pub param_pkts: u64,
     pub reminder_pkts: u64,
     pub retransmit_pkts: u64,
+    /// Erasure-coded recovery shares (`esa-fec` — DESIGN.md §16).
+    pub fec_share_pkts: u64,
     /// Unreliable packets lost to an injected link-outage fault (a subset
     /// of `dropped` — random loss and fault loss are tallied separately so
     /// scenario reports can attribute recovery traffic).
@@ -88,6 +91,7 @@ impl NetStats {
                 self.reminder_pkts += 1
             }
             PacketKind::Retransmit | PacketKind::CachedResult => self.retransmit_pkts += 1,
+            PacketKind::FecShare => self.fec_share_pkts += 1,
         }
     }
 }

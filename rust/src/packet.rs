@@ -53,6 +53,14 @@ pub enum PacketKind {
     /// Worker → PS: reply to a Nack when the worker holds the completed
     /// result in its pull cache (§5.3 case 2 — avoids re-aggregation).
     CachedResult,
+    /// Worker → PS: one Reed-Solomon recovery share (`esa-fec`,
+    /// DESIGN.md §16). Deliberately unreliable — the whole point is that
+    /// any `b` of the `2b-1` shares reconstruct the payload, so a lost
+    /// share costs nothing until fewer than `b` arrive. `agg_index`
+    /// carries `share_idx | (b << 8) | (payload_len << 16)`; `bitmap` is
+    /// the worker's bit and `fan_in` the job's fan-in, so the PS can
+    /// synthesize the worker's contribution after reconstruction.
+    FecShare,
 }
 
 /// A simulated packet. Header fields mirror §5.1/§5.2.
@@ -151,6 +159,57 @@ impl Packet {
         }
     }
 
+    /// One Reed-Solomon recovery share (`esa-fec`, DESIGN.md §16) from
+    /// the worker at bit `worker_bit` toward the PS. Unreliable by
+    /// design: redundancy, not retransmission, is the loss story.
+    /// `payload_len` is the original fragment's payload byte count — the
+    /// PS derives the share length (`ceil(payload_len / b)`) from it, so
+    /// reconstruction needs no out-of-band knowledge of the policy's
+    /// lane count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fec_share(
+        job: JobId,
+        seq: u32,
+        share_idx: u8,
+        b: u8,
+        payload_len: u16,
+        worker_bit: u32,
+        fan_in: u8,
+        src: NodeId,
+        dst: NodeId,
+        wire_bytes: u32,
+    ) -> Packet {
+        Packet {
+            kind: PacketKind::FecShare,
+            job,
+            seq,
+            agg_index: share_idx as u32 | ((b as u32) << 8) | ((payload_len as u32) << 16),
+            bitmap: worker_bit,
+            fan_in,
+            priority: 0,
+            src,
+            dst,
+            wire_bytes,
+            reliable: false,
+            resend: false,
+            ecn: false,
+            values: None,
+            sent_at: UNSTAMPED,
+        }
+    }
+
+    /// The `(share_idx, b, payload_len)` triple a [`PacketKind::FecShare`]
+    /// packs into `agg_index`.
+    #[inline]
+    pub fn fec_share_meta(&self) -> (u8, u8, u16) {
+        debug_assert_eq!(self.kind, PacketKind::FecShare);
+        (
+            (self.agg_index & 0xff) as u8,
+            ((self.agg_index >> 8) & 0xff) as u8,
+            (self.agg_index >> 16) as u16,
+        )
+    }
+
     /// True if this packet's header matches an aggregation task identity.
     #[inline]
     pub fn same_task(&self, job: JobId, seq: u32) -> bool {
@@ -211,6 +270,16 @@ mod tests {
         assert_eq!(r.bitmap, 0);
         assert_eq!(r.priority, 0);
         assert!(r.reliable);
+    }
+
+    #[test]
+    fn fec_share_packs_its_metadata() {
+        let p = Packet::fec_share(2, 9, 5, 4, 256, 1 << 3, 8, 6, 20, 114);
+        assert_eq!(p.kind, PacketKind::FecShare);
+        assert!(!p.reliable, "shares mask loss; they must be droppable");
+        assert_eq!(p.fec_share_meta(), (5, 4, 256));
+        assert_eq!(p.bitmap, 8);
+        assert_eq!(p.fan_in, 8);
     }
 
     #[test]

@@ -75,6 +75,22 @@ fn entry_seq_of(e: &Entry) -> u32 {
     e.seq
 }
 
+/// In-flight Reed-Solomon share assembly for one (seq, worker) pair
+/// (`esa-fec`, DESIGN.md §16). Shares carry no ordering guarantee; the
+/// index mask dedups retried bursts, and reconstruction fires the moment
+/// `b` *distinct* shares are in — which shares arrived is irrelevant.
+#[derive(Debug)]
+struct FecAssembly {
+    /// Data-shard count: any `b` of the `2b-1` shares reconstruct.
+    b: u8,
+    /// Original payload byte count (share length is `ceil(len / b)`).
+    payload_len: u16,
+    /// Bitmask of received share indices (`2b-1 <= 15` fits u16).
+    mask: u16,
+    /// Share payloads by index; `None` slots in timing-only simulations.
+    shares: Vec<Option<Box<[i32]>>>,
+}
+
 /// One dictionary entry: `<bitmap, aggregation result, timestamp>`.
 #[derive(Debug)]
 struct Entry {
@@ -102,6 +118,9 @@ struct JobState {
     /// completed-cache path instead, so its params stay droppable.
     reliable_params: bool,
     entries: BTreeMap<u32, Entry>,
+    /// `esa-fec` share assemblies keyed by (seq, worker bit); pruned on
+    /// reconstruction and on task completion.
+    fec: BTreeMap<(u32, u32), FecAssembly>,
     /// Bounded cache of completed results: seq -> values (None in timing
     /// mode). Serves duplicate pulls and the case-2 re-multicast.
     completed: BTreeMap<u32, Option<Box<[i32]>>>,
@@ -125,6 +144,10 @@ pub struct PsStats {
     pub worker_reminders: u64,
     pub scans: u64,
     pub escalations: u64,
+    /// `esa-fec`: Reed-Solomon shares received (DESIGN.md §16).
+    pub fec_shares: u64,
+    /// `esa-fec`: contributions rebuilt from `b` arrived shares.
+    pub fec_reconstructions: u64,
 }
 
 /// The PS actor. One actor per PS *node*; it may serve several jobs
@@ -169,6 +192,7 @@ impl Ps {
                 packet_bytes,
                 reliable_params,
                 entries: BTreeMap::new(),
+                fec: BTreeMap::new(),
                 completed: BTreeMap::new(),
                 completed_order: std::collections::VecDeque::new(),
                 rtt: RttEstimator::default(),
@@ -218,6 +242,10 @@ impl Ps {
             PacketKind::ReminderToPs => {
                 self.stats.worker_reminders += 1;
                 self.on_worker_reminder(now, pkt, out);
+            }
+            PacketKind::FecShare => {
+                self.stats.fec_shares += 1;
+                self.on_fec_share(now, pkt, out);
             }
             other => debug_assert!(false, "PS got {other:?}"),
         }
@@ -311,6 +339,127 @@ impl Ps {
         let seq = pkt.seq;
         let node = self.node;
         Self::complete_entry(&mut self.stats, js, node, now, seq, out);
+    }
+
+    /// `esa-fec` (DESIGN.md §16): collect a worker's Reed-Solomon shares;
+    /// at `b` distinct arrivals reconstruct the contribution and fold it
+    /// into the dictionary exactly like a retransmit would. If the task
+    /// is then still incomplete and the switch was never flushed, remind
+    /// it *immediately* — the share burst already is the loss signal, so
+    /// waiting for the next scan epoch would forfeit the round-trip the
+    /// erasure code just saved.
+    fn on_fec_share(&mut self, now: SimTime, mut pkt: Packet, out: &mut Vec<Packet>) {
+        let switch = self.switch;
+        let node = self.node;
+        let Some(js) = self.jobs.get_mut(&pkt.job) else {
+            debug_assert!(false, "PS got FEC share for unknown job {}", pkt.job);
+            return;
+        };
+        let (share_idx, b, payload_len) = pkt.fec_share_meta();
+        let b = b as usize;
+        if b < 2 || b > crate::net::fec::MAX_B || share_idx as usize >= crate::net::fec::n_shares(b)
+        {
+            debug_assert!(false, "malformed FEC share meta ({share_idx}, {b})");
+            return;
+        }
+        let key = (pkt.seq, pkt.bitmap);
+        if js.completed.contains_key(&pkt.seq)
+            || js.entries.get(&pkt.seq).is_some_and(|e| e.bitmap & pkt.bitmap != 0)
+        {
+            // the task finished, or this worker's contribution already
+            // arrived some other way — the assembly is moot
+            self.stats.duplicates += 1;
+            js.fec.remove(&key);
+            return;
+        }
+        let asm = js.fec.entry(key).or_insert_with(|| FecAssembly {
+            b: b as u8,
+            payload_len,
+            mask: 0,
+            shares: vec![None; crate::net::fec::n_shares(b)],
+        });
+        if asm.mask & (1 << share_idx) != 0 {
+            return; // same share from a retried recovery round
+        }
+        asm.mask |= 1 << share_idx;
+        asm.shares[share_idx as usize] = pkt.values.take();
+        if (asm.mask.count_ones() as usize) < b {
+            return; // below the reconstruction threshold — keep collecting
+        }
+        let asm = js.fec.remove(&key).expect("assembly vanished mid-reconstruction");
+        let packet_bytes = js.packet_bytes;
+        self.stats.fec_reconstructions += 1;
+        let contrib = Packet {
+            kind: PacketKind::Retransmit,
+            job: pkt.job,
+            seq: pkt.seq,
+            agg_index: 0,
+            bitmap: pkt.bitmap,
+            fan_in: pkt.fan_in,
+            priority: 0,
+            src: pkt.src,
+            dst: node,
+            wire_bytes: packet_bytes,
+            reliable: false,
+            resend: false,
+            ecn: false,
+            values: Self::rebuild_payload(&asm),
+            sent_at: UNSTAMPED,
+        };
+        self.merge_contribution(now, contrib, out);
+        let Some(js) = self.jobs.get_mut(&pkt.job) else { return };
+        if let Some(entry) = js.entries.get_mut(&pkt.seq) {
+            if entry.reminders_sent == 0 {
+                entry.reminders_sent = 1;
+                entry.last_action = now;
+                self.stats.reminders_to_switch += 1;
+                out.push(Packet::reminder(pkt.job, pkt.seq, node, switch, true, packet_bytes));
+            }
+        }
+    }
+
+    /// Decode an assembly's first `b` received shares back into payload
+    /// lanes. `None` in timing-only simulations (shares carry no values)
+    /// — the reconstructed contribution then merges as a virtual payload,
+    /// exactly like a valueless retransmit.
+    fn rebuild_payload(asm: &FecAssembly) -> Option<Box<[i32]>> {
+        let b = asm.b as usize;
+        let n = asm.payload_len as usize;
+        let sl = crate::net::fec::share_len(n, b);
+        let mut idxs: Vec<u8> = Vec::with_capacity(b);
+        let mut bytes: Vec<u8> = Vec::with_capacity(b * sl);
+        for (i, slot) in asm.shares.iter().enumerate() {
+            if idxs.len() == b {
+                break;
+            }
+            if asm.mask & (1 << i) == 0 {
+                continue;
+            }
+            let words = slot.as_deref()?;
+            idxs.push(i as u8);
+            let mut taken = 0;
+            for w in words {
+                for &byte in &w.to_le_bytes() {
+                    if taken < sl {
+                        bytes.push(byte);
+                        taken += 1;
+                    }
+                }
+            }
+            if taken < sl {
+                debug_assert!(false, "short FEC share: {taken} < {sl}");
+                return None;
+            }
+        }
+        if idxs.len() < b {
+            return None;
+        }
+        let data = crate::net::fec::reconstruct(b, &idxs, &bytes, sl, n);
+        Some(
+            data.chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        )
     }
 
     /// §5.3 case 1/3/4: a worker-side reminder. Ensure an entry exists and
@@ -466,6 +615,8 @@ impl Ps {
         out: &mut Vec<Packet>,
     ) {
         let entry = js.entries.remove(&seq).expect("completing absent entry");
+        // late shares for a finished task would assemble forever otherwise
+        js.fec.retain(|&(s, _), _| s != seq);
         stats.completions += 1;
         js.rtt.sample(now.saturating_sub(entry.created).max(1));
         // One parameter packet toward the switch, which replicates it to
@@ -724,6 +875,97 @@ mod tests {
             &[42],
             "cached result replaces, never adds"
         );
+    }
+
+    fn share(job: JobId, seq: u32, idx: u8, b: u8, payload_len: u16, wbit: u32) -> Packet {
+        Packet::fec_share(job, seq, idx, b, payload_len, wbit, 3, 1, 9, 114)
+    }
+
+    #[test]
+    fn fec_shares_reconstruct_at_threshold_and_remind_switch() {
+        let mut ps = mkps();
+        let mut out = Vec::new();
+        // b=4: three shares are not enough
+        for i in 0..3 {
+            ps.handle(10, share(0, 5, i, 4, 256, 0b001), &mut out);
+        }
+        assert!(out.is_empty());
+        assert_eq!(ps.pending_entries(0), 0, "no entry until reconstruction");
+        assert_eq!(ps.stats.fec_shares, 3);
+        // the fourth share crosses the threshold
+        ps.handle(20, share(0, 5, 6, 4, 256, 0b001), &mut out);
+        assert_eq!(ps.stats.fec_reconstructions, 1);
+        assert_eq!(ps.pending_entries(0), 1, "contribution merged into the dictionary");
+        assert_eq!(ps.debug_entries(0)[0].1, 0b001, "worker 0's bit set");
+        // the share burst is the loss signal: the switch is flushed now,
+        // not a scan epoch later
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].kind, PacketKind::ReminderToSwitch);
+        assert_eq!(out[0].seq, 5);
+    }
+
+    #[test]
+    fn fec_reconstruction_completes_the_task_when_last_bit() {
+        let mut ps = mkps();
+        let mut out = Vec::new();
+        ps.handle(10, partial(0, 5, 0b110, None), &mut out);
+        for i in 0..2 {
+            ps.handle(20, share(0, 5, i, 2, 256, 0b001), &mut out);
+        }
+        assert_eq!(ps.stats.completions, 1);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].kind, PacketKind::Param);
+        assert_eq!(ps.pending_entries(0), 0);
+    }
+
+    #[test]
+    fn duplicate_and_stale_shares_are_inert() {
+        let mut ps = mkps();
+        let mut out = Vec::new();
+        // the same share index retried twice never advances the mask
+        ps.handle(10, share(0, 5, 0, 2, 256, 0b001), &mut out);
+        ps.handle(11, share(0, 5, 0, 2, 256, 0b001), &mut out);
+        assert_eq!(ps.stats.fec_reconstructions, 0);
+        // complete the task; late shares are duplicates, not new entries
+        ps.handle(20, partial(0, 5, 0b111, None), &mut out);
+        out.clear();
+        ps.handle(30, share(0, 5, 1, 2, 256, 0b001), &mut out);
+        assert!(out.is_empty());
+        assert!(ps.stats.duplicates >= 1);
+        assert_eq!(ps.pending_entries(0), 0);
+    }
+
+    #[test]
+    fn fec_train_mode_rebuilds_the_exact_payload() {
+        let mut ps = Ps::new(9, 0);
+        ps.add_job(0, vec![1], 0b1, 306, false);
+        let mut out = Vec::new();
+        let lanes: Vec<i32> = (0..8).map(|i| i * 1000 - 3).collect();
+        let mut data = Vec::new();
+        for v in &lanes {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        let b = 2usize;
+        let sl = crate::net::fec::share_len(data.len(), b);
+        let flat = crate::net::fec::encode(&data, b);
+        // deliver one data share and one parity share (indices 1 and 2)
+        for idx in [1u8, 2u8] {
+            let mut p = share(0, 5, idx, b as u8, data.len() as u16, 0b1);
+            let words: Vec<i32> = flat[idx as usize * sl..(idx as usize + 1) * sl]
+                .chunks(4)
+                .map(|c| {
+                    let mut w = [0u8; 4];
+                    w[..c.len()].copy_from_slice(c);
+                    i32::from_le_bytes(w)
+                })
+                .collect();
+            p.values = Some(words.into_boxed_slice());
+            ps.handle(10, p, &mut out);
+        }
+        assert_eq!(ps.stats.fec_reconstructions, 1);
+        assert_eq!(out.len(), 1, "single-worker job completes on reconstruction");
+        assert_eq!(out[0].kind, PacketKind::Param);
+        assert_eq!(out[0].values.as_deref().unwrap(), &lanes[..]);
     }
 
     #[test]

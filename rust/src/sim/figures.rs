@@ -13,6 +13,7 @@ use anyhow::Result;
 
 use crate::config::{ExperimentConfig, JobSpec};
 use crate::coordinator::run_parallel;
+use crate::net::congestion::fixed_window;
 use crate::sim::sweep::{run_sweep, slug, ModelMix, SweepConfig, SweepReport};
 use crate::sim::ExperimentMetrics;
 use crate::switch::policy::{atp, esa, hostps, straw_always, straw_coin, switchml, PolicyHandle};
@@ -291,6 +292,9 @@ fn jct_sweep(
             seeds: vec![scale.seed],
             loss_probs: vec![0.0],
             tensor_bytes: vec![None],
+            cc: vec![fixed_window()],
+            xtraffic_intensity: vec![0.0],
+            fec_b: vec![0],
             models: models.iter().map(|m| model_mix(scale, m)).collect(),
             iterations: scale.iterations,
             base: ExperimentConfig::default(),
@@ -500,6 +504,9 @@ pub fn fig12_hierarchical_report(scale: &Scale) -> Result<(SweepReport, Figure)>
         seeds: vec![scale.seed],
         loss_probs: vec![0.0],
         tensor_bytes: vec![None],
+        cc: vec![fixed_window()],
+        xtraffic_intensity: vec![0.0],
+        fec_b: vec![0],
         models: vec![ModelMix {
             name: "dnn_a".into(),
             tensor_bytes: Some(scale.scaled(16 << 20)),

@@ -223,6 +223,13 @@ pub struct ExperimentMetrics {
     /// Unreliable packets tail-dropped at a full egress queue; a subset
     /// of `dropped` — nonzero only with a finite `net.queue_kb`.
     pub tail_drops: u64,
+    /// Reed-Solomon recovery shares put on the wire (`esa-fec`,
+    /// DESIGN.md §16); zero for every other policy.
+    pub fec_share_pkts: u64,
+    /// Shares that reached a PS (the transmit count minus fabric loss).
+    pub fec_shares_received: u64,
+    /// Worker contributions rebuilt PS-side from `b` arrived shares.
+    pub fec_reconstructions: u64,
     /// Wall-clock seconds the simulation took (perf accounting).
     pub wall_secs: f64,
     /// True if the run hit `max_sim_ns` before all jobs finished.
@@ -339,6 +346,9 @@ mod tests {
             ecn_marked: 0,
             dropped: 0,
             tail_drops: 0,
+            fec_share_pkts: 0,
+            fec_shares_received: 0,
+            fec_reconstructions: 0,
             wall_secs: 0.5,
             truncated: false,
             churn: None,

@@ -1109,6 +1109,9 @@ impl Simulation {
             ecn_marked: self.net.stats.ecn_marked,
             dropped: self.net.stats.dropped,
             tail_drops: self.net.stats.tail_drops,
+            fec_share_pkts: self.net.stats.fec_share_pkts,
+            fec_shares_received: self.pses.iter().map(|p| p.stats.fec_shares).sum(),
+            fec_reconstructions: self.pses.iter().map(|p| p.stats.fec_reconstructions).sum(),
             wall_secs,
             truncated: self.truncated,
             churn,

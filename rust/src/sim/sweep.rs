@@ -20,11 +20,15 @@
 //! excluded from the artifacts.
 //!
 //! Grid expansion order (outer to inner): policy, racks, workers, jobs,
-//! loss_prob, tensor_bytes, cc, xtraffic_intensity. Seeds vary fastest,
-//! *within* a cell. The two congestion axes (and their per-cell counters)
-//! only appear in the artifacts when a sweep engages the contention model
-//! — a plain grid's JSON/CSV bytes are unchanged from before they existed
-//! (the golden snapshot pins this).
+//! loss_prob, tensor_bytes, cc, xtraffic_intensity, fec_b. Seeds vary
+//! fastest, *within* a cell. The two congestion axes (and their per-cell
+//! counters) only appear in the artifacts when a sweep engages the
+//! contention model — a plain grid's JSON/CSV bytes are unchanged from
+//! before they existed (the golden snapshot pins this). The `axes.fec_b`
+//! axis (DESIGN.md §16) follows the same rule: a cell with `fec_b = k >
+//! 0` runs `esa-fec=<k>` in place of the base `esa` policy (`0` keeps
+//! the baseline), and the FEC fields appear in the JSON only when the
+//! axis is actually used.
 
 use std::path::{Path, PathBuf};
 
@@ -101,6 +105,10 @@ pub struct SweepConfig {
     /// Cross-traffic intensity axis (`axes.xtraffic_intensity`, target
     /// duty cycle in [0, 1]); `0.0` disables cross-traffic for the cell.
     pub xtraffic_intensity: Vec<f64>,
+    /// Erasure-coding axis (`axes.fec_b`, DESIGN.md §16): `0` keeps the
+    /// base policy; `k` in `1..=8` replaces it with `esa-fec=<k>` for
+    /// the cell — the FEC-vs-retransmit JCT curve in one grid.
+    pub fec_b: Vec<u8>,
     /// Model mix, cycled over a cell's jobs (trace mode: arrival mix).
     pub models: Vec<ModelMix>,
     /// Measured iterations per job.
@@ -124,6 +132,8 @@ pub struct CellSpec {
     pub cc: CcHandle,
     /// Cross-traffic intensity for this cell (0.0 = none).
     pub xtraffic: f64,
+    /// Erasure-coding shard count (0 = base policy, no FEC).
+    pub fec_b: u8,
 }
 
 /// One cell's replica-aggregated outcome.
@@ -158,6 +168,13 @@ pub struct CellResult {
     pub dropped: u64,
     /// Tail drops at full egress queues, summed across replicas.
     pub tail_drops: u64,
+    /// Reed-Solomon shares transmitted, summed across replicas
+    /// (`axes.fec_b` sweeps only).
+    pub fec_share_pkts: u64,
+    /// Shares that survived the fabric and reached a PS.
+    pub fec_shares_received: u64,
+    /// Contributions reconstructed PS-side from `b` arrived shares.
+    pub fec_reconstructions: u64,
 }
 
 /// A completed sweep: the config that produced it plus one result per
@@ -219,6 +236,7 @@ impl SweepConfig {
             tensor_bytes: vec![Some(256 * 1024)],
             cc: vec![fixed_window()],
             xtraffic_intensity: vec![0.0],
+            fec_b: vec![0],
             models: vec![ModelMix::plain("microbench")],
             iterations: 2,
             base,
@@ -237,6 +255,15 @@ impl SweepConfig {
             || self.base.cross_traffic.is_some()
             || self.base.net.queue_kb > 0
             || self.base.net.ecn_threshold_ns > 0
+    }
+
+    /// True when the sweep exercises erasure-coded recovery: a nonzero
+    /// `axes.fec_b` entry, or an `esa-fec` policy named directly. Gates
+    /// the FEC fields of the JSON artifact so plain grids keep their
+    /// pre-FEC bytes (the golden snapshot pins this).
+    pub fn fec_engaged(&self) -> bool {
+        self.fec_b.iter().any(|&b| b > 0)
+            || self.policies.iter().any(|p| p.key().starts_with("esa-fec"))
     }
 
     /// Load from a TOML-subset sweep file (see README § `esa sweep`).
@@ -304,6 +331,23 @@ impl SweepConfig {
                 .iter()
                 .map(|s| CcRegistry::resolve(s).context("axes.cc"))
                 .collect::<Result<Vec<_>>>()?,
+        };
+        cfg.fec_b = match t.int_list("axes.fec_b")? {
+            None => vec![0],
+            Some(v) => v
+                .into_iter()
+                .map(|x| {
+                    u8::try_from(x)
+                        .ok()
+                        .filter(|&b| b as usize <= crate::net::fec::MAX_B)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "axes.fec_b: {x} is outside 0..={} (0 = baseline, k = esa-fec=<k>)",
+                                crate::net::fec::MAX_B
+                            )
+                        })
+                })
+                .collect::<Result<Vec<u8>>>()?,
         };
         cfg.tensor_bytes = match t.int_list("axes.tensor_kb")? {
             None => vec![None],
@@ -491,6 +535,26 @@ impl SweepConfig {
                 bail!("axes.loss_prob: {l} is outside [0, 1)");
             }
         }
+        if self.fec_b.is_empty() {
+            bail!("axes.fec_b must list at least one value (0 = baseline)");
+        }
+        for &b in &self.fec_b {
+            if b as usize > crate::net::fec::MAX_B {
+                bail!("axes.fec_b: {b} is outside 0..={}", crate::net::fec::MAX_B);
+            }
+        }
+        if self.fec_b.iter().any(|&b| b > 0) {
+            for p in &self.policies {
+                if p.key() != "esa" {
+                    bail!(
+                        "axes.fec_b overrides the cell policy to esa-fec=<b>, so \
+                         axes.policies must be [\"esa\"] (got `{}`) — to compare other \
+                         policies, name them in axes.policies without a fec_b axis",
+                        p.key()
+                    );
+                }
+            }
+        }
         for t in &self.tensor_bytes {
             if *t == Some(0) {
                 bail!("axes.tensor_kb: tensors must be non-empty");
@@ -549,16 +613,19 @@ impl SweepConfig {
                             for &tensor in &self.tensor_bytes {
                                 for cc in &self.cc {
                                     for &xt in &self.xtraffic_intensity {
-                                        cells.push(CellSpec {
-                                            policy: policy.clone(),
-                                            racks,
-                                            workers: w,
-                                            jobs: j,
-                                            loss_prob: loss,
-                                            tensor_bytes: tensor,
-                                            cc: cc.clone(),
-                                            xtraffic: xt,
-                                        });
+                                        for &fb in &self.fec_b {
+                                            cells.push(CellSpec {
+                                                policy: policy.clone(),
+                                                racks,
+                                                workers: w,
+                                                jobs: j,
+                                                loss_prob: loss,
+                                                tensor_bytes: tensor,
+                                                cc: cc.clone(),
+                                                xtraffic: xt,
+                                                fec_b: fb,
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -573,8 +640,16 @@ impl SweepConfig {
     /// Materialize one `(cell, seed)` replica as an `ExperimentConfig`.
     pub fn cell_experiment(&self, spec: &CellSpec, seed: u64) -> ExperimentConfig {
         let mut cfg = self.base.clone();
-        cfg.name = format!("{}:{}:r{}:s{}", self.name, spec.policy.key(), spec.racks, seed);
-        cfg.policy = spec.policy.clone();
+        // a nonzero fec_b axis swaps the cell onto `esa-fec=<b>`
+        // (validate() pins the base policy to `esa`, so the swap is the
+        // only delta between the baseline and FEC cells of one grid)
+        let policy = if spec.fec_b > 0 {
+            PolicyHandle::new(crate::switch::policy::EsaFec::new(spec.fec_b))
+        } else {
+            spec.policy.clone()
+        };
+        cfg.name = format!("{}:{}:r{}:s{}", self.name, policy.key(), spec.racks, seed);
+        cfg.policy = policy;
         cfg.cc = spec.cc.clone();
         cfg.racks = spec.racks;
         cfg.seed = seed;
@@ -637,6 +712,9 @@ fn aggregate(spec: CellSpec, bandwidth_gbps: f64, replicas: &[ExperimentMetrics]
     let mut ecn_marked = 0u64;
     let mut dropped = 0u64;
     let mut tail_drops = 0u64;
+    let mut fec_share_pkts = 0u64;
+    let mut fec_shares_received = 0u64;
+    let mut fec_reconstructions = 0u64;
     for m in replicas {
         for j in &m.jobs {
             let v = j.avg_jct_ns();
@@ -667,6 +745,9 @@ fn aggregate(spec: CellSpec, bandwidth_gbps: f64, replicas: &[ExperimentMetrics]
         ecn_marked += m.ecn_marked;
         dropped += m.dropped;
         tail_drops += m.tail_drops;
+        fec_share_pkts += m.fec_share_pkts;
+        fec_shares_received += m.fec_shares_received;
+        fec_reconstructions += m.fec_reconstructions;
     }
     let ci95 = if jct.count() >= 2 {
         1.96 * jct.stddev() / (jct.count() as f64).sqrt()
@@ -690,6 +771,9 @@ fn aggregate(spec: CellSpec, bandwidth_gbps: f64, replicas: &[ExperimentMetrics]
         ecn_marked,
         dropped,
         tail_drops,
+        fec_share_pkts,
+        fec_shares_received,
+        fec_reconstructions,
     }
 }
 
@@ -823,6 +907,14 @@ impl SweepReport {
             }
             w.end_arr();
         }
+        let fec = c.fec_engaged();
+        if fec {
+            w.begin_arr(Some("fec_b"));
+            for &b in &c.fec_b {
+                w.u64_item(b as u64);
+            }
+            w.end_arr();
+        }
         w.end_obj();
         w.begin_arr(Some("models"));
         for m in &c.models {
@@ -885,6 +977,12 @@ impl SweepReport {
                 w.u64_field("ecn_marked", cell.ecn_marked);
                 w.u64_field("dropped", cell.dropped);
                 w.u64_field("tail_drops", cell.tail_drops);
+            }
+            if fec {
+                w.u64_field("fec_b", s.fec_b as u64);
+                w.u64_field("fec_share_pkts", cell.fec_share_pkts);
+                w.u64_field("fec_shares_received", cell.fec_shares_received);
+                w.u64_field("fec_reconstructions", cell.fec_reconstructions);
             }
             w.end_obj();
         }
@@ -1232,6 +1330,79 @@ mod tests {
         assert!(json.contains("\"cc\": \"newreno\""), "{json}");
         assert!(json.contains("\"tail_drops\""), "{json}");
         // byte-determinism holds with the congestion model engaged
+        assert_eq!(json, run_sweep(&cfg, 1).unwrap().to_json());
+    }
+
+    #[test]
+    fn fec_axis_parses_and_expands_innermost() {
+        let cfg = SweepConfig::parse_str(
+            r#"
+            name = "fec"
+            [axes]
+            policies = ["esa"]
+            workers = [4]
+            jobs = [1]
+            loss_prob = [0.05]
+            fec_b = [0, 4]
+            [models]
+            names = ["microbench"]
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.fec_engaged());
+        let cells = cfg.expand();
+        assert_eq!(cells.len(), 2, "fec_b is a real grid axis");
+        // innermost: fec_b varies fastest
+        assert_eq!(cells[0].fec_b, 0);
+        assert_eq!(cells[1].fec_b, 4);
+        let base = cfg.cell_experiment(&cells[0], 1);
+        assert_eq!(base.policy.key(), "esa", "fec_b = 0 keeps the base policy");
+        let fec = cfg.cell_experiment(&cells[1], 1);
+        assert_eq!(fec.policy.key(), "esa-fec=4");
+        assert!(fec.name.contains("esa-fec=4"), "{}", fec.name);
+    }
+
+    #[test]
+    fn fec_axis_requires_the_esa_base_policy() {
+        let err = SweepConfig::parse_str(
+            "[axes]\npolicies = [\"esa\", \"atp\"]\nfec_b = [4]",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("axes.fec_b"), "{err}");
+        assert!(err.contains("esa-fec=<b>"), "{err}");
+    }
+
+    #[test]
+    fn bad_fec_axis_is_a_pointed_error() {
+        let err = SweepConfig::parse_str("[axes]\nfec_b = [9]").unwrap_err().to_string();
+        assert!(err.contains("axes.fec_b"), "{err}");
+        assert!(err.contains("0..=8"), "{err}");
+    }
+
+    #[test]
+    fn plain_grids_keep_their_pre_fec_artifact_shape() {
+        let cfg = SweepConfig::quick();
+        assert!(!cfg.fec_engaged(), "the golden grid must stay FEC-free");
+        let report = SweepReport { config: cfg, cells: Vec::new() };
+        let json = report.to_json();
+        assert!(!json.contains("fec"), "{json}");
+    }
+
+    #[test]
+    fn fec_cells_emit_their_counters() {
+        let mut cfg = tiny();
+        cfg.policies = vec![esa()];
+        cfg.loss_probs = vec![0.05];
+        cfg.fec_b = vec![1, 4];
+        let r = run_sweep(&cfg, 2).unwrap();
+        assert_eq!(r.cells.len(), 2);
+        let json = r.to_json();
+        assert!(json.contains("\"fec_b\": 4"), "{json}");
+        assert!(json.contains("\"fec_reconstructions\""), "{json}");
+        // the lossy b = 4 cell actually exercises the share path
+        assert!(r.cells[1].fec_share_pkts > 0, "loss must trigger share bursts");
+        // byte-determinism holds with FEC engaged
         assert_eq!(json, run_sweep(&cfg, 1).unwrap().to_json());
     }
 

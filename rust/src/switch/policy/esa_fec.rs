@@ -1,0 +1,169 @@
+//! `esa-fec` — ESA with erasure-coded loss recovery (DESIGN.md §16).
+//!
+//! The eighth policy, shipped like `esa-k` purely through
+//! [`SchedulerPolicy`] + the registry with zero edits in `switch/mod.rs`
+//! core: every switch-side hook is identical to ESA's. The only delta is
+//! worker-side — [`SchedulerPolicy::recovery`] returns
+//! [`Recovery::FecToPs`], so a sequence stuck at the window base is
+//! recovered by sending the fragment to the PS as `2b - 1` unreliable
+//! Reed-Solomon shares ([`crate::net::fec`]) instead of a reminder
+//! round-trip. Any `b` shares reconstruct the payload PS-side, which
+//! both masks share loss and delivers the worker's data in a single
+//! one-way trip — ESA's reminder path still pays reminder + NACK +
+//! retransmit round-trips before the PS holds the lost fragment.
+//!
+//! `--policy esa-fec=<b>` sets the shard count (`1..=8`; bare `esa-fec`
+//! uses [`DEFAULT_B`]). `b = 1` degenerates to a single share carrying
+//! the whole payload — redundancy zero — and is deliberately mapped back
+//! to [`Recovery::ReminderToPs`], making `esa-fec=1` bit-identical to
+//! `esa` (the differential parity test in `tests/integration_fec.rs`
+//! pins exactly that). Because the key embeds the parameter, the knob is
+//! sweepable as a grid axis (`axes.fec_b`, or explicit
+//! `axes.policies = ["esa-fec=2", "esa-fec=4"]`).
+
+use anyhow::{bail, Result};
+
+use crate::net::fec::MAX_B;
+use crate::util::rng::Rng;
+
+use super::{CollisionOutcome, PolicyHandle, Recovery, SchedulerPolicy};
+
+/// Shard count for a bare `esa-fec`: 7 shares, any 4 reconstruct.
+pub const DEFAULT_B: u8 = 4;
+
+/// ESA with Reed-Solomon share recovery (see module docs).
+#[derive(Debug, Clone)]
+pub struct EsaFec {
+    /// Registry key, parameter included (`esa-fec` or `esa-fec=<b>`).
+    key: String,
+    /// Shards per recovered payload (`1..=MAX_B`).
+    b: u8,
+}
+
+impl EsaFec {
+    /// An `esa-fec` with an explicit shard count. Panics outside
+    /// `1..=MAX_B` (the registry path validates with an error instead).
+    pub fn new(b: u8) -> EsaFec {
+        assert!(
+            (1..=MAX_B as u8).contains(&b),
+            "esa-fec shard count b={b} outside 1..={MAX_B}"
+        );
+        EsaFec { key: format!("esa-fec={b}"), b }
+    }
+
+    /// The default-shard variant a bare `--policy esa-fec` resolves to.
+    pub fn default_shards() -> EsaFec {
+        EsaFec { key: "esa-fec".to_string(), b: DEFAULT_B }
+    }
+
+    /// Registry factory: `param` is the text after `=` in
+    /// `esa-fec=<b>`, if any.
+    pub fn from_param(param: Option<&str>) -> Result<PolicyHandle> {
+        match param {
+            None => Ok(PolicyHandle::new(EsaFec::default_shards())),
+            Some(raw) => {
+                let b: u8 = match raw.parse() {
+                    Ok(v) if (1..=MAX_B as u8).contains(&v) => v,
+                    _ => bail!(
+                        "esa-fec=<b>: `{raw}` is not a shard count in 1..={MAX_B} \
+                         (b data shards, 2b-1 shares, any b reconstruct; e.g. esa-fec=4)"
+                    ),
+                };
+                Ok(PolicyHandle::new(EsaFec::new(b)))
+            }
+        }
+    }
+
+    /// The configured shard count.
+    pub fn b(&self) -> u8 {
+        self.b
+    }
+}
+
+impl SchedulerPolicy for EsaFec {
+    fn key(&self) -> &str {
+        &self.key
+    }
+
+    fn name(&self) -> &str {
+        "ESA-FEC"
+    }
+
+    /// Identical to ESA: preempt iff strictly higher priority (§5.2).
+    fn on_collision(&self, incoming: u8, occupant: u8, _rng: &mut Rng) -> CollisionOutcome {
+        if incoming > occupant {
+            CollisionOutcome::Preempt
+        } else {
+            CollisionOutcome::PassThrough
+        }
+    }
+
+    fn downgrades(&self) -> bool {
+        true
+    }
+
+    /// The whole point. `b = 1` maps back to ESA's reminder path: one
+    /// share of redundancy zero buys nothing, and routing it through the
+    /// FEC machinery would perturb the packet schedule — the degenerate
+    /// mode instead pins the zero-core-edit claim bit-for-bit.
+    fn recovery(&self) -> Recovery {
+        if self.b == 1 {
+            Recovery::ReminderToPs
+        } else {
+            Recovery::FecToPs { b: self.b }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_parses_and_embeds_in_the_key() {
+        let p = EsaFec::from_param(Some("6")).unwrap();
+        assert_eq!(p.key(), "esa-fec=6");
+        assert_eq!(p.recovery(), Recovery::FecToPs { b: 6 });
+        let d = EsaFec::from_param(None).unwrap();
+        assert_eq!(d.key(), "esa-fec");
+        assert_eq!(d.recovery(), Recovery::FecToPs { b: DEFAULT_B });
+    }
+
+    #[test]
+    fn bad_params_are_pointed_errors() {
+        for raw in ["", "0", "9", "-2", "many", "2.5"] {
+            let err = EsaFec::from_param(Some(raw)).unwrap_err().to_string();
+            assert!(err.contains("esa-fec=<b>"), "{raw}: {err}");
+        }
+    }
+
+    #[test]
+    fn degenerate_single_share_is_esa_recovery() {
+        // the parity hinge: every hook of esa-fec=1 equals ESA's
+        let p = EsaFec::new(1);
+        assert_eq!(p.recovery(), Recovery::ReminderToPs);
+        let esa = super::super::esa();
+        let mut rng = Rng::new(1);
+        assert_eq!(p.on_collision(5, 4, &mut rng), CollisionOutcome::Preempt);
+        assert_eq!(p.on_collision(4, 4, &mut rng), CollisionOutcome::PassThrough);
+        assert_eq!(p.downgrades(), esa.downgrades());
+        assert_eq!(p.lanes(), esa.lanes());
+        assert_eq!(p.packet_bytes(), esa.packet_bytes());
+        assert_eq!(p.send_threshold(64), esa.send_threshold(64));
+        assert_eq!(p.age_gate_ns(10_000), esa.age_gate_ns(10_000));
+        assert_eq!(p.result_via_ps(), esa.result_via_ps());
+        assert_eq!(p.uses_ps(), esa.uses_ps());
+    }
+
+    #[test]
+    fn behaves_like_esa_apart_from_recovery() {
+        let p = EsaFec::new(4);
+        let mut rng = Rng::new(1);
+        assert_eq!(p.on_collision(5, 4, &mut rng), CollisionOutcome::Preempt);
+        assert_eq!(p.on_collision(4, 4, &mut rng), CollisionOutcome::PassThrough);
+        assert!(p.downgrades());
+        assert_eq!(p.lanes(), 64);
+        assert_eq!(p.packet_bytes(), 306);
+        assert_eq!(p.recovery(), Recovery::FecToPs { b: 4 });
+    }
+}

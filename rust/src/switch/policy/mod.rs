@@ -26,7 +26,9 @@
 //! The six built-ins (ESA, ATP, SwitchML, the two Fig. 11 strawmen, and
 //! the no-INA BytePS baseline) live in [`builtin`]; [`esa_k`] ships a
 //! seventh policy — ESA with a configurable preemption-age threshold —
-//! implemented purely through this API as the extension-point proof. The
+//! implemented purely through this API as the extension-point proof, and
+//! [`esa_fec`] an eighth — ESA with erasure-coded recovery
+//! ([`Recovery::FecToPs`], DESIGN.md §16) instead of retransmission. The
 //! [`PolicyKind`] enum survives only as a parse artifact inside `config/`
 //! and these policy modules (a CI grep gate pins that boundary).
 //!
@@ -48,6 +50,7 @@
 //! [`PolicyKind`]: crate::config::PolicyKind
 
 pub mod builtin;
+pub mod esa_fec;
 pub mod esa_k;
 pub mod registry;
 
@@ -60,6 +63,7 @@ use crate::util::rng::Rng;
 use crate::{JobId, SimTime};
 
 pub use builtin::{all_ina, atp, esa, hostps, straw_always, straw_coin, switchml};
+pub use esa_fec::EsaFec;
 pub use esa_k::EsaK;
 pub use registry::PolicyRegistry;
 
@@ -98,6 +102,17 @@ pub enum Recovery {
     ResendToSwitch {
         /// Stamp the ATP `resend` header bit.
         mark_resend: bool,
+    },
+    /// Erasure-coded recovery (`esa-fec`, DESIGN.md §16): send the stuck
+    /// fragment to the PS as `2b - 1` unreliable Reed-Solomon shares; the
+    /// PS reconstructs from any `b` of them, so a lost share no longer
+    /// triggers a resend until fewer than `b` arrive. `b = 1` is the
+    /// degenerate single-share mode and is *not* expressed through this
+    /// variant — `esa-fec=1` returns [`Recovery::ReminderToPs`], pinning
+    /// bit-identical parity with ESA.
+    FecToPs {
+        /// Shards per payload (`1 < b <= net::fec::MAX_B`).
+        b: u8,
     },
 }
 

@@ -2,7 +2,8 @@
 //! `--policy` flags, experiment configs, sweep axes and churn specs.
 //!
 //! Names resolve case-insensitively; a `name=<param>` suffix is split off
-//! and handed to the policy's factory (only `esa-k` accepts one today).
+//! and handed to the policy's factory (`esa-k` and `esa-fec` accept one
+//! today).
 //! Unknown names fail with the full registered list, so CLI help and
 //! config errors never go stale as policies are added.
 
@@ -10,7 +11,7 @@ use std::sync::{OnceLock, RwLock};
 
 use anyhow::{bail, Result};
 
-use super::{builtin, esa_k::EsaK, PolicyHandle};
+use super::{builtin, esa_fec::EsaFec, esa_k::EsaK, PolicyHandle};
 
 /// A policy constructor: receives the optional `=<param>` suffix.
 type Factory = Box<dyn Fn(Option<&str>) -> Result<PolicyHandle> + Send + Sync>;
@@ -32,7 +33,8 @@ impl Entry {
 
 /// String-keyed registry of [`SchedulerPolicy`] factories.
 ///
-/// The six built-ins plus `esa-k` are pre-registered; third-party
+/// The six built-ins plus `esa-k` and `esa-fec` are pre-registered;
+/// third-party
 /// policies join at runtime via [`PolicyRegistry::register`]:
 ///
 /// ```
@@ -106,6 +108,11 @@ impl PolicyRegistry {
             name: "esa-k".to_string(),
             aliases: vec!["esa_k".to_string()],
             factory: Box::new(EsaK::from_param),
+        });
+        r.entries.push(Entry {
+            name: "esa-fec".to_string(),
+            aliases: vec!["esa_fec".to_string()],
+            factory: Box::new(EsaFec::from_param),
         });
         r
     }
@@ -188,7 +195,10 @@ mod tests {
     #[test]
     fn every_registered_name_round_trips_through_resolve() {
         let names = PolicyRegistry::registered_names();
-        assert!(names.len() >= 7, "built-ins + esa-k must be pre-registered: {names:?}");
+        assert!(
+            names.len() >= 8,
+            "built-ins + esa-k + esa-fec must be pre-registered: {names:?}"
+        );
         for name in &names {
             let p = PolicyRegistry::resolve(name)
                 .unwrap_or_else(|e| panic!("registered `{name}` failed to resolve: {e}"));
@@ -208,6 +218,7 @@ mod tests {
             ("noina", "hostps"),
             ("ESA", "esa"),
             ("esa_k", "esa-k"),
+            ("esa_fec", "esa-fec"),
         ] {
             assert_eq!(PolicyRegistry::resolve(alias).unwrap().key(), key, "{alias}");
         }
@@ -226,7 +237,7 @@ mod tests {
     fn unknown_policy_error_lists_registered_names() {
         let err = PolicyRegistry::resolve("bogus").unwrap_err().to_string();
         assert!(err.contains("unknown policy `bogus`"), "{err}");
-        for name in ["esa", "atp", "switchml", "straw1", "straw2", "hostps", "esa-k"] {
+        for name in ["esa", "atp", "switchml", "straw1", "straw2", "hostps", "esa-k", "esa-fec"] {
             assert!(err.contains(name), "error must list `{name}`: {err}");
         }
     }

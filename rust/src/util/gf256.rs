@@ -1,0 +1,144 @@
+//! GF(2^8) arithmetic for the Reed-Solomon share codec (DESIGN.md §16).
+//!
+//! The field is GF(256) with the AES-adjacent primitive polynomial
+//! `x^8 + x^4 + x^3 + x^2 + 1` (0x11d, the classic RS/QR-code modulus).
+//! Addition is XOR; multiplication goes through log/exp tables generated
+//! at compile time by a `const fn` — no build script, no crates.io, no
+//! runtime init to order against (the container is offline; see the
+//! tentpole contract in ISSUE 9).
+//!
+//! The exp table is doubled (512 entries) so `mul` can index
+//! `EXP[LOG[a] + LOG[b]]` without a `% 255` in the hot loop. Everything
+//! here is branch-light and allocation-free — `net::fec`'s encode and
+//! reconstruct loops are `esa-lint: no_alloc` and lean on these being
+//! `#[inline]`.
+
+/// The primitive polynomial (without the x^8 term after reduction).
+const POLY: u16 = 0x11d;
+
+const fn build_exp() -> [u8; 512] {
+    let mut exp = [0u8; 512];
+    let mut x: u16 = 1;
+    let mut i = 0;
+    while i < 255 {
+        exp[i] = x as u8;
+        x <<= 1;
+        if x & 0x100 != 0 {
+            x ^= POLY;
+        }
+        i += 1;
+    }
+    // doubled so LOG[a] + LOG[b] (max 508) indexes without a modulo
+    while i < 512 {
+        exp[i] = exp[i - 255];
+        i += 1;
+    }
+    exp
+}
+
+const fn build_log(exp: &[u8; 512]) -> [u8; 256] {
+    let mut log = [0u8; 256];
+    let mut i = 0;
+    while i < 255 {
+        log[exp[i] as usize] = i as u8;
+        i += 1;
+    }
+    log
+}
+
+/// `EXP[i] = g^i` for the generator `g = 2`, doubled past 255.
+pub const EXP: [u8; 512] = build_exp();
+/// `LOG[a]` = discrete log of `a` (undefined at 0; callers must gate).
+pub const LOG: [u8; 256] = build_log(&EXP);
+
+/// Field addition (= subtraction): XOR.
+#[inline]
+pub fn add(a: u8, b: u8) -> u8 {
+    a ^ b
+}
+
+/// Field multiplication via the doubled exp table.
+#[inline]
+pub fn mul(a: u8, b: u8) -> u8 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    EXP[LOG[a as usize] as usize + LOG[b as usize] as usize]
+}
+
+/// Multiplicative inverse. Panics on 0 (no inverse exists).
+#[inline]
+pub fn inv(a: u8) -> u8 {
+    assert!(a != 0, "0 has no inverse in GF(256)");
+    EXP[255 - LOG[a as usize] as usize]
+}
+
+/// Field division `a / b`. Panics on `b == 0`.
+#[inline]
+pub fn div(a: u8, b: u8) -> u8 {
+    mul(a, inv(b))
+}
+
+/// `a^n` by square-and-multiply (used only in tests and table checks —
+/// the codec itself never exponentiates).
+pub fn pow(a: u8, mut n: u32) -> u8 {
+    let mut base = a;
+    let mut acc = 1u8;
+    while n > 0 {
+        if n & 1 == 1 {
+            acc = mul(acc, base);
+        }
+        base = mul(base, base);
+        n >>= 1;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_match_the_generator_recurrence() {
+        // pinned against the python reference (poly 0x11d, g = 2)
+        assert_eq!(&EXP[..8], &[1, 2, 4, 8, 16, 32, 64, 128]);
+        assert_eq!(EXP[254], 142);
+        assert_eq!(LOG[2], 1);
+        assert_eq!(LOG[255], 175);
+        for i in 255..512 {
+            assert_eq!(EXP[i], EXP[i - 255], "doubled table desynced at {i}");
+        }
+    }
+
+    #[test]
+    fn pinned_products_and_inverses() {
+        assert_eq!(mul(0x53, 0xCA), 0x8f);
+        assert_eq!(inv(0x53), 0x8c);
+        assert_eq!(div(mul(0x53, 0xCA), 0xCA), 0x53);
+    }
+
+    #[test]
+    fn zero_annihilates_and_one_is_identity() {
+        for a in 0..=255u8 {
+            assert_eq!(mul(a, 0), 0);
+            assert_eq!(mul(0, a), 0);
+            assert_eq!(mul(a, 1), a);
+            assert_eq!(add(a, a), 0, "characteristic 2: a + a = 0");
+        }
+    }
+
+    #[test]
+    fn pow_matches_repeated_mul() {
+        let mut acc = 1u8;
+        for n in 0..300u32 {
+            assert_eq!(pow(3, n), acc);
+            acc = mul(acc, 3);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no inverse")]
+    fn inv_of_zero_panics() {
+        let _ = inv(0);
+    }
+}

@@ -7,6 +7,7 @@
 pub mod cli;
 pub mod executor;
 pub mod fixed;
+pub mod gf256;
 pub mod json;
 pub mod logging;
 pub mod rng;

@@ -537,15 +537,24 @@ impl Worker {
         if rel >= self.frags() || self.completed[rel as usize] || !self.sent[rel as usize] {
             return;
         }
-        // A reminder needs a PS to send it to; policies without one
-        // (SwitchML by design, or a PS-less wiring) retransmit to the
-        // switch instead.
-        let reminder_ps = match (self.cfg.policy.recovery(), self.cfg.ps) {
-            (Recovery::ReminderToPs, Some(ps)) => Some(ps),
-            _ => None,
-        };
-        match reminder_ps {
-            None => {
+        // A reminder (or share burst) needs a PS to send it to; policies
+        // without one (SwitchML by design, or a PS-less wiring) retransmit
+        // to the switch instead.
+        match (self.cfg.policy.recovery(), self.cfg.ps) {
+            (Recovery::FecToPs { b }, Some(ps)) => self.send_fec_shares(net, rel, ps, b),
+            (Recovery::ReminderToPs, Some(ps)) => {
+                let seq = self.abs_seq(rel);
+                let rem = Packet::reminder(
+                    self.model.id,
+                    seq,
+                    self.cfg.node,
+                    ps,
+                    false,
+                    self.packet_wire_bytes(),
+                );
+                net.transmit(self.cfg.node, rem);
+            }
+            _ => {
                 let seq = self.abs_seq(rel);
                 let entry = self.entry_of(rel);
                 let mut pkt = Packet::gradient(
@@ -569,18 +578,57 @@ impl Worker {
                 pkt.values = self.payload_slice(rel);
                 net.transmit(self.cfg.node, pkt);
             }
-            Some(ps) => {
-                let seq = self.abs_seq(rel);
-                let rem = Packet::reminder(
-                    self.model.id,
-                    seq,
-                    self.cfg.node,
-                    ps,
-                    false,
-                    self.packet_wire_bytes(),
-                );
-                net.transmit(self.cfg.node, rem);
+        }
+    }
+
+    /// `esa-fec` recovery (DESIGN.md §16): re-encode the stalled fragment
+    /// as `2b - 1` unreliable Reed-Solomon shares straight to the PS. Any
+    /// `b` arriving lets the PS reconstruct the worker's contribution in
+    /// a single one-way trip — no reminder / NACK / retransmit
+    /// round-trips — and share loss below the redundancy margin costs
+    /// nothing. Each share carries the header plus `1/b` of the payload,
+    /// so the burst totals just under twice a gradient's payload bytes.
+    fn send_fec_shares(&mut self, net: &mut Net, rel: u32, ps: NodeId, b: u8) {
+        let seq = self.abs_seq(rel);
+        let n_shares = crate::net::fec::n_shares(b as usize);
+        let payload_bytes = self.lanes * 4;
+        let share_len = crate::net::fec::share_len(payload_bytes, b as usize);
+        let header = self.packet_wire_bytes().saturating_sub(payload_bytes as u32);
+        let wire = header + share_len as u32;
+        // train mode: really encode the fragment's quantized bytes
+        let shares = self.payload_slice(rel).map(|vals| {
+            let mut data = Vec::with_capacity(payload_bytes);
+            for v in vals.iter() {
+                data.extend_from_slice(&v.to_le_bytes());
             }
+            crate::net::fec::encode(&data, b as usize)
+        });
+        for idx in 0..n_shares {
+            let mut pkt = Packet::fec_share(
+                self.model.id,
+                seq,
+                idx as u8,
+                b,
+                payload_bytes as u16,
+                1 << self.cfg.widx,
+                self.model.n_workers as u8,
+                self.cfg.node,
+                ps,
+                wire,
+            );
+            if let Some(flat) = &shares {
+                let share = &flat[idx * share_len..(idx + 1) * share_len];
+                let packed: Vec<i32> = share
+                    .chunks(4)
+                    .map(|c| {
+                        let mut word = [0u8; 4];
+                        word[..c.len()].copy_from_slice(c);
+                        i32::from_le_bytes(word)
+                    })
+                    .collect();
+                pkt.values = Some(packed.into_boxed_slice());
+            }
+            net.transmit(self.cfg.node, pkt);
         }
     }
 
@@ -767,7 +815,7 @@ mod tests {
     use crate::config::NetworkConfig;
     use crate::job::dnn::profile_by_name;
     use crate::net::congestion::fixed_window;
-    use crate::switch::policy::{atp, esa, switchml};
+    use crate::switch::policy::{atp, esa, switchml, EsaFec};
     use crate::net::{Event, Topology};
 
     fn mkworld(policy: PolicyHandle) -> (Net, Worker) {
@@ -883,6 +931,80 @@ mod tests {
         assert_eq!(rem.len(), 1);
         assert_eq!(rem[0].seq, 0);
         assert_eq!(rem[0].dst, 3);
+    }
+
+    #[test]
+    fn esa_fec_dupack_sends_share_burst() {
+        let (mut net, mut w) = mkworld(PolicyHandle::new(EsaFec::new(4)));
+        w.start(&mut net);
+        drain_sends(&mut net);
+        for s in 1..=3 {
+            w.handle(&mut net, result_for(s, 1));
+        }
+        let sends = drain_sends(&mut net);
+        let shares: Vec<_> = sends.iter().filter(|p| p.kind == PacketKind::FecShare).collect();
+        assert_eq!(shares.len(), 7, "b=4 → 2b-1 = 7 shares");
+        for (i, s) in shares.iter().enumerate() {
+            assert_eq!(s.seq, 0);
+            assert_eq!(s.dst, 3, "shares go straight to the PS");
+            assert_eq!(s.fec_share_meta(), (i as u8, 4, 256));
+            assert_eq!(s.bitmap, 0b01);
+            assert_eq!(s.fan_in, 2);
+            assert!(!s.reliable, "redundancy, not retransmission, masks loss");
+            // 306 B packet − 256 B payload = 50 B header; 256/4 = 64 B share
+            assert_eq!(s.wire_bytes, 114);
+        }
+        assert!(
+            !sends.iter().any(|p| p.kind == PacketKind::ReminderToPs),
+            "FEC replaces the reminder round-trip"
+        );
+    }
+
+    #[test]
+    fn esa_fec_single_shard_falls_back_to_reminder() {
+        // b=1 must take ESA's exact recovery path (the parity hinge)
+        let (mut net, mut w) = mkworld(PolicyHandle::new(EsaFec::new(1)));
+        w.start(&mut net);
+        drain_sends(&mut net);
+        for s in 1..=3 {
+            w.handle(&mut net, result_for(s, 1));
+        }
+        let sends = drain_sends(&mut net);
+        let rem: Vec<_> = sends.iter().filter(|p| p.kind == PacketKind::ReminderToPs).collect();
+        assert_eq!(rem.len(), 1);
+        assert_eq!(rem[0].seq, 0);
+        assert!(sends.iter().all(|p| p.kind != PacketKind::FecShare));
+    }
+
+    #[test]
+    fn fec_shares_round_trip_the_payload_in_train_mode() {
+        let (mut net, mut w) = mkworld(PolicyHandle::new(EsaFec::new(4)));
+        let frags = w.frags() as usize;
+        let payload: Vec<i32> = (0..frags * 64).map(|i| i as i32 * 3 - 7).collect();
+        w.set_payload(Arc::new(payload.clone()));
+        w.start(&mut net);
+        drain_sends(&mut net);
+        for s in 1..=3 {
+            w.handle(&mut net, result_for(s, 1));
+        }
+        let sends = drain_sends(&mut net);
+        let shares: Vec<_> = sends.iter().filter(|p| p.kind == PacketKind::FecShare).collect();
+        // reconstruct fragment 0 from a parity-heavy subset (shares 3..7)
+        let share_len = crate::net::fec::share_len(64 * 4, 4);
+        let idxs: Vec<u8> = vec![3, 4, 5, 6];
+        let mut subset = Vec::new();
+        for &i in &idxs {
+            let s = shares.iter().find(|p| p.fec_share_meta().0 == i).unwrap();
+            for word in s.values.as_deref().unwrap() {
+                subset.extend_from_slice(&word.to_le_bytes());
+            }
+        }
+        let data = crate::net::fec::reconstruct(4, &idxs, &subset, share_len, 64 * 4);
+        let lanes: Vec<i32> = data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(&lanes[..], &payload[0..64], "any b shares rebuild the fragment");
     }
 
     #[test]

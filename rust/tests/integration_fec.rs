@@ -1,0 +1,216 @@
+//! Integration: the erasure-coded recovery mode (DESIGN.md §16) —
+//! differential parity of the degenerate `esa-fec=1` against plain ESA
+//! across the 6-policy × racks golden matrix, the FEC-vs-retransmit
+//! JCT win under heavy loss with bounded queues, and byte determinism
+//! of `axes.fec_b` sweep artifacts across thread counts and runs.
+
+use esa::config::ExperimentConfig;
+use esa::sim::sweep::{run_sweep, SweepConfig};
+use esa::sim::Simulation;
+use esa::switch::policy::{all_ina, esa, hostps, PolicyHandle, PolicyRegistry};
+
+fn cfg(policy: PolicyHandle, racks: usize, loss: f64, jobs: usize, workers: usize) -> ExperimentConfig {
+    let mut c = ExperimentConfig::synthetic(policy, "microbench", jobs, workers);
+    c.racks = racks;
+    c.iterations = 2;
+    c.seed = 77;
+    c.jitter_max_ns = 20 * esa::USEC;
+    c.net.loss_prob = loss;
+    for j in &mut c.jobs {
+        j.tensor_bytes = Some(256 * 1024);
+    }
+    c
+}
+
+/// Satellite 2 — differential parity. `esa-fec=1` maps its recovery hook
+/// back to [`Recovery::ReminderToPs`], so registering the eighth policy
+/// must be invisible: bit-identical `ExperimentMetrics` to `esa` in every
+/// cell of the 6-policy × racks {1, 4} golden matrix (the other five
+/// policies pin that the registration itself perturbed nothing).
+#[test]
+fn esa_fec_one_is_bit_identical_to_esa_across_the_golden_matrix() {
+    let mut policies = all_ina();
+    policies.push(hostps());
+    assert_eq!(policies.len(), 6, "the golden matrix is six policies wide");
+    for policy in policies {
+        for racks in [1usize, 4] {
+            let m = Simulation::run_experiment(cfg(policy.clone(), racks, 0.0, 2, 4))
+                .unwrap_or_else(|e| panic!("{policy:?} racks={racks}: {e}"));
+            assert!(!m.truncated, "{policy:?} racks={racks} stalled");
+            assert_eq!(m.fec_share_pkts, 0, "{policy:?} racks={racks}: no FEC traffic");
+            assert_eq!(m.fec_reconstructions, 0, "{policy:?} racks={racks}");
+            if policy.key() != "esa" {
+                continue;
+            }
+            let fec1 = Simulation::run_experiment(cfg(
+                PolicyRegistry::resolve("esa-fec=1").unwrap(),
+                racks,
+                0.0,
+                2,
+                4,
+            ))
+            .unwrap();
+            assert_eq!(m.sim_ns, fec1.sim_ns, "racks={racks}");
+            assert_eq!(m.events, fec1.events, "racks={racks}");
+            assert_eq!(
+                m.avg_jct_ms().to_bits(),
+                fec1.avg_jct_ms().to_bits(),
+                "racks={racks}: esa-fec=1 must not change a single bit"
+            );
+            assert_eq!(m.avg_transit_ns.to_bits(), fec1.avg_transit_ns.to_bits(), "racks={racks}");
+        }
+    }
+}
+
+/// The parity must also hold where it is actually load-bearing: with
+/// loss injected, `esa-fec=1` recovers through the very same reminder
+/// path as `esa` — identical packet schedule, identical clock.
+#[test]
+fn esa_fec_one_parity_survives_loss() {
+    for racks in [1usize, 4] {
+        let a = Simulation::run_experiment(cfg(esa(), racks, 0.01, 2, 4)).unwrap();
+        let b = Simulation::run_experiment(cfg(
+            PolicyRegistry::resolve("esa-fec=1").unwrap(),
+            racks,
+            0.01,
+            2,
+            4,
+        ))
+        .unwrap();
+        assert!(!a.truncated && !b.truncated, "racks={racks}");
+        assert_eq!(a.sim_ns, b.sim_ns, "racks={racks}");
+        assert_eq!(a.events, b.events, "racks={racks}");
+        assert_eq!(a.avg_jct_ms().to_bits(), b.avg_jct_ms().to_bits(), "racks={racks}");
+        assert_eq!(b.fec_share_pkts, 0, "racks={racks}: b=1 must never emit shares");
+    }
+}
+
+/// Satellite 3 — the headline trade. At 5% per-hop loss with bounded
+/// egress queues, `esa-fec=4` recovers a stuck fragment with a one-way
+/// share burst where retransmit ESA pays reminder → flush → NACK →
+/// retransmit round-trips: mean JCT falls, the reminder/NACK/resend
+/// machinery goes quiet, and stale drops do not rise.
+#[test]
+fn fec_recovery_beats_retransmit_under_heavy_loss() {
+    let run = |policy: PolicyHandle| {
+        let mut c = cfg(policy, 1, 0.05, 1, 4);
+        c.net.queue_kb = 32;
+        let mut sim = Simulation::new(c).unwrap();
+        let m = sim.run();
+        assert!(!m.truncated);
+        let st = sim.ps(0).stats.clone();
+        (m, st)
+    };
+    let (esa_m, esa_ps) = run(esa());
+    let (fec_m, fec_ps) = run(PolicyRegistry::resolve("esa-fec=4").unwrap());
+
+    // the share path actually carried the recovery
+    assert!(fec_m.fec_share_pkts > 0, "5% loss must trigger share bursts");
+    assert!(fec_m.fec_reconstructions > 0, "bursts must reconstruct PS-side");
+    assert!(
+        fec_m.fec_shares_received >= 4 * fec_m.fec_reconstructions,
+        "every reconstruction consumes at least b = 4 shares"
+    );
+    assert_eq!(esa_m.fec_share_pkts, 0, "retransmit ESA must stay FEC-free");
+
+    // JCT: one-way share recovery beats the retransmit round-trips
+    assert!(
+        fec_m.avg_jct_ms() < esa_m.avg_jct_ms(),
+        "esa-fec=4 must beat retransmit ESA under loss: {} vs {} ms",
+        fec_m.avg_jct_ms(),
+        esa_m.avg_jct_ms()
+    );
+
+    // the retransmit machinery goes quiet: no worker reminders at all
+    // (shares replace them), and strictly less NACK-driven resending
+    assert_eq!(fec_ps.worker_reminders, 0, "FecToPs replaces ReminderToPs wholesale");
+    assert!(esa_ps.worker_reminders > 0, "retransmit ESA must exercise the reminder path");
+    assert!(
+        fec_ps.retransmits + fec_ps.nacks < esa_ps.retransmits + esa_ps.nacks,
+        "resends must fall: fec {}+{} vs esa {}+{}",
+        fec_ps.retransmits,
+        fec_ps.nacks,
+        esa_ps.retransmits,
+        esa_ps.nacks
+    );
+
+    // and recovery never costs stale switch-side drops
+    let stale = |m: &esa::sim::ExperimentMetrics| {
+        m.switches.iter().map(|s| s.stats.stale_drops).sum::<u64>()
+    };
+    assert!(stale(&fec_m) <= stale(&esa_m), "stale drops must not rise under FEC");
+}
+
+/// The fec-gate CI contract, in-process: a lossy `axes.fec_b` grid
+/// serializes to identical bytes across two runs AND across thread
+/// counts, loaded `fec_b = 4` cells report share traffic, and the
+/// degenerate `fec_b = 1` cells stay clean.
+#[test]
+fn fec_grid_is_byte_identical_across_thread_counts() {
+    let cfg = SweepConfig::parse_str(
+        r#"
+        name = "fec_it"
+        iterations = 1
+        [axes]
+        policies = ["esa"]
+        workers = [4]
+        jobs = [1]
+        seeds = [42]
+        tensor_kb = [128]
+        loss_prob = [0.05]
+        fec_b = [1, 4]
+        [base]
+        queue_kb = 32
+        [models]
+        names = ["microbench"]
+        "#,
+    )
+    .unwrap();
+    let a = run_sweep(&cfg, 1).unwrap();
+    let b = run_sweep(&cfg, 8).unwrap();
+    let c = run_sweep(&cfg, 8).unwrap();
+    assert_eq!(a.to_json(), b.to_json(), "threads 1 vs 8 must serialize identically");
+    assert_eq!(b.to_json(), c.to_json(), "two identical runs must serialize identically");
+    assert_eq!(a.to_csv(), b.to_csv(), "CSV must be byte-stable too");
+
+    assert_eq!(a.cells.len(), 2);
+    for cell in &a.cells {
+        assert_eq!(cell.truncated, 0, "{:?} stalled", cell.spec);
+    }
+    let clean = &a.cells[0]; // fec_b expands innermost: [1, 4]
+    let loaded = &a.cells[1];
+    assert_eq!(clean.spec.fec_b, 1);
+    assert_eq!(loaded.spec.fec_b, 4);
+    assert_eq!(clean.fec_share_pkts, 0, "fec_b = 1 cells must stay clean");
+    assert_eq!(clean.fec_reconstructions, 0);
+    assert!(loaded.fec_reconstructions > 0, "loaded cells must reconstruct");
+    let json = a.to_json();
+    assert!(json.contains("\"fec_b\": 4"), "{}", &json[..200.min(json.len())]);
+    assert!(json.contains("\"fec_reconstructions\""));
+}
+
+/// The committed demo config is the acceptance-criteria artifact: the
+/// `fec_b = 4` cells must show reconstructions and a better mean JCT
+/// than the `fec_b = 1` retransmit baseline on the same lossy fabric.
+#[test]
+fn committed_fec_demo_shows_reconstruction_and_the_jct_win() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/fec_demo.toml");
+    let cfg = SweepConfig::from_file(&path).unwrap();
+    cfg.validate().unwrap();
+    assert!(cfg.fec_engaged());
+    let cells = cfg.expand();
+    assert_eq!(cells.len(), 2, "one baseline and one FEC cell");
+    let report = run_sweep(&cfg, 4).unwrap();
+    let clean = &report.cells[0];
+    let loaded = &report.cells[1];
+    assert_eq!(clean.spec.fec_b, 1);
+    assert_eq!(loaded.spec.fec_b, 4);
+    assert_eq!(clean.fec_share_pkts + clean.fec_reconstructions, 0, "b = 1 is retransmit ESA");
+    assert!(loaded.fec_reconstructions > 0, "demo grid produced no reconstructions");
+    assert!(
+        loaded.jct_ms_mean < clean.jct_ms_mean,
+        "FEC must beat retransmit on the demo grid: {} vs {} ms",
+        loaded.jct_ms_mean,
+        clean.jct_ms_mean
+    );
+}

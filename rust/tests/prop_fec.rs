@@ -1,0 +1,197 @@
+//! Property tests for the GF(2^8) field core and the Reed-Solomon share
+//! codec behind `esa-fec` (DESIGN.md §16), via the same from-scratch
+//! mini-framework as `prop_invariants` (proptest is unavailable
+//! offline): the field axioms exhaustively where the domain is small
+//! (commutativity, inverses) and by deterministic seeded sweep where it
+//! is cubic (associativity, distributivity), then the codec's defining
+//! property — encode → erase → decode is the identity for **every**
+//! `b`-subset of the `2b - 1` shares, for every `b` in `1..=MAX_B`.
+//! On failure, re-run with the printed seed.
+
+use esa::net::fec;
+use esa::util::gf256;
+use esa::util::rng::Rng;
+
+/// Run `cases` random cases; panic with the failing seed on error.
+fn prop(name: &str, cases: u64, mut f: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0xFEC0_0000 + case;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property `{name}` failed at seed {seed:#x} (case {case})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn byte(rng: &mut Rng) -> u8 {
+    rng.next_below(256) as u8
+}
+
+// -------------------------------------------------------------------
+// GF(2^8) field axioms
+// -------------------------------------------------------------------
+
+#[test]
+fn gf256_addition_is_xor_with_identity_zero() {
+    // quadratic domain: check exhaustively
+    for a in 0..=255u8 {
+        assert_eq!(gf256::add(a, 0), a, "0 is the additive identity");
+        assert_eq!(gf256::add(a, a), 0, "characteristic 2: every element is its own negative");
+        for b in 0..=255u8 {
+            assert_eq!(gf256::add(a, b), gf256::add(b, a), "addition commutes");
+        }
+    }
+}
+
+#[test]
+fn gf256_multiplication_commutes_with_identities() {
+    for a in 0..=255u8 {
+        assert_eq!(gf256::mul(a, 1), a, "1 is the multiplicative identity");
+        assert_eq!(gf256::mul(a, 0), 0, "0 annihilates");
+        for b in 0..=255u8 {
+            assert_eq!(gf256::mul(a, b), gf256::mul(b, a), "multiplication commutes");
+        }
+    }
+}
+
+#[test]
+fn gf256_every_nonzero_element_round_trips_through_its_inverse() {
+    for a in 1..=255u8 {
+        let i = gf256::inv(a);
+        assert_ne!(i, 0, "inverse of a unit is a unit");
+        assert_eq!(gf256::mul(a, i), 1, "a · a⁻¹ = 1 for a = {a}");
+        assert_eq!(gf256::inv(i), a, "inversion is an involution for a = {a}");
+        assert_eq!(gf256::div(a, a), 1, "a / a = 1 for a = {a}");
+        assert_eq!(gf256::div(1, a), i, "1 / a = a⁻¹ for a = {a}");
+    }
+}
+
+#[test]
+fn prop_gf256_multiplication_associates() {
+    prop("gf256_mul_assoc", 64, |rng| {
+        for _ in 0..4096 {
+            let (a, b, c) = (byte(rng), byte(rng), byte(rng));
+            assert_eq!(
+                gf256::mul(gf256::mul(a, b), c),
+                gf256::mul(a, gf256::mul(b, c)),
+                "(a·b)·c = a·(b·c) for ({a}, {b}, {c})"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_gf256_multiplication_distributes_over_addition() {
+    prop("gf256_distrib", 64, |rng| {
+        for _ in 0..4096 {
+            let (a, b, c) = (byte(rng), byte(rng), byte(rng));
+            assert_eq!(
+                gf256::mul(a, gf256::add(b, c)),
+                gf256::add(gf256::mul(a, b), gf256::mul(a, c)),
+                "a·(b+c) = a·b + a·c for ({a}, {b}, {c})"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_gf256_pow_is_iterated_multiplication() {
+    prop("gf256_pow", 32, |rng| {
+        let a = byte(rng);
+        let n = rng.next_below(12) as u32;
+        let mut acc = 1u8;
+        for _ in 0..n {
+            acc = gf256::mul(acc, a);
+        }
+        assert_eq!(gf256::pow(a, n), acc, "pow({a}, {n})");
+    });
+}
+
+// -------------------------------------------------------------------
+// Reed-Solomon share codec
+// -------------------------------------------------------------------
+
+/// Concatenate the shares named by `idxs` out of the flat encode buffer.
+fn gather(shares: &[u8], idxs: &[u8], sl: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(idxs.len() * sl);
+    for &i in idxs {
+        out.extend_from_slice(&shares[i as usize * sl..(i as usize + 1) * sl]);
+    }
+    out
+}
+
+/// The codec's contract, exhaustively: for every shard count and every
+/// possible surviving `b`-subset of the `2b - 1` shares (all C(2b-1, b)
+/// of them — 8788 reconstructions in total), decode is the identity.
+#[test]
+fn rs_decode_is_the_identity_for_every_b_subset_of_every_b() {
+    let mut rng = Rng::new(0x5EED_FEC);
+    for b in 1..=fec::MAX_B {
+        let n = rng.uniform_u64(1, 96) as usize;
+        let data: Vec<u8> = (0..n).map(|_| byte(&mut rng)).collect();
+        let sl = fec::share_len(n, b);
+        let shares = fec::encode(&data, b);
+        let ns = fec::n_shares(b);
+        let mut subsets = 0u64;
+        for mask in 0u32..(1 << ns) {
+            if mask.count_ones() as usize != b {
+                continue;
+            }
+            subsets += 1;
+            let idxs: Vec<u8> = (0..ns as u8).filter(|i| mask >> i & 1 == 1).collect();
+            let got = fec::reconstruct(b, &idxs, &gather(&shares, &idxs, sl), sl, n);
+            assert_eq!(got, data, "b={b} surviving mask={mask:#017b}");
+        }
+        // C(2b-1, b) subsets actually visited, not an empty loop
+        let choose = |n: u64, k: u64| (1..=k).fold(1u64, |acc, i| acc * (n - k + i) / i);
+        assert_eq!(subsets, choose(ns as u64, b as u64), "b={b}");
+    }
+}
+
+/// Random payload lengths and random erasures, with the survivors
+/// arriving in arbitrary (shuffled) order — the PS reassembles shares
+/// in whatever order the fabric delivers them.
+#[test]
+fn prop_rs_random_erasures_decode_in_any_arrival_order() {
+    prop("rs_erasure", 128, |rng| {
+        let b = rng.uniform_u64(1, fec::MAX_B as u64) as usize;
+        let n = rng.uniform_u64(1, 256) as usize;
+        let data: Vec<u8> = (0..n).map(|_| byte(rng)).collect();
+        let sl = fec::share_len(n, b);
+        let shares = fec::encode(&data, b);
+        let mut order: Vec<u8> = (0..fec::n_shares(b) as u8).collect();
+        rng.shuffle(&mut order);
+        let idxs = &order[..b]; // unsorted: arrival order, not index order
+        let got = fec::reconstruct(b, idxs, &gather(&shares, idxs, sl), sl, n);
+        assert_eq!(got, data, "b={b} n={n} survivors={idxs:?}");
+    });
+}
+
+/// Losing fewer than b shares is free, and the codec never needs more
+/// than b: reconstruction from b+1 choices of exactly-b subsets of a
+/// single damaged burst all agree.
+#[test]
+fn prop_rs_any_b_of_the_survivors_agree() {
+    prop("rs_agreement", 64, |rng| {
+        let b = rng.uniform_u64(2, fec::MAX_B as u64) as usize;
+        let n = rng.uniform_u64(b as u64, 128) as usize;
+        let data: Vec<u8> = (0..n).map(|_| byte(rng)).collect();
+        let sl = fec::share_len(n, b);
+        let shares = fec::encode(&data, b);
+        let mut order: Vec<u8> = (0..fec::n_shares(b) as u8).collect();
+        rng.shuffle(&mut order);
+        let survivors = &order[..b + 1]; // one more than needed
+        for skip in 0..survivors.len() {
+            let idxs: Vec<u8> = survivors
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| i != skip)
+                .map(|(_, &x)| x)
+                .collect();
+            let got = fec::reconstruct(b, &idxs, &gather(&shares, &idxs, sl), sl, n);
+            assert_eq!(got, data, "b={b} survivors={survivors:?} skip={skip}");
+        }
+    });
+}

@@ -1,0 +1,5 @@
+//! Negative fixture: net/fec.rs is the codec — field arithmetic is its
+//! whole job.
+pub fn parity_byte(a: u8, b: u8) -> u8 {
+    gf256::mul(a, gf256::inv(b))
+}

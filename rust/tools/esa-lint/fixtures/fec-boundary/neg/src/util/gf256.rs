@@ -1,0 +1,5 @@
+//! Negative fixture: the field's own home may (and must) use its
+//! arithmetic freely.
+pub fn double(a: u8) -> u8 {
+    gf256::mul(a, 2)
+}

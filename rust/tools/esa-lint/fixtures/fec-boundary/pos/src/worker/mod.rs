@@ -1,0 +1,6 @@
+//! Positive fixture: the acceptance-criteria boundary probe — raw
+//! GF(2^8) arithmetic creeping back outside util/gf256.rs + net/fec.rs
+//! instead of going through the net::fec share codec.
+pub fn parity_byte(a: u8, b: u8) -> u8 {
+    gf256::mul(a, gf256::inv(b))
+}

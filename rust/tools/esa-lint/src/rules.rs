@@ -10,6 +10,7 @@
 //! | `rng-stream` | actor noise comes from the namespaced `sim::rng_stream` splits, never ad-hoc `Rng::new` (non-test code) |
 //! | `policy-kind-boundary` | `PolicyKind` stays a parse artifact confined to `config/` + `switch/policy/` (replaces the PR 5 CI grep) |
 //! | `cc-kind-boundary` | `CcKind` stays a parse artifact confined to `config/` + `net/congestion/`; data-plane code goes through the `CongestionController` trait |
+//! | `fec-boundary` | GF(2^8)/Reed-Solomon arithmetic (`gf256::`) stays confined to `util/gf256.rs` + `net/fec.rs`; callers go through the `net::fec` share codec (non-test code) |
 //! | `process-exit` | `std::process::exit` only in `main.rs`, so library code stays embeddable |
 //! | `artifact-serializer` | hand-rolled JSON fragments outside `util::json::JsonWriter` need a justification |
 //! | `no-alloc` | fns marked `// esa-lint: no_alloc` (the PR 2 dispatch path) stay free of `Vec::new`/`vec!`/`format!`/`Box::new`/`String::new`/`.clone()`/`.to_*()` |
@@ -86,6 +87,12 @@ pub const RULES: &[RuleInfo] = &[
         severity: Severity::Error,
         summary: "CcKind:: is a parse artifact confined to src/config/ and \
                   src/net/congestion/; use the CongestionController trait hooks",
+    },
+    RuleInfo {
+        name: "fec-boundary",
+        severity: Severity::Error,
+        summary: "gf256:: field arithmetic is confined to src/util/gf256.rs and \
+                  src/net/fec.rs; callers go through the net::fec share codec",
     },
     RuleInfo {
         name: "process-exit",
@@ -284,6 +291,7 @@ fn scan_tokens(rel: &str, toks: &[Tok], in_tests_dir: bool, out: &mut Vec<Findin
     let in_bench = rel.starts_with("benches/");
     let policy_dirs = rel.starts_with("src/config/") || rel.starts_with("src/switch/policy/");
     let cc_dirs = rel.starts_with("src/config/") || rel.starts_with("src/net/congestion/");
+    let fec_files = rel == "src/util/gf256.rs" || rel == "src/net/fec.rs";
     for (i, t) in toks.iter().enumerate() {
         let test = t.in_test || in_tests_dir;
         if t.kind == TokKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
@@ -347,6 +355,16 @@ fn scan_tokens(rel: &str, toks: &[Tok], in_tests_dir: bool, out: &mut Vec<Findin
                 t.line,
                 "CcKind:: outside src/config/ and src/net/congestion/; use the \
                  CongestionController trait hooks"
+                    .to_string(),
+            ));
+        }
+        if !fec_files && !test && matches_seq(toks, i, &["gf256", ":", ":"]) {
+            out.push(finding(
+                "fec-boundary",
+                rel,
+                t.line,
+                "gf256:: outside src/util/gf256.rs and src/net/fec.rs; recover through \
+                 the net::fec share codec"
                     .to_string(),
             ));
         }
@@ -515,6 +533,19 @@ mod tests {
         assert_eq!(run("src/worker/mod.rs", src).0[0].rule, "cc-kind-boundary");
         assert!(run("src/config/schema.rs", src).0.is_empty());
         assert!(run("src/net/congestion/mod.rs", src).0.is_empty());
+    }
+
+    #[test]
+    fn fec_boundary_confines_field_arithmetic() {
+        let src = "fn f(a: u8, b: u8) -> u8 { gf256::mul(a, b) }\n";
+        let (f, _) = run("src/worker/mod.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "fec-boundary");
+        assert_eq!(run("src/ps/mod.rs", src).0.len(), 1);
+        assert!(run("src/util/gf256.rs", src).0.is_empty());
+        assert!(run("src/net/fec.rs", src).0.is_empty());
+        // property tests exercise the field directly — test code is exempt
+        assert!(run("tests/prop_fec.rs", src).0.is_empty());
     }
 
     #[test]
