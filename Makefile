@@ -6,7 +6,7 @@ ARTIFACTS ?= artifacts
 PRESET ?= tiny
 WORKERS ?= 4
 
-.PHONY: build test lint bench bench-figures figures sweep fec churn scenario bless artifacts clean-artifacts
+.PHONY: build test lint bench bench-figures figures sweep fec collective churn scenario bless artifacts clean-artifacts
 
 build:
 	cd rust && cargo build --release
@@ -37,6 +37,15 @@ sweep: build
 fec: build
 	cd rust && ./target/release/esa sweep \
 		--config configs/fec_demo.toml --out-dir target/fec-demo
+
+## Run the committed "which collective wins where" demo grid (DESIGN.md
+## §17): ps-ina vs pure ring vs the INA-ring hybrid, swept over tensor
+## size and fat-tree core oversubscription, so SWEEP_collective.json
+## holds the crossover both ways. Artifacts land in
+## rust/target/collective-demo/.
+collective: build
+	cd rust && ./target/release/esa sweep \
+		--config configs/collective_demo.toml --out-dir target/collective-demo
 
 ## Replay the default Poisson job-churn scenario (runtime admission +
 ## reclamation) under ESA/ATP/SwitchML; CHURN_quick.json lands in

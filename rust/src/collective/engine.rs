@@ -1,0 +1,646 @@
+//! Execution engine for ring-shaped collectives (`ring`, `ina-ring`).
+//!
+//! The legacy pipeline gives every job a worker/PS/switch triangle; ring
+//! collectives replace the PS entirely, so their per-host behavior lives
+//! here instead of in `worker/`. One [`RingJob`] holds the state machine
+//! of every member of one job; the simulator routes packets and timers
+//! for ring-mode hosts into [`RingEngine::handle`] /
+//! [`RingEngine::on_timer`].
+//!
+//! Per iteration a member walks: compute (jittered, bulk-synchronous —
+//! no layer overlap) → optional rack-local INA **fold** → **ring**
+//! reduce-scatter + all-gather among the plan's participants → (leaves)
+//! await the representative's **broadcast** of the reduced tensor.
+//!
+//! # The fold is stall-free
+//!
+//! Fold fragments ride the real switch pool under the configured policy,
+//! so they can collide with other jobs' (or other racks') fragments and
+//! lose — pass-through and preemption both forward the loser toward
+//! `wiring.ps`. Ring jobs have no PS, so the wiring points `ps` at the
+//! fold's *representative*, which runs a micro-PS: it unions stray
+//! bitmaps per sequence and, when a union completes, multicasts the
+//! Result itself. Each fragment bit is delivered exactly once (ring
+//! configs are validated loss-free), so a pool slot completes iff the
+//! representative saw none of its bits — the two completion paths are
+//! disjoint. Bits parked in a half-built pool slot are reclaimed by the
+//! backstop scan: the representative periodically sends switch reminders
+//! for stale pending sequences, evicting resident partials to itself
+//! until the union completes. Reminders that find nothing die silently.
+//! Fold fragments all carry priority 0, so ESA's equal-priority collision
+//! rule (deterministic pass-through) keeps runs reproducible.
+
+use std::collections::BTreeMap;
+
+use crate::collective::{RingPlan, FOLD_WINDOW, RING_HDR_BYTES, RING_SEG_PAYLOAD};
+use crate::net::Net;
+use crate::packet::{task_hash, Packet, PacketKind, UNSTAMPED};
+use crate::worker::IterRecord;
+use crate::{JobId, NodeId, SimTime};
+
+/// Timer-key kinds (high 32 bits, disjoint from the worker/PS ranges).
+pub const TK_RING_BEGIN: u64 = 20 << 32;
+pub const TK_RING_COMM: u64 = 21 << 32;
+pub const TK_RING_SCAN: u64 = 22 << 32;
+const TK_MASK: u64 = 0xffff_ffff_0000_0000;
+
+/// Static description of one ring-mode job.
+#[derive(Debug, Clone)]
+pub struct RingJobCfg {
+    pub id: JobId,
+    /// Worker hosts in worker order (the metrics row order).
+    pub workers: Vec<NodeId>,
+    pub plan: RingPlan,
+    /// Total gradient tensor bytes per iteration.
+    pub tensor_bytes: u64,
+    /// INA fragments per iteration (fold granularity).
+    pub frags_per_iter: u32,
+    pub iterations: u32,
+    /// Backward+forward compute time per iteration.
+    pub comp_ns: SimTime,
+    /// Per-iteration jitter bound, U(0, max) like the legacy worker.
+    pub jitter_max_ns: SimTime,
+    /// Wire bytes of one fold fragment (the policy's gradient size).
+    pub grad_wire_bytes: u32,
+    /// Micro-PS backstop period; pending sequences idle this long get a
+    /// switch reminder. 4x base RTT is ample.
+    pub scan_every_ns: SimTime,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Stage {
+    Idle,
+    Computing,
+    Fold,
+    Ring,
+    AwaitBcast,
+    Done,
+}
+
+/// A stray fragment union at the representative's micro-PS.
+#[derive(Debug)]
+struct Pending {
+    bitmap: u32,
+    since: SimTime,
+}
+
+/// Fold-side state (members of a >1-host fold group).
+#[derive(Debug)]
+struct FoldRole {
+    /// Index into `plan.folds`.
+    group: usize,
+    tor: NodeId,
+    local_bit: u32,
+    fan_in: u8,
+    rep: bool,
+    next_frag: u32,
+    acked: u32,
+    /// Per-fragment ack dedupe bitset, `frags_per_iter` bits.
+    acked_bits: Vec<u64>,
+    /// Micro-PS unions (rep only), keyed by absolute sequence.
+    pending: BTreeMap<u32, Pending>,
+    scan_armed: bool,
+    /// Broadcast segments received this iteration (leaves only).
+    bcast_got: u32,
+}
+
+/// Ring-side state (participants only).
+#[derive(Debug)]
+struct RingRole {
+    pos: usize,
+    /// Completed receive steps this iteration.
+    recv_step: u32,
+    /// Early segment arrivals, keyed by absolute step.
+    ahead: BTreeMap<u32, u32>,
+}
+
+#[derive(Debug)]
+struct Member {
+    node: NodeId,
+    rng: crate::util::rng::Rng,
+    stage: Stage,
+    iter: u32,
+    comm_start: SimTime,
+    records: Vec<IterRecord>,
+    fold: Option<FoldRole>,
+    ring: Option<RingRole>,
+}
+
+/// Bytes of ring chunk `c` when a `tensor`-byte tensor is cut into `r`
+/// near-equal chunks (the first `tensor % r` chunks get the extra byte).
+fn chunk_bytes(tensor: u64, r: usize, c: usize) -> u64 {
+    tensor / r as u64 + ((c as u64) < tensor % r as u64) as u64
+}
+
+/// Segments needed to carry `bytes` at [`RING_SEG_PAYLOAD`] granularity.
+fn segs_of(bytes: u64) -> u32 {
+    bytes.div_ceil(RING_SEG_PAYLOAD as u64) as u32
+}
+
+/// Which chunk position `pos` sends at (iteration-relative) `step` of
+/// the standard 2(r-1)-step schedule: reduce-scatter sends `(pos - s)`
+/// mod r, all-gather sends `(pos + 1 - s')` mod r. The pipeline
+/// dependency `sent(pos, s+1) == sent(pred(pos), s)` holds across the
+/// whole schedule, so a participant sends step s+1 exactly when it has
+/// fully received step s.
+fn chunk_sent(pos: usize, step: u32, r: usize) -> usize {
+    let s = step as usize;
+    if s < r - 1 {
+        (pos + r - s) % r
+    } else {
+        let sg = s - (r - 1);
+        (pos + 1 + r - sg) % r
+    }
+}
+
+/// State machine of every member of one ring-mode job.
+#[derive(Debug)]
+pub struct RingJob {
+    cfg: RingJobCfg,
+    members: Vec<Member>,
+    /// Ring size (participant count).
+    r: usize,
+    /// 2(r-1): reduce-scatter + all-gather steps per iteration.
+    total_steps: u32,
+    /// Segments of one full-tensor broadcast.
+    bcast_segs: u32,
+}
+
+impl RingJob {
+    /// Build the job's members from its plan. `rngs` are the
+    /// per-worker jitter streams, in worker order.
+    pub fn new(cfg: RingJobCfg, rngs: Vec<crate::util::rng::Rng>) -> RingJob {
+        assert_eq!(cfg.workers.len(), rngs.len(), "one rng per worker");
+        let r = cfg.plan.participants.len();
+        assert!(r > 0, "ring plan must have participants");
+        let words = cfg.frags_per_iter.div_ceil(64) as usize;
+        let members = cfg
+            .workers
+            .iter()
+            .zip(rngs)
+            .map(|(&node, rng)| {
+                let fold = cfg
+                    .plan
+                    .folds
+                    .iter()
+                    .position(|f| f.members.contains(&node))
+                    .filter(|&g| cfg.plan.folds[g].members.len() > 1)
+                    .map(|g| {
+                        let grp = &cfg.plan.folds[g];
+                        let local = grp.members.iter().position(|&w| w == node).unwrap();
+                        assert!(grp.members.len() <= 32, "fold bitmap is 32 bits wide");
+                        FoldRole {
+                            group: g,
+                            tor: grp.tor,
+                            local_bit: 1 << local,
+                            fan_in: grp.members.len() as u8,
+                            rep: local == 0,
+                            next_frag: 0,
+                            acked: 0,
+                            acked_bits: vec![0; words],
+                            pending: BTreeMap::new(),
+                            scan_armed: false,
+                            bcast_got: 0,
+                        }
+                    });
+                let ring = cfg
+                    .plan
+                    .participants
+                    .iter()
+                    .position(|&p| p == node)
+                    .map(|pos| RingRole { pos, recv_step: 0, ahead: BTreeMap::new() });
+                Member {
+                    node,
+                    rng,
+                    stage: Stage::Idle,
+                    iter: 0,
+                    comm_start: 0,
+                    records: Vec::new(),
+                    fold,
+                    ring,
+                }
+            })
+            .collect();
+        RingJob {
+            r,
+            total_steps: 2 * (r as u32 - 1),
+            bcast_segs: segs_of(cfg.tensor_bytes),
+            cfg,
+            members,
+        }
+    }
+
+    fn begin_iteration(&mut self, m: usize, net: &mut Net) {
+        let now = net.now();
+        let iterations = self.cfg.iterations;
+        let comp = self.cfg.comp_ns;
+        let jitter_max = self.cfg.jitter_max_ns;
+        let mem = &mut self.members[m];
+        mem.iter = mem.records.len() as u32;
+        if mem.iter >= iterations {
+            mem.stage = Stage::Done;
+            return;
+        }
+        mem.stage = Stage::Computing;
+        if let Some(f) = &mut mem.fold {
+            debug_assert!(f.pending.is_empty(), "micro-PS drained between iterations");
+            f.next_frag = 0;
+            f.acked = 0;
+            f.acked_bits.fill(0);
+            f.bcast_got = 0;
+        }
+        let mut delay = comp;
+        if jitter_max > 0 {
+            delay += mem.rng.next_below(jitter_max);
+        }
+        net.timer(now + delay, mem.node, TK_RING_COMM);
+    }
+
+    fn on_comm(&mut self, m: usize, net: &mut Net) {
+        self.members[m].comm_start = net.now();
+        if self.members[m].fold.is_some() {
+            self.members[m].stage = Stage::Fold;
+            self.push_fold_window(m, net);
+        } else {
+            self.start_ring(m, net);
+        }
+    }
+
+    /// Keep up to [`FOLD_WINDOW`] fold fragments outstanding.
+    fn push_fold_window(&mut self, m: usize, net: &mut Net) {
+        let (id, frags, wire) = (self.cfg.id, self.cfg.frags_per_iter, self.cfg.grad_wire_bytes);
+        let mem = &mut self.members[m];
+        let f = mem.fold.as_mut().expect("fold role");
+        while f.next_frag - f.acked < FOLD_WINDOW && f.next_frag < frags {
+            let abs = mem.iter * frags + f.next_frag;
+            let pkt = Packet::gradient(
+                id,
+                abs,
+                task_hash(id, abs),
+                f.local_bit,
+                f.fan_in,
+                0,
+                mem.node,
+                f.tor,
+                wire,
+            );
+            f.next_frag += 1;
+            net.transmit(mem.node, pkt);
+        }
+    }
+
+    /// A Result for `abs` landed (switch multicast or rep micro-PS).
+    fn ack_frag(&mut self, m: usize, net: &mut Net, abs: u32) {
+        let frags = self.cfg.frags_per_iter;
+        let mem = &mut self.members[m];
+        let iter_base = mem.iter * frags;
+        debug_assert!(
+            mem.stage == Stage::Fold && abs >= iter_base && abs < iter_base + frags,
+            "fold ack outside the current iteration (stage {:?}, abs {abs})",
+            mem.stage,
+        );
+        let f = mem.fold.as_mut().expect("fold role");
+        let rel = (abs - iter_base) as usize;
+        if f.acked_bits[rel / 64] >> (rel % 64) & 1 == 1 {
+            return;
+        }
+        f.acked_bits[rel / 64] |= 1 << (rel % 64);
+        f.acked += 1;
+        let done = f.acked == frags;
+        let rep = f.rep;
+        self.push_fold_window(m, net);
+        if done {
+            if rep {
+                self.start_ring(m, net);
+            } else {
+                self.members[m].stage = Stage::AwaitBcast;
+                self.maybe_finish_leaf(m, net);
+            }
+        }
+    }
+
+    /// A stray fold fragment (pass-through loser) or evicted partial
+    /// arrived at the representative's micro-PS.
+    fn on_stray(&mut self, m: usize, net: &mut Net, pkt: &Packet) {
+        let now = net.now();
+        let (id, wire, scan_every) =
+            (self.cfg.id, self.cfg.grad_wire_bytes, self.cfg.scan_every_ns);
+        let group;
+        let completed;
+        {
+            let mem = &mut self.members[m];
+            let f = mem.fold.as_mut().expect("stray at a non-fold member");
+            debug_assert!(f.rep, "strays route to wiring.ps, which is the rep");
+            debug_assert_eq!(mem.stage, Stage::Fold, "strays resolve before the fold ends");
+            let full = if f.fan_in == 32 { u32::MAX } else { (1u32 << f.fan_in) - 1 };
+            let e = f.pending.entry(pkt.seq).or_insert(Pending { bitmap: 0, since: now });
+            e.bitmap |= pkt.bitmap;
+            e.since = now;
+            if e.bitmap != full {
+                if !f.scan_armed {
+                    f.scan_armed = true;
+                    net.timer(now + scan_every, mem.node, TK_RING_SCAN);
+                }
+                return;
+            }
+            f.pending.remove(&pkt.seq);
+            group = f.group;
+            completed = pkt.seq;
+        }
+        // The union completed: multicast the Result ourselves, then take
+        // our own ack directly (a host cannot transmit to itself).
+        let node = self.members[m].node;
+        let fan_in = self.cfg.plan.folds[group].members.len() as u8;
+        for i in 0..self.cfg.plan.folds[group].members.len() {
+            let w = self.cfg.plan.folds[group].members[i];
+            if w == node {
+                continue;
+            }
+            net.transmit(
+                node,
+                Packet {
+                    kind: PacketKind::Result,
+                    job: id,
+                    seq: completed,
+                    agg_index: 0,
+                    bitmap: if fan_in == 32 { u32::MAX } else { (1u32 << fan_in) - 1 },
+                    fan_in,
+                    priority: 0,
+                    src: node,
+                    dst: w,
+                    wire_bytes: wire,
+                    reliable: true,
+                    resend: false,
+                    ecn: false,
+                    values: None,
+                    sent_at: UNSTAMPED,
+                },
+            );
+        }
+        self.ack_frag(m, net, completed);
+    }
+
+    /// Backstop scan: remind the switch about stale pending unions.
+    fn scan(&mut self, m: usize, net: &mut Net) {
+        let now = net.now();
+        let (id, wire, scan_every) =
+            (self.cfg.id, self.cfg.grad_wire_bytes, self.cfg.scan_every_ns);
+        let mem = &mut self.members[m];
+        let f = mem.fold.as_mut().expect("scan at a non-fold member");
+        f.scan_armed = false;
+        if f.pending.is_empty() {
+            return;
+        }
+        for (&abs, p) in f.pending.iter() {
+            if now.saturating_sub(p.since) >= scan_every {
+                net.transmit(mem.node, Packet::reminder(id, abs, mem.node, f.tor, true, wire));
+            }
+        }
+        f.scan_armed = true;
+        net.timer(now + scan_every, mem.node, TK_RING_SCAN);
+    }
+
+    fn start_ring(&mut self, m: usize, net: &mut Net) {
+        let total = self.total_steps;
+        {
+            let mem = &mut self.members[m];
+            let ring = mem.ring.as_mut().expect("ring role");
+            mem.stage = Stage::Ring;
+            ring.recv_step = 0;
+        }
+        if total == 0 {
+            // Single-participant degenerate ring: nothing to exchange.
+            self.finish_ring(m, net);
+            return;
+        }
+        self.send_step(m, net, 0);
+        self.pump(m, net);
+    }
+
+    /// Emit every segment of the chunk this member sends at `step`.
+    fn send_step(&mut self, m: usize, net: &mut Net, step: u32) {
+        let (id, tensor, r, total) = (self.cfg.id, self.cfg.tensor_bytes, self.r, self.total_steps);
+        let mem = &self.members[m];
+        let ring = mem.ring.as_ref().expect("ring role");
+        let succ = self.cfg.plan.participants[(ring.pos + 1) % r];
+        let chunk = chunk_bytes(tensor, r, chunk_sent(ring.pos, step, r));
+        let abs = mem.iter * total + step;
+        let (node, segs) = (mem.node, segs_of(chunk));
+        for seg in 0..segs {
+            let payload = if seg + 1 == segs {
+                chunk - (segs as u64 - 1) * RING_SEG_PAYLOAD as u64
+            } else {
+                RING_SEG_PAYLOAD as u64
+            };
+            let wire = payload as u32 + RING_HDR_BYTES;
+            net.transmit(node, Packet::ring_seg(id, abs, seg, node, succ, wire));
+        }
+    }
+
+    fn on_ring_seg(&mut self, m: usize, net: &mut Net, pkt: &Packet) {
+        let mem = &mut self.members[m];
+        let ring = mem.ring.as_mut().expect("ring segment at a non-participant");
+        *ring.ahead.entry(pkt.seq).or_insert(0) += 1;
+        if mem.stage == Stage::Ring {
+            self.pump(m, net);
+        }
+    }
+
+    /// Advance through fully received steps, sending each successor step
+    /// as its dependency completes.
+    fn pump(&mut self, m: usize, net: &mut Net) {
+        let (tensor, r, total) = (self.cfg.tensor_bytes, self.r, self.total_steps);
+        loop {
+            if self.members[m].stage != Stage::Ring {
+                return;
+            }
+            let next;
+            {
+                let mem = &mut self.members[m];
+                let ring = mem.ring.as_mut().expect("ring role");
+                let abs = mem.iter * total + ring.recv_step;
+                let pred = (ring.pos + r - 1) % r;
+                let need = segs_of(chunk_bytes(tensor, r, chunk_sent(pred, ring.recv_step, r)));
+                if need > 0 {
+                    if ring.ahead.get(&abs).copied().unwrap_or(0) < need {
+                        return;
+                    }
+                    ring.ahead.remove(&abs);
+                }
+                ring.recv_step += 1;
+                next = ring.recv_step;
+            }
+            if next < total {
+                self.send_step(m, net, next);
+            } else {
+                self.finish_ring(m, net);
+            }
+        }
+    }
+
+    fn finish_ring(&mut self, m: usize, net: &mut Net) {
+        let now = net.now();
+        let (id, tensor) = (self.cfg.id, self.cfg.tensor_bytes);
+        let (node, rep_tor) = {
+            let mem = &mut self.members[m];
+            mem.records.push(IterRecord {
+                comm_start: mem.comm_start,
+                completion: now,
+                bytes_received: tensor,
+            });
+            (mem.node, mem.fold.as_ref().map(|f| f.tor))
+        };
+        if let Some(tor) = rep_tor {
+            // Representative of a multi-host fold: broadcast the reduced
+            // tensor down through the ToR's multicast replication.
+            for seg in 0..self.bcast_segs {
+                let payload = if seg + 1 == self.bcast_segs {
+                    tensor - (self.bcast_segs as u64 - 1) * RING_SEG_PAYLOAD as u64
+                } else {
+                    RING_SEG_PAYLOAD as u64
+                };
+                let wire = payload as u32 + RING_HDR_BYTES;
+                net.transmit(node, Packet::ring_bcast(id, seg, node, tor, wire));
+            }
+        }
+        self.begin_iteration(m, net);
+    }
+
+    fn on_bcast(&mut self, m: usize, net: &mut Net) {
+        let f = self.members[m].fold.as_mut().expect("broadcast at a non-fold member");
+        debug_assert!(!f.rep, "the rep multicasts, it never receives its own broadcast");
+        f.bcast_got += 1;
+        self.maybe_finish_leaf(m, net);
+    }
+
+    fn maybe_finish_leaf(&mut self, m: usize, net: &mut Net) {
+        let now = net.now();
+        let tensor = self.cfg.tensor_bytes;
+        let bcast_segs = self.bcast_segs;
+        {
+            let mem = &mut self.members[m];
+            if mem.stage != Stage::AwaitBcast {
+                return;
+            }
+            let f = mem.fold.as_ref().expect("fold role");
+            if f.bcast_got < bcast_segs {
+                return;
+            }
+            mem.records.push(IterRecord {
+                comm_start: mem.comm_start,
+                completion: now,
+                bytes_received: tensor,
+            });
+        }
+        self.begin_iteration(m, net);
+    }
+}
+
+/// All ring-mode jobs of one experiment.
+#[derive(Debug)]
+pub struct RingEngine {
+    jobs: Vec<RingJob>,
+}
+
+impl RingEngine {
+    pub fn new(jobs: Vec<RingJob>) -> RingEngine {
+        RingEngine { jobs }
+    }
+
+    /// A packet was delivered to ring member `member` of `job`.
+    pub fn handle(&mut self, job: usize, member: usize, net: &mut Net, pkt: &Packet) {
+        let j = &mut self.jobs[job];
+        match pkt.kind {
+            PacketKind::Result => j.ack_frag(member, net, pkt.seq),
+            PacketKind::Gradient | PacketKind::PartialToPs => j.on_stray(member, net, pkt),
+            PacketKind::RingSeg => j.on_ring_seg(member, net, pkt),
+            PacketKind::RingBcast => j.on_bcast(member, net),
+            other => debug_assert!(false, "ring member got a {other:?} packet"),
+        }
+    }
+
+    /// A timer fired at ring member `member` of `job`.
+    pub fn on_timer(&mut self, job: usize, member: usize, net: &mut Net, key: u64) {
+        let j = &mut self.jobs[job];
+        match key & TK_MASK {
+            TK_RING_BEGIN => j.begin_iteration(member, net),
+            TK_RING_COMM => j.on_comm(member, net),
+            TK_RING_SCAN => j.scan(member, net),
+            other => debug_assert!(false, "ring member got timer key {other:#x}"),
+        }
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.jobs.iter().all(|j| j.members.iter().all(|m| m.stage == Stage::Done))
+    }
+
+    /// Per-worker iteration records of `job`, in worker order.
+    pub fn records(&self, job: usize) -> Vec<Vec<IterRecord>> {
+        self.jobs[job].members.iter().map(|m| m.records.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_bytes_partition_the_tensor_with_near_equal_sizes() {
+        for (tensor, r) in [(1_000u64, 3usize), (4 << 20, 7), (64, 5), (10, 4)] {
+            let sizes: Vec<u64> = (0..r).map(|c| chunk_bytes(tensor, r, c)).collect();
+            assert_eq!(sizes.iter().sum::<u64>(), tensor, "tensor {tensor} r {r}");
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "near-equal split: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn segs_of_rounds_up_to_the_segment_payload() {
+        assert_eq!(segs_of(0), 0);
+        assert_eq!(segs_of(1), 1);
+        assert_eq!(segs_of(RING_SEG_PAYLOAD as u64), 1);
+        assert_eq!(segs_of(RING_SEG_PAYLOAD as u64 + 1), 2);
+    }
+
+    /// Over the 2(r-1) steps, every participant sends each chunk at most
+    /// twice (once per phase) and the reduce-scatter phase alone covers
+    /// r-1 distinct chunks — the standard schedule.
+    #[test]
+    fn schedule_phases_cover_distinct_chunks() {
+        for r in [2usize, 3, 5, 8] {
+            for pos in 0..r {
+                let rs: Vec<usize> =
+                    (0..r as u32 - 1).map(|s| chunk_sent(pos, s, r)).collect();
+                let ag: Vec<usize> = (r as u32 - 1..2 * (r as u32 - 1))
+                    .map(|s| chunk_sent(pos, s, r))
+                    .collect();
+                for phase in [&rs, &ag] {
+                    let mut sorted = (*phase).clone();
+                    sorted.sort_unstable();
+                    sorted.dedup();
+                    assert_eq!(sorted.len(), r - 1, "r {r} pos {pos}: distinct per phase");
+                }
+            }
+        }
+    }
+
+    /// The pipeline invariant the pump relies on: what a participant
+    /// sends at step s+1 is exactly what it finished receiving at step s
+    /// (its predecessor's step-s chunk).
+    #[test]
+    fn send_of_next_step_is_the_chunk_received_at_this_step() {
+        for r in [2usize, 3, 4, 9] {
+            let total = 2 * (r as u32 - 1);
+            for pos in 0..r {
+                let pred = (pos + r - 1) % r;
+                for s in 0..total - 1 {
+                    assert_eq!(
+                        chunk_sent(pos, s + 1, r),
+                        chunk_sent(pred, s, r),
+                        "r {r} pos {pos} step {s}"
+                    );
+                }
+            }
+        }
+    }
+}

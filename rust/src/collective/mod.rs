@@ -1,0 +1,574 @@
+//! Collective-algorithm subsystem: *how* a job's gradient tensor is
+//! reduced across its workers.
+//!
+//! The paper's pipeline (and every golden suite) assumes one shape: a
+//! PS-style INA tree where workers stream fragments at a switch pool and
+//! a parameter server mops up the overflow. Rina (arXiv:2407.19721)
+//! argues INA-enhanced *ring*-allreduce scales better, and NetReduce
+//! (arXiv:2009.09736) shows the answer depends on the fabric — so the
+//! collective becomes a pluggable axis instead of an assumption:
+//!
+//! | hook                      | question it answers                        |
+//! |---------------------------|--------------------------------------------|
+//! | [`Collective::shape`]     | what routing graph do iterations traverse? |
+//! | [`Collective::locus`]     | where are gradients summed?                |
+//! | [`Collective::plan`]      | who talks to whom (per-job send schedule)? |
+//! | [`Collective::pool_slot_bound`] | how many switch pool slots can it touch? |
+//!
+//! Three built-ins ship:
+//!
+//! * `ps-ina` — today's behavior. [`Collective::plan`] returns `None`,
+//!   the simulator runs the legacy worker/PS/switch pipeline, and every
+//!   existing golden stays bit-identical.
+//! * `ring` — pure ring-allreduce: reduce-scatter + all-gather over
+//!   neighbor links, host-side math only, **zero** switch pool slots.
+//! * `ina-ring` — Rina-style hybrid: each rack folds its gradients
+//!   through the ToR's INA pool first, then rack representatives run the
+//!   ring across racks.
+//!
+//! Like `PolicyKind` and `CcKind`, the built-ins' identities live in
+//! [`CollectiveKind`] as a **parse artifact**: everything outside
+//! `config/` and `collective/` consumes collectives through
+//! [`CollectiveHandle`] and the behavioral trait — the
+//! `collective-boundary` lint rule keeps `CollectiveKind::` matches from
+//! leaking back across that boundary.
+
+use std::fmt;
+use std::ops::Deref;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use anyhow::{bail, Result};
+
+use crate::config::CollectiveKind;
+use crate::NodeId;
+
+pub mod engine;
+
+/// Payload bytes carried by one ring segment packet. Ring traffic is
+/// host-to-host bulk transfer, so it uses MTU-sized segments rather than
+/// the 256 B INA value payload — the switch never parses these.
+pub const RING_SEG_PAYLOAD: u32 = 1024;
+
+/// Header overhead of a ring segment on the wire, mirroring the 50 B
+/// header a 306 B INA packet wraps around its 256 B payload.
+pub const RING_HDR_BYTES: u32 = 50;
+
+/// Outstanding-fragment window for the rack-local INA fold of
+/// `ina-ring`. Bounded so a fold can never demand more than
+/// `2 * FOLD_WINDOW` pool slots per job per rack (the factor of two
+/// covers a reminder-evicted partial coexisting with its re-sent
+/// fragment for one RTT).
+pub const FOLD_WINDOW: u32 = 64;
+
+// ---------------------------------------------------------------------
+// semantics hooks
+// ---------------------------------------------------------------------
+
+/// Where the reduction arithmetic happens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReductionLocus {
+    /// Switch pool sums fragments; the PS mops up overflow (`ps-ina`).
+    Switch,
+    /// Hosts sum chunks as they circulate the ring (`ring`).
+    Hosts,
+    /// Rack-local switch fold, then host-side ring (`ina-ring`).
+    SwitchThenHosts,
+}
+
+/// The routing graph one iteration's traffic traverses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingShape {
+    /// Many-to-one up the aggregation tree, multicast back down.
+    SwitchTree,
+    /// Each participant talks only to its ring successor.
+    NeighborRing,
+    /// Rack-local tree fold feeding a ring of rack representatives.
+    FoldThenRing,
+}
+
+/// A job's placement, as the collective planner sees it: the worker
+/// hosts in iteration order and, index-aligned, the ToR switch node each
+/// worker hangs off.
+#[derive(Debug, Clone)]
+pub struct JobShape {
+    pub workers: Vec<NodeId>,
+    pub tor_of: Vec<NodeId>,
+}
+
+/// One rack-local fold group of an `ina-ring` plan. `members[0]` is the
+/// representative: it collects the rack's folded partial and carries it
+/// around the inter-rack ring.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FoldGroup {
+    /// ToR switch the fold aggregates through.
+    pub tor: NodeId,
+    /// Fold members in worker order; never empty.
+    pub members: Vec<NodeId>,
+}
+
+impl FoldGroup {
+    /// The fold's representative on the inter-rack ring.
+    pub fn rep(&self) -> NodeId {
+        self.members[0]
+    }
+}
+
+/// A concrete per-job send schedule produced by [`Collective::plan`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RingPlan {
+    /// Ring members in position order; participant `i` sends to
+    /// `(i + 1) % len`.
+    pub participants: Vec<NodeId>,
+    /// Rack-local fold groups (empty for a pure ring). Every worker
+    /// appears in exactly one group; each group's [`FoldGroup::rep`] is
+    /// a participant.
+    pub folds: Vec<FoldGroup>,
+}
+
+// ---------------------------------------------------------------------
+// trait + handle
+// ---------------------------------------------------------------------
+
+/// A collective algorithm: the identity and planning hooks the simulator
+/// consults when wiring a job. Behavior during the run itself lives in
+/// [`engine::RingEngine`] (for ring-shaped plans) or the legacy
+/// worker/PS pipeline (when [`Collective::plan`] returns `None`).
+pub trait Collective: Send + Sync + fmt::Debug {
+    /// Stable lowercase machine key (the canonical registry name).
+    fn key(&self) -> &str;
+
+    /// Human display name for tables and summaries.
+    fn name(&self) -> &str;
+
+    /// The routing graph one iteration's traffic traverses.
+    fn shape(&self) -> RoutingShape;
+
+    /// Where the reduction arithmetic happens.
+    fn locus(&self) -> ReductionLocus;
+
+    /// Build the per-job send schedule, or `None` to run the legacy
+    /// worker/PS/switch pipeline (the `ps-ina` parity regime).
+    fn plan(&self, job: &JobShape) -> Option<RingPlan>;
+
+    /// Upper bound on switch pool slots this collective can occupy per
+    /// job per rack, or `None` when demand is pool-limited rather than
+    /// collective-limited (the PS-INA regime).
+    fn pool_slot_bound(&self) -> Option<u32>;
+}
+
+/// Shared, cheaply clonable reference to a [`Collective`] — the
+/// collective twin of `PolicyHandle`/`CcHandle`.
+#[derive(Clone)]
+pub struct CollectiveHandle(Arc<dyn Collective>);
+
+impl CollectiveHandle {
+    pub fn new(c: impl Collective + 'static) -> CollectiveHandle {
+        CollectiveHandle(Arc::new(c))
+    }
+}
+
+impl Deref for CollectiveHandle {
+    type Target = dyn Collective;
+
+    fn deref(&self) -> &(dyn Collective + 'static) {
+        &*self.0
+    }
+}
+
+impl fmt::Debug for CollectiveHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "CollectiveHandle({})", self.key())
+    }
+}
+
+impl PartialEq for CollectiveHandle {
+    fn eq(&self, other: &CollectiveHandle) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl Eq for CollectiveHandle {}
+
+// ---------------------------------------------------------------------
+// built-in collectives
+// ---------------------------------------------------------------------
+
+/// Today's behavior: PS-style INA through the switch pool. Plans
+/// nothing — the simulator keeps the legacy pipeline, bit-identical.
+#[derive(Debug)]
+struct PsIna;
+
+impl Collective for PsIna {
+    fn key(&self) -> &str {
+        CollectiveKind::PsIna.key()
+    }
+
+    fn name(&self) -> &str {
+        CollectiveKind::PsIna.name()
+    }
+
+    fn shape(&self) -> RoutingShape {
+        RoutingShape::SwitchTree
+    }
+
+    fn locus(&self) -> ReductionLocus {
+        ReductionLocus::Switch
+    }
+
+    fn plan(&self, _job: &JobShape) -> Option<RingPlan> {
+        None
+    }
+
+    fn pool_slot_bound(&self) -> Option<u32> {
+        None
+    }
+}
+
+/// Pure ring-allreduce: every worker is a ring participant, reductions
+/// are host-side, the switch pool is never touched.
+#[derive(Debug)]
+struct RingAllreduce;
+
+impl Collective for RingAllreduce {
+    fn key(&self) -> &str {
+        CollectiveKind::Ring.key()
+    }
+
+    fn name(&self) -> &str {
+        CollectiveKind::Ring.name()
+    }
+
+    fn shape(&self) -> RoutingShape {
+        RoutingShape::NeighborRing
+    }
+
+    fn locus(&self) -> ReductionLocus {
+        ReductionLocus::Hosts
+    }
+
+    fn plan(&self, job: &JobShape) -> Option<RingPlan> {
+        Some(RingPlan { participants: job.workers.clone(), folds: Vec::new() })
+    }
+
+    fn pool_slot_bound(&self) -> Option<u32> {
+        Some(0)
+    }
+}
+
+/// Rina-style hybrid: each rack folds through its ToR's INA pool, then
+/// rack representatives ring across racks.
+#[derive(Debug)]
+struct InaRing;
+
+impl Collective for InaRing {
+    fn key(&self) -> &str {
+        CollectiveKind::InaRing.key()
+    }
+
+    fn name(&self) -> &str {
+        CollectiveKind::InaRing.name()
+    }
+
+    fn shape(&self) -> RoutingShape {
+        RoutingShape::FoldThenRing
+    }
+
+    fn locus(&self) -> ReductionLocus {
+        ReductionLocus::SwitchThenHosts
+    }
+
+    fn plan(&self, job: &JobShape) -> Option<RingPlan> {
+        // Group workers by ToR in first-appearance order so the plan is
+        // a pure function of the placement (deterministic across runs
+        // and thread counts).
+        let mut folds: Vec<FoldGroup> = Vec::new();
+        for (i, &w) in job.workers.iter().enumerate() {
+            let tor = job.tor_of[i];
+            match folds.iter_mut().find(|f| f.tor == tor) {
+                Some(f) => f.members.push(w),
+                None => folds.push(FoldGroup { tor, members: vec![w] }),
+            }
+        }
+        let participants = folds.iter().map(|f| f.rep()).collect();
+        Some(RingPlan { participants, folds })
+    }
+
+    fn pool_slot_bound(&self) -> Option<u32> {
+        Some(2 * FOLD_WINDOW)
+    }
+}
+
+/// The parity-pinned PS-style INA pipeline (the default everywhere).
+pub fn ps_ina() -> CollectiveHandle {
+    CollectiveHandle::new(PsIna)
+}
+
+/// Pure host-side ring-allreduce.
+pub fn ring() -> CollectiveHandle {
+    CollectiveHandle::new(RingAllreduce)
+}
+
+/// Rack-local INA fold + inter-rack ring (Rina-style).
+pub fn ina_ring() -> CollectiveHandle {
+    CollectiveHandle::new(InaRing)
+}
+
+// ---------------------------------------------------------------------
+// registry
+// ---------------------------------------------------------------------
+
+/// A collective constructor: receives the optional `=<param>` suffix
+/// (no built-in takes one today).
+type Factory = Box<dyn Fn(Option<&str>) -> Result<CollectiveHandle> + Send + Sync>;
+
+struct Entry {
+    /// Primary name — what [`CollectiveRegistry::registered_names`]
+    /// lists and what the collective's `key()` round-trips through.
+    name: String,
+    /// Accepted alternative spellings (`ps_ina`, `ring-allreduce`, ...).
+    aliases: Vec<String>,
+    factory: Factory,
+}
+
+impl Entry {
+    fn matches(&self, base: &str) -> bool {
+        self.name == base || self.aliases.iter().any(|a| a == base)
+    }
+}
+
+/// String-keyed registry of [`Collective`] factories — the collective
+/// twin of `PolicyRegistry` and `CcRegistry`.
+///
+/// The three built-ins are pre-registered; third-party collectives join
+/// at runtime via [`CollectiveRegistry::register`]:
+///
+/// ```
+/// use esa::collective::{ring, CollectiveRegistry};
+///
+/// // A "lollipop" collective: reuse the ring plan for the demo; a real
+/// // algorithm would implement the Collective trait itself.
+/// CollectiveRegistry::register("lollipop", &[], |_| Ok(ring())).unwrap();
+/// assert!(CollectiveRegistry::registered_names().contains(&"lollipop".to_string()));
+/// assert_eq!(CollectiveRegistry::resolve("ina-ring").unwrap().key(), "ina-ring");
+/// ```
+pub struct CollectiveRegistry {
+    entries: Vec<Entry>,
+}
+
+fn no_param(name: &'static str, param: Option<&str>) -> Result<()> {
+    if let Some(p) = param {
+        bail!("collective `{name}` takes no parameter (got `{name}={p}`)");
+    }
+    Ok(())
+}
+
+impl CollectiveRegistry {
+    /// A registry pre-loaded with the built-ins (registration order is
+    /// the canonical display order).
+    fn with_builtins() -> CollectiveRegistry {
+        fn add(
+            entries: &mut Vec<Entry>,
+            name: &'static str,
+            aliases: &[&str],
+            make: fn() -> CollectiveHandle,
+        ) {
+            entries.push(Entry {
+                name: name.to_string(),
+                aliases: aliases.iter().map(|s| s.to_string()).collect(),
+                factory: Box::new(move |param| {
+                    no_param(name, param)?;
+                    Ok(make())
+                }),
+            });
+        }
+        let mut r = CollectiveRegistry { entries: Vec::new() };
+        add(&mut r.entries, "ps-ina", &["ps_ina", "psina", "ps"], ps_ina);
+        add(&mut r.entries, "ring", &["ring-allreduce", "ring_allreduce"], ring);
+        add(&mut r.entries, "ina-ring", &["ina_ring", "inaring", "rina"], ina_ring);
+        r
+    }
+
+    fn global() -> &'static RwLock<CollectiveRegistry> {
+        static GLOBAL: OnceLock<RwLock<CollectiveRegistry>> = OnceLock::new();
+        GLOBAL.get_or_init(|| RwLock::new(CollectiveRegistry::with_builtins()))
+    }
+
+    /// Register a third-party collective under `name` (plus aliases).
+    /// The factory receives the optional `=<param>` suffix of the
+    /// resolved string. Fails if any name is already taken.
+    pub fn register(
+        name: &str,
+        aliases: &[&str],
+        factory: impl Fn(Option<&str>) -> Result<CollectiveHandle> + Send + Sync + 'static,
+    ) -> Result<()> {
+        let name = name.trim().to_ascii_lowercase();
+        let aliases: Vec<String> = aliases.iter().map(|s| s.trim().to_ascii_lowercase()).collect();
+        for n in std::iter::once(&name).chain(aliases.iter()) {
+            if n.is_empty() || n.contains('=') {
+                bail!(
+                    "collective name `{n}` must be non-empty and `=`-free (the suffix is the \
+                     parameter, so such a name could never resolve)"
+                );
+            }
+        }
+        let mut g = Self::global().write().expect("collective registry poisoned");
+        for candidate in std::iter::once(&name).chain(aliases.iter()) {
+            if g.entries.iter().any(|e| e.matches(candidate)) {
+                bail!("collective name `{candidate}` is already registered");
+            }
+        }
+        g.entries.push(Entry { name, aliases, factory: Box::new(factory) });
+        Ok(())
+    }
+
+    /// Resolve a collective string (`ring`, `INA-Ring`, ...) into a
+    /// handle. The *name* resolves case-insensitively; the `=<param>`
+    /// suffix is handed to the factory verbatim. Unknown names list
+    /// everything registered.
+    pub fn resolve(s: &str) -> Result<CollectiveHandle> {
+        let trimmed = s.trim();
+        let (base, param) = match trimmed.split_once('=') {
+            Some((b, p)) => (b, Some(p)),
+            None => (trimmed, None),
+        };
+        let base = base.to_ascii_lowercase();
+        let base = base.as_str();
+        let g = Self::global().read().expect("collective registry poisoned");
+        match g.entries.iter().find(|e| e.matches(base)) {
+            Some(e) => (e.factory)(param),
+            None => bail!(
+                "unknown collective `{s}` (registered: {})",
+                g.entries.iter().map(|e| e.name.as_str()).collect::<Vec<_>>().join(", ")
+            ),
+        }
+    }
+
+    /// Primary names in registration order — CLI help and unknown-name
+    /// errors are generated from this, never hardcoded.
+    pub fn registered_names() -> Vec<String> {
+        let g = Self::global().read().expect("collective registry poisoned");
+        g.entries.iter().map(|e| e.name.clone()).collect()
+    }
+
+    /// `ps-ina|ring|ina-ring` — the one-line form for usage strings.
+    pub fn help_names() -> String {
+        Self::registered_names().join("|")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape(workers: &[NodeId], tor_of: &[NodeId]) -> JobShape {
+        JobShape { workers: workers.to_vec(), tor_of: tor_of.to_vec() }
+    }
+
+    // ---------------- plans ----------------
+
+    #[test]
+    fn ps_ina_plans_nothing() {
+        let c = ps_ina();
+        assert!(c.plan(&shape(&[4, 5, 6], &[0, 0, 0])).is_none());
+        assert_eq!(c.shape(), RoutingShape::SwitchTree);
+        assert_eq!(c.locus(), ReductionLocus::Switch);
+        assert_eq!(c.pool_slot_bound(), None);
+    }
+
+    #[test]
+    fn ring_uses_every_worker_in_order_with_no_folds() {
+        let c = ring();
+        let p = c.plan(&shape(&[9, 4, 7], &[0, 1, 0])).unwrap();
+        assert_eq!(p.participants, vec![9, 4, 7]);
+        assert!(p.folds.is_empty());
+        assert_eq!(c.pool_slot_bound(), Some(0), "pure ring never touches the pool");
+    }
+
+    #[test]
+    fn ina_ring_groups_by_tor_and_fronts_the_rep() {
+        // Two racks: workers 4,6 under ToR 0; workers 5,7 under ToR 1,
+        // interleaved in worker order.
+        let c = ina_ring();
+        let p = c.plan(&shape(&[4, 5, 6, 7], &[0, 1, 0, 1])).unwrap();
+        assert_eq!(p.folds.len(), 2);
+        assert_eq!(p.folds[0], FoldGroup { tor: 0, members: vec![4, 6] });
+        assert_eq!(p.folds[1], FoldGroup { tor: 1, members: vec![5, 7] });
+        assert_eq!(p.participants, vec![4, 5], "one rep per rack, first-appearance order");
+        assert_eq!(c.pool_slot_bound(), Some(2 * FOLD_WINDOW));
+    }
+
+    #[test]
+    fn ina_ring_single_member_racks_degenerate_to_a_plain_ring() {
+        let c = ina_ring();
+        let p = c.plan(&shape(&[4, 5, 6], &[0, 1, 2])).unwrap();
+        assert_eq!(p.participants, vec![4, 5, 6]);
+        assert!(p.folds.iter().all(|f| f.members.len() == 1));
+    }
+
+    // ---------------- registry ----------------
+
+    #[test]
+    fn every_registered_name_round_trips_through_resolve() {
+        let names = CollectiveRegistry::registered_names();
+        assert!(names.len() >= 3, "built-ins must be pre-registered: {names:?}");
+        for name in &names {
+            let c = CollectiveRegistry::resolve(name)
+                .unwrap_or_else(|e| panic!("registered `{name}` failed to resolve: {e}"));
+            assert_eq!(c.key(), name, "key must round-trip through resolve");
+            assert!(!c.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn aliases_and_case_resolve_to_the_same_collective() {
+        for (alias, key) in [
+            ("ps_ina", "ps-ina"),
+            ("PS", "ps-ina"),
+            ("Ring-Allreduce", "ring"),
+            ("ina_ring", "ina-ring"),
+            ("rina", "ina-ring"),
+            ("INA-Ring", "ina-ring"),
+        ] {
+            assert_eq!(CollectiveRegistry::resolve(alias).unwrap().key(), key, "{alias}");
+        }
+    }
+
+    #[test]
+    fn unknown_collective_error_lists_registered_names() {
+        let err = CollectiveRegistry::resolve("bogus").unwrap_err().to_string();
+        assert!(err.contains("unknown collective `bogus`"), "{err}");
+        for name in ["ps-ina", "ring", "ina-ring"] {
+            assert!(err.contains(name), "error must list `{name}`: {err}");
+        }
+    }
+
+    #[test]
+    fn builtins_reject_parameters() {
+        let err = CollectiveRegistry::resolve("ring=3").unwrap_err().to_string();
+        assert!(err.contains("takes no parameter"), "{err}");
+    }
+
+    #[test]
+    fn bad_names_are_rejected_at_registration() {
+        for name in ["with=param", ""] {
+            let err = CollectiveRegistry::register(name, &[], |_| Ok(ps_ina()))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("`=`-free"), "{name:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn duplicate_registration_is_rejected() {
+        let err = CollectiveRegistry::register("ring", &[], |_| Ok(ring()))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("already registered"), "{err}");
+    }
+
+    #[test]
+    fn handles_compare_by_key() {
+        assert_eq!(ps_ina(), CollectiveRegistry::resolve("ps").unwrap());
+        assert_ne!(ring(), ina_ring());
+    }
+}

@@ -11,6 +11,6 @@ pub mod schema;
 
 pub use parse::{parse_toml, TomlTable, TomlValue};
 pub use schema::{
-    CcKind, ChurnKnobs, CrossTraffic, ExperimentConfig, FaultKind, FaultSpec, JobSpec,
-    NetworkConfig, PolicyKind, SwitchConfig,
+    CcKind, ChurnKnobs, CollectiveKind, CrossTraffic, ExperimentConfig, FaultKind, FaultSpec,
+    JobSpec, NetworkConfig, PolicyKind, SwitchConfig,
 };

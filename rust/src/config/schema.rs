@@ -9,6 +9,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use super::parse::{parse_toml, TomlTable};
+use crate::collective::{ps_ina, CollectiveHandle, CollectiveRegistry};
 use crate::net::congestion::{fixed_window, CcHandle, CcRegistry};
 use crate::switch::policy::{AdmissionMode, PolicyHandle, PolicyRegistry};
 use crate::{MSEC, USEC};
@@ -122,6 +123,49 @@ impl CcKind {
         match self {
             CcKind::FixedWindow => "fixed-window",
             CcKind::NewReno => "newreno",
+        }
+    }
+}
+
+/// The built-in collectives, as a **parse artifact**: the identity
+/// table the built-in [`Collective`] implementations in `collective/`
+/// delegate to. Everything outside `config/` and `collective/` consumes
+/// collectives through [`CollectiveHandle`] and the behavioral trait —
+/// the `collective-boundary` lint rule keeps `CollectiveKind::` matches
+/// from leaking back across that boundary, exactly like
+/// `policy-kind-boundary` and `cc-kind-boundary`.
+///
+/// [`Collective`]: crate::collective::Collective
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    /// PS-style INA through the switch pool — today's pipeline,
+    /// parity-pinned so default configs reproduce the golden suites.
+    PsIna,
+    /// Pure ring-allreduce: reduce-scatter + all-gather over neighbor
+    /// links, host-side math, zero switch pool slots.
+    Ring,
+    /// Rina-style hybrid: rack-local INA fold, then a ring across rack
+    /// representatives.
+    InaRing,
+}
+
+impl CollectiveKind {
+    /// Human display name for tables and summaries.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveKind::PsIna => "PS-INA",
+            CollectiveKind::Ring => "Ring",
+            CollectiveKind::InaRing => "INA-Ring",
+        }
+    }
+
+    /// Stable lowercase machine key — the canonical registry name, used
+    /// wherever the collective is serialized (sweep artifacts).
+    pub fn key(&self) -> &'static str {
+        match self {
+            CollectiveKind::PsIna => "ps-ina",
+            CollectiveKind::Ring => "ring",
+            CollectiveKind::InaRing => "ina-ring",
         }
     }
 }
@@ -519,6 +563,10 @@ pub struct ExperimentConfig {
     /// [`CcRegistry`] (`cc = "<name>"` in TOML; default `fixed-window`,
     /// the parity-pinned legacy behavior).
     pub cc: CcHandle,
+    /// The collective algorithm, resolved through the
+    /// [`CollectiveRegistry`] (`collective = "<name>"` in TOML; default
+    /// `ps-ina`, the parity-pinned legacy pipeline).
+    pub collective: CollectiveHandle,
     pub net: NetworkConfig,
     pub switch: SwitchConfig,
     /// First-level (rack) switches in the fabric. `1` (default) is the
@@ -527,6 +575,11 @@ pub struct ExperimentConfig {
     /// local workers, and the edge switch (co-located with rack 0) folds
     /// the rack partials into the final result.
     pub racks: usize,
+    /// Fat-tree core oversubscription ratio. `0` (default) keeps the
+    /// legacy star/two-tier fabric; `>= 1` builds the 3-tier k=4
+    /// core/aggregation/edge fat-tree with `4 / oversub` (min 1) core
+    /// switches and deterministic per-flow ECMP (`sim.oversub` in TOML).
+    pub oversub: usize,
     pub jobs: Vec<JobSpec>,
     /// Measured iterations per job.
     pub iterations: u32,
@@ -568,9 +621,11 @@ impl Default for ExperimentConfig {
             seed: 1,
             policy: crate::switch::policy::esa(),
             cc: fixed_window(),
+            collective: ps_ina(),
             net: NetworkConfig::default(),
             switch: SwitchConfig::default(),
             racks: 1,
+            oversub: 0,
             jobs: Vec::new(),
             iterations: 3,
             jitter_max_ns: 300 * USEC,
@@ -605,6 +660,7 @@ impl ExperimentConfig {
             seed: t.int_or("seed", 1) as u64,
             policy: PolicyRegistry::resolve(&t.str_or("policy", "esa"))?,
             cc: CcRegistry::resolve(&t.str_or("cc", "fixed-window"))?,
+            collective: CollectiveRegistry::resolve(&t.str_or("collective", "ps-ina"))?,
             ..ExperimentConfig::default()
         };
         cfg.net.bandwidth_gbps = t.float_or("net.bandwidth_gbps", cfg.net.bandwidth_gbps);
@@ -614,6 +670,7 @@ impl ExperimentConfig {
         cfg.net.ecn_threshold_ns = (t.float_or("net.ecn_threshold_us", 0.0) * USEC as f64) as u64;
         cfg.switch.memory_bytes = t.int_or("switch.memory_bytes", cfg.switch.memory_bytes as i64) as u64;
         cfg.racks = t.int_or("sim.racks", cfg.racks as i64) as usize;
+        cfg.oversub = t.int_or("sim.oversub", cfg.oversub as i64) as usize;
         cfg.iterations = t.int_or("sim.iterations", cfg.iterations as i64) as u32;
         cfg.jitter_max_ns = (t.float_or("sim.jitter_max_us", 300.0) * USEC as f64) as u64;
         cfg.start_spread_ns = (t.float_or("sim.start_spread_us", 1000.0) * USEC as f64) as u64;
@@ -682,6 +739,51 @@ impl ExperimentConfig {
         }
         if self.racks == 0 || self.racks > 64 {
             bail!("racks must be in 1..=64, got {}", self.racks);
+        }
+        if self.oversub > 16 {
+            bail!("sim.oversub must be in 0..=16, got {}", self.oversub);
+        }
+        // Ring collectives replace the PS with host-side state machines
+        // whose stall-freedom proof leans on deterministic ESA collision
+        // handling, the legacy window, and loss-free delivery — pin the
+        // regime rather than let an unsupported combination stall.
+        if self.collective.key() != "ps-ina" {
+            if self.policy.key() != "esa" {
+                bail!(
+                    "collective `{}` requires policy = \"esa\" (the rack fold's pass-through \
+                     redirect is only validated there), got `{}`",
+                    self.collective.key(),
+                    self.policy.key()
+                );
+            }
+            if self.cc.key() != "fixed-window" {
+                bail!(
+                    "collective `{}` requires cc = \"fixed-window\" (ring traffic paces itself), \
+                     got `{}`",
+                    self.collective.key(),
+                    self.cc.key()
+                );
+            }
+            if self.net.loss_prob != 0.0 {
+                bail!(
+                    "collective `{}` requires loss_prob = 0 — ring members have no RTO/reminder \
+                     recovery for lost fold fragments",
+                    self.collective.key()
+                );
+            }
+            if self.net.queue_kb != 0 {
+                bail!(
+                    "collective `{}` requires an unbounded queue (net.queue_kb = 0) — tail drops \
+                     would lose fold fragments irrecoverably",
+                    self.collective.key()
+                );
+            }
+            if self.churn.is_some() {
+                bail!("collective `{}` does not support churn mode", self.collective.key());
+            }
+            if !self.faults.is_empty() {
+                bail!("collective `{}` does not support fault injection", self.collective.key());
+            }
         }
         if self.iterations == 0 {
             bail!("iterations must be >= 1");
@@ -986,6 +1088,67 @@ mod tests {
         }
         // the default experiment runs the parity-pinned legacy window
         assert_eq!(ExperimentConfig::default().cc.key(), "fixed-window");
+    }
+
+    #[test]
+    fn collective_kind_keys_round_trip_through_the_registry() {
+        use crate::collective::CollectiveRegistry;
+        for c in [CollectiveKind::PsIna, CollectiveKind::Ring, CollectiveKind::InaRing] {
+            let h = CollectiveRegistry::resolve(c.key()).unwrap();
+            assert_eq!(h.key(), c.key(), "{c:?}");
+            assert_eq!(h.name(), c.name(), "{c:?}");
+        }
+        // the default experiment runs the parity-pinned legacy pipeline
+        assert_eq!(ExperimentConfig::default().collective.key(), "ps-ina");
+    }
+
+    #[test]
+    fn collective_and_oversub_parse_and_pin_the_ring_regime() {
+        let t = parse_toml(
+            r#"
+            collective = "Ring"
+            [sim]
+            racks = 4
+            oversub = 4
+            [job.a]
+            model = "microbench"
+            workers = 8
+            "#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.collective.key(), "ring");
+        assert_eq!(c.oversub, 4);
+        // absent knobs keep the parity defaults
+        let t = parse_toml("[job.a]\nmodel = \"dnn_a\"\nworkers = 4").unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.collective.key(), "ps-ina");
+        assert_eq!(c.oversub, 0);
+        // unknown collectives are pointed errors listing the registry
+        let t =
+            parse_toml("collective = \"bogus\"\n[job.a]\nmodel = \"dnn_a\"\nworkers = 4").unwrap();
+        let err = ExperimentConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("unknown collective"), "{err}");
+        // ring collectives pin the validated regime
+        for (extra, needle) in [
+            ("policy = \"atp\"", "requires policy"),
+            ("cc = \"newreno\"", "requires cc"),
+            ("[net]\nloss_prob = 0.01", "loss_prob"),
+            ("[net]\nqueue_kb = 64", "unbounded queue"),
+            ("[churn]\n", "churn"),
+            ("[fault.crash]\nat_us = 10.0\nkind = \"switch_crash\"", "fault"),
+        ] {
+            let toml =
+                format!("collective = \"ring\"\n{extra}\n[job.a]\nmodel = \"dnn_a\"\nworkers = 4");
+            let err = ExperimentConfig::from_table(&parse_toml(&toml).unwrap())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(needle), "{extra}: {err}");
+        }
+        // oversubscription bound
+        let t = parse_toml("[sim]\noversub = 99\n[job.a]\nmodel = \"dnn_a\"\nworkers = 4").unwrap();
+        let err = ExperimentConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("oversub"), "{err}");
     }
 
     #[test]

@@ -29,8 +29,9 @@
 //! |----------------|------|
 //! | [`util`]       | deterministic PRNG, fixed-point codec, stats, CLI, logging, thread-pool executor, byte-stable JSON |
 //! | [`config`]     | TOML-subset parser + experiment schema |
-//! | [`net`]        | discrete-event engine: links, star + two-tier topologies, loss injection |
-//! | [`packet`]     | ESA/ATP wire formats (§5.1) + the two-tier `RackPartial` |
+//! | [`net`]        | discrete-event engine: links, star / two-tier / fat-tree (ECMP) topologies, loss injection |
+//! | [`packet`]     | ESA/ATP wire formats (§5.1) + the two-tier `RackPartial` + ring segments |
+//! | [`collective`] | collective-algorithm registry (`ps-ina`, `ring`, `ina-ring`) + the ring execution engine |
 //! | [`switch`]     | aggregator pool + the Fig. 5 pipeline, per tier; [`switch::policy`] is the behavioral `SchedulerPolicy` API + named registry every layer resolves policies through |
 //! | [`ps`]         | fallback PS: partial dictionary + reminder mechanism |
 //! | [`worker`]     | fragmentation, priority tagging (§5.4), windows, loss recovery (§5.3) |
@@ -40,6 +41,7 @@
 //! | [`train`]      | end-to-end trainer: real gradients through the simulated switch |
 //! | [`coordinator`]| control plane: job registry, runtime admission/reclamation, priority inputs, experiment launch |
 
+pub mod collective;
 pub mod config;
 pub mod coordinator;
 pub mod job;

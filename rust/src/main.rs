@@ -5,7 +5,7 @@
 //! esa sim      [--config f.toml] [--policy esa] [--model dnn_a] [--jobs 8]
 //!              [--workers 8] [--iterations 3] [--seed 1] [--loss 0.0]
 //!              [--memory-mb 5] [--tensor-mb N] [--racks 1] [--cc fixed-window]
-//!              [--queue-kb 0]
+//!              [--queue-kb 0] [--collective ps-ina] [--oversub 0]
 //! esa sweep    [--config sweep.toml] [--threads N] [--out-dir DIR]
 //!              [--name X] [--seeds 1,2,3]
 //! esa churn    [--policies esa,atp,switchml] [--jobs 8] [--rate 3000]
@@ -21,6 +21,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use esa::collective::CollectiveRegistry;
 use esa::config::ExperimentConfig;
 use esa::job::trace::{generate, TraceConfig};
 use esa::net::congestion::CcRegistry;
@@ -89,10 +90,12 @@ fn print_help() {
          --policy accepts any registered scheduling policy: {}\n\
          (parameterized: esa-k=<ticks> sets the preemption-age gate in ns)\n\
          --cc accepts any registered congestion controller: {}\n\
+         --collective accepts any registered collective algorithm: {}\n\
          \n\
          see README.md for the full flag reference",
         PolicyRegistry::help_names(),
-        CcRegistry::help_names()
+        CcRegistry::help_names(),
+        CollectiveRegistry::help_names()
     );
 }
 
@@ -124,6 +127,14 @@ fn cmd_sim(args: &Args) -> Result<()> {
     if let Some(kb) = args.get_parsed::<u64>("queue-kb")? {
         cfg.net.queue_kb = kb;
     }
+    // collective knobs override either source (file or synthetic)
+    if let Some(c) = args.get("collective") {
+        cfg.collective = CollectiveRegistry::resolve(c)?;
+    }
+    if let Some(o) = args.get_parsed::<usize>("oversub")? {
+        cfg.oversub = o;
+    }
+    cfg.validate()?;
     let name = cfg.name.clone();
     let policy = cfg.policy.clone();
     let cc = cfg.cc.clone();

@@ -32,7 +32,7 @@ use crate::util::rng::Rng;
 use crate::{NodeId, SimTime};
 
 pub use event::{Event, EventQueue};
-pub use topology::{Topology, SWITCH_NODE};
+pub use topology::{RouteError, Topology, SWITCH_NODE};
 
 /// Traffic counters, globally and per selected categories. The paper's
 /// traffic-volume discussion (§4 Discussion) is measured from these.
@@ -60,6 +60,11 @@ pub struct NetStats {
     pub retransmit_pkts: u64,
     /// Erasure-coded recovery shares (`esa-fec` — DESIGN.md §16).
     pub fec_share_pkts: u64,
+    /// Ring-allreduce segments (`ring` / `ina-ring` collectives —
+    /// DESIGN.md §17); zero under the default `ps-ina` collective.
+    pub ring_seg_pkts: u64,
+    /// `ina-ring` phase-C rack broadcasts (up-leg plus replicas).
+    pub ring_bcast_pkts: u64,
     /// Unreliable packets lost to an injected link-outage fault (a subset
     /// of `dropped` — random loss and fault loss are tallied separately so
     /// scenario reports can attribute recovery traffic).
@@ -92,6 +97,8 @@ impl NetStats {
             }
             PacketKind::Retransmit | PacketKind::CachedResult => self.retransmit_pkts += 1,
             PacketKind::FecShare => self.fec_share_pkts += 1,
+            PacketKind::RingSeg => self.ring_seg_pkts += 1,
+            PacketKind::RingBcast => self.ring_bcast_pkts += 1,
         }
     }
 }
@@ -161,7 +168,9 @@ impl Net {
     /// and transit packets to the switch actor).
     pub fn transmit(&mut self, from: NodeId, mut pkt: Packet) {
         debug_assert_ne!(from, pkt.dst, "transmit to self");
-        let next = self.topo.next_hop(from, pkt.dst);
+        // keyed by the packet's real source so ECMP fabrics keep every
+        // flow on one deterministic path; trees ignore the key
+        let next = self.topo.route(from, pkt.src, pkt.dst);
         let link = self.topo.link_id(from, next);
         let now = self.queue.now();
         // Straggler fault: a slow NIC on either endpoint stretches this
@@ -249,7 +258,7 @@ impl Net {
     /// Earliest time the egress link `from -> next_hop(from, dst)` frees up
     /// (workers use this to pace window refills without busy timers).
     pub fn egress_free_at(&self, from: NodeId, dst: NodeId) -> SimTime {
-        let next = self.topo.next_hop(from, dst);
+        let next = self.topo.route(from, from, dst);
         self.busy_until[self.topo.link_id(from, next)]
     }
 

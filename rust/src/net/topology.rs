@@ -3,7 +3,14 @@
 //! The paper's evaluation uses a single-switch star (64 servers, §7.2.1);
 //! a two-tier variant (first-level switches at the workers' racks, second
 //! edge switch at the PS's rack, as in ATP's hierarchical aggregation) is
-//! provided for the multi-rack extension tests.
+//! provided for the multi-rack extension tests, and a 3-tier
+//! core/aggregation/edge fat-tree (DESIGN.md §17) makes oversubscription
+//! a sweep axis: ToR uplinks fan out over `k/2` aggregation switches per
+//! pod and a core layer whose width shrinks with the oversubscription
+//! factor, with deterministic per-flow ECMP picking among the parallel
+//! paths.
+
+use std::fmt;
 
 use crate::NodeId;
 
@@ -21,17 +28,96 @@ pub enum NodeRole {
     Host,
 }
 
+/// Why a routing query has no answer — the pointed error
+/// [`Topology::try_next_hop`] / [`Topology::try_route`] surface instead
+/// of the silent tree assumption the panicking wrappers used to make.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteError {
+    /// `at == dst`: the packet is already there; no egress hop exists.
+    AtDestination { node: NodeId },
+    /// A node id outside `0..n_nodes` — the fabric knows nothing about it.
+    UnknownNode { node: NodeId, n_nodes: usize },
+    /// Fat-tree aggregation/core switches host no endpoints; a packet
+    /// can transit them but never terminate at one.
+    NotAnEndpoint { node: NodeId },
+    /// A [`Topology::walk`] did not reach `dst` within its hop budget —
+    /// the routing function is looping or the budget is below the
+    /// fabric diameter.
+    HopBoundExceeded { src: NodeId, dst: NodeId, max_hops: usize },
+}
+
+impl fmt::Display for RouteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RouteError::AtDestination { node } => {
+                write!(f, "no next hop: already at destination node {node}")
+            }
+            RouteError::UnknownNode { node, n_nodes } => {
+                write!(f, "unknown node {node} (topology has nodes 0..{n_nodes})")
+            }
+            RouteError::NotAnEndpoint { node } => {
+                write!(
+                    f,
+                    "node {node} is a fat-tree aggregation/core switch; packets transit it \
+                     but cannot be addressed to it"
+                )
+            }
+            RouteError::HopBoundExceeded { src, dst, max_hops } => {
+                write!(f, "walk {src} -> {dst} did not terminate within {max_hops} hops")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// The 3-tier extension: pod/agg/core geometry (absent for star and
+/// two-tier fabrics). ToRs keep ids `0..racks` and hosts keep the same
+/// ids as the two-tier layout; aggregation then core switches are
+/// appended after the hosts, so every pre-existing node id is unchanged.
+#[derive(Debug, Clone)]
+struct FatTree {
+    /// ToRs per pod (= k/2).
+    pod_w: usize,
+    /// Aggregation switches per pod (= k/2).
+    aggs_per_pod: usize,
+    /// First aggregation-switch node id.
+    agg_base: usize,
+    /// First core-switch node id.
+    core_base: usize,
+    /// Core-layer width: `(k/2)^2 / oversub`, floored at 1.
+    n_cores: usize,
+}
+
 /// A topology: nodes 0..n with a routing function returning, for a packet
-/// at `at` heading to `dst`, the (egress link, next node) pair.
+/// at `at` heading to `dst`, the next node on the path.
 #[derive(Debug, Clone)]
 pub struct Topology {
     n_nodes: usize,
     roles: Vec<NodeRole>,
-    /// Two-tier only: `parent[node]` is the switch a host hangs off; hosts
-    /// in a star all hang off SWITCH_NODE.
+    /// `parent[node]` is the switch a host hangs off; hosts in a star all
+    /// hang off SWITCH_NODE. Fabric-only nodes (fat-tree agg/core) are
+    /// self-parented so no host filter can ever match them.
     parent: Vec<NodeId>,
-    /// Two-tier only: links between switches.
+    /// First-level (ToR) switches — `racks` for two-tier and fat-tree,
+    /// 1 for the star.
     n_switches: usize,
+    /// First host node id; hosts occupy `host_base..host_base + n_hosts`.
+    host_base: usize,
+    /// 3-tier geometry, when this is a fat-tree.
+    fat: Option<FatTree>,
+}
+
+/// FNV-1a over the (src, dst) endpoint pair — the per-flow ECMP key.
+/// Deterministic in the pair alone, so every packet of a flow takes the
+/// same path on every run at every thread count.
+fn flow_hash(src: NodeId, dst: NodeId) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in src.to_le_bytes().into_iter().chain(dst.to_le_bytes()) {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 impl Topology {
@@ -59,6 +145,8 @@ impl Topology {
             roles,
             parent: (0..n_nodes).map(|_| SWITCH_NODE).collect(),
             n_switches: 1,
+            host_base: 1,
+            fat: None,
         }
     }
 
@@ -101,6 +189,75 @@ impl Topology {
             roles,
             parent,
             n_switches: racks,
+            host_base: racks,
+            fat: None,
+        }
+    }
+
+    /// 3-tier fat-tree: `racks` ToR switches grouped into pods of `k/2`,
+    /// each pod served by `k/2` aggregation switches, all pods joined by
+    /// a core layer of `(k/2)^2 / oversub` switches (floored at 1 —
+    /// `oversub` is the core-layer oversubscription factor, `1` = full
+    /// bisection). ToRs keep node ids `0..racks` and hosts keep the same
+    /// round-robin ids as [`Topology::two_tier`]; aggregation and core
+    /// switches are appended after the hosts, so host/ToR addressing is
+    /// unchanged and only the paths between racks differ.
+    ///
+    /// Cross-rack traffic routes up-down (ToR → agg → \[core →
+    /// agg →\] ToR), with the agg and core picked by a deterministic
+    /// per-flow ECMP hash of the (src, dst) pair.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use esa::net::Topology;
+    ///
+    /// // 4 ToRs in 2 pods (k = 4), 8 hosts, core width 4/2 = 2
+    /// let t = Topology::fat_tree(4, 8, 4, 2);
+    /// assert_eq!(t.n_switches(), 4);       // ToRs only
+    /// assert_eq!(t.host_base(), 4);
+    /// assert_eq!(t.parent_of(4), 0);       // hosts as in two_tier(4, 8)
+    /// // host 5 -> host 4 crosses racks: the walk climbs through an
+    /// // aggregation switch and terminates at the destination
+    /// let (path, _) = t.walk(5, 4, 16).unwrap();
+    /// assert!(path.len() >= 4 && *path.last().unwrap() == 4);
+    /// ```
+    ///
+    /// # Panics
+    ///
+    /// `k` must be even and >= 2, `racks >= 1`, `oversub >= 1`.
+    pub fn fat_tree(racks: usize, n_hosts: usize, k: usize, oversub: usize) -> Topology {
+        assert!(racks >= 1, "fat_tree needs at least one ToR");
+        assert!(k >= 2 && k % 2 == 0, "fat_tree port count k must be even and >= 2");
+        assert!(oversub >= 1, "oversubscription factor must be >= 1");
+        let pod_w = k / 2;
+        let aggs_per_pod = k / 2;
+        let pods = racks.div_ceil(pod_w);
+        let n_cores = (pod_w * aggs_per_pod / oversub).max(1);
+        let agg_base = racks + n_hosts;
+        let core_base = agg_base + pods * aggs_per_pod;
+        let n_nodes = core_base + n_cores;
+
+        let mut roles = vec![NodeRole::Host; n_nodes];
+        let mut parent: Vec<NodeId> = vec![SWITCH_NODE; n_nodes];
+        for r in 0..racks {
+            roles[r] = NodeRole::Switch;
+            parent[r] = SWITCH_NODE;
+        }
+        for h in 0..n_hosts {
+            parent[racks + h] = (h % racks) as NodeId;
+        }
+        for f in agg_base..n_nodes {
+            roles[f] = NodeRole::Switch;
+            parent[f] = f as NodeId; // self-parented: never any host's switch
+        }
+        Topology {
+            n_nodes,
+            roles,
+            parent,
+            n_switches: racks,
+            host_base: racks,
+            fat: Some(FatTree { pod_w, aggs_per_pod, agg_base, core_base, n_cores }),
         }
     }
 
@@ -108,8 +265,15 @@ impl Topology {
         self.n_nodes
     }
 
+    /// First-level (ToR) switches — excludes fat-tree agg/core switches.
     pub fn n_switches(&self) -> usize {
         self.n_switches
+    }
+
+    /// First host node id: hosts are `host_base .. host_base + n_hosts`,
+    /// immediately after the ToR switches in every fabric.
+    pub fn host_base(&self) -> NodeId {
+        self.host_base as NodeId
     }
 
     pub fn role(&self, node: NodeId) -> NodeRole {
@@ -120,17 +284,82 @@ impl Topology {
         self.role(node) == NodeRole::Switch
     }
 
+    /// True for fat-tree aggregation/core switches: pure forwarding
+    /// nodes that run no aggregation pipeline and host no actors.
+    pub fn is_fabric(&self, node: NodeId) -> bool {
+        match &self.fat {
+            Some(ft) => node as usize >= ft.agg_base,
+            None => false,
+        }
+    }
+
     /// The switch a host is attached to.
     pub fn parent_of(&self, node: NodeId) -> NodeId {
         self.parent[node as usize]
+    }
+
+    /// Next hop from `at` toward `dst`, keyed by the flow's real source
+    /// `src` so ECMP fabrics pick one deterministic path per flow. On
+    /// tree fabrics (star, two-tier) `src` is ignored — there is only
+    /// one path.
+    ///
+    /// # Panics
+    ///
+    /// On any [`RouteError`]; callers with untrusted inputs use
+    /// [`Topology::try_route`].
+    pub fn route(&self, at: NodeId, src: NodeId, dst: NodeId) -> NodeId {
+        match self.try_route(at, src, dst) {
+            Ok(next) => next,
+            Err(e) => panic!("route({at} -> {dst}): {e}"),
+        }
     }
 
     /// Next hop from `at` toward `dst`.
     ///
     /// Star: host → switch → host. Two-tier: host → rack switch → edge
     /// switch → rack switch → host (shortcutting when ranks coincide).
+    /// Fat-tree: delegates to [`Topology::route`] with `at` as the flow
+    /// key (single-hop queries); multi-hop fat-tree walks should carry
+    /// the real source through [`Topology::route`] instead.
+    ///
+    /// # Panics
+    ///
+    /// On any [`RouteError`] — `at == dst`, an out-of-range node, or a
+    /// fat-tree fabric switch as `dst`. The previous implementation
+    /// silently assumed a tree and returned an arbitrary parent;
+    /// [`Topology::try_next_hop`] is the non-panicking form.
     pub fn next_hop(&self, at: NodeId, dst: NodeId) -> NodeId {
-        debug_assert_ne!(at, dst, "next_hop at destination");
+        self.route(at, at, dst)
+    }
+
+    /// Non-panicking [`Topology::next_hop`].
+    pub fn try_next_hop(&self, at: NodeId, dst: NodeId) -> Result<NodeId, RouteError> {
+        self.try_route(at, at, dst)
+    }
+
+    /// Non-panicking [`Topology::route`]: every way the query can be
+    /// unanswerable comes back as a pointed [`RouteError`] instead of a
+    /// debug-assert-plus-arbitrary-parent.
+    pub fn try_route(&self, at: NodeId, src: NodeId, dst: NodeId) -> Result<NodeId, RouteError> {
+        for node in [at, src, dst] {
+            if node as usize >= self.n_nodes {
+                return Err(RouteError::UnknownNode { node, n_nodes: self.n_nodes });
+            }
+        }
+        if at == dst {
+            return Err(RouteError::AtDestination { node: at });
+        }
+        if self.is_fabric(dst) {
+            return Err(RouteError::NotAnEndpoint { node: dst });
+        }
+        match &self.fat {
+            None => Ok(self.tree_hop(at, dst)),
+            Some(ft) => Ok(self.fat_hop(ft, at, src, dst)),
+        }
+    }
+
+    /// The single-path tree walk (star and two-tier).
+    fn tree_hop(&self, at: NodeId, dst: NodeId) -> NodeId {
         if !self.is_switch(at) {
             return self.parent[at as usize];
         }
@@ -145,6 +374,70 @@ impl Topology {
             // rack switch: go up to the edge
             SWITCH_NODE
         }
+    }
+
+    /// Up-down fat-tree walk with per-flow ECMP. Every choice among
+    /// parallel links hashes the (src, dst) pair, so a flow's path is a
+    /// pure function of its endpoints.
+    fn fat_hop(&self, ft: &FatTree, at: NodeId, src: NodeId, dst: NodeId) -> NodeId {
+        let h = flow_hash(src, dst);
+        // the ToR a node reaches the fabric through (identity for ToRs)
+        let tor_of = |n: NodeId| -> usize {
+            if (n as usize) < self.n_switches {
+                n as usize
+            } else {
+                self.parent[n as usize] as usize
+            }
+        };
+        let atu = at as usize;
+        if atu >= ft.core_base {
+            // core: down into the destination pod's aggregation layer
+            let dpod = tor_of(dst) / ft.pod_w;
+            return (ft.agg_base + dpod * ft.aggs_per_pod + (h % ft.aggs_per_pod as u64) as usize)
+                as NodeId;
+        }
+        if atu >= ft.agg_base {
+            // aggregation: down to the ToR if the pod matches, else up
+            let my_pod = (atu - ft.agg_base) / ft.aggs_per_pod;
+            let dst_tor = tor_of(dst);
+            if dst_tor / ft.pod_w == my_pod {
+                return dst_tor as NodeId;
+            }
+            return (ft.core_base + ((h >> 8) % ft.n_cores as u64) as usize) as NodeId;
+        }
+        if atu < self.n_switches {
+            // ToR: deliver locally, else up into this pod's aggregation
+            if (dst as usize) >= self.host_base && self.parent[dst as usize] == at {
+                return dst;
+            }
+            let my_pod = atu / ft.pod_w;
+            return (ft.agg_base + my_pod * ft.aggs_per_pod + (h % ft.aggs_per_pod as u64) as usize)
+                as NodeId;
+        }
+        // host: one uplink
+        self.parent[atu]
+    }
+
+    /// Walk `src -> dst` one [`Topology::route`] hop at a time, giving
+    /// up after `max_hops`. Returns the visited nodes after `src`
+    /// (ending with `dst`) and the hop count — the property-test oracle
+    /// for "every route terminates within the fabric's diameter".
+    pub fn walk(
+        &self,
+        src: NodeId,
+        dst: NodeId,
+        max_hops: usize,
+    ) -> Result<(Vec<NodeId>, usize), RouteError> {
+        let mut at = src;
+        let mut path = Vec::new();
+        for hops in 1..=max_hops {
+            at = self.try_route(at, src, dst)?;
+            path.push(at);
+            if at == dst {
+                return Ok((path, hops));
+            }
+        }
+        Err(RouteError::HopBoundExceeded { src, dst, max_hops })
     }
 
     /// Directed link id for the hop `from -> to`. Each ordered pair that can
@@ -227,5 +520,111 @@ mod tests {
         // host 3 -> host 5 (same rack): 3 -> 1 -> 5
         assert_eq!(t.next_hop(3, 5), 1);
         assert_eq!(t.next_hop(1, 5), 5);
+    }
+
+    #[test]
+    fn fat_tree_layout_preserves_tor_and_host_ids() {
+        // 4 ToRs, 8 hosts, k = 4 (pods of 2, 2 aggs/pod), full bisection
+        let t = Topology::fat_tree(4, 8, 4, 1);
+        let tt = Topology::two_tier(4, 8);
+        assert_eq!(t.host_base(), tt.host_base());
+        for n in 0..12u32 {
+            assert_eq!(t.is_switch(n), tt.is_switch(n), "node {n}");
+            if !t.is_switch(n) {
+                assert_eq!(t.parent_of(n), tt.parent_of(n), "host {n}");
+            }
+        }
+        // 2 pods x 2 aggs + 4 cores appended after the hosts
+        assert_eq!(t.n_nodes(), 4 + 8 + 4 + 4);
+        for f in 12..20u32 {
+            assert!(t.is_switch(f) && t.is_fabric(f), "node {f} is fabric");
+        }
+        // oversubscription shrinks only the core layer
+        let over = Topology::fat_tree(4, 8, 4, 4);
+        assert_eq!(over.n_nodes(), 4 + 8 + 4 + 1);
+    }
+
+    #[test]
+    fn fat_tree_walks_terminate_up_down() {
+        let t = Topology::fat_tree(4, 8, 4, 2);
+        for src in 4..12u32 {
+            for dst in 4..12u32 {
+                if src == dst {
+                    continue;
+                }
+                let (path, hops) = t.walk(src, dst, 8).unwrap();
+                assert_eq!(*path.last().unwrap(), dst, "{src}->{dst} via {path:?}");
+                // same rack: 2 hops; same pod: 4; cross-pod: 6
+                assert!(hops <= 6, "{src}->{dst} took {hops} hops: {path:?}");
+            }
+        }
+        // ToR-addressed traffic (the INA uplink pattern) also terminates
+        for src in 4..12u32 {
+            for tor in 0..4u32 {
+                if t.parent_of(src) == tor {
+                    continue;
+                }
+                let (path, _) = t.walk(src, tor, 8).unwrap();
+                assert_eq!(*path.last().unwrap(), tor);
+            }
+        }
+    }
+
+    #[test]
+    fn ecmp_choice_is_a_pure_function_of_the_flow() {
+        let t = Topology::fat_tree(8, 32, 4, 1);
+        for src in 8..40u32 {
+            for dst in 8..40u32 {
+                if src == dst {
+                    continue;
+                }
+                let a = t.walk(src, dst, 8).unwrap();
+                let b = t.walk(src, dst, 8).unwrap();
+                assert_eq!(a, b, "{src}->{dst}");
+            }
+        }
+        // and distinct flows actually spread over the parallel paths:
+        // every up-choice out of ToR 0 is agg 40 or 41; across the 100+
+        // flows below both must occur
+        let mut first_aggs = std::collections::BTreeSet::new();
+        for src in [8u32, 16, 24, 32] {
+            for dst in 8..40u32 {
+                if t.parent_of(dst) == 0 {
+                    continue;
+                }
+                first_aggs.insert(t.route(0, src, dst));
+            }
+        }
+        assert_eq!(first_aggs.len(), 2, "ECMP never spread: {first_aggs:?}");
+    }
+
+    #[test]
+    fn try_next_hop_rejects_unanswerable_queries() {
+        let t = Topology::two_tier(2, 4);
+        assert_eq!(t.try_next_hop(3, 3), Err(RouteError::AtDestination { node: 3 }));
+        assert_eq!(
+            t.try_next_hop(99, 2),
+            Err(RouteError::UnknownNode { node: 99, n_nodes: 6 })
+        );
+        assert_eq!(
+            t.try_next_hop(2, 77),
+            Err(RouteError::UnknownNode { node: 77, n_nodes: 6 })
+        );
+        let ft = Topology::fat_tree(2, 4, 4, 1);
+        // the first agg switch is a transit node, not an endpoint
+        let agg = 2 + 4;
+        assert_eq!(
+            ft.try_next_hop(3, agg),
+            Err(RouteError::NotAnEndpoint { node: agg })
+        );
+        // errors render as pointed messages, not index panics
+        let msg = ft.try_next_hop(3, agg).unwrap_err().to_string();
+        assert!(msg.contains("aggregation/core"), "{msg}");
+    }
+
+    #[test]
+    #[should_panic(expected = "already at destination")]
+    fn next_hop_panics_with_the_pointed_error() {
+        Topology::star(2).next_hop(1, 1);
     }
 }

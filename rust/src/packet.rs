@@ -61,6 +61,18 @@ pub enum PacketKind {
     /// the worker's bit and `fan_in` the job's fan-in, so the PS can
     /// synthesize the worker's contribution after reconstruction.
     FecShare,
+    /// Ring participant → successor: one segment of a ring-allreduce
+    /// chunk (DESIGN.md §17). Reliable (the collectives run over a
+    /// TCP-like channel, as Rina's RDMA RC does) and switch-transparent:
+    /// it transits switches via pass-through forwarding and never
+    /// touches an aggregator pool. `seq` is the step index and
+    /// `agg_index` the segment index within the step's chunk.
+    RingSeg,
+    /// Rack representative → ToR switch (`ina-ring` phase C): the fully
+    /// reduced tensor going back down; the ToR replicates it to every
+    /// other local worker of the job, like a `Result` multicast but
+    /// tensor-sized. Reliable.
+    RingBcast,
 }
 
 /// A simulated packet. Header fields mirror §5.1/§5.2.
@@ -198,6 +210,65 @@ impl Packet {
         }
     }
 
+    /// One ring-allreduce segment (DESIGN.md §17): `step` is the ring
+    /// step index, `segment` the fragment index within the step's chunk.
+    /// Reliable and unaggregated — switches pass it through.
+    pub fn ring_seg(
+        job: JobId,
+        step: u32,
+        segment: u32,
+        src: NodeId,
+        dst: NodeId,
+        wire_bytes: u32,
+    ) -> Packet {
+        Packet {
+            kind: PacketKind::RingSeg,
+            job,
+            seq: step,
+            agg_index: segment,
+            bitmap: 0,
+            fan_in: 0,
+            priority: 0,
+            src,
+            dst,
+            wire_bytes,
+            reliable: true,
+            resend: false,
+            ecn: false,
+            values: None,
+            sent_at: UNSTAMPED,
+        }
+    }
+
+    /// The `ina-ring` phase-C broadcast: the rack representative hands
+    /// the reduced tensor to its ToR, which replicates it to the job's
+    /// other local workers. `segment` indexes the broadcast fragments.
+    pub fn ring_bcast(
+        job: JobId,
+        segment: u32,
+        src: NodeId,
+        dst: NodeId,
+        wire_bytes: u32,
+    ) -> Packet {
+        Packet {
+            kind: PacketKind::RingBcast,
+            job,
+            seq: 0,
+            agg_index: segment,
+            bitmap: 0,
+            fan_in: 0,
+            priority: 0,
+            src,
+            dst,
+            wire_bytes,
+            reliable: true,
+            resend: false,
+            ecn: false,
+            values: None,
+            sent_at: UNSTAMPED,
+        }
+    }
+
     /// The `(share_idx, b, payload_len)` triple a [`PacketKind::FecShare`]
     /// packs into `agg_index`.
     #[inline]
@@ -280,6 +351,19 @@ mod tests {
         assert_eq!(p.fec_share_meta(), (5, 4, 256));
         assert_eq!(p.bitmap, 8);
         assert_eq!(p.fan_in, 8);
+    }
+
+    #[test]
+    fn ring_packets_are_reliable_and_pool_free() {
+        let s = Packet::ring_seg(1, 3, 7, 5, 6, 65_536);
+        assert_eq!(s.kind, PacketKind::RingSeg);
+        assert_eq!((s.seq, s.agg_index), (3, 7));
+        assert!(s.reliable, "collectives run over the reliable channel");
+        assert_eq!(s.bitmap, 0, "no arrival bitmap: nothing aggregates");
+        let b = Packet::ring_bcast(1, 2, 5, 0, 65_536);
+        assert_eq!(b.kind, PacketKind::RingBcast);
+        assert!(b.reliable);
+        assert_eq!(b.agg_index, 2);
     }
 
     #[test]

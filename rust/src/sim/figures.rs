@@ -11,6 +11,7 @@
 
 use anyhow::Result;
 
+use crate::collective::ps_ina;
 use crate::config::{ExperimentConfig, JobSpec};
 use crate::coordinator::run_parallel;
 use crate::net::congestion::fixed_window;
@@ -295,6 +296,8 @@ fn jct_sweep(
             cc: vec![fixed_window()],
             xtraffic_intensity: vec![0.0],
             fec_b: vec![0],
+            collective: vec![ps_ina()],
+            oversub: vec![0],
             models: models.iter().map(|m| model_mix(scale, m)).collect(),
             iterations: scale.iterations,
             base: ExperimentConfig::default(),
@@ -507,6 +510,8 @@ pub fn fig12_hierarchical_report(scale: &Scale) -> Result<(SweepReport, Figure)>
         cc: vec![fixed_window()],
         xtraffic_intensity: vec![0.0],
         fec_b: vec![0],
+        collective: vec![ps_ina()],
+        oversub: vec![0],
         models: vec![ModelMix {
             name: "dnn_a".into(),
             tensor_bytes: Some(scale.scaled(16 << 20)),

@@ -35,6 +35,8 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::collective::engine::{RingEngine, RingJob, RingJobCfg, TK_RING_BEGIN};
+use crate::collective::{JobShape, RingPlan};
 use crate::config::{ExperimentConfig, FaultKind};
 use crate::coordinator::admission::{Admission, AdmissionController};
 use crate::sim::events::{EventLog, SimEvent};
@@ -105,6 +107,15 @@ enum ActorRef {
     Switch,
     Worker(u32),
     Ps(u32),
+    /// Ring-collective member `member` of job `job`, driven by the
+    /// [`RingEngine`] instead of a [`Worker`] actor.
+    Ring { job: u32, member: u32 },
+    /// Pure transit node (fat-tree aggregation/core switch): packets are
+    /// forwarded hop by hop, never terminated, and no timers fire here.
+    Forward,
+    /// A host that exists for layout parity but runs nothing (the PS
+    /// nodes of a ring-collective run). Addressing one is a bug.
+    Idle,
 }
 
 /// Initial capacity of the persistent dispatch out-buffer; the buffer
@@ -181,6 +192,10 @@ pub struct Simulation {
     edge: Option<Switch>,
     workers: Vec<Worker>,
     pses: Vec<Ps>,
+    /// Ring-collective execution engine (`cfg.collective` is `ring` or
+    /// `ina-ring`): owns every member's state machine; `workers` and
+    /// `pses` are empty in that mode. `None` under `ps-ina`.
+    ring: Option<RingEngine>,
     node_actor: Vec<ActorRef>,
     models: Vec<Arc<JobModel>>,
     /// worker index ranges per job (into `workers`).
@@ -211,15 +226,23 @@ impl Simulation {
         let racks = cfg.racks;
         let n_worker_nodes: usize = cfg.jobs.iter().map(|j| j.n_workers).sum();
         let n_hosts = n_worker_nodes + n_jobs;
-        let n_nodes = racks + n_hosts;
         // `two_tier(1, n)` is structurally identical to `star(n)` (the
         // parity tests in tests/integration_hierarchy.rs pin this), so one
-        // constructor serves both layouts.
-        let topo = Topology::two_tier(racks, n_hosts);
+        // constructor serves both flat layouts; `oversub >= 1` swaps in
+        // the 3-tier fat-tree (k = 4), which keeps every ToR and host id
+        // and only changes the paths between racks.
+        let topo = if cfg.oversub > 0 {
+            Topology::fat_tree(racks, n_hosts, 4, cfg.oversub)
+        } else {
+            Topology::two_tier(racks, n_hosts)
+        };
 
-        // node assignment
-        let mut node_actor = vec![ActorRef::Switch; n_nodes];
-        let mut next_node: NodeId = racks as NodeId;
+        // node assignment: ToRs and hosts get real actors; fat-tree
+        // aggregation/core switches only ever forward
+        let mut node_actor: Vec<ActorRef> = (0..topo.n_nodes() as NodeId)
+            .map(|n| if topo.is_fabric(n) { ActorRef::Forward } else { ActorRef::Switch })
+            .collect();
+        let mut next_node: NodeId = topo.host_base();
         let pool_slots = cfg.switch.pool_slots(&cfg.policy);
 
         // Churn mode: resolve the static-partition region size up front
@@ -270,39 +293,90 @@ impl Simulation {
             })
             .collect();
 
+        // Collective plan (DESIGN.md §17): `ps-ina` plans nothing and the
+        // driver runs the legacy switch-tree pipeline; `ring`/`ina-ring`
+        // return a RingPlan per job and the worker/PS actors are replaced
+        // by the ring engine below. The choice is per config, so either
+        // every job plans or none does.
+        let plans: Vec<Option<RingPlan>> = (0..n_jobs)
+            .map(|j| {
+                let shape = JobShape {
+                    tor_of: worker_nodes[j].iter().map(|&n| topo.parent_of(n)).collect(),
+                    workers: worker_nodes[j].clone(),
+                };
+                cfg.collective.plan(&shape)
+            })
+            .collect();
+        let ring_mode = plans.iter().any(|p| p.is_some());
+        debug_assert!(plans.iter().all(|p| p.is_some() == ring_mode));
+
         // Tier-relative wiring (see the JobWiring docs): each rack switch
         // sees its local workers and local fan-in; the edge sees one
         // "member" per rack hosting the job and the global fan-in.
         let packet_bytes = cfg.policy.packet_bytes() as u32;
         let mut rack_wirings: Vec<Vec<JobWiring>> = (0..racks).map(|_| Vec::new()).collect();
         let mut edge_wiring: Vec<JobWiring> = Vec::new();
-        for (j, model) in models.iter().enumerate() {
-            let total = model.n_workers as u8;
-            let mut job_racks: Vec<NodeId> = Vec::new();
-            for (r, wiring) in rack_wirings.iter_mut().enumerate() {
-                let local: Vec<NodeId> = worker_nodes[j]
-                    .iter()
-                    .copied()
-                    .filter(|&n| topo.parent_of(n) == r as NodeId)
-                    .collect();
-                if !local.is_empty() {
-                    job_racks.push(r as NodeId);
+        if ring_mode {
+            // Ring collectives: no aggregation tree. Pure ring leaves
+            // every ToR wiring empty (segments only transit). Under
+            // ina-ring each multi-member fold group wires its ToR with
+            // the group as local workers (fan-in = group size) and the
+            // group rep standing in for the PS, so pass-through and
+            // eviction losers land at the rep's micro-PS.
+            for (j, plan) in plans.iter().enumerate() {
+                let plan = plan.as_ref().expect("ring mode implies a plan");
+                for (r, wiring) in rack_wirings.iter_mut().enumerate() {
+                    let fold = plan
+                        .folds
+                        .iter()
+                        .find(|f| f.tor == r as NodeId && f.members.len() > 1);
+                    wiring.push(match fold {
+                        Some(f) => JobWiring {
+                            ps: f.rep(),
+                            fan_in: f.members.len() as u8,
+                            fan_in_total: f.members.len() as u8,
+                            workers: f.members.clone(),
+                            packet_bytes,
+                        },
+                        None => JobWiring {
+                            ps: ps_nodes[j],
+                            workers: Vec::new(),
+                            fan_in: 0,
+                            fan_in_total: 0,
+                            packet_bytes,
+                        },
+                    });
                 }
-                wiring.push(JobWiring {
+            }
+        } else {
+            for (j, model) in models.iter().enumerate() {
+                let total = model.n_workers as u8;
+                let mut job_racks: Vec<NodeId> = Vec::new();
+                for (r, wiring) in rack_wirings.iter_mut().enumerate() {
+                    let local: Vec<NodeId> = worker_nodes[j]
+                        .iter()
+                        .copied()
+                        .filter(|&n| topo.parent_of(n) == r as NodeId)
+                        .collect();
+                    if !local.is_empty() {
+                        job_racks.push(r as NodeId);
+                    }
+                    wiring.push(JobWiring {
+                        ps: ps_nodes[j],
+                        fan_in: local.len() as u8,
+                        fan_in_total: total,
+                        workers: local,
+                        packet_bytes,
+                    });
+                }
+                edge_wiring.push(JobWiring {
                     ps: ps_nodes[j],
-                    fan_in: local.len() as u8,
+                    workers: job_racks,
+                    fan_in: total,
                     fan_in_total: total,
-                    workers: local,
                     packet_bytes,
                 });
             }
-            edge_wiring.push(JobWiring {
-                ps: ps_nodes[j],
-                workers: job_racks,
-                fan_in: total,
-                fan_in_total: total,
-                packet_bytes,
-            });
         }
 
         let mut net = Net::new(topo, cfg.net.clone(), root.split(rng_stream::NET));
@@ -336,12 +410,15 @@ impl Simulation {
             if churn_mode {
                 sw.enable_churn(n_jobs);
             }
-            if racks > 1 {
+            // Ring collectives run no aggregation tree: every ToR stays a
+            // Root-tier stage (fold completions multicast Results straight
+            // to the group) and no edge stage exists.
+            if racks > 1 && !ring_mode {
                 sw.set_tier(SwitchTier::Rack { edge: SWITCH_NODE });
             }
             switches.push(sw);
         }
-        let edge = if racks > 1 {
+        let edge = if racks > 1 && !ring_mode {
             let wiring = if churn_mode {
                 placeholders()
             } else {
@@ -364,11 +441,42 @@ impl Simulation {
             None
         };
 
-        // workers
+        // workers (ring mode: engine members holding the same rng streams)
         let mut workers = Vec::new();
         let mut job_workers = Vec::new();
+        let mut ring_jobs: Vec<RingJob> = Vec::new();
+        let mut global_w = 0usize;
         for (j, model) in models.iter().enumerate() {
             let lo = workers.len();
+            if let Some(plan) = &plans[j] {
+                // Ring members are driven by the RingEngine, not Worker
+                // actors, but each keeps the worker rng stream it would
+                // have had so jitter draws stay per-member labelled.
+                let mut rngs = Vec::with_capacity(worker_nodes[j].len());
+                for (m, &node) in worker_nodes[j].iter().enumerate() {
+                    node_actor[node as usize] =
+                        ActorRef::Ring { job: j as u32, member: m as u32 };
+                    rngs.push(root.split(rng_stream::worker(global_w)));
+                    global_w += 1;
+                }
+                ring_jobs.push(RingJob::new(
+                    RingJobCfg {
+                        id: j as JobId,
+                        workers: worker_nodes[j].clone(),
+                        plan: plan.clone(),
+                        tensor_bytes: model.bytes_per_iter(),
+                        frags_per_iter: model.plan.frags_per_iter,
+                        iterations: model.iterations,
+                        comp_ns: model.profile.total_comp_ns(),
+                        jitter_max_ns: cfg.jitter_max_ns,
+                        grad_wire_bytes: packet_bytes,
+                        scan_every_ns: 4 * cfg.net.base_rtt_ns,
+                    },
+                    rngs,
+                ));
+                job_workers.push((lo, lo));
+                continue;
+            }
             for (w, &node) in worker_nodes[j].iter().enumerate() {
                 let rack = net.topo.parent_of(node);
                 // Churn mode: regions are granted at admission, so the
@@ -395,8 +503,9 @@ impl Simulation {
                         region_cap,
                     },
                     Arc::clone(model),
-                    root.split(rng_stream::worker(workers.len())),
+                    root.split(rng_stream::worker(global_w)),
                 ));
+                global_w += 1;
             }
             job_workers.push((lo, workers.len()));
         }
@@ -404,6 +513,12 @@ impl Simulation {
         // PSes (reminders address the tree root — the edge fans them down)
         let mut pses = Vec::new();
         for (j, model) in models.iter().enumerate() {
+            if plans[j].is_some() {
+                // Ring collectives have no fallback PS; the node exists
+                // for layout parity but nothing may be addressed to it.
+                node_actor[ps_nodes[j] as usize] = ActorRef::Idle;
+                continue;
+            }
             node_actor[ps_nodes[j] as usize] = ActorRef::Ps(pses.len() as u32);
             let mut ps = Ps::new(ps_nodes[j], SWITCH_NODE);
             ps.add_job(
@@ -431,8 +546,9 @@ impl Simulation {
             if churn_mode {
                 net.timer(at, SWITCH_NODE, TK_CHURN_ADMIT | j as u64);
             } else {
+                let key = if plans[j].is_some() { TK_RING_BEGIN } else { TK_START };
                 for &node in &worker_nodes[j] {
-                    net.timer(at, node, TK_START);
+                    net.timer(at, node, key);
                 }
             }
         }
@@ -517,6 +633,7 @@ impl Simulation {
             edge,
             workers,
             pses,
+            ring: (!ring_jobs.is_empty()).then(|| RingEngine::new(ring_jobs)),
             node_actor,
             models,
             job_workers,
@@ -559,6 +676,7 @@ impl Simulation {
 
     fn all_done(&self) -> bool {
         self.workers.iter().all(|w| w.done())
+            && self.ring.as_ref().map_or(true, |e| e.all_done())
     }
 
     /// Deliver a packet that arrived at a switch node: terminate it in the
@@ -676,6 +794,15 @@ impl Simulation {
                 ActorRef::Ps(i) => {
                     self.dispatch_ps(i, now, |ps, t, out| ps.handle(t, pkt, out));
                 }
+                ActorRef::Ring { job, member } => {
+                    let engine = self.ring.as_mut().expect("ring actor without engine");
+                    engine.handle(job as usize, member as usize, &mut self.net, &pkt);
+                }
+                // fat-tree aggregation/core switches only forward
+                ActorRef::Forward => self.net.transmit(at, pkt),
+                ActorRef::Idle => {
+                    debug_assert!(false, "packet addressed to idle node {at}: {pkt:?}");
+                }
             },
             Event::Timer { node, key } => match self.node_actor[node as usize] {
                 ActorRef::Worker(i) => {
@@ -690,9 +817,16 @@ impl Simulation {
                         ps.on_scan(t, out);
                     });
                 }
+                ActorRef::Ring { job, member } => {
+                    let engine = self.ring.as_mut().expect("ring actor without engine");
+                    engine.on_timer(job as usize, member as usize, &mut self.net, key);
+                }
                 // Switch-node timers: the fault timeline (any mode) plus
                 // the churn coordinator's arrivals and utilization sampler.
                 ActorRef::Switch => self.on_switch_timer(now, key),
+                ActorRef::Forward | ActorRef::Idle => {
+                    debug_assert!(false, "timer {key:#x} at passive node {node}");
+                }
             },
         }
         true
@@ -1053,11 +1187,13 @@ impl Simulation {
     fn collect(&self, wall_secs: f64) -> ExperimentMetrics {
         let mut jobs = Vec::new();
         for (j, model) in self.models.iter().enumerate() {
-            let (lo, hi) = self.job_workers[j];
-            let records: Vec<_> = self.workers[lo..hi]
-                .iter()
-                .map(|w| w.records.clone())
-                .collect();
+            let records: Vec<_> = match &self.ring {
+                Some(engine) => engine.records(j),
+                None => {
+                    let (lo, hi) = self.job_workers[j];
+                    self.workers[lo..hi].iter().map(|w| w.records.clone()).collect()
+                }
+            };
             if let Some(m) = JobMetrics::from_workers(j as JobId, model.profile.name, &records) {
                 jobs.push(m);
             }
@@ -1069,6 +1205,16 @@ impl Simulation {
                 tier: "edge",
                 stats: edge.stats.clone(),
             });
+            for (r, sw) in self.switches.iter().enumerate() {
+                switches.push(SwitchReport {
+                    node: r as NodeId,
+                    tier: "rack",
+                    stats: sw.stats.clone(),
+                });
+            }
+        } else if self.switches.len() > 1 {
+            // ring collectives on a multi-rack fabric: no edge tier, so
+            // every ToR reports independently
             for (r, sw) in self.switches.iter().enumerate() {
                 switches.push(SwitchReport {
                     node: r as NodeId,
@@ -1293,6 +1439,69 @@ mod tests {
         for w in 0..100_000 {
             assert!(seen.insert(super::rng_stream::worker(w)), "worker {w} label collides");
         }
+    }
+
+    fn collective_cfg(
+        key: &str,
+        racks: usize,
+        oversub: usize,
+        n_jobs: usize,
+        n_workers: usize,
+    ) -> ExperimentConfig {
+        use crate::collective::CollectiveRegistry;
+        let mut cfg = quick_cfg(esa(), "microbench", n_jobs, n_workers);
+        cfg.collective = CollectiveRegistry::resolve(key).unwrap();
+        cfg.racks = racks;
+        cfg.oversub = oversub;
+        cfg
+    }
+
+    #[test]
+    fn pure_ring_completes_with_zero_pool_allocations() {
+        let m = Simulation::run_experiment(collective_cfg("ring", 1, 0, 1, 4)).unwrap();
+        assert!(!m.truncated, "ring run stalled");
+        assert_eq!(m.jobs.len(), 1);
+        assert_eq!(m.jobs[0].iterations, 2);
+        let allocs: u64 = m.switches.iter().map(|s| s.stats.allocations).sum();
+        assert_eq!(allocs, 0, "a pure ring must never touch the aggregator pool");
+    }
+
+    #[test]
+    fn ina_ring_folds_in_rack_and_completes() {
+        // 8 workers over 4 racks: fold groups of 2, ring of 4 reps
+        let m = Simulation::run_experiment(collective_cfg("ina-ring", 4, 0, 1, 8)).unwrap();
+        assert!(!m.truncated, "ina-ring run stalled");
+        assert_eq!(m.jobs[0].iterations, 2);
+        let allocs: u64 = m.switches.iter().map(|s| s.stats.allocations).sum();
+        assert!(allocs > 0, "the rack-local fold must allocate pool slots");
+        // no edge stage: every ToR reports independently
+        assert_eq!(m.switches.len(), 4);
+        assert!(m.switches.iter().all(|s| s.tier == "rack"));
+    }
+
+    #[test]
+    fn ring_collectives_are_deterministic_on_the_fat_tree() {
+        let run = |key: &str| {
+            Simulation::run_experiment(collective_cfg(key, 4, 2, 1, 8)).unwrap()
+        };
+        for key in ["ring", "ina-ring"] {
+            let a = run(key);
+            let b = run(key);
+            assert!(!a.truncated, "{key} stalled on the fat-tree");
+            assert_eq!(a.sim_ns, b.sim_ns, "{key}");
+            assert_eq!(a.events, b.events, "{key}");
+            assert_eq!(a.avg_jct_ms(), b.avg_jct_ms(), "{key}");
+        }
+    }
+
+    #[test]
+    fn ps_ina_runs_the_legacy_pipeline_over_the_fat_tree() {
+        // oversub > 0 swaps paths (ECMP through agg/core transits) but
+        // keeps the ToR/edge aggregation pipeline and its actors intact
+        let m = Simulation::run_experiment(collective_cfg("ps-ina", 4, 4, 1, 8)).unwrap();
+        assert!(!m.truncated, "ps-ina stalled on the oversubscribed fat-tree");
+        assert_eq!(m.jobs[0].iterations, 2);
+        assert!(m.switches.iter().any(|s| s.tier == "edge"));
     }
 
     #[test]

@@ -20,20 +20,29 @@
 //! excluded from the artifacts.
 //!
 //! Grid expansion order (outer to inner): policy, racks, workers, jobs,
-//! loss_prob, tensor_bytes, cc, xtraffic_intensity, fec_b. Seeds vary
-//! fastest, *within* a cell. The two congestion axes (and their per-cell
-//! counters) only appear in the artifacts when a sweep engages the
-//! contention model — a plain grid's JSON/CSV bytes are unchanged from
-//! before they existed (the golden snapshot pins this). The `axes.fec_b`
-//! axis (DESIGN.md §16) follows the same rule: a cell with `fec_b = k >
-//! 0` runs `esa-fec=<k>` in place of the base `esa` policy (`0` keeps
-//! the baseline), and the FEC fields appear in the JSON only when the
-//! axis is actually used.
+//! loss_prob, tensor_bytes, cc, xtraffic_intensity, fec_b, collective,
+//! oversub. Seeds vary fastest, *within* a cell. The two congestion axes
+//! (and their per-cell counters) only appear in the artifacts when a
+//! sweep engages the contention model — a plain grid's JSON/CSV bytes
+//! are unchanged from before they existed (the golden snapshot pins
+//! this). The `axes.fec_b` axis (DESIGN.md §16) follows the same rule: a
+//! cell with `fec_b = k > 0` runs `esa-fec=<k>` in place of the base
+//! `esa` policy (`0` keeps the baseline), and the FEC fields appear in
+//! the JSON only when the axis is actually used. The collective axes
+//! (DESIGN.md §17) do too: `axes.collective` swaps a cell between the
+//! switch-tree pipeline (`ps-ina`), the host-only ring (`ring`) and the
+//! rack-fold hybrid (`ina-ring`); `axes.oversub` rebuilds the fabric as
+//! a k = 4 fat-tree with the given core-layer oversubscription (`0` =
+//! the flat two-tier fabric); and the collective fields (including the
+//! per-cell `pool_allocs` switch-memory count the "which collective
+//! wins where" artifact reads) appear only when either axis departs
+//! from its default.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::collective::{ps_ina, CollectiveHandle, CollectiveRegistry};
 use crate::config::{
     parse_toml, ChurnKnobs, CrossTraffic, ExperimentConfig, JobSpec, NetworkConfig, SwitchConfig,
     TomlTable,
@@ -109,6 +118,15 @@ pub struct SweepConfig {
     /// base policy; `k` in `1..=8` replaces it with `esa-fec=<k>` for
     /// the cell — the FEC-vs-retransmit JCT curve in one grid.
     pub fec_b: Vec<u8>,
+    /// Collective-algorithm axis (`axes.collective`, DESIGN.md §17,
+    /// registry keys): `ps-ina` runs the switch-tree pipeline, `ring` /
+    /// `ina-ring` the ring engine — the "which collective wins where"
+    /// crossover in one grid.
+    pub collective: Vec<CollectiveHandle>,
+    /// Fabric axis (`axes.oversub`): `0` keeps the flat two-tier fabric;
+    /// `k >= 1` swaps in the 3-tier k = 4 fat-tree with core-layer
+    /// oversubscription factor `k` (1 = full bisection).
+    pub oversub: Vec<usize>,
     /// Model mix, cycled over a cell's jobs (trace mode: arrival mix).
     pub models: Vec<ModelMix>,
     /// Measured iterations per job.
@@ -134,6 +152,10 @@ pub struct CellSpec {
     pub xtraffic: f64,
     /// Erasure-coding shard count (0 = base policy, no FEC).
     pub fec_b: u8,
+    /// Collective algorithm for this cell.
+    pub collective: CollectiveHandle,
+    /// Fat-tree oversubscription factor (0 = flat two-tier fabric).
+    pub oversub: usize,
 }
 
 /// One cell's replica-aggregated outcome.
@@ -175,6 +197,11 @@ pub struct CellResult {
     pub fec_shares_received: u64,
     /// Contributions reconstructed PS-side from `b` arrived shares.
     pub fec_reconstructions: u64,
+    /// Aggregator-pool slot allocations, summed across every switch of
+    /// every replica (collective sweeps only): `0` proves a pure ring
+    /// never touched switch memory; `ps-ina`/`ina-ring` cells are
+    /// nonzero whenever gradients flowed.
+    pub pool_allocs: u64,
 }
 
 /// A completed sweep: the config that produced it plus one result per
@@ -237,6 +264,8 @@ impl SweepConfig {
             cc: vec![fixed_window()],
             xtraffic_intensity: vec![0.0],
             fec_b: vec![0],
+            collective: vec![ps_ina()],
+            oversub: vec![0],
             models: vec![ModelMix::plain("microbench")],
             iterations: 2,
             base,
@@ -264,6 +293,16 @@ impl SweepConfig {
     pub fn fec_engaged(&self) -> bool {
         self.fec_b.iter().any(|&b| b > 0)
             || self.policies.iter().any(|p| p.key().starts_with("esa-fec"))
+    }
+
+    /// True when the sweep departs from the default collective regime: a
+    /// non-`ps-ina` collective anywhere, or a fat-tree fabric. Gates the
+    /// collective fields of the JSON artifact so plain grids keep their
+    /// pre-collective bytes (the golden snapshot pins this).
+    pub fn collective_engaged(&self) -> bool {
+        self.collective.len() != 1
+            || self.collective.iter().any(|h| h.key() != "ps-ina")
+            || self.oversub.iter().any(|&o| o > 0)
     }
 
     /// Load from a TOML-subset sweep file (see README § `esa sweep`).
@@ -349,6 +388,14 @@ impl SweepConfig {
                 })
                 .collect::<Result<Vec<u8>>>()?,
         };
+        cfg.collective = match t.str_list("axes.collective")? {
+            None => vec![ps_ina()],
+            Some(names) => names
+                .iter()
+                .map(|s| CollectiveRegistry::resolve(s).context("axes.collective"))
+                .collect::<Result<Vec<_>>>()?,
+        };
+        cfg.oversub = usize_axis(t, "axes.oversub")?.unwrap_or_else(|| vec![0]);
         cfg.tensor_bytes = match t.int_list("axes.tensor_kb")? {
             None => vec![None],
             Some(v) => v
@@ -555,6 +602,50 @@ impl SweepConfig {
                 }
             }
         }
+        if self.collective.is_empty() {
+            bail!("axes.collective must list at least one collective (ps-ina = default)");
+        }
+        if self.oversub.is_empty() {
+            bail!("axes.oversub must list at least one value (0 = flat two-tier fabric)");
+        }
+        for &o in &self.oversub {
+            if o > 16 {
+                bail!("axes.oversub: {o} is outside 0..=16 (0 = two-tier, 1 = full bisection)");
+            }
+        }
+        if self.collective.iter().any(|c| c.key() != "ps-ina") {
+            // Ring cells run the validated loss-free regime (see
+            // ExperimentConfig::validate); a grid mixing a ring
+            // collective with an incompatible axis would contain
+            // impossible cells, so reject it up front.
+            for p in &self.policies {
+                if p.key() != "esa" {
+                    bail!(
+                        "axes.collective: ring collectives pin the cell policy to `esa` \
+                         (got `{}`) — compare policies in a ps-ina-only grid",
+                        p.key()
+                    );
+                }
+            }
+            if self.fec_b.iter().any(|&b| b > 0) {
+                bail!("axes.collective: ring collectives cannot combine with axes.fec_b");
+            }
+            if self.loss_probs.iter().any(|&l| l > 0.0) {
+                bail!("axes.collective: ring collectives require loss_prob = 0 cells");
+            }
+            if self.cc.iter().any(|h| h.key() != "fixed-window") {
+                bail!("axes.collective: ring collectives require the fixed-window cc");
+            }
+            if self.xtraffic_intensity.iter().any(|&x| x > 0.0) || self.base.net.queue_kb > 0 {
+                bail!(
+                    "axes.collective: ring collectives run loss-free — drop \
+                     axes.xtraffic_intensity and base.queue_kb"
+                );
+            }
+            if self.base.churn.is_some() {
+                bail!("axes.collective: ring collectives cannot combine with [churn]");
+            }
+        }
         for t in &self.tensor_bytes {
             if *t == Some(0) {
                 bail!("axes.tensor_kb: tensors must be non-empty");
@@ -614,17 +705,23 @@ impl SweepConfig {
                                 for cc in &self.cc {
                                     for &xt in &self.xtraffic_intensity {
                                         for &fb in &self.fec_b {
-                                            cells.push(CellSpec {
-                                                policy: policy.clone(),
-                                                racks,
-                                                workers: w,
-                                                jobs: j,
-                                                loss_prob: loss,
-                                                tensor_bytes: tensor,
-                                                cc: cc.clone(),
-                                                xtraffic: xt,
-                                                fec_b: fb,
-                                            });
+                                            for coll in &self.collective {
+                                                for &ov in &self.oversub {
+                                                    cells.push(CellSpec {
+                                                        policy: policy.clone(),
+                                                        racks,
+                                                        workers: w,
+                                                        jobs: j,
+                                                        loss_prob: loss,
+                                                        tensor_bytes: tensor,
+                                                        cc: cc.clone(),
+                                                        xtraffic: xt,
+                                                        fec_b: fb,
+                                                        collective: coll.clone(),
+                                                        oversub: ov,
+                                                    });
+                                                }
+                                            }
                                         }
                                     }
                                 }
@@ -649,8 +746,13 @@ impl SweepConfig {
             spec.policy.clone()
         };
         cfg.name = format!("{}:{}:r{}:s{}", self.name, policy.key(), spec.racks, seed);
+        if spec.collective.key() != "ps-ina" || spec.oversub > 0 {
+            cfg.name = format!("{}:{}:o{}", cfg.name, spec.collective.key(), spec.oversub);
+        }
         cfg.policy = policy;
         cfg.cc = spec.cc.clone();
+        cfg.collective = spec.collective.clone();
+        cfg.oversub = spec.oversub;
         cfg.racks = spec.racks;
         cfg.seed = seed;
         cfg.iterations = self.iterations;
@@ -715,6 +817,7 @@ fn aggregate(spec: CellSpec, bandwidth_gbps: f64, replicas: &[ExperimentMetrics]
     let mut fec_share_pkts = 0u64;
     let mut fec_shares_received = 0u64;
     let mut fec_reconstructions = 0u64;
+    let mut pool_allocs = 0u64;
     for m in replicas {
         for j in &m.jobs {
             let v = j.avg_jct_ns();
@@ -748,6 +851,7 @@ fn aggregate(spec: CellSpec, bandwidth_gbps: f64, replicas: &[ExperimentMetrics]
         fec_share_pkts += m.fec_share_pkts;
         fec_shares_received += m.fec_shares_received;
         fec_reconstructions += m.fec_reconstructions;
+        pool_allocs += m.switches.iter().map(|s| s.stats.allocations).sum::<u64>();
     }
     let ci95 = if jct.count() >= 2 {
         1.96 * jct.stddev() / (jct.count() as f64).sqrt()
@@ -774,6 +878,7 @@ fn aggregate(spec: CellSpec, bandwidth_gbps: f64, replicas: &[ExperimentMetrics]
         fec_share_pkts,
         fec_shares_received,
         fec_reconstructions,
+        pool_allocs,
     }
 }
 
@@ -915,6 +1020,19 @@ impl SweepReport {
             }
             w.end_arr();
         }
+        let collective = c.collective_engaged();
+        if collective {
+            w.begin_arr(Some("collective"));
+            for h in &c.collective {
+                w.str_item(h.key());
+            }
+            w.end_arr();
+            w.begin_arr(Some("oversub"));
+            for &o in &c.oversub {
+                w.u64_item(o as u64);
+            }
+            w.end_arr();
+        }
         w.end_obj();
         w.begin_arr(Some("models"));
         for m in &c.models {
@@ -983,6 +1101,11 @@ impl SweepReport {
                 w.u64_field("fec_share_pkts", cell.fec_share_pkts);
                 w.u64_field("fec_shares_received", cell.fec_shares_received);
                 w.u64_field("fec_reconstructions", cell.fec_reconstructions);
+            }
+            if collective {
+                w.str_field("collective", s.collective.key());
+                w.u64_field("oversub", s.oversub as u64);
+                w.u64_field("pool_allocs", cell.pool_allocs);
             }
             w.end_obj();
         }
@@ -1404,6 +1527,97 @@ mod tests {
         assert!(r.cells[1].fec_share_pkts > 0, "loss must trigger share bursts");
         // byte-determinism holds with FEC engaged
         assert_eq!(json, run_sweep(&cfg, 1).unwrap().to_json());
+    }
+
+    #[test]
+    fn collective_axes_parse_and_expand_innermost() {
+        let cfg = SweepConfig::parse_str(
+            r#"
+            name = "crossover"
+            [axes]
+            policies = ["esa"]
+            racks = [4]
+            workers = [8]
+            jobs = [1]
+            collective = ["ps-ina", "ring", "ina-ring"]
+            oversub = [0, 4]
+            [models]
+            names = ["microbench"]
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.collective_engaged());
+        let cells = cfg.expand();
+        assert_eq!(cells.len(), 6, "collective x oversub are real grid axes");
+        // innermost: oversub varies fastest, then collective
+        assert_eq!(cells[0].collective.key(), "ps-ina");
+        assert_eq!(cells[0].oversub, 0);
+        assert_eq!(cells[1].oversub, 4);
+        assert_eq!(cells[2].collective.key(), "ring");
+        let exp = cfg.cell_experiment(&cells[3], 1);
+        assert_eq!(exp.collective.key(), "ring");
+        assert_eq!(exp.oversub, 4);
+        assert!(exp.name.contains(":ring:o4"), "{}", exp.name);
+        let base = cfg.cell_experiment(&cells[0], 1);
+        assert!(!base.name.contains(":o"), "default cells keep their pre-collective names");
+    }
+
+    #[test]
+    fn plain_grids_keep_their_pre_collective_artifact_shape() {
+        let cfg = SweepConfig::quick();
+        assert!(!cfg.collective_engaged(), "the golden grid must stay collective-free");
+        let report = SweepReport { config: cfg, cells: Vec::new() };
+        let json = report.to_json();
+        assert!(!json.contains("collective"), "{json}");
+        assert!(!json.contains("oversub"), "{json}");
+        assert!(!json.contains("pool_allocs"), "{json}");
+    }
+
+    #[test]
+    fn collective_cells_emit_pool_occupancy() {
+        let mut cfg = tiny();
+        cfg.policies = vec![esa()];
+        cfg.workers = vec![4];
+        cfg.collective =
+            vec![ps_ina(), crate::collective::ring(), crate::collective::ina_ring()];
+        let r = run_sweep(&cfg, 2).unwrap();
+        assert_eq!(r.cells.len(), 3);
+        assert!(r.cells[0].pool_allocs > 0, "ps-ina must allocate pool slots");
+        assert_eq!(r.cells[1].pool_allocs, 0, "a pure ring must never touch the pool");
+        assert!(r.cells[2].pool_allocs > 0, "ina-ring's rack fold uses the pool");
+        let json = r.to_json();
+        assert!(json.contains("\"collective\": \"ring\""), "{json}");
+        assert!(json.contains("\"pool_allocs\": 0"), "{json}");
+        // byte-determinism holds with the collective axes engaged
+        assert_eq!(json, run_sweep(&cfg, 1).unwrap().to_json());
+    }
+
+    #[test]
+    fn ring_collective_grids_reject_incompatible_axes() {
+        let err = SweepConfig::parse_str(
+            "[axes]\npolicies = [\"esa\", \"atp\"]\ncollective = [\"ring\"]",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("axes.collective"), "{err}");
+        let err = SweepConfig::parse_str(
+            "[axes]\ncollective = [\"ring\"]\nloss_prob = [0.01]",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("loss_prob = 0"), "{err}");
+        let err = SweepConfig::parse_str(
+            "[axes]\ncollective = [\"ina-ring\"]\nfec_b = [4]",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("fec_b"), "{err}");
+        let err = SweepConfig::parse_str("[axes]\noversub = [99]").unwrap_err().to_string();
+        assert!(err.contains("0..=16"), "{err}");
+        let err = SweepConfig::parse_str("[axes]\ncollective = [\"bogus\"]")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("axes.collective"), "{err}");
     }
 
     #[test]

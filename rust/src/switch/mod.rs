@@ -303,9 +303,27 @@ impl Switch {
             PacketKind::ReminderToSwitch => self.handle_reminder(now, pkt, out),
             PacketKind::Param => self.handle_param_multicast(now, pkt, out),
             PacketKind::Result => self.handle_result_replicate(pkt, out),
+            PacketKind::RingBcast => self.handle_ring_bcast(pkt, out),
             other => {
                 debug_assert!(false, "switch-addressed packet of kind {other:?}");
             }
+        }
+    }
+
+    /// An `ina-ring` representative's reduced-tensor broadcast addressed
+    /// to this ToR: replicate it down to the fold's *other* members (the
+    /// representative already holds the tensor it is broadcasting).
+    fn handle_ring_bcast(&mut self, pkt: Packet, out: &mut Vec<Packet>) {
+        let wiring = &self.wiring[pkt.job as usize];
+        self.stats.rack_downlinks += 1;
+        for &w in &wiring.workers {
+            if w == pkt.src {
+                continue;
+            }
+            let mut p = pkt.clone();
+            p.src = self.node;
+            p.dst = w;
+            out.push(p);
         }
     }
 
@@ -1049,6 +1067,23 @@ mod tests {
         assert!(out.iter().all(|p| p.kind == PacketKind::Result));
         assert_eq!(out.iter().map(|p| p.dst).collect::<Vec<_>>(), vec![1, 2]);
         assert_eq!(sw.stats.rack_downlinks, 1);
+    }
+
+    #[test]
+    fn ring_bcast_replicates_to_fold_members_except_the_sender() {
+        // Job 0's fold: rep is worker 1, leaf is worker 2. The rep's
+        // broadcast fans down to the leaf only — the rep already holds
+        // the tensor it is broadcasting.
+        let mut sw = mkswitch(esa());
+        let mut out = Vec::new();
+        sw.handle(10, Packet::ring_bcast(0, 7, 1, sw.node, 1074), &mut out);
+        assert_eq!(out.len(), 1, "one copy per non-sender member");
+        assert_eq!(out[0].kind, PacketKind::RingBcast);
+        assert_eq!(out[0].dst, 2);
+        assert_eq!(out[0].src, sw.node);
+        assert_eq!(out[0].agg_index, 7, "segment id survives replication");
+        assert_eq!(sw.stats.rack_downlinks, 1);
+        assert_eq!(sw.occupied_slots(), 0, "broadcast never touches the pool");
     }
 
     #[test]

@@ -1,0 +1,149 @@
+//! Property-based topology invariants, on the same from-scratch
+//! mini-framework as `prop_invariants.rs` (proptest is unavailable
+//! offline): deterministic seeded random-case sweeps with failing-seed
+//! reporting. On failure, re-run with the printed seed.
+//!
+//! The routing oracle is [`Topology::walk`]: every legal endpoint pair
+//! must reach its destination within the fabric diameter, loop-free,
+//! on every topology shape the simulator can build (star, two-tier,
+//! 3-tier fat-tree across oversubscription ratios).
+
+use std::collections::HashSet;
+
+use esa::net::topology::{NodeRole, Topology};
+use esa::util::rng::Rng;
+use esa::NodeId;
+
+/// Run `cases` random cases; panic with the failing seed on error.
+fn prop(name: &str, cases: u64, mut f: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0xE5A1_0000 + case;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property `{name}` failed at seed {seed:#x} (case {case})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// A random topology from the full shape grid the simulator uses:
+/// star, two-tier, or fat-tree with k = 4 and a random oversubscription.
+fn random_topology(rng: &mut Rng) -> Topology {
+    match rng.next_below(3) {
+        0 => Topology::star(rng.uniform_u64(1, 32) as usize),
+        1 => Topology::two_tier(
+            rng.uniform_u64(1, 8) as usize,
+            rng.uniform_u64(1, 8) as usize,
+        ),
+        _ => Topology::fat_tree(
+            rng.uniform_u64(1, 8) as usize,
+            rng.uniform_u64(1, 8) as usize,
+            4,
+            rng.uniform_u64(1, 4) as usize,
+        ),
+    }
+}
+
+/// Hosts plus ToRs: everything the simulator addresses packets to
+/// (workers, the PS, and rack switches receiving `RackPartial`s).
+fn endpoints(topo: &Topology) -> Vec<NodeId> {
+    (0..topo.n_nodes() as NodeId)
+        .filter(|&n| topo.role(n) == NodeRole::Host || (topo.is_switch(n) && !topo.is_fabric(n)))
+        .collect()
+}
+
+/// Every legal endpoint pair routes to its destination within the
+/// fabric diameter (6 hops for the 3-tier fat-tree, with slack), and
+/// the walk never revisits a node — the no-routing-loop invariant.
+#[test]
+fn prop_walks_terminate_within_the_diameter_and_are_loop_free() {
+    prop("walk-termination", 40, |rng| {
+        let topo = random_topology(rng);
+        let eps = endpoints(&topo);
+        for &src in &eps {
+            for &dst in &eps {
+                if src == dst {
+                    continue;
+                }
+                let (path, hops) = topo.walk(src, dst, 8).unwrap_or_else(|e| {
+                    panic!("walk {src} -> {dst} failed on {topo:?}: {e}")
+                });
+                assert_eq!(*path.last().unwrap(), dst);
+                assert!(hops <= 6, "{src} -> {dst} took {hops} hops: {path:?}");
+                let mut seen: HashSet<NodeId> = HashSet::from([src]);
+                for &n in &path {
+                    assert!(seen.insert(n), "routing loop through {n}: {path:?}");
+                }
+            }
+        }
+    });
+}
+
+/// Directed link ids are injective over ordered node pairs, stay below
+/// `n_links()`, and the reverse hop always maps to a *different* id —
+/// per-direction egress queues never alias.
+#[test]
+fn prop_link_ids_are_unique_and_direction_sensitive() {
+    prop("link-id-uniqueness", 40, |rng| {
+        let topo = random_topology(rng);
+        let n = topo.n_nodes() as NodeId;
+        let mut seen = HashSet::new();
+        for a in 0..n {
+            for b in 0..n {
+                let id = topo.link_id(a, b);
+                assert!(id < topo.n_links(), "link id {id} escapes n_links");
+                assert!(seen.insert(id), "duplicate link id {id} for ({a},{b})");
+                if a != b {
+                    assert_ne!(
+                        topo.link_id(a, b),
+                        topo.link_id(b, a),
+                        "({a},{b}) aliases its reverse direction"
+                    );
+                }
+            }
+        }
+        // every host uplink is a routable hop with a consistent parent
+        for (host, sw) in topo.host_uplinks() {
+            assert!(topo.is_switch(sw), "host {host} parented to non-switch {sw}");
+            assert_eq!(topo.parent_of(host), sw);
+        }
+    });
+}
+
+/// ECMP is a pure function of the flow: rebuilding the same fat-tree
+/// and re-asking for the same `(at, src, dst)` always yields the same
+/// next hop — including from other threads, which is what makes the
+/// parallel sweep executor byte-deterministic at any `--threads`.
+#[test]
+fn prop_ecmp_is_deterministic_across_rebuilds_and_threads() {
+    prop("ecmp-determinism", 10, |rng| {
+        let racks = rng.uniform_u64(2, 8) as usize;
+        let n_hosts = rng.uniform_u64(2, 8) as usize;
+        let oversub = rng.uniform_u64(1, 4) as usize;
+        let build = move || Topology::fat_tree(racks, n_hosts, 4, oversub);
+        let topo = build();
+        let eps = endpoints(&topo);
+        let table: Vec<(NodeId, NodeId, Vec<NodeId>)> = eps
+            .iter()
+            .flat_map(|&s| eps.iter().map(move |&d| (s, d)))
+            .filter(|(s, d)| s != d)
+            .map(|(s, d)| (s, d, topo.walk(s, d, 8).unwrap().0))
+            .collect();
+        let workers: Vec<_> = (0..4)
+            .map(|_| {
+                let expect = table.clone();
+                std::thread::spawn(move || {
+                    let mine = build();
+                    for (s, d, path) in &expect {
+                        let (got, _) = mine.walk(*s, *d, 8).unwrap();
+                        assert_eq!(&got, path, "ECMP diverged for {s} -> {d}");
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().expect("ECMP thread panicked");
+        }
+    });
+}

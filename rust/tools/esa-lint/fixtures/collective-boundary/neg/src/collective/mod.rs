@@ -1,0 +1,5 @@
+//! Negative fixture: collective/ is where the built-in algorithms
+//! delegate to the parse artifact for their identity strings.
+pub fn is_ring(kind: &CollectiveKind) -> bool {
+    matches!(kind, CollectiveKind::Ring)
+}

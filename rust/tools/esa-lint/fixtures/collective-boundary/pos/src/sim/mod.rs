@@ -1,0 +1,5 @@
+//! Positive fixture: the acceptance-criteria boundary probe — a
+//! `CollectiveKind::` match creeping back outside config/ + collective/.
+pub fn is_ring(kind: &CollectiveKind) -> bool {
+    matches!(kind, CollectiveKind::Ring)
+}

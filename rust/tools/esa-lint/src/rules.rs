@@ -10,6 +10,7 @@
 //! | `rng-stream` | actor noise comes from the namespaced `sim::rng_stream` splits, never ad-hoc `Rng::new` (non-test code) |
 //! | `policy-kind-boundary` | `PolicyKind` stays a parse artifact confined to `config/` + `switch/policy/` (replaces the PR 5 CI grep) |
 //! | `cc-kind-boundary` | `CcKind` stays a parse artifact confined to `config/` + `net/congestion/`; data-plane code goes through the `CongestionController` trait |
+//! | `collective-boundary` | `CollectiveKind` stays a parse artifact confined to `config/` + `collective/`; callers go through the `Collective` trait |
 //! | `fec-boundary` | GF(2^8)/Reed-Solomon arithmetic (`gf256::`) stays confined to `util/gf256.rs` + `net/fec.rs`; callers go through the `net::fec` share codec (non-test code) |
 //! | `process-exit` | `std::process::exit` only in `main.rs`, so library code stays embeddable |
 //! | `artifact-serializer` | hand-rolled JSON fragments outside `util::json::JsonWriter` need a justification |
@@ -87,6 +88,12 @@ pub const RULES: &[RuleInfo] = &[
         severity: Severity::Error,
         summary: "CcKind:: is a parse artifact confined to src/config/ and \
                   src/net/congestion/; use the CongestionController trait hooks",
+    },
+    RuleInfo {
+        name: "collective-boundary",
+        severity: Severity::Error,
+        summary: "CollectiveKind:: is a parse artifact confined to src/config/ and \
+                  src/collective/; use the Collective trait hooks",
     },
     RuleInfo {
         name: "fec-boundary",
@@ -291,6 +298,7 @@ fn scan_tokens(rel: &str, toks: &[Tok], in_tests_dir: bool, out: &mut Vec<Findin
     let in_bench = rel.starts_with("benches/");
     let policy_dirs = rel.starts_with("src/config/") || rel.starts_with("src/switch/policy/");
     let cc_dirs = rel.starts_with("src/config/") || rel.starts_with("src/net/congestion/");
+    let collective_dirs = rel.starts_with("src/config/") || rel.starts_with("src/collective/");
     let fec_files = rel == "src/util/gf256.rs" || rel == "src/net/fec.rs";
     for (i, t) in toks.iter().enumerate() {
         let test = t.in_test || in_tests_dir;
@@ -355,6 +363,16 @@ fn scan_tokens(rel: &str, toks: &[Tok], in_tests_dir: bool, out: &mut Vec<Findin
                 t.line,
                 "CcKind:: outside src/config/ and src/net/congestion/; use the \
                  CongestionController trait hooks"
+                    .to_string(),
+            ));
+        }
+        if !collective_dirs && matches_seq(toks, i, &["CollectiveKind", ":", ":"]) {
+            out.push(finding(
+                "collective-boundary",
+                rel,
+                t.line,
+                "CollectiveKind:: outside src/config/ and src/collective/; use the \
+                 Collective trait hooks"
                     .to_string(),
             ));
         }
@@ -533,6 +551,15 @@ mod tests {
         assert_eq!(run("src/worker/mod.rs", src).0[0].rule, "cc-kind-boundary");
         assert!(run("src/config/schema.rs", src).0.is_empty());
         assert!(run("src/net/congestion/mod.rs", src).0.is_empty());
+    }
+
+    #[test]
+    fn collective_boundary_confines_the_parse_artifact() {
+        let src = "fn f(k: CollectiveKind) -> bool { matches!(k, CollectiveKind::Ring) }\n";
+        assert_eq!(run("src/sim/mod.rs", src).0.len(), 1);
+        assert_eq!(run("src/worker/mod.rs", src).0[0].rule, "collective-boundary");
+        assert!(run("src/config/schema.rs", src).0.is_empty());
+        assert!(run("src/collective/mod.rs", src).0.is_empty());
     }
 
     #[test]
